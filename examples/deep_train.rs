@@ -1,0 +1,67 @@
+//! End-to-end deep-model training — the full three-layer stack.
+//!
+//! Loads the AOT-compiled JAX transformer (L2, with Pallas FFN kernels
+//! at L1) through PJRT, then trains it for a few hundred rounds with
+//! M=4 workers under the paper's §4.2 bandwidth regime, with Kimad's
+//! bandwidth-adaptive compression on both directions. Logs the loss
+//! curve and held-out accuracy — the run recorded in EXPERIMENTS.md
+//! §End-to-end.
+//!
+//!     make artifacts   # once
+//!     cargo run --release --example deep_train [--preset e2e] [--rounds 300]
+
+use kimad::driver::run_experiment;
+use kimad::kimad::CompressPolicy;
+use kimad::reports::{deep, ReportCtx};
+use kimad::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, &[])?;
+    let preset = args.opt_or("preset", "e2e");
+    let rounds = args.opt_usize("rounds", 300)? as u64;
+    let artifacts = args.opt_or("artifacts", "artifacts");
+
+    let ctx = ReportCtx {
+        artifacts: artifacts.clone(),
+        out_dir: "reports".into(),
+        fast: preset == "small",
+    };
+    let mut cfg = deep::base_config(&ctx, CompressPolicy::KimadUniform, 1.0, 4);
+    cfg.name = format!("deep_train-{preset}");
+    cfg.rounds = rounds;
+
+    eprintln!(
+        "training preset '{preset}' for {rounds} rounds, M=4, Kimad uniform policy..."
+    );
+    let t0 = std::time::Instant::now();
+    let res = run_experiment(&cfg, Some(&artifacts), 8)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("round | vtime(s) | loss    | up Mbit (w0)");
+    let stride = (res.records.len() / 20).max(1);
+    for r in res.records.iter().step_by(stride) {
+        println!(
+            "{:>5} | {:>8.1} | {:.4} | {:.3}",
+            r.step,
+            r.t_end(),
+            r.loss,
+            r.workers[0].up_bits as f64 / 1e6
+        );
+    }
+    let first = res.records.first().unwrap().loss;
+    let last = res.records.last().unwrap().loss;
+    println!("\nloss {first:.4} -> {last:.4} over {} rounds ({:.1} virtual s)", res.records.len(), res.total_time);
+    println!("mean step time {:.2}s", res.mean_step_time());
+    if let Some(e) = res.eval {
+        println!(
+            "held-out eval: loss={:.4} top1={:.1}% top5={:.1}% (n={})",
+            e.loss,
+            e.top1 * 100.0,
+            e.top5 * 100.0,
+            e.n
+        );
+    }
+    println!("wall-clock: {wall:.1}s ({:.1} rounds/s real time)", res.records.len() as f64 / wall);
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Kimad+ under the hood: watch the knapsack DP allocate one budget
+//! across heterogeneous layers, versus the uniform split.
+//!
+//! Builds a synthetic model whose layers have very different gradient
+//! energy profiles, sweeps the budget, and prints the per-layer K each
+//! policy chooses plus the resulting total error — the §4.3/Fig. 9
+//! mechanism in isolation.
+//!
+//!     cargo run --release --example kimad_plus_allocation
+
+use kimad::kimad::{CompressPolicy, ErrorCurve, Selector};
+use kimad::model::ModelLayout;
+use kimad::util::rng::Rng;
+
+fn main() {
+    // Three "layers": spiky (few huge coords), flat, decaying.
+    let sizes = [256usize, 512, 256];
+    let layout = ModelLayout::synthetic(&sizes);
+    let layers = layout.layers();
+    let mut rng = Rng::seed_from_u64(21);
+
+    let mut diff = Vec::new();
+    for i in 0..sizes[0] {
+        diff.push(if i < 8 { 50.0 } else { 0.05 * rng.range_f32(-1.0, 1.0) });
+    }
+    for _ in 0..sizes[1] {
+        diff.push(rng.range_f32(-1.0, 1.0));
+    }
+    for i in 0..sizes[2] {
+        diff.push((-(i as f32) / 40.0).exp() * rng.range_f32(-2.0, 2.0));
+    }
+
+    let curves: Vec<ErrorCurve> = layers
+        .iter()
+        .map(|l| ErrorCurve::build(&diff[l.offset..l.offset + l.size]))
+        .collect();
+
+    let uniform = Selector::new(CompressPolicy::KimadUniform);
+    let plus = Selector::new(CompressPolicy::KimadPlus { discretization: 1000, ratios: vec![] });
+    let optimal = Selector::new(CompressPolicy::WholeModelTopK);
+
+    println!(
+        "{:>10} | {:>18} | {:>18} | {:>18}",
+        "budget(K)", "Kimad err", "Kimad+ err", "optimal err"
+    );
+    for budget_k in [16u64, 64, 128, 256, 512] {
+        let budget = budget_k * 64;
+        let u = uniform.select(&diff, &layers, budget);
+        let p = plus.select(&diff, &layers, budget);
+        let o = optimal.select(&diff, &layers, budget);
+        println!(
+            "{:>10} | {:>8.2} {:>9} | {:>8.2} {:>9} | {:>8.2} {:>9}",
+            budget_k,
+            u.predicted_error(&curves),
+            format!("{:?}", u.k_per_layer),
+            p.predicted_error(&curves),
+            format!("{:?}", p.k_per_layer),
+            o.predicted_error(&curves),
+            format!("{:?}", o.k_per_layer),
+        );
+    }
+    println!("\nKimad+ shifts budget toward the spiky/decaying layers; the uniform split");
+    println!("wastes coordinates on the flat layer. 'optimal' = whole-model TopK oracle.");
+}

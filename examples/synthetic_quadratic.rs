@@ -1,0 +1,42 @@
+//! Figs. 3–6 workload as a standalone example: GD vs tuned EF21 vs
+//! Kimad on the §4.1 quadratic under a chosen bandwidth regime.
+//!
+//!     cargo run --release --example synthetic_quadratic [xsmall|small|oscillation|high] [--full]
+
+use kimad::reports::synthetic::{tuned_comparison, Scenario};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let scenario = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .map(|s| s.as_str())
+        .unwrap_or("xsmall");
+    let fast = !args.iter().any(|a| a == "--full");
+    let scn = match scenario {
+        "xsmall" => Scenario::XSmall,
+        "small" => Scenario::Small,
+        "oscillation" => Scenario::Oscillation,
+        "high" => Scenario::High,
+        other => {
+            eprintln!("unknown scenario '{other}' (xsmall|small|oscillation|high)");
+            std::process::exit(1);
+        }
+    };
+
+    println!("scenario: {} (fast={fast}; --full for the paper-scale grid)", scn.id());
+    let set = tuned_comparison(scn, fast);
+    println!("{:<28} {:>12} {:>16}", "method", "final f(x)", "t to f<=1e-3");
+    for s in &set.series {
+        let reach = s
+            .first_x_below(1e-3)
+            .map(|t| format!("{t:.1}s"))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "{:<28} {:>12.3e} {:>16}",
+            s.name,
+            s.last_y().unwrap_or(f64::NAN),
+            reach
+        );
+    }
+}

@@ -1,0 +1,132 @@
+"""AOT export: lower every L2/L1 entry point to HLO text + metadata.
+
+Run once at build time (`make artifacts`); the rust coordinator then
+runs self-contained with Python never on the hot path. Emits into
+artifacts/:
+
+  model-<preset>.hlo.txt    train_step: (*params, x, y) -> (loss, *grads)
+  eval-<preset>.hlo.txt     eval_step:  (*params, x, y) -> (loss, n_top1, n_top5)
+  layout-<preset>.json      per-slot name/shape/group/offset (ParamMeta)
+  params-<preset>.bin       f32-LE initial parameters, wire order
+  kernel-compress_error-d<D>.hlo.txt   eps(K) curve (L1 kernel standalone)
+  kernel-ef21_apply-d<D>.hlo.txt       fused EF21 update (standalone)
+  manifest.json             index of all of the above
+
+Usage: python -m compile.aot --out-dir ../artifacts [--presets tiny,small,e2e]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .hlo import lower_to_text
+from .kernels.ef21_apply import ef21_apply
+from .kernels.topk_error import topk_error_curve
+
+KERNEL_DIMS = (4096,)
+SEED = 21  # the paper's random seed (§4.2)
+
+
+def export_model(preset: str, out: pathlib.Path, with_params: bool) -> dict:
+    cfg = M.PRESETS[preset]
+    args = M.example_args(cfg)
+
+    train_txt = lower_to_text(M.make_train_step(cfg), *args)
+    (out / f"model-{preset}.hlo.txt").write_text(train_txt)
+
+    eval_txt = lower_to_text(M.make_eval_step(cfg), *args)
+    (out / f"eval-{preset}.hlo.txt").write_text(eval_txt)
+
+    metas = M.param_meta(cfg)
+    layout = {
+        "preset": preset,
+        "batch": cfg.batch,
+        "seq": cfg.seq,
+        "d_in": cfg.d_in,
+        "d_model": cfg.d_model,
+        "n_heads": cfg.n_heads,
+        "n_blocks": cfg.n_blocks,
+        "d_ff": cfg.d_ff,
+        "n_classes": cfg.n_classes,
+        "n_params": M.n_params(cfg),
+        "n_groups": cfg.n_blocks + 2,
+        "params": [
+            {
+                "name": m.name,
+                "shape": list(m.shape),
+                "group": m.group,
+                "offset": m.offset,
+                "size": m.size,
+            }
+            for m in metas
+        ],
+    }
+    (out / f"layout-{preset}.json").write_text(json.dumps(layout, indent=1))
+
+    entry = {
+        "train_hlo": f"model-{preset}.hlo.txt",
+        "eval_hlo": f"eval-{preset}.hlo.txt",
+        "layout": f"layout-{preset}.json",
+        "n_params": layout["n_params"],
+    }
+    if with_params:
+        params = M.init_params(cfg, jax.random.PRNGKey(SEED))
+        flat = np.concatenate([np.asarray(p, np.float32).ravel() for p in params])
+        flat.astype("<f4").tofile(out / f"params-{preset}.bin")
+        entry["params"] = f"params-{preset}.bin"
+    return entry
+
+
+def export_kernels(out: pathlib.Path) -> dict:
+    kernels = {}
+    for d in KERNEL_DIMS:
+        u = jax.ShapeDtypeStruct((d,), jnp.float32)
+        txt = lower_to_text(topk_error_curve, u)
+        name = f"kernel-compress_error-d{d}.hlo.txt"
+        (out / name).write_text(txt)
+        kernels[f"compress_error_d{d}"] = {"hlo": name, "d": d}
+
+        txt = lower_to_text(ef21_apply, u, u, u)
+        name = f"kernel-ef21_apply-d{d}.hlo.txt"
+        (out / name).write_text(txt)
+        kernels[f"ef21_apply_d{d}"] = {"hlo": name, "d": d}
+    return kernels
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,small,e2e")
+    ap.add_argument("--big", action="store_true",
+                    help="also export the ~100M-param preset (compile-only)")
+    a = ap.parse_args()
+
+    out = pathlib.Path(a.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    presets = [p.strip() for p in a.presets.split(",") if p.strip()]
+    if a.big and "big" not in presets:
+        presets.append("big")
+
+    manifest = {"seed": SEED, "models": {}, "kernels": {}}
+    for preset in presets:
+        # 'big' is a footprint study: HLO text is shape-parameterized and
+        # stays small, but a params.bin would be ~400 MB — skip it.
+        with_params = preset != "big"
+        manifest["models"][preset] = export_model(preset, out, with_params)
+        print(f"exported model preset '{preset}' "
+              f"({manifest['models'][preset]['n_params']} params)")
+    manifest["kernels"] = export_kernels(out)
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {out / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Lower jitted JAX functions to HLO *text* — the rust interchange format.
+
+HLO text (not serialized HloModuleProto) is mandatory here: jax >= 0.5
+emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`). The text parser
+reassigns ids, so text round-trips cleanly
+(see /opt/xla-example/README.md).
+
+We lower with return_tuple=True, so every executable returns one tuple
+the rust side unwraps with `Literal::to_tuple()`.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XLA HLO text, via stablehlo."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_text(fn, *example_args) -> str:
+    """jit + lower fn at the example shapes and return HLO text."""
+    return to_hlo_text(jax.jit(fn).lower(*example_args))

@@ -1,0 +1,9 @@
+"""L1: Pallas kernels for Kimad's compute hot spots.
+
+- fused_linear: tiled matmul+bias+activation (transformer FFN hot spot)
+- topk_error:   the eps(K) compression-error curve Kimad+ feeds its DP
+- ef21_apply:   fused EF21 estimator update
+- ref:          pure-jnp oracles for all of the above
+"""
+
+from . import ef21_apply, fused_linear, ref, topk_error  # noqa: F401

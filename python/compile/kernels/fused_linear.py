@@ -1,0 +1,224 @@
+"""L1 Pallas kernel: fused tiled linear layer  y = act(x @ W + b).
+
+This is the transformer FFN hot spot. On a real TPU the kernel would be
+lowered by Mosaic and the BlockSpec below expresses the HBM->VMEM tiling
+schedule (the CUDA paper-equivalent of threadblock + shared-memory
+staging): (bm, K) x (K, bn) tiles with fp32 accumulation on the MXU.
+
+`pallas_call` has no autodiff rule, so the layer carries a custom VJP
+whose backward pass is *also* built from Pallas kernels:
+
+    gz = dy * act'(z)            (elementwise kernel)
+    dx = gz @ W^T                (tiled matmul kernel)
+    dW = x^T @ gz                (tiled matmul kernel)
+    db = sum_rows(gz)            (XLA reduce)
+
+On this testbed we lower with ``interpret=True`` (the CPU PJRT plugin
+cannot execute Mosaic custom-calls); correctness is checked against
+``ref.linear_ref`` (and the VJP against autodiff-through-ref) by pytest;
+real-TPU performance is *estimated* from the VMEM footprint recorded in
+DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly default tiles. The second-minor/minor dims of a VMEM tile
+# should be multiples of (8, 128) for f32; 128x128 feeds the systolic
+# array without re-layout.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+
+_ACTIVATIONS = ("none", "relu", "gelu")
+_SQRT_2_OVER_PI = math.sqrt(2.0 / math.pi)
+_GELU_C = 0.044715
+
+
+def vmem_bytes(bm: int, bn: int, k: int, itemsize: int = 4) -> int:
+    """Estimated VMEM footprint of one grid step (x, w, b, y, z tiles)."""
+    return itemsize * (bm * k + k * bn + bn + 2 * bm * bn)
+
+
+def _apply_act(z, activation: str):
+    if activation == "relu":
+        return jnp.maximum(z, 0.0)
+    if activation == "gelu":
+        # tanh-approximate GELU — matches jax.nn.gelu(approximate=True).
+        u = _SQRT_2_OVER_PI * (z + _GELU_C * z**3)
+        return 0.5 * z * (1.0 + jnp.tanh(u))
+    return z
+
+
+def _act_grad(z, activation: str):
+    if activation == "relu":
+        return (z > 0.0).astype(z.dtype)
+    if activation == "gelu":
+        u = _SQRT_2_OVER_PI * (z + _GELU_C * z**3)
+        t = jnp.tanh(u)
+        du = _SQRT_2_OVER_PI * (1.0 + 3.0 * _GELU_C * z**2)
+        return 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t**2) * du
+    return jnp.ones_like(z)
+
+
+# --------------------------------------------------------------------------
+# Forward kernel: one (bm, bn) output tile, full-K contraction.
+# K is kept un-tiled: for the model dims used here (<= 4096) a (bm, K) +
+# (K, bn) pair fits comfortably in VMEM (see vmem_bytes()), so a K-loop
+# with accumulator carry is not needed.
+# --------------------------------------------------------------------------
+
+def _forward_kernel(x_ref, w_ref, b_ref, y_ref, z_ref, *, activation: str):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    z = acc + b_ref[...]
+    z_ref[...] = z.astype(z_ref.dtype)
+    y_ref[...] = _apply_act(z, activation).astype(y_ref.dtype)
+
+
+def _pad2(a, m, n):
+    pm, pn = m - a.shape[0], n - a.shape[1]
+    return jnp.pad(a, ((0, pm), (0, pn))) if (pm or pn) else a
+
+
+def _forward(x, w, b, activation: str, bm: int, bn: int):
+    """Returns (y, z) with z the pre-activation (saved for the VJP)."""
+    m, k = x.shape
+    _, n = w.shape
+    bm = min(bm, max(m, 1))
+    bn = min(bn, max(n, 1))
+    mp, np_ = -(-m // bm) * bm, -(-n // bn) * bn
+    xp, wp = _pad2(x, mp, k), _pad2(w, k, np_)
+    bp = jnp.pad(b, (0, np_ - n)) if np_ != n else b
+
+    y, z = pl.pallas_call(
+        functools.partial(_forward_kernel, activation=activation),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, np_), x.dtype),
+            jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        ],
+        interpret=True,
+    )(xp, wp, bp)
+    return y[:m, :n], z[:m, :n]
+
+
+# --------------------------------------------------------------------------
+# Backward kernels
+# --------------------------------------------------------------------------
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _matmul(a, b, bm: int, bn: int):
+    """Plain tiled matmul (no bias/activation) on the same BlockSpec grid."""
+    m, k = a.shape
+    _, n = b.shape
+    bm = min(bm, max(m, 1))
+    bn = min(bn, max(n, 1))
+    mp, np_ = -(-m // bm) * bm, -(-n // bn) * bn
+    ap, bp = _pad2(a, mp, k), _pad2(b, k, np_)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def _act_grad_kernel(z_ref, dy_ref, o_ref, *, activation: str):
+    o_ref[...] = (dy_ref[...] * _act_grad(z_ref[...], activation)).astype(
+        o_ref.dtype
+    )
+
+
+def _act_grad_apply(z, dy, activation: str, bm: int, bn: int):
+    m, n = z.shape
+    bm = min(bm, max(m, 1))
+    bn = min(bn, max(n, 1))
+    mp, np_ = -(-m // bm) * bm, -(-n // bn) * bn
+    zp, dyp = _pad2(z, mp, np_), _pad2(dy, mp, np_)
+    out = pl.pallas_call(
+        functools.partial(_act_grad_kernel, activation=activation),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), z.dtype),
+        interpret=True,
+    )(zp, dyp)
+    return out[:m, :n]
+
+
+# --------------------------------------------------------------------------
+# custom_vjp wiring
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _fused_linear(x, w, b, activation: str, bm: int, bn: int):
+    y, _ = _forward(x, w, b, activation, bm, bn)
+    return y
+
+
+def _fused_linear_fwd(x, w, b, activation, bm, bn):
+    y, z = _forward(x, w, b, activation, bm, bn)
+    return y, (x, w, z)
+
+
+def _fused_linear_bwd(activation, bm, bn, res, dy):
+    x, w, z = res
+    gz = _act_grad_apply(z, dy, activation, bm, bn)
+    dx = _matmul(gz, w.T, bm, bn)
+    dw = _matmul(x.T, gz, bm, bn)
+    db = jnp.sum(gz, axis=0)
+    return dx, dw, db
+
+
+_fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)
+
+
+def fused_linear(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    activation: str = "none",
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+) -> jax.Array:
+    """act(x @ w + b) with x:[M,K], w:[K,N], b:[N] -> [M,N].
+
+    Pads M and N up to tile multiples, runs the Pallas kernel on a
+    (ceil(M/bm), ceil(N/bn)) grid, and slices the result back.
+    Differentiable via the Pallas-kernel VJP above.
+    """
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"activation must be one of {_ACTIVATIONS}")
+    if x.ndim != 2 or w.ndim != 2 or x.shape[1] != w.shape[0] or b.shape != (
+        w.shape[1],
+    ):
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+    return _fused_linear(x, w, b, activation, bm, bn)

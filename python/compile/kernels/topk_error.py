@@ -1,0 +1,104 @@
+"""L1 Pallas kernel: the TopK compression-error curve eps(K).
+
+Kimad+ (Algorithm 4) needs the *Errors matrix*: for every layer and
+every candidate compression parameter K, the squared L2 error of
+TopK-compressing the layer's accumulated gradient,
+
+    eps(K) = || u - TopK(u) ||^2 = sum of the (d-K) smallest |u_i|^2.
+
+Computing this naively is |C| compress-and-measure passes. Observe that
+once the squared magnitudes are sorted descending, the *whole* curve is
+one reversed cumulative sum:
+
+    eps(K) = suffix_sum(sorted_sq)[K]   for K = 0..d
+
+so Kimad+ pays one sort (XLA's O(d log d) sort on the VPU; a GPU paper
+would radix-select, but Kimad+ needs ALL K anyway so a full sort is the
+right TPU-side restructuring — DESIGN.md §Hardware-Adaptation) plus one
+linear scan. The scan is the Pallas kernel below, decomposed in the
+classic two-pass block-scan shape so the grid is parallel:
+
+  pass 1 (kernel): per-block reversed cumsum + per-block totals
+  combine (XLA):   exclusive reversed cumsum over nblocks totals
+  pass 2 (kernel): add each block's suffix offset
+
+Both passes stream (block,)-sized VMEM tiles; footprint is O(bs).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 512
+
+
+def _block_scan_kernel(x_ref, cum_ref, tot_ref):
+    """Within-block reversed (suffix) cumsum and block total."""
+    x = x_ref[...]
+    rev = jnp.cumsum(x[::-1])[::-1]
+    cum_ref[...] = rev
+    tot_ref[...] = rev[:1]  # rev[0] == sum of the block
+
+
+def _add_offset_kernel(cum_ref, off_ref, o_ref):
+    o_ref[...] = cum_ref[...] + off_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def suffix_sum(x: jax.Array, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """Reversed (suffix) cumulative sum: out[i] = sum_{j >= i} x[j]."""
+    (d,) = x.shape
+    bs = min(block, max(d, 1))
+    dp = -(-d // bs) * bs
+    xp = jnp.pad(x, (0, dp - d)) if dp != d else x
+    nblocks = dp // bs
+
+    cum, tot = pl.pallas_call(
+        _block_scan_kernel,
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((bs,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((bs,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((dp,), x.dtype),
+            jax.ShapeDtypeStruct((nblocks,), x.dtype),
+        ],
+        interpret=True,
+    )(xp)
+
+    # Exclusive reversed cumsum of block totals -> offset each block must
+    # add (the mass of all blocks to its right). O(nblocks), tiny.
+    suffix_tot = jnp.cumsum(tot[::-1])[::-1]
+    offsets = jnp.concatenate([suffix_tot[1:], jnp.zeros((1,), x.dtype)])
+    off_expanded = jnp.repeat(offsets, bs)
+
+    out = pl.pallas_call(
+        _add_offset_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((bs,), lambda i: (i,)),
+            pl.BlockSpec((bs,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bs,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), x.dtype),
+        interpret=True,
+    )(cum, off_expanded)
+    return out[:d]
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def topk_error_curve(u: jax.Array, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """eps(K) for K = 0..d: squared error of keeping the K largest |u_i|.
+
+    Returns err with err[K] = || u - TopK(u) ||^2, err[d] == 0.
+    """
+    sq = u.astype(jnp.float32) ** 2
+    sorted_desc = jnp.sort(sq)[::-1]
+    suffix = suffix_sum(sorted_desc, block=block)
+    return jnp.concatenate([suffix, jnp.zeros((1,), jnp.float32)])

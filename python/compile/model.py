@@ -1,0 +1,270 @@
+"""L2: the deep-model workload — a transformer classifier in JAX.
+
+This stands in for the paper's ResNet18/CIFAR10 (DESIGN.md §3): Kimad is
+model-agnostic; what it needs from the workload is a *per-layer gradient
+structure* with heterogeneous layer sizes. The model below is a standard
+pre-norm transformer encoder over patch tokens with a mean-pool + linear
+head; its FFN matmuls run through the L1 Pallas kernel
+(`kernels.fused_linear`), so the kernel lowers into the same HLO module.
+
+Exported entry points (lowered once by aot.py, executed from Rust):
+
+  train_step(params..., x, y) -> (loss, grad_0, ..., grad_{P-1})
+  eval_step(params..., x, y)  -> (loss, top1_count, top5_count)
+
+Parameters travel as a *flat list of arrays* (not a dict) so the Rust
+runtime can address them positionally; `param_meta` describes each slot
+(name, shape, byte offset, Kimad+ layer group).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_linear import fused_linear
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer preset. All shapes are static (baked into the HLO)."""
+
+    name: str
+    batch: int
+    seq: int
+    d_in: int
+    d_model: int
+    n_heads: int
+    n_blocks: int
+    d_ff: int
+    n_classes: int = 10
+    # Pallas tile sizes for the FFN kernel (clamped to dims inside).
+    bm: int = 128
+    bn: int = 128
+
+    def __post_init__(self) -> None:
+        if self.d_model % self.n_heads != 0:
+            raise ValueError("d_model must be divisible by n_heads")
+
+
+PRESETS = {
+    # Fast unit-test preset: a couple of ms per step under pytest.
+    "tiny": ModelConfig("tiny", batch=8, seq=4, d_in=8, d_model=16, n_heads=2,
+                        n_blocks=1, d_ff=32),
+    # Mid-size preset used by rust integration tests.
+    "small": ModelConfig("small", batch=32, seq=8, d_in=16, d_model=32,
+                         n_heads=4, n_blocks=2, d_ff=64),
+    # The end-to-end training preset (examples/deep_train.rs): ~0.9M params.
+    "e2e": ModelConfig("e2e", batch=64, seq=16, d_in=32, d_model=128,
+                       n_heads=4, n_blocks=4, d_ff=512),
+    # ~100M-parameter footprint-study preset: exported compile-only (the
+    # HLO is shape-parameterized so its text stays small); DESIGN.md §8.
+    "big": ModelConfig("big", batch=8, seq=32, d_in=64, d_model=1024,
+                       n_heads=16, n_blocks=8, d_ff=4096),
+}
+
+
+# --------------------------------------------------------------------------
+# Parameter layout
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamMeta:
+    name: str
+    shape: Tuple[int, ...]
+    group: int  # Kimad+ "layer" id (embed=0, block i = i+1, head = last)
+    offset: int  # element offset into the flat f32 vector
+    size: int
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...], int]]:
+    """(name, shape, group) for every parameter slot, in wire order."""
+    specs: List[Tuple[str, Tuple[int, ...], int]] = [
+        ("embed/w", (cfg.d_in, cfg.d_model), 0),
+        ("embed/b", (cfg.d_model,), 0),
+        ("embed/pos", (cfg.seq, cfg.d_model), 0),
+    ]
+    for i in range(cfg.n_blocks):
+        g = i + 1
+        p = f"block{i}"
+        specs += [
+            (f"{p}/ln1/g", (cfg.d_model,), g),
+            (f"{p}/ln1/b", (cfg.d_model,), g),
+            (f"{p}/attn/wqkv", (cfg.d_model, 3 * cfg.d_model), g),
+            (f"{p}/attn/bqkv", (3 * cfg.d_model,), g),
+            (f"{p}/attn/wo", (cfg.d_model, cfg.d_model), g),
+            (f"{p}/attn/bo", (cfg.d_model,), g),
+            (f"{p}/ln2/g", (cfg.d_model,), g),
+            (f"{p}/ln2/b", (cfg.d_model,), g),
+            (f"{p}/ffn/w1", (cfg.d_model, cfg.d_ff), g),
+            (f"{p}/ffn/b1", (cfg.d_ff,), g),
+            (f"{p}/ffn/w2", (cfg.d_ff, cfg.d_model), g),
+            (f"{p}/ffn/b2", (cfg.d_model,), g),
+        ]
+    gh = cfg.n_blocks + 1
+    specs += [
+        ("final_ln/g", (cfg.d_model,), gh),
+        ("final_ln/b", (cfg.d_model,), gh),
+        ("head/w", (cfg.d_model, cfg.n_classes), gh),
+        ("head/b", (cfg.n_classes,), gh),
+    ]
+    return specs
+
+
+def param_meta(cfg: ModelConfig) -> List[ParamMeta]:
+    metas: List[ParamMeta] = []
+    off = 0
+    for name, shape, group in param_specs(cfg):
+        size = 1
+        for s in shape:
+            size *= s
+        metas.append(ParamMeta(name, shape, group, off, size))
+        off += size
+    return metas
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return sum(m.size for m in param_meta(cfg))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> List[jax.Array]:
+    """LeCun-normal weights, zero biases, unit LN gains."""
+    params: List[jax.Array] = []
+    for name, shape, _ in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        leaf = name.rsplit("/", 1)[-1]
+        if leaf in ("b", "bqkv", "bo", "b1", "b2"):
+            p = jnp.zeros(shape, jnp.float32)
+        elif leaf == "g":
+            p = jnp.ones(shape, jnp.float32)
+        elif leaf == "pos":
+            p = 0.02 * jax.random.normal(sub, shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            p = jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(
+                jnp.float32(fan_in)
+            )
+        params.append(p)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Forward / loss
+# --------------------------------------------------------------------------
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(h, wqkv, bqkv, wo, bo, n_heads: int):
+    bsz, seq, d = h.shape
+    hd = d // n_heads
+    qkv = jnp.dot(h, wqkv) + bqkv  # [B,S,3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):  # [B,S,D] -> [B,H,S,hd]
+        return t.reshape(bsz, seq, n_heads, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", attn, v)
+    out = out.transpose(0, 2, 1, 3).reshape(bsz, seq, d)
+    return jnp.dot(out, wo) + bo
+
+
+def forward(cfg: ModelConfig, params: List[jax.Array], x: jax.Array) -> jax.Array:
+    """x: [B, S, d_in] -> logits [B, n_classes]."""
+    it = iter(params)
+    nxt = lambda: next(it)  # noqa: E731
+
+    w_e, b_e, pos = nxt(), nxt(), nxt()
+    bsz, seq, d_in = x.shape
+    h = fused_linear(
+        x.reshape(bsz * seq, d_in), w_e, b_e, "none", cfg.bm, cfg.bn
+    ).reshape(bsz, seq, cfg.d_model)
+    h = h + pos
+
+    for _ in range(cfg.n_blocks):
+        g1, b1 = nxt(), nxt()
+        wqkv, bqkv, wo, bo = nxt(), nxt(), nxt(), nxt()
+        g2, b2 = nxt(), nxt()
+        w1, bf1, w2, bf2 = nxt(), nxt(), nxt(), nxt()
+
+        h = h + _attention(_layernorm(h, g1, b1), wqkv, bqkv, wo, bo, cfg.n_heads)
+        hn = _layernorm(h, g2, b2).reshape(bsz * seq, cfg.d_model)
+        # FFN hot spot -> L1 Pallas kernel (fused matmul+bias+GELU).
+        ff = fused_linear(hn, w1, bf1, "gelu", cfg.bm, cfg.bn)
+        ff = fused_linear(ff, w2, bf2, "none", cfg.bm, cfg.bn)
+        h = h + ff.reshape(bsz, seq, cfg.d_model)
+
+    gf, bf = nxt(), nxt()
+    wh, bh = nxt(), nxt()
+    h = _layernorm(h, gf, bf)
+    pooled = jnp.mean(h, axis=1)
+    return jnp.dot(pooled, wh) + bh
+
+
+def loss_fn(cfg: ModelConfig, params: List[jax.Array], x: jax.Array,
+            y: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy; y: int32 [B]."""
+    logits = forward(cfg, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+# --------------------------------------------------------------------------
+# Exported entry points
+# --------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig):
+    """train_step(*params, x, y) -> (loss, *per-slot grads)."""
+
+    def train_step(*args):
+        params = list(args[:-2])
+        x, y = args[-2], args[-1]
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, x, y)
+        )(params)
+        return (loss, *grads)
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    """eval_step(*params, x, y) -> (loss, top1_count, top5_count)."""
+
+    def eval_step(*args):
+        params = list(args[:-2])
+        x, y = args[-2], args[-1]
+        logits = forward(cfg, params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+        top1 = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+        # Top-5 via rank counting (lax.top_k lowers to a `topk` HLO op
+        # that xla_extension 0.5.1's text parser rejects): the true
+        # class is in the top k iff fewer than k logits strictly beat it.
+        k = min(5, cfg.n_classes)
+        true_logit = jnp.take_along_axis(logits, y[:, None], axis=-1)
+        rank = jnp.sum((logits > true_logit).astype(jnp.int32), axis=-1)
+        top5 = jnp.sum((rank < k).astype(jnp.float32))
+        return (jnp.mean(nll), top1, top5)
+
+    return eval_step
+
+
+def example_args(cfg: ModelConfig):
+    """ShapeDtypeStructs matching the exported signature."""
+    params = [
+        jax.ShapeDtypeStruct(shape, jnp.float32)
+        for _, shape, _ in param_specs(cfg)
+    ]
+    x = jax.ShapeDtypeStruct((cfg.batch, cfg.seq, cfg.d_in), jnp.float32)
+    y = jax.ShapeDtypeStruct((cfg.batch,), jnp.int32)
+    return (*params, x, y)

@@ -1,0 +1,88 @@
+"""AOT export checks: HLO text well-formedness, layout consistency."""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.hlo import lower_to_text
+from compile.kernels.topk_error import topk_error_curve
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestHloText:
+    def test_tiny_train_step_lowers(self):
+        cfg = M.PRESETS["tiny"]
+        txt = lower_to_text(M.make_train_step(cfg), *M.example_args(cfg))
+        assert txt.startswith("HloModule")
+        # (*params, x, y) inputs and a tuple root.
+        assert "ENTRY" in txt
+        assert "tuple(" in txt.lower()
+
+    def test_kernel_lowers_without_custom_call(self):
+        # interpret=True must lower pallas to plain HLO: a Mosaic
+        # custom-call would be unloadable by the CPU PJRT client.
+        u = jax.ShapeDtypeStruct((256,), jnp.float32)
+        txt = lower_to_text(topk_error_curve, u)
+        assert "custom-call" not in txt or "Sharding" in txt
+
+    def test_param_count_matches_signature(self):
+        cfg = M.PRESETS["tiny"]
+        txt = lower_to_text(M.make_train_step(cfg), *M.example_args(cfg))
+        # Count parameters of the ENTRY computation only (fusion bodies
+        # introduce their own local parameter() instructions).
+        entry = txt[txt.index("ENTRY"):]
+        entry = entry[: entry.index("\n}")]
+        n_inputs = entry.count("parameter(")
+        assert n_inputs == len(M.param_specs(cfg)) + 2  # params + x + y
+
+
+class TestExportedArtifacts:
+    """Validate on-disk artifacts when they exist (after `make artifacts`)."""
+
+    ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+    @pytest.fixture(autouse=True)
+    def _skip_without_artifacts(self):
+        if not (self.ART / "manifest.json").exists():
+            pytest.skip("artifacts/ not built (run `make artifacts`)")
+
+    def test_manifest_files_exist(self):
+        manifest = json.loads((self.ART / "manifest.json").read_text())
+        for entry in manifest["models"].values():
+            for key in ("train_hlo", "eval_hlo", "layout"):
+                assert (self.ART / entry[key]).exists()
+        for k in manifest["kernels"].values():
+            assert (self.ART / k["hlo"]).exists()
+
+    def test_layout_consistent_with_model(self):
+        manifest = json.loads((self.ART / "manifest.json").read_text())
+        for preset, entry in manifest["models"].items():
+            cfg = M.PRESETS[preset]
+            layout = json.loads((self.ART / entry["layout"]).read_text())
+            metas = M.param_meta(cfg)
+            assert layout["n_params"] == M.n_params(cfg)
+            assert len(layout["params"]) == len(metas)
+            for got, want in zip(layout["params"], metas):
+                assert got["name"] == want.name
+                assert tuple(got["shape"]) == want.shape
+                assert got["offset"] == want.offset
+
+    def test_params_bin_matches_seeded_init(self):
+        manifest = json.loads((self.ART / "manifest.json").read_text())
+        for preset, entry in manifest["models"].items():
+            if "params" not in entry:
+                continue
+            cfg = M.PRESETS[preset]
+            flat = np.fromfile(self.ART / entry["params"], dtype="<f4")
+            assert flat.size == M.n_params(cfg)
+            params = M.init_params(cfg, jax.random.PRNGKey(manifest["seed"]))
+            want = np.concatenate([np.asarray(p).ravel() for p in params])
+            np.testing.assert_allclose(flat, want, rtol=1e-6, atol=1e-7)

@@ -1,0 +1,204 @@
+"""Kernel-vs-ref allclose — the CORE correctness signal for L1.
+
+hypothesis sweeps shapes/values; every Pallas kernel is checked against
+its pure-jnp oracle in compile.kernels.ref.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.ef21_apply import ef21_apply
+from compile.kernels.fused_linear import fused_linear, vmem_bytes
+from compile.kernels.topk_error import suffix_sum, topk_error_curve
+
+jax.config.update("jax_platform_name", "cpu")
+
+HYPO = settings(max_examples=25, deadline=None)
+
+
+def _rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# fused_linear
+# ---------------------------------------------------------------------------
+
+class TestFusedLinear:
+    @pytest.mark.parametrize("activation", ["none", "relu", "gelu"])
+    def test_matches_ref_square(self, activation):
+        x, w, b = _rand(0, 32, 16), _rand(1, 16, 24), _rand(2, 24)
+        got = fused_linear(x, w, b, activation)
+        want = ref.linear_ref(x, w, b, activation)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_tile_exact_multiple(self):
+        x, w, b = _rand(3, 256, 64), _rand(4, 64, 128), _rand(5, 128)
+        got = fused_linear(x, w, b, "gelu", bm=128, bn=128)
+        np.testing.assert_allclose(got, ref.linear_ref(x, w, b, "gelu"),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_ragged_padding(self):
+        # M, N deliberately not tile multiples.
+        x, w, b = _rand(6, 37, 19), _rand(7, 19, 45), _rand(8, 45)
+        got = fused_linear(x, w, b, "relu", bm=16, bn=32)
+        np.testing.assert_allclose(got, ref.linear_ref(x, w, b, "relu"),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_single_row_and_col(self):
+        x, w, b = _rand(9, 1, 4), _rand(10, 4, 1), _rand(11, 1)
+        got = fused_linear(x, w, b)
+        np.testing.assert_allclose(got, ref.linear_ref(x, w, b),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_bad_activation_raises(self):
+        x, w, b = _rand(0, 4, 4), _rand(1, 4, 4), _rand(2, 4)
+        with pytest.raises(ValueError, match="activation"):
+            fused_linear(x, w, b, "tanh")
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(ValueError, match="shape mismatch"):
+            fused_linear(_rand(0, 4, 5), _rand(1, 4, 4), _rand(2, 4))
+
+    def test_vmem_estimate_within_budget(self):
+        # The default (128,128,K<=4096) tiling must fit a 16 MB VMEM core.
+        assert vmem_bytes(128, 128, 4096) <= 16 * 2**20
+
+    @pytest.mark.parametrize("activation", ["none", "relu", "gelu"])
+    def test_vjp_matches_autodiff_through_ref(self, activation):
+        # The custom VJP (pallas backward kernels) must agree with plain
+        # autodiff through the pure-jnp oracle.
+        x, w, b = _rand(30, 24, 12), _rand(31, 12, 20), _rand(32, 20)
+        t = _rand(33, 24, 20)  # cotangent-shaping target
+
+        def loss_kernel(x, w, b):
+            return jnp.sum((fused_linear(x, w, b, activation) - t) ** 2)
+
+        def loss_ref(x, w, b):
+            return jnp.sum((ref.linear_ref(x, w, b, activation) - t) ** 2)
+
+        gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(x, w, b)
+        gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+        for a, e in zip(gk, gr):
+            np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-4)
+
+    @HYPO
+    @given(
+        m=st.integers(1, 70),
+        k=st.integers(1, 40),
+        n=st.integers(1, 70),
+        act=st.sampled_from(["none", "relu", "gelu"]),
+        bm=st.sampled_from([8, 16, 128]),
+        bn=st.sampled_from([8, 32, 128]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, m, k, n, act, bm, bn, seed):
+        kx, kw, kb = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = jax.random.normal(kx, (m, k), jnp.float32)
+        w = jax.random.normal(kw, (k, n), jnp.float32)
+        b = jax.random.normal(kb, (n,), jnp.float32)
+        got = fused_linear(x, w, b, act, bm, bn)
+        want = ref.linear_ref(x, w, b, act)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# topk_error / suffix_sum
+# ---------------------------------------------------------------------------
+
+class TestSuffixSum:
+    def test_small_exact(self):
+        x = jnp.array([1.0, 2.0, 3.0, 4.0])
+        np.testing.assert_allclose(suffix_sum(x, block=2),
+                                   [10.0, 9.0, 7.0, 4.0])
+
+    def test_matches_ref_unaligned(self):
+        x = jnp.abs(_rand(12, 1000))
+        got = suffix_sum(x, block=512)
+        np.testing.assert_allclose(got, ref.suffix_sum_ref(x),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_single_element(self):
+        np.testing.assert_allclose(suffix_sum(jnp.array([5.0])), [5.0])
+
+    @HYPO
+    @given(d=st.integers(1, 3000), block=st.sampled_from([64, 512, 1024]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_sweep(self, d, block, seed):
+        x = jnp.abs(jax.random.normal(jax.random.PRNGKey(seed), (d,)))
+        got = suffix_sum(x, block=block)
+        np.testing.assert_allclose(got, ref.suffix_sum_ref(x),
+                                   rtol=1e-4, atol=1e-3)
+
+
+class TestTopKErrorCurve:
+    def test_endpoints(self):
+        u = _rand(13, 256)
+        err = topk_error_curve(u)
+        assert err.shape == (257,)
+        np.testing.assert_allclose(err[0], jnp.sum(u**2), rtol=1e-5)
+        np.testing.assert_allclose(err[-1], 0.0, atol=1e-6)
+
+    def test_monotone_nonincreasing(self):
+        err = np.asarray(topk_error_curve(_rand(14, 777)))
+        assert np.all(np.diff(err) <= 1e-4)
+
+    def test_matches_explicit_compression(self):
+        u = _rand(15, 128)
+        err = topk_error_curve(u)
+        for k in (0, 1, 7, 64, 128):
+            want = ref.topk_error_single_ref(u, k)
+            np.testing.assert_allclose(err[k], want, rtol=1e-4, atol=1e-4)
+
+    @HYPO
+    @given(d=st.integers(1, 2000), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_matches_ref(self, d, seed):
+        u = jax.random.normal(jax.random.PRNGKey(seed), (d,))
+        got = topk_error_curve(u)
+        want = ref.topk_error_curve_ref(u)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# ef21_apply
+# ---------------------------------------------------------------------------
+
+class TestEf21Apply:
+    def test_full_mask_replaces(self):
+        u, uh = _rand(16, 100), _rand(17, 100)
+        got = ef21_apply(u, uh, jnp.ones(100))
+        np.testing.assert_allclose(got, u, rtol=1e-6)
+
+    def test_zero_mask_keeps(self):
+        u, uh = _rand(18, 100), _rand(19, 100)
+        got = ef21_apply(u, uh, jnp.zeros(100))
+        np.testing.assert_allclose(got, uh, rtol=1e-6)
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(ValueError, match="shape mismatch"):
+            ef21_apply(_rand(0, 4), _rand(1, 5), _rand(2, 4))
+
+    @HYPO
+    @given(d=st.integers(1, 5000), block=st.sampled_from([16, 1024]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_matches_ref(self, d, block, seed):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        u = jax.random.normal(k1, (d,))
+        uh = jax.random.normal(k2, (d,))
+        mask = (jax.random.uniform(k3, (d,)) < 0.3).astype(jnp.float32)
+        got = ef21_apply(u, uh, mask, block=block)
+        np.testing.assert_allclose(got, ref.ef21_apply_ref(u, uh, mask),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_ef21_contracts_toward_gradient(self):
+        # One EF21 step with TopK mask must not increase ||u_hat - u||.
+        u, uh = _rand(20, 500), _rand(21, 500)
+        diff = jnp.abs(u - uh)
+        thresh = jnp.sort(diff)[::-1][50]
+        mask = (diff >= thresh).astype(jnp.float32)
+        new = ef21_apply(u, uh, mask)
+        assert jnp.linalg.norm(new - u) <= jnp.linalg.norm(uh - u) + 1e-5

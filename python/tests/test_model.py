@@ -1,0 +1,131 @@
+"""L2 model checks: shapes, grad structure, autodiff cross-check, training."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.PRESETS["tiny"]
+
+
+def _batch(cfg, seed=0):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (cfg.batch, cfg.seq, cfg.d_in), jnp.float32)
+    y = jax.random.randint(ky, (cfg.batch,), 0, cfg.n_classes)
+    return x, y
+
+
+class TestParamLayout:
+    def test_meta_offsets_contiguous(self):
+        metas = M.param_meta(CFG)
+        off = 0
+        for m in metas:
+            assert m.offset == off
+            assert m.size == int(np.prod(m.shape)) if m.shape else 1
+            off += m.size
+        assert off == M.n_params(CFG)
+
+    def test_groups_cover_embed_blocks_head(self):
+        groups = {m.group for m in M.param_meta(CFG)}
+        assert groups == set(range(CFG.n_blocks + 2))
+
+    def test_init_matches_specs(self):
+        params = M.init_params(CFG, jax.random.PRNGKey(0))
+        specs = M.param_specs(CFG)
+        assert len(params) == len(specs)
+        for p, (_, shape, _) in zip(params, specs):
+            assert p.shape == shape and p.dtype == jnp.float32
+
+    def test_preset_param_counts(self):
+        # e2e must be ~1M params, big ~100M (DESIGN.md presets).
+        assert 5e5 < M.n_params(M.PRESETS["e2e"]) < 2e6
+        assert 0.8e8 < M.n_params(M.PRESETS["big"]) < 1.3e8
+
+    def test_bad_heads_raises(self):
+        with pytest.raises(ValueError, match="divisible"):
+            M.ModelConfig("bad", 1, 4, 8, 10, 3, 1, 16)
+
+
+class TestForward:
+    def test_logit_shape(self):
+        params = M.init_params(CFG, jax.random.PRNGKey(1))
+        x, _ = _batch(CFG)
+        logits = M.forward(CFG, params, x)
+        assert logits.shape == (CFG.batch, CFG.n_classes)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_loss_near_uniform_at_init(self):
+        params = M.init_params(CFG, jax.random.PRNGKey(2))
+        x, y = _batch(CFG)
+        loss = M.loss_fn(CFG, params, x, y)
+        assert abs(float(loss) - np.log(CFG.n_classes)) < 1.0
+
+    def test_permutation_equivariance_of_batch(self):
+        params = M.init_params(CFG, jax.random.PRNGKey(3))
+        x, _ = _batch(CFG)
+        logits = M.forward(CFG, params, x)
+        perm = jnp.arange(CFG.batch)[::-1]
+        logits_p = M.forward(CFG, params, x[perm])
+        np.testing.assert_allclose(logits_p, logits[perm], rtol=1e-4, atol=1e-4)
+
+
+class TestTrainStep:
+    def test_signature_and_grad_shapes(self):
+        step = jax.jit(M.make_train_step(CFG))
+        params = M.init_params(CFG, jax.random.PRNGKey(4))
+        x, y = _batch(CFG)
+        out = step(*params, x, y)
+        assert len(out) == 1 + len(params)
+        for g, p in zip(out[1:], params):
+            assert g.shape == p.shape
+
+    def test_grads_match_plain_autodiff(self):
+        # Cross-check the exported entry point against straight jax.grad
+        # of the loss (catches any param-ordering slip in make_train_step).
+        params = M.init_params(CFG, jax.random.PRNGKey(5))
+        x, y = _batch(CFG, seed=5)
+        out = M.make_train_step(CFG)(*params, x, y)
+        grads_direct = jax.grad(lambda p: M.loss_fn(CFG, p, x, y))(params)
+        for got, want in zip(out[1:], grads_direct):
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_sgd_reduces_loss(self):
+        step = jax.jit(M.make_train_step(CFG))
+        params = M.init_params(CFG, jax.random.PRNGKey(6))
+        x, y = _batch(CFG, seed=6)
+        first = None
+        for _ in range(30):
+            out = step(*params, x, y)
+            loss, grads = out[0], out[1:]
+            if first is None:
+                first = float(loss)
+            params = [p - 0.05 * g for p, g in zip(params, grads)]
+        assert float(loss) < first - 0.2
+
+
+class TestEvalStep:
+    def test_counts_bounded(self):
+        estep = jax.jit(M.make_eval_step(CFG))
+        params = M.init_params(CFG, jax.random.PRNGKey(7))
+        x, y = _batch(CFG, seed=7)
+        loss, top1, top5 = estep(*params, x, y)
+        assert 0 <= float(top1) <= float(top5) <= CFG.batch
+        assert np.isfinite(float(loss))
+
+    def test_perfect_model_top1(self):
+        # Logits forced by a head that copies a one-hot signal: train for
+        # a few steps until top1 on the training batch improves.
+        step = jax.jit(M.make_train_step(CFG))
+        estep = jax.jit(M.make_eval_step(CFG))
+        params = M.init_params(CFG, jax.random.PRNGKey(8))
+        x, y = _batch(CFG, seed=8)
+        _, before, _ = estep(*params, x, y)
+        for _ in range(60):
+            out = step(*params, x, y)
+            params = [p - 0.05 * g for p, g in zip(params, out[1:])]
+        _, after, _ = estep(*params, x, y)
+        assert float(after) >= float(before)

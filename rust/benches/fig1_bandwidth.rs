@@ -1,0 +1,32 @@
+//! Bench + regeneration for Fig. 1 (EC2-like bandwidth traces).
+//!
+//! Prints the regenerated figure summary, then micro-benchmarks the
+//! trace substrate (the hot query of every netsim transfer).
+
+use kimad::bandwidth::BandwidthTrace;
+use kimad::reports::{fig1, ReportCtx};
+use kimad::util::bench::{bench, black_box, time_once};
+
+fn main() {
+    let ctx = ReportCtx::fast();
+    std::fs::create_dir_all(&ctx.out_dir).unwrap();
+    let md = time_once("fig1 regeneration", || fig1::generate(&ctx).unwrap());
+    println!("{md}");
+
+    let traces = fig1::ec2_like_traces(21);
+    let tr = &traces[0];
+    let mut t = 0.0;
+    bench("trace::at (OU-noise composite)", 20, || {
+        t += 0.37;
+        if t > 100.0 {
+            t = 0.0;
+        }
+        black_box(tr.at(black_box(t)));
+    });
+    bench("trace::integrate 1s window", 20, || {
+        black_box(tr.integrate(black_box(10.0), black_box(11.0)));
+    });
+    bench("trace::transfer_time 1Mbit", 20, || {
+        black_box(tr.transfer_time(black_box(5.0), black_box(1e6)));
+    });
+}

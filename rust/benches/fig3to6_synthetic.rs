@@ -1,0 +1,25 @@
+//! Bench + regeneration for Figs. 3–6 (synthetic quadratic, four
+//! bandwidth regimes; GD vs tuned EF21 vs Kimad).
+
+use kimad::reports::{synthetic, ReportCtx};
+use kimad::util::bench::{bench, black_box, time_once};
+
+fn main() {
+    let ctx = ReportCtx::fast();
+    std::fs::create_dir_all(&ctx.out_dir).unwrap();
+    let md = time_once("fig3-6 regeneration (fast grids)", || {
+        synthetic::generate_all(&ctx).unwrap()
+    });
+    println!("{md}");
+
+    // Hot path: one full tuned single-scenario run.
+    bench("synthetic run (Kimad, xsmall, 25s horizon)", 10, || {
+        black_box(synthetic::run_at(
+            synthetic::Scenario::XSmall,
+            synthetic::Method::Kimad { t: 1.0 },
+            0.05,
+            1.0,
+            25.0,
+        ));
+    });
+}

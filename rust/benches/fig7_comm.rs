@@ -1,0 +1,18 @@
+//! Bench + regeneration for Fig. 7 (communication adaptivity across
+//! T_comm; deep model over PJRT). Skips gracefully without artifacts.
+
+use kimad::reports::{deep, ReportCtx};
+use kimad::util::bench::time_once;
+
+fn main() {
+    let ctx = ReportCtx::fast();
+    std::fs::create_dir_all(&ctx.out_dir).unwrap();
+    if kimad::runtime::ArtifactStore::open(&ctx.artifacts).is_err() {
+        println!("fig7: artifacts/ missing — run `make artifacts` first (skipped)");
+        return;
+    }
+    match time_once("fig7 regeneration (fast)", || deep::fig7(&ctx)) {
+        Ok(md) => println!("{md}"),
+        Err(e) => println!("fig7 failed: {e:#}"),
+    }
+}

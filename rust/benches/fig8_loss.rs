@@ -1,0 +1,18 @@
+//! Bench + regeneration for Fig. 8 (loss curve, Kimad vs comm-matched
+//! EF21; deep model over PJRT). Skips gracefully without artifacts.
+
+use kimad::reports::{deep, ReportCtx};
+use kimad::util::bench::time_once;
+
+fn main() {
+    let ctx = ReportCtx::fast();
+    std::fs::create_dir_all(&ctx.out_dir).unwrap();
+    if kimad::runtime::ArtifactStore::open(&ctx.artifacts).is_err() {
+        println!("fig8: artifacts/ missing — run `make artifacts` first (skipped)");
+        return;
+    }
+    match time_once("fig8 regeneration (fast)", || deep::fig8(&ctx)) {
+        Ok(md) => println!("{md}"),
+        Err(e) => println!("fig8 failed: {e:#}"),
+    }
+}

@@ -1,0 +1,42 @@
+//! Bench + regeneration for Fig. 9 (compression error: Kimad vs Kimad+
+//! vs whole-model optimal) plus micro-benches of the Kimad+ machinery
+//! (error curve + knapsack DP — the paper's "non-negligible overhead").
+
+use kimad::kimad::{allocate, knapsack, ErrorCurve, KnapsackParams};
+use kimad::reports::{deep, ReportCtx};
+use kimad::util::bench::{bench, black_box, time_once};
+use kimad::util::rng::Rng;
+
+fn main() {
+    let ctx = ReportCtx::fast();
+    std::fs::create_dir_all(&ctx.out_dir).unwrap();
+    if kimad::runtime::ArtifactStore::open(&ctx.artifacts).is_ok() {
+        match time_once("fig9 regeneration (fast)", || deep::fig9(&ctx)) {
+            Ok(md) => println!("{md}"),
+            Err(e) => println!("fig9 failed: {e:#}"),
+        }
+    } else {
+        println!("fig9: artifacts/ missing — run `make artifacts` first (skipped)");
+    }
+
+    // Kimad+ hot path in isolation, at deep-model scale.
+    let mut rng = Rng::seed_from_u64(7);
+    let grads: Vec<Vec<f32>> = (0..14)
+        .map(|i| (0..(1 << (10 + i % 4))).map(|_| rng.range_f32(-1.0, 1.0)).collect())
+        .collect();
+    bench("error curves (14 layers, 1k-8k coords)", 10, || {
+        let curves: Vec<ErrorCurve> =
+            grads.iter().map(|g| ErrorCurve::build(black_box(g))).collect();
+        black_box(curves);
+    });
+    let curves: Vec<ErrorCurve> = grads.iter().map(|g| ErrorCurve::build(g)).collect();
+    let grid = knapsack::paper_ratio_grid();
+    let options = knapsack::topk_options(&curves, &grid, 64);
+    let total: u64 = grads.iter().map(|g| g.len() as u64 * 64).sum();
+    bench("knapsack DP (14 layers x 50 ratios, D=1000)", 10, || {
+        black_box(allocate(
+            black_box(&options),
+            KnapsackParams { budget_bits: total / 4, discretization: 1000 },
+        ));
+    });
+}

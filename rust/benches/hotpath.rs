@@ -1,0 +1,137 @@
+//! Whole-stack hot-path micro-benchmarks — the §Perf working set
+//! (EXPERIMENTS.md): TopK selection, EF21 advance, error curves,
+//! knapsack DP, full simulator rounds, and (with artifacts) one PJRT
+//! train_step.
+
+use kimad::compress::{Compressor, TopK};
+use kimad::coordinator::{QuadraticSource, SimConfig, Simulation};
+use kimad::ef21::Estimator;
+use kimad::kimad::{BudgetParams, CompressPolicy, ErrorCurve};
+use kimad::netsim::{Link, NetSim};
+use kimad::optim::{LayerwiseSgd, Schedule};
+use kimad::quadratic::Quadratic;
+use kimad::util::bench::{bench, black_box, fmt_ns};
+use kimad::util::rng::Rng;
+
+fn grad(d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..d).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+}
+
+fn main() {
+    // --- L3 compressors: TopK selection dominates the per-round cost.
+    for d in [100_000usize, 1_000_000, 10_000_000] {
+        let u = grad(d, 1);
+        let k = d / 100;
+        let r = bench(&format!("topk select+compress d={d} k=1%"), 10, || {
+            black_box(TopK::new(k).compress(black_box(&u)));
+        });
+        let mbps = (d as f64 * 4.0) / (r.median_ns() / 1e9) / 1e6;
+        println!("    -> {mbps:.0} MB/s effective scan rate");
+    }
+
+    // --- EF21 layer advance (compress + apply), 1M coords.
+    let d = 1_000_000;
+    let target = grad(d, 2);
+    let layer = kimad::model::Layer { id: 0, name: "l".into(), offset: 0, size: d };
+    let mut est = Estimator::zeros(d);
+    let mut scratch = Vec::with_capacity(d);
+    bench("ef21 compress_advance d=1M k=1%", 10, || {
+        black_box(est.compress_advance(&TopK::new(d / 100), &target, &layer, &mut scratch));
+    });
+
+    // --- Kimad+ machinery at transformer scale.
+    let u = grad(131_072, 3);
+    bench("error curve build d=128k", 10, || {
+        black_box(ErrorCurve::build(black_box(&u)));
+    });
+
+    // --- Whole simulator round throughput (quadratic workload).
+    let q = Quadratic::paper_instance(1000);
+    let layers = q.layout(10).layers();
+    let cfg = SimConfig {
+        m: 4,
+        weights: vec![],
+        budget: BudgetParams::PerDirection { t_comm: 1.0 },
+        up_policy: CompressPolicy::KimadUniform,
+        down_policy: CompressPolicy::KimadUniform,
+        optimizer: LayerwiseSgd::new(Schedule::Constant(0.01)),
+        layers,
+        warm_start: true,
+        prior_bps: 6400.0,
+        round_deadline: Some(1.0),
+        budget_safety: 1.0,
+    };
+    let net = NetSim::new(
+        (0..4)
+            .map(|_| {
+                Link::new(
+                    Box::new(kimad::bandwidth::SinSquaredTrace::new(6400.0, 0.1, 640.0)),
+                    Box::new(kimad::bandwidth::ConstantTrace::new(1e8)),
+                )
+            })
+            .collect(),
+    );
+    let mut sim = Simulation::new(cfg, net, QuadraticSource::new(q, 0.1), vec![1.0; 1000]);
+    let r = bench("simulator round (M=4, d=1000, 10 layers)", 10, || {
+        black_box(sim.round().unwrap());
+    });
+    println!(
+        "    -> {:.0} rounds/s",
+        1e9 / r.median_ns()
+    );
+
+    // --- Kimad+ round (knapsack on the hot path).
+    let q2 = Quadratic::paper_instance(1000);
+    let layers2 = q2.layout(10).layers();
+    let cfg2 = SimConfig {
+        m: 1,
+        weights: vec![],
+        budget: BudgetParams::PerDirection { t_comm: 1.0 },
+        up_policy: CompressPolicy::KimadPlus { discretization: 1000, ratios: vec![] },
+        down_policy: CompressPolicy::KimadUniform,
+        optimizer: LayerwiseSgd::new(Schedule::Constant(0.01)),
+        layers: layers2,
+        warm_start: true,
+        prior_bps: 6400.0,
+        round_deadline: Some(1.0),
+        budget_safety: 1.0,
+    };
+    let net2 = NetSim::new(vec![Link::new(
+        Box::new(kimad::bandwidth::ConstantTrace::new(6400.0)),
+        Box::new(kimad::bandwidth::ConstantTrace::new(1e8)),
+    )]);
+    let mut sim2 = Simulation::new(cfg2, net2, QuadraticSource::new(q2, 0.1), vec![1.0; 1000]);
+    bench("simulator round (Kimad+ DP, d=1000)", 10, || {
+        black_box(sim2.round().unwrap());
+    });
+
+    // --- PJRT train_step (the L2/L1 stack), when artifacts exist.
+    if let Ok(store) = kimad::runtime::ArtifactStore::open("artifacts") {
+        let rt = kimad::runtime::Runtime::cpu().expect("pjrt cpu");
+        for preset in ["small", "e2e"] {
+            if store.model(preset).is_err() {
+                continue;
+            }
+            let mut src =
+                kimad::runtime::PjrtModelSource::load(&rt, &store, preset, 0.3, 1.0).unwrap();
+            let layout = store.layout(preset).unwrap();
+            let params = store.initial_params(preset).unwrap();
+            let mut out = vec![0.0f32; layout.n_params];
+            use kimad::coordinator::GradientSource;
+            let t0 = std::time::Instant::now();
+            let reps = 5;
+            for i in 0..reps {
+                black_box(src.update(0, i, &params, &mut out).unwrap());
+            }
+            let per = t0.elapsed().as_nanos() as f64 / reps as f64;
+            println!(
+                "pjrt train_step preset={preset} ({} params): {} / step",
+                layout.n_params,
+                fmt_ns(per)
+            );
+        }
+    } else {
+        println!("pjrt train_step: artifacts/ missing (skipped)");
+    }
+}

@@ -1,0 +1,18 @@
+//! Bench + regeneration for Table 1 (average step time across T_comm,
+//! Kimad vs comm-matched EF21). Skips gracefully without artifacts.
+
+use kimad::reports::{deep, ReportCtx};
+use kimad::util::bench::time_once;
+
+fn main() {
+    let ctx = ReportCtx::fast();
+    std::fs::create_dir_all(&ctx.out_dir).unwrap();
+    if kimad::runtime::ArtifactStore::open(&ctx.artifacts).is_err() {
+        println!("table1: artifacts/ missing — run `make artifacts` first (skipped)");
+        return;
+    }
+    match time_once("table1 regeneration (fast)", || deep::table1(&ctx)) {
+        Ok(md) => println!("{md}"),
+        Err(e) => println!("table1 failed: {e:#}"),
+    }
+}

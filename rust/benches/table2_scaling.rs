@@ -1,0 +1,18 @@
+//! Bench + regeneration for Table 2 (Top-5 accuracy across M).
+//! Skips gracefully without artifacts.
+
+use kimad::reports::{deep, ReportCtx};
+use kimad::util::bench::time_once;
+
+fn main() {
+    let ctx = ReportCtx::fast();
+    std::fs::create_dir_all(&ctx.out_dir).unwrap();
+    if kimad::runtime::ArtifactStore::open(&ctx.artifacts).is_err() {
+        println!("table2: artifacts/ missing — run `make artifacts` first (skipped)");
+        return;
+    }
+    match time_once("table2 regeneration (fast)", || deep::table2(&ctx)) {
+        Ok(md) => println!("{md}"),
+        Err(e) => println!("table2 failed: {e:#}"),
+    }
+}

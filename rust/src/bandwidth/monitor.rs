@@ -1,0 +1,177 @@
+//! Runtime bandwidth estimation from observed transfers.
+//!
+//! Kimad's endpoints never see the ground-truth trace: they observe
+//! `(bytes, seconds)` for each completed transfer and must *estimate*
+//! `B_m^k` for the next round (Algorithm 3 lines 3/10). The paper calls
+//! the simulated monitor "trivial"; we still implement the interface a
+//! real NIC-level monitor (DC2-style shim) would satisfy, with two
+//! estimators: EWMA and sliding-window median.
+
+/// Online estimator of current link bandwidth (bits/second).
+pub trait BandwidthMonitor: Send {
+    /// Record one completed transfer of `bits` that took `seconds`.
+    fn observe(&mut self, bits: f64, seconds: f64);
+
+    /// Current estimate in bits/second; `None` until warm.
+    fn estimate_bps(&self) -> Option<f64>;
+
+    /// Estimate with a fallback prior for the cold-start rounds.
+    fn estimate_or(&self, prior: f64) -> f64 {
+        self.estimate_bps().unwrap_or(prior)
+    }
+
+    fn reset(&mut self);
+}
+
+/// Exponentially-weighted moving average over observed rates.
+#[derive(Debug, Clone)]
+pub struct EwmaMonitor {
+    alpha: f64,
+    est: Option<f64>,
+}
+
+impl EwmaMonitor {
+    /// `alpha` in (0, 1]: weight of the newest observation.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0,1]");
+        Self { alpha, est: None }
+    }
+}
+
+impl Default for EwmaMonitor {
+    fn default() -> Self {
+        Self::new(0.5)
+    }
+}
+
+impl BandwidthMonitor for EwmaMonitor {
+    fn observe(&mut self, bits: f64, seconds: f64) {
+        if seconds <= 0.0 || bits <= 0.0 {
+            return;
+        }
+        let rate = bits / seconds;
+        self.est = Some(match self.est {
+            None => rate,
+            Some(prev) => self.alpha * rate + (1.0 - self.alpha) * prev,
+        });
+    }
+
+    fn estimate_bps(&self) -> Option<f64> {
+        self.est
+    }
+
+    fn reset(&mut self) {
+        self.est = None;
+    }
+}
+
+/// Median over the last `window` observed rates — robust to the
+/// transient congestion spikes of Fig. 1.
+#[derive(Debug, Clone)]
+pub struct SlidingWindowMonitor {
+    window: usize,
+    rates: Vec<f64>,
+}
+
+impl SlidingWindowMonitor {
+    pub fn new(window: usize) -> Self {
+        assert!(window >= 1);
+        Self { window, rates: Vec::new() }
+    }
+}
+
+impl BandwidthMonitor for SlidingWindowMonitor {
+    fn observe(&mut self, bits: f64, seconds: f64) {
+        if seconds <= 0.0 || bits <= 0.0 {
+            return;
+        }
+        if self.rates.len() == self.window {
+            self.rates.remove(0);
+        }
+        self.rates.push(bits / seconds);
+    }
+
+    fn estimate_bps(&self) -> Option<f64> {
+        if self.rates.is_empty() {
+            return None;
+        }
+        let mut sorted = self.rates.clone();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        let mid = sorted.len() / 2;
+        Some(if sorted.len() % 2 == 1 {
+            sorted[mid]
+        } else {
+            0.5 * (sorted[mid - 1] + sorted[mid])
+        })
+    }
+
+    fn reset(&mut self) {
+        self.rates.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_cold_start_then_converges() {
+        let mut m = EwmaMonitor::new(0.5);
+        assert!(m.estimate_bps().is_none());
+        assert_eq!(m.estimate_or(123.0), 123.0);
+        for _ in 0..20 {
+            m.observe(100.0, 1.0);
+        }
+        assert!((m.estimate_bps().unwrap() - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ewma_tracks_changes() {
+        let mut m = EwmaMonitor::new(0.5);
+        m.observe(100.0, 1.0);
+        m.observe(200.0, 1.0);
+        let e = m.estimate_bps().unwrap();
+        assert!(e > 100.0 && e < 200.0);
+    }
+
+    #[test]
+    fn ewma_ignores_degenerate() {
+        let mut m = EwmaMonitor::default();
+        m.observe(0.0, 1.0);
+        m.observe(10.0, 0.0);
+        assert!(m.estimate_bps().is_none());
+    }
+
+    #[test]
+    fn window_median_robust_to_spike() {
+        let mut m = SlidingWindowMonitor::new(5);
+        for _ in 0..4 {
+            m.observe(100.0, 1.0);
+        }
+        m.observe(10_000.0, 1.0); // spike
+        assert_eq!(m.estimate_bps().unwrap(), 100.0);
+    }
+
+    #[test]
+    fn window_evicts_oldest() {
+        let mut m = SlidingWindowMonitor::new(2);
+        m.observe(10.0, 1.0);
+        m.observe(100.0, 1.0);
+        m.observe(100.0, 1.0);
+        assert_eq!(m.estimate_bps().unwrap(), 100.0);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut m = EwmaMonitor::default();
+        m.observe(5.0, 1.0);
+        m.reset();
+        assert!(m.estimate_bps().is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha")]
+    fn bad_alpha_panics() {
+        EwmaMonitor::new(0.0);
+    }
+}

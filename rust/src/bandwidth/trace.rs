@@ -1,0 +1,509 @@
+//! Synthetic bandwidth traces (deterministic, seeded).
+
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+
+use super::BandwidthTrace;
+
+/// Floor below which no trace is allowed to fall: keeps transfer times
+/// finite and mirrors reality (links do not drop to exactly zero).
+pub const MIN_BPS: f64 = 1.0;
+
+/// Constant bandwidth.
+#[derive(Debug, Clone)]
+pub struct ConstantTrace {
+    bps: f64,
+}
+
+impl ConstantTrace {
+    pub fn new(bps: f64) -> Self {
+        Self { bps: bps.max(MIN_BPS) }
+    }
+}
+
+impl BandwidthTrace for ConstantTrace {
+    fn at(&self, _t: f64) -> f64 {
+        self.bps
+    }
+    fn integrate(&self, t0: f64, t1: f64) -> f64 {
+        self.bps * (t1 - t0).max(0.0)
+    }
+    fn transfer_time(&self, _t0: f64, bits: f64) -> f64 {
+        bits.max(0.0) / self.bps
+    }
+}
+
+/// The paper's §4.2 family: `eta * sin(theta * t)^2 + delta`.
+///
+/// `eta` is the oscillation amplitude, `theta` the angular frequency and
+/// `delta` the floor; the paper's deep-model runs use 30–330 Mbps.
+#[derive(Debug, Clone)]
+pub struct SinSquaredTrace {
+    pub eta: f64,
+    pub theta: f64,
+    pub delta: f64,
+    pub phase: f64,
+}
+
+impl SinSquaredTrace {
+    pub fn new(eta: f64, theta: f64, delta: f64) -> Self {
+        Self { eta, theta, delta, phase: 0.0 }
+    }
+
+    pub fn with_phase(mut self, phase: f64) -> Self {
+        self.phase = phase;
+        self
+    }
+}
+
+impl BandwidthTrace for SinSquaredTrace {
+    fn at(&self, t: f64) -> f64 {
+        let s = (self.theta * t + self.phase).sin();
+        (self.eta * s * s + self.delta).max(MIN_BPS)
+    }
+
+    /// Closed form: ∫ η sin²(θt+φ) + δ dt
+    ///            = (η/2 + δ) t − η sin(2(θt+φ)) / (4θ),
+    /// valid whenever the MIN_BPS clamp is inactive (δ ≥ MIN_BPS and
+    /// η ≥ 0 keep the integrand above the floor); O(1) instead of the
+    /// millisecond-lattice trapezoid (EXPERIMENTS.md §Perf).
+    fn integrate(&self, t0: f64, t1: f64) -> f64 {
+        if self.delta < MIN_BPS || self.eta < 0.0 || self.theta.abs() < 1e-12 {
+            // Fall back to the generic trapezoid via a local copy of
+            // the default implementation semantics.
+            return generic_integrate(self, t0, t1);
+        }
+        let anti = |t: f64| {
+            (0.5 * self.eta + self.delta) * t
+                - self.eta * (2.0 * (self.theta * t + self.phase)).sin() / (4.0 * self.theta)
+        };
+        (anti(t1) - anti(t0)).max(0.0)
+    }
+}
+
+/// The trait's generic trapezoid integration, callable from overrides.
+fn generic_integrate<T: BandwidthTrace + ?Sized>(tr: &T, t0: f64, t1: f64) -> f64 {
+    let span = t1 - t0;
+    if span <= 0.0 {
+        return 0.0;
+    }
+    let steps = ((span / 1e-3).ceil() as usize).clamp(1, 200_000);
+    let h = span / steps as f64;
+    let mut acc = 0.0;
+    let mut prev = tr.at(t0);
+    for i in 1..=steps {
+        let cur = tr.at(t0 + h * i as f64);
+        acc += 0.5 * (prev + cur) * h;
+        prev = cur;
+    }
+    acc
+}
+
+/// Square wave oscillating between `low` and `high` with the given
+/// period (seconds); used for the Fig. 5 small/high oscillation regime.
+#[derive(Debug, Clone)]
+pub struct SquareWaveTrace {
+    pub low: f64,
+    pub high: f64,
+    pub period: f64,
+    pub duty: f64,
+}
+
+impl SquareWaveTrace {
+    pub fn new(low: f64, high: f64, period: f64) -> Self {
+        Self { low: low.max(MIN_BPS), high: high.max(MIN_BPS), period, duty: 0.5 }
+    }
+}
+
+impl BandwidthTrace for SquareWaveTrace {
+    fn at(&self, t: f64) -> f64 {
+        let frac = (t / self.period).rem_euclid(1.0);
+        if frac < self.duty {
+            self.high
+        } else {
+            self.low
+        }
+    }
+}
+
+/// Mean-reverting Ornstein–Uhlenbeck noise on a 10 ms lattice — the
+/// EC2-like jitter of Fig. 1. Deterministic in (seed, t).
+///
+///   X_{n+1} = X_n + kappa (mu - X_n) dt + sigma sqrt(dt) N(0,1)
+///
+/// The whole lattice is materialized up front (reproducible, queryable
+/// in O(1) with linear interpolation).
+#[derive(Debug, Clone)]
+pub struct OuNoiseTrace {
+    lattice: Vec<f64>,
+    dt: f64,
+    mu: f64,
+}
+
+impl OuNoiseTrace {
+    /// `horizon`: max simulation time covered (queries beyond clamp).
+    pub fn new(mu: f64, kappa: f64, sigma: f64, seed: u64, horizon: f64) -> Self {
+        let dt = 0.01;
+        let n = (horizon / dt).ceil() as usize + 2;
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut x = mu;
+        let mut lattice = Vec::with_capacity(n);
+        for _ in 0..n {
+            lattice.push(x.max(MIN_BPS));
+            let z = rng.normal();
+            x += kappa * (mu - x) * dt + sigma * dt.sqrt() * z;
+        }
+        Self { lattice, dt, mu }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mu
+    }
+}
+
+impl BandwidthTrace for OuNoiseTrace {
+    fn at(&self, t: f64) -> f64 {
+        let idx = (t / self.dt).floor();
+        let i = (idx.max(0.0) as usize).min(self.lattice.len() - 2);
+        let frac = (t / self.dt - i as f64).clamp(0.0, 1.0);
+        self.lattice[i] * (1.0 - frac) + self.lattice[i + 1] * frac
+    }
+}
+
+/// Replay a recorded `(time, bps)` step function (e.g. a real iperf CSV).
+#[derive(Debug, Clone)]
+pub struct ReplayTrace {
+    points: Vec<(f64, f64)>,
+}
+
+impl ReplayTrace {
+    /// `points` must be sorted by time; values before the first point
+    /// use the first value, after the last the last value.
+    pub fn new(mut points: Vec<(f64, f64)>) -> Self {
+        points.sort_by(|a, b| a.0.total_cmp(&b.0));
+        for p in &mut points {
+            p.1 = p.1.max(MIN_BPS);
+        }
+        assert!(!points.is_empty(), "replay trace needs >= 1 point");
+        Self { points }
+    }
+
+    /// Parse simple `time_s,bps` CSV (no header; `#` comments allowed).
+    pub fn from_csv(text: &str) -> anyhow::Result<Self> {
+        let mut pts = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.split(',');
+            let t: f64 = it
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("line {ln}: missing time"))?
+                .trim()
+                .parse()?;
+            let b: f64 = it
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("line {ln}: missing bps"))?
+                .trim()
+                .parse()?;
+            pts.push((t, b));
+        }
+        anyhow::ensure!(!pts.is_empty(), "empty trace CSV");
+        Ok(Self::new(pts))
+    }
+}
+
+impl BandwidthTrace for ReplayTrace {
+    fn at(&self, t: f64) -> f64 {
+        match self.points.binary_search_by(|p| p.0.total_cmp(&t)) {
+            Ok(i) => self.points[i].1,
+            Err(0) => self.points[0].1,
+            Err(i) => self.points[i - 1].1,
+        }
+    }
+}
+
+/// Multiplicative composition: `base(t) * modulator(t)` (modulator is a
+/// unitless factor, e.g. OU noise with mu=1.0). Used to give each worker
+/// "the same pattern with different noise" (§4.2).
+pub struct CompositeTrace {
+    pub base: Box<dyn BandwidthTrace>,
+    pub modulator: Box<dyn BandwidthTrace>,
+}
+
+impl CompositeTrace {
+    pub fn new(base: Box<dyn BandwidthTrace>, modulator: Box<dyn BandwidthTrace>) -> Self {
+        Self { base, modulator }
+    }
+}
+
+impl BandwidthTrace for CompositeTrace {
+    fn at(&self, t: f64) -> f64 {
+        (self.base.at(t) * self.modulator.at(t)).max(MIN_BPS)
+    }
+}
+
+/// Declarative trace description (config-file friendly; JSON-codable).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceSpec {
+    Constant { bps: f64 },
+    /// `eta sin(theta t + phase)^2 + delta`
+    SinSquared { eta: f64, theta: f64, delta: f64, phase: f64 },
+    SquareWave { low: f64, high: f64, period: f64 },
+    OuNoise { mu: f64, kappa: f64, sigma: f64, seed: u64, horizon: f64 },
+    /// sin^2 base modulated by OU noise around 1.0 — the §4.2 deep-model
+    /// setting ("same patterns with different noise").
+    NoisySinSquared {
+        eta: f64,
+        theta: f64,
+        delta: f64,
+        phase: f64,
+        noise_sigma: f64,
+        seed: u64,
+        horizon: f64,
+    },
+}
+
+impl TraceSpec {
+    pub fn build(&self) -> Box<dyn BandwidthTrace> {
+        match self.clone() {
+            TraceSpec::Constant { bps } => Box::new(ConstantTrace::new(bps)),
+            TraceSpec::SinSquared { eta, theta, delta, phase } => {
+                Box::new(SinSquaredTrace::new(eta, theta, delta).with_phase(phase))
+            }
+            TraceSpec::SquareWave { low, high, period } => {
+                Box::new(SquareWaveTrace::new(low, high, period))
+            }
+            TraceSpec::OuNoise { mu, kappa, sigma, seed, horizon } => {
+                Box::new(OuNoiseTrace::new(mu, kappa, sigma, seed, horizon))
+            }
+            TraceSpec::NoisySinSquared {
+                eta,
+                theta,
+                delta,
+                phase,
+                noise_sigma,
+                seed,
+                horizon,
+            } => Box::new(CompositeTrace::new(
+                Box::new(SinSquaredTrace::new(eta, theta, delta).with_phase(phase)),
+                Box::new(OuNoiseTrace::new(1.0, 2.0, noise_sigma, seed, horizon)),
+            )),
+        }
+    }
+
+    /// Per-worker variants: same pattern, different seed/phase (§4.2).
+    pub fn per_worker(&self, m: usize) -> Box<dyn BandwidthTrace> {
+        let mut spec = self.clone();
+        match &mut spec {
+            TraceSpec::OuNoise { seed, .. } => *seed = seed.wrapping_add(m as u64 * 7919),
+            TraceSpec::NoisySinSquared { seed, .. } => {
+                *seed = seed.wrapping_add(m as u64 * 7919)
+            }
+            TraceSpec::SinSquared { phase, .. } => *phase += 0.13 * m as f64,
+            _ => {}
+        }
+        spec.build()
+    }
+
+    // -- JSON codec (config files) --------------------------------------
+
+    pub fn to_json(&self) -> Value {
+        match self {
+            TraceSpec::Constant { bps } => Value::obj(vec![
+                ("kind", Value::str("constant")),
+                ("bps", Value::num(*bps)),
+            ]),
+            TraceSpec::SinSquared { eta, theta, delta, phase } => Value::obj(vec![
+                ("kind", Value::str("sin_squared")),
+                ("eta", Value::num(*eta)),
+                ("theta", Value::num(*theta)),
+                ("delta", Value::num(*delta)),
+                ("phase", Value::num(*phase)),
+            ]),
+            TraceSpec::SquareWave { low, high, period } => Value::obj(vec![
+                ("kind", Value::str("square_wave")),
+                ("low", Value::num(*low)),
+                ("high", Value::num(*high)),
+                ("period", Value::num(*period)),
+            ]),
+            TraceSpec::OuNoise { mu, kappa, sigma, seed, horizon } => Value::obj(vec![
+                ("kind", Value::str("ou_noise")),
+                ("mu", Value::num(*mu)),
+                ("kappa", Value::num(*kappa)),
+                ("sigma", Value::num(*sigma)),
+                ("seed", Value::num(*seed as f64)),
+                ("horizon", Value::num(*horizon)),
+            ]),
+            TraceSpec::NoisySinSquared { eta, theta, delta, phase, noise_sigma, seed, horizon } => {
+                Value::obj(vec![
+                    ("kind", Value::str("noisy_sin_squared")),
+                    ("eta", Value::num(*eta)),
+                    ("theta", Value::num(*theta)),
+                    ("delta", Value::num(*delta)),
+                    ("phase", Value::num(*phase)),
+                    ("noise_sigma", Value::num(*noise_sigma)),
+                    ("seed", Value::num(*seed as f64)),
+                    ("horizon", Value::num(*horizon)),
+                ])
+            }
+        }
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let kind = v.get("kind")?.as_str()?;
+        let f = |k: &str| -> anyhow::Result<f64> { v.get(k)?.as_f64() };
+        let fo = |k: &str, d: f64| -> f64 {
+            v.opt(k).and_then(|x| x.as_f64().ok()).unwrap_or(d)
+        };
+        Ok(match kind {
+            "constant" => TraceSpec::Constant { bps: f("bps")? },
+            "sin_squared" => TraceSpec::SinSquared {
+                eta: f("eta")?,
+                theta: f("theta")?,
+                delta: f("delta")?,
+                phase: fo("phase", 0.0),
+            },
+            "square_wave" => TraceSpec::SquareWave {
+                low: f("low")?,
+                high: f("high")?,
+                period: f("period")?,
+            },
+            "ou_noise" => TraceSpec::OuNoise {
+                mu: f("mu")?,
+                kappa: f("kappa")?,
+                sigma: f("sigma")?,
+                seed: v.get("seed")?.as_u64()?,
+                horizon: f("horizon")?,
+            },
+            "noisy_sin_squared" => TraceSpec::NoisySinSquared {
+                eta: f("eta")?,
+                theta: f("theta")?,
+                delta: f("delta")?,
+                phase: fo("phase", 0.0),
+                noise_sigma: f("noise_sigma")?,
+                seed: v.get("seed")?.as_u64()?,
+                horizon: f("horizon")?,
+            },
+            other => anyhow::bail!("unknown trace kind '{other}'"),
+        })
+    }
+}
+
+/// Convenience: build the M per-worker (uplink, downlink) trace pairs.
+pub struct PerWorkerTraces;
+
+impl PerWorkerTraces {
+    pub fn build(
+        up: &TraceSpec,
+        down: &TraceSpec,
+        m: usize,
+    ) -> Vec<(Box<dyn BandwidthTrace>, Box<dyn BandwidthTrace>)> {
+        (0..m)
+            .map(|i| (up.per_worker(i), down.per_worker(i + 104_729)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sin_squared_bounds() {
+        let tr = SinSquaredTrace::new(300.0, 0.7, 30.0);
+        for i in 0..1000 {
+            let v = tr.at(i as f64 * 0.05);
+            assert!((30.0..=330.0 + 1e-9).contains(&v));
+        }
+    }
+
+    #[test]
+    fn square_wave_levels() {
+        let tr = SquareWaveTrace::new(10.0, 100.0, 2.0);
+        assert_eq!(tr.at(0.1), 100.0);
+        assert_eq!(tr.at(1.1), 10.0);
+        assert_eq!(tr.at(2.1), 100.0);
+    }
+
+    #[test]
+    fn ou_noise_deterministic_and_positive() {
+        let a = OuNoiseTrace::new(50.0, 0.5, 10.0, 42, 10.0);
+        let b = OuNoiseTrace::new(50.0, 0.5, 10.0, 42, 10.0);
+        for i in 0..100 {
+            let t = i as f64 * 0.1;
+            assert_eq!(a.at(t), b.at(t));
+            assert!(a.at(t) >= MIN_BPS);
+        }
+        let c = OuNoiseTrace::new(50.0, 0.5, 10.0, 43, 10.0);
+        assert!((0..100).any(|i| a.at(i as f64 * 0.1) != c.at(i as f64 * 0.1)));
+        assert_eq!(a.mean(), 50.0);
+    }
+
+    #[test]
+    fn ou_mean_reversion() {
+        let tr = OuNoiseTrace::new(100.0, 2.0, 5.0, 7, 50.0);
+        let mean = tr.integrate(0.0, 50.0) / 50.0;
+        assert!((mean - 100.0).abs() < 10.0, "mean={mean}");
+    }
+
+    #[test]
+    fn replay_step_function() {
+        let tr = ReplayTrace::new(vec![(0.0, 10.0), (1.0, 20.0), (2.0, 5.0)]);
+        assert_eq!(tr.at(-1.0), 10.0);
+        assert_eq!(tr.at(0.5), 10.0);
+        assert_eq!(tr.at(1.0), 20.0);
+        assert_eq!(tr.at(1.99), 20.0);
+        assert_eq!(tr.at(5.0), 5.0);
+    }
+
+    #[test]
+    fn replay_from_csv() {
+        let tr = ReplayTrace::from_csv("# header\n0.0, 10\n1.0, 20\n").unwrap();
+        assert_eq!(tr.at(0.5), 10.0);
+        assert_eq!(tr.at(1.5), 20.0);
+        assert!(ReplayTrace::from_csv("# nothing\n").is_err());
+    }
+
+    #[test]
+    fn spec_json_roundtrip() {
+        let specs = [
+            TraceSpec::Constant { bps: 100.0 },
+            TraceSpec::SinSquared { eta: 3e8, theta: 0.7, delta: 3e7, phase: 0.1 },
+            TraceSpec::SquareWave { low: 1.0, high: 2.0, period: 3.0 },
+            TraceSpec::OuNoise { mu: 1.0, kappa: 2.0, sigma: 0.1, seed: 9, horizon: 10.0 },
+            TraceSpec::NoisySinSquared {
+                eta: 3e8,
+                theta: 0.7,
+                delta: 3e7,
+                phase: 0.0,
+                noise_sigma: 0.15,
+                seed: 21,
+                horizon: 100.0,
+            },
+        ];
+        for s in specs {
+            let v = Value::parse(&s.to_json().to_string()).unwrap();
+            assert_eq!(TraceSpec::from_json(&v).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn per_worker_variants_differ() {
+        let spec = TraceSpec::NoisySinSquared {
+            eta: 300e6,
+            theta: 0.7,
+            delta: 30e6,
+            phase: 0.0,
+            noise_sigma: 0.1,
+            seed: 1,
+            horizon: 100.0,
+        };
+        let t = spec.build();
+        assert!(t.at(3.0) > 0.0);
+        let w0 = spec.per_worker(0);
+        let w1 = spec.per_worker(1);
+        assert!((0..50).any(|i| w0.at(i as f64 * 0.3) != w1.at(i as f64 * 0.3)));
+    }
+}

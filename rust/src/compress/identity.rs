@@ -1,0 +1,38 @@
+//! Identity (no compression) — the GD/no-compression baseline and the
+//! compressor Kimad falls back to when the budget exceeds the model.
+
+use super::{Compressed, Compressor};
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn compress(&self, u: &[f32]) -> Compressed {
+        Compressed::Dense { val: u.to_vec(), bits_per_val: super::F32_BITS }
+    }
+
+    fn alpha(&self, _d: usize) -> f64 {
+        1.0
+    }
+
+    fn planned_bits(&self, d: usize) -> u64 {
+        d as u64 * super::F32_BITS + super::F32_BITS
+    }
+
+    fn name(&self) -> String {
+        "identity".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::compression_error;
+
+    #[test]
+    fn lossless() {
+        let u = [1.5f32, -2.0, 0.0];
+        assert_eq!(compression_error(&Identity, &u), 0.0);
+        assert_eq!(Identity.alpha(3), 1.0);
+    }
+}

@@ -1,0 +1,195 @@
+//! Gradient compressors (§2.2): sparsification, quantization, low-rank.
+//!
+//! A [`Compressor`] maps a dense update vector to a [`Compressed`]
+//! message with an exact *wire size* in bits — the quantity Kimad's
+//! budget constrains — plus a contraction factor `alpha` used by the
+//! EF21 theory (Theorem 1: `C in C^d(alpha)` means
+//! `E||C(u) - u||^2 <= (1 - alpha) ||u||^2`).
+//!
+//! Wire-size accounting (per message):
+//!   sparse:  k * (32-bit index + 32-bit value)
+//!   dense-quantized: d * bits_per_value + 32-bit scale
+//!   low-rank: rank * (rows + cols) * 32
+//! Header/framing overhead is a constant per message and configurable
+//! at the netsim layer; compressors report payload bits.
+
+pub mod identity;
+pub mod lowrank;
+pub mod quantize;
+pub mod randk;
+pub mod topk;
+
+pub use identity::Identity;
+pub use lowrank::LowRank;
+pub use quantize::{OneBitSign, QuantizeBits};
+pub use randk::RandK;
+pub use topk::TopK;
+
+/// Bits for one f32 on the wire.
+pub const F32_BITS: u64 = 32;
+/// Bits for one coordinate index on the wire.
+pub const IDX_BITS: u64 = 32;
+
+/// A compressed update message, as it would travel on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Compressed {
+    /// Selected coordinates (sparsification).
+    Sparse { dim: usize, idx: Vec<u32>, val: Vec<f32> },
+    /// Dense quantized payload, already dequantized for simulation
+    /// (values carry the quantization error), with its true wire bits.
+    Dense { val: Vec<f32>, bits_per_val: u64 },
+    /// Rank-r factors of the matrix view (rows x cols) of the vector.
+    Factors { rows: usize, cols: usize, u: Vec<f32>, v: Vec<f32> },
+}
+
+impl Compressed {
+    /// Exact payload size in bits.
+    pub fn wire_bits(&self) -> u64 {
+        match self {
+            Compressed::Sparse { idx, val, .. } => {
+                idx.len() as u64 * IDX_BITS + val.len() as u64 * F32_BITS
+            }
+            Compressed::Dense { val, bits_per_val } => {
+                val.len() as u64 * bits_per_val + F32_BITS // + scale
+            }
+            Compressed::Factors { u, v, .. } => (u.len() + v.len()) as u64 * F32_BITS,
+        }
+    }
+
+    /// Decompress into a dense vector of dimension `dim`.
+    pub fn to_dense(&self, dim: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; dim];
+        self.add_into(&mut out);
+        out
+    }
+
+    /// Add the decompressed content into `out` (EF21's `x̂ += C(...)`).
+    pub fn add_into(&self, out: &mut [f32]) {
+        match self {
+            Compressed::Sparse { idx, val, .. } => {
+                for (&i, &v) in idx.iter().zip(val) {
+                    out[i as usize] += v;
+                }
+            }
+            Compressed::Dense { val, .. } => {
+                for (o, &v) in out.iter_mut().zip(val) {
+                    *o += v;
+                }
+            }
+            Compressed::Factors { rows, cols, u, v } => {
+                // A ≈ u v^T laid out row-major into the flat vector.
+                let r = u.len() / rows;
+                for i in 0..*rows {
+                    for j in 0..*cols {
+                        let mut acc = 0.0f32;
+                        for k in 0..r {
+                            acc += u[i * r + k] * v[j * r + k];
+                        }
+                        let p = i * cols + j;
+                        if p < out.len() {
+                            out[p] += acc;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A gradient compressor `C: R^d -> R^d` with wire-size accounting.
+pub trait Compressor: Send + Sync {
+    /// Compress `u`; the result decompresses to an approximation of `u`.
+    fn compress(&self, u: &[f32]) -> Compressed;
+
+    /// Contraction factor `alpha in (0, 1]` (1 = lossless) for dimension
+    /// `d` — worst-case over inputs, as used by Theorem 1.
+    fn alpha(&self, d: usize) -> f64;
+
+    /// Wire bits this compressor produces for dimension `d`
+    /// (before seeing data — used by budget planning).
+    fn planned_bits(&self, d: usize) -> u64;
+
+    /// Human-readable name for logs/CSV.
+    fn name(&self) -> String;
+}
+
+/// Squared L2 compression error `||u - C(u)||^2` measured explicitly —
+/// the oracle used by tests and the Fig. 9 error series.
+pub fn compression_error(c: &dyn Compressor, u: &[f32]) -> f64 {
+    let msg = c.compress(u);
+    let dec = msg.to_dense(u.len());
+    u.iter()
+        .zip(&dec)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum()
+}
+
+/// Declarative compressor family `Omega`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CompressorSpec {
+    Identity,
+    TopK { k: usize },
+    RandK { k: usize, seed: u64 },
+    QuantizeBits { bits: u64 },
+    OneBit,
+    LowRank { rows: usize, cols: usize, rank: usize },
+}
+
+impl CompressorSpec {
+    pub fn build(&self) -> Box<dyn Compressor> {
+        match *self {
+            CompressorSpec::Identity => Box::new(Identity),
+            CompressorSpec::TopK { k } => Box::new(TopK::new(k)),
+            CompressorSpec::RandK { k, seed } => Box::new(RandK::new(k, seed)),
+            CompressorSpec::QuantizeBits { bits } => Box::new(QuantizeBits::new(bits)),
+            CompressorSpec::OneBit => Box::new(OneBitSign),
+            CompressorSpec::LowRank { rows, cols, rank } => {
+                Box::new(LowRank::new(rows, cols, rank))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_wire_bits() {
+        let m = Compressed::Sparse { dim: 10, idx: vec![1, 3], val: vec![1.0, 2.0] };
+        assert_eq!(m.wire_bits(), 2 * 32 + 2 * 32);
+    }
+
+    #[test]
+    fn add_into_accumulates() {
+        let m = Compressed::Sparse { dim: 4, idx: vec![0, 2], val: vec![1.0, -1.0] };
+        let mut out = vec![1.0f32; 4];
+        m.add_into(&mut out);
+        assert_eq!(out, vec![2.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn spec_builds_all() {
+        let specs = [
+            CompressorSpec::Identity,
+            CompressorSpec::TopK { k: 3 },
+            CompressorSpec::RandK { k: 3, seed: 1 },
+            CompressorSpec::QuantizeBits { bits: 8 },
+            CompressorSpec::OneBit,
+            CompressorSpec::LowRank { rows: 4, cols: 4, rank: 1 },
+        ];
+        let u: Vec<f32> = (0..16).map(|i| i as f32 - 8.0).collect();
+        for s in specs {
+            let c = s.build();
+            let err = compression_error(c.as_ref(), &u);
+            let norm: f64 = u.iter().map(|&x| (x as f64).powi(2)).sum();
+            // Contraction property: error <= (1 - alpha) ||u||^2 + eps.
+            assert!(
+                err <= (1.0 - c.alpha(u.len())) * norm + 1e-3,
+                "{}: err={err} bound={}",
+                c.name(),
+                (1.0 - c.alpha(u.len())) * norm
+            );
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! RandK sparsification: keep K uniformly random coordinates.
+//!
+//! Unbiased when scaled by d/k; we ship the *unscaled* variant (as in
+//! EF21-style contractive analysis) plus an optional scaling for the
+//! unbiased-compressor baselines.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::rng::Rng;
+
+use super::{Compressed, Compressor};
+
+#[derive(Debug)]
+pub struct RandK {
+    pub k: usize,
+    pub seed: u64,
+    /// If true, scale kept values by d/k (unbiased estimator).
+    pub scale: bool,
+    round: AtomicU64,
+}
+
+impl RandK {
+    pub fn new(k: usize, seed: u64) -> Self {
+        Self { k, seed, scale: false, round: AtomicU64::new(0) }
+    }
+
+    pub fn unbiased(mut self) -> Self {
+        self.scale = true;
+        self
+    }
+}
+
+impl Clone for RandK {
+    fn clone(&self) -> Self {
+        Self {
+            k: self.k,
+            seed: self.seed,
+            scale: self.scale,
+            round: AtomicU64::new(self.round.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+impl Compressor for RandK {
+    fn compress(&self, u: &[f32]) -> Compressed {
+        let d = u.len();
+        let k = self.k.min(d);
+        // Fresh randomness each call, but deterministic per (seed, call#).
+        let call = self.round.fetch_add(1, Ordering::Relaxed);
+        let mut rng = Rng::seed_from_u64(self.seed).derive(call);
+        let idx = rng.sample_indices(d, k);
+        let factor = if self.scale && k > 0 { d as f32 / k as f32 } else { 1.0 };
+        let val = idx.iter().map(|&i| u[i as usize] * factor).collect();
+        Compressed::Sparse { dim: d, idx, val }
+    }
+
+    fn alpha(&self, d: usize) -> f64 {
+        if d == 0 {
+            return 1.0;
+        }
+        // E||C(u)-u||^2 = (1 - k/d)||u||^2 for the unscaled variant.
+        (self.k.min(d) as f64 / d as f64).clamp(0.0, 1.0)
+    }
+
+    fn planned_bits(&self, d: usize) -> u64 {
+        (self.k.min(d) as u64) * (super::IDX_BITS + super::F32_BITS)
+    }
+
+    fn name(&self) -> String {
+        format!("rand{}", self.k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_exactly_k() {
+        let u = vec![1.0f32; 100];
+        if let Compressed::Sparse { idx, val, .. } = RandK::new(7, 1).compress(&u) {
+            assert_eq!(idx.len(), 7);
+            assert_eq!(val, vec![1.0f32; 7]);
+            let mut s = idx.clone();
+            s.sort();
+            s.dedup();
+            assert_eq!(s.len(), 7, "indices must be distinct");
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn different_calls_different_support() {
+        let u = vec![1.0f32; 50];
+        let c = RandK::new(5, 3);
+        let a = c.compress(&u);
+        let b = c.compress(&u);
+        assert_ne!(a, b, "successive rounds should resample");
+    }
+
+    #[test]
+    fn unbiased_scales() {
+        let u = vec![2.0f32; 10];
+        if let Compressed::Sparse { val, .. } = RandK::new(5, 0).unbiased().compress(&u) {
+            for v in val {
+                assert!((v - 4.0).abs() < 1e-6);
+            }
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn expected_contraction_statistically() {
+        let mut rng = Rng::seed_from_u64(9);
+        let d = 200;
+        let u: Vec<f32> = (0..d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let norm: f64 = u.iter().map(|&x| (x as f64).powi(2)).sum();
+        let c = RandK::new(50, 11);
+        let trials = 200;
+        let mean_err: f64 = (0..trials)
+            .map(|_| crate::compress::compression_error(&c, &u))
+            .sum::<f64>()
+            / trials as f64;
+        let expect = (1.0 - 0.25) * norm;
+        assert!(
+            (mean_err - expect).abs() / expect < 0.15,
+            "mean_err={mean_err} expect={expect}"
+        );
+    }
+}

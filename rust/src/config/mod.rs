@@ -1,0 +1,334 @@
+//! Experiment configuration: JSON specs mirroring the paper's §4.2
+//! setting, so every run is reproducible from a file under configs/.
+
+use std::path::Path;
+
+use crate::bandwidth::TraceSpec;
+use crate::kimad::{BudgetParams, CompressPolicy};
+use crate::util::json::Value;
+
+/// Which workload drives gradients.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkloadSpec {
+    /// §4.1 quadratic: f(x) = ½ Σ a_i x_i², log-spaced a over [1,10].
+    Quadratic { d: usize, n_layers: usize, t_comp: f64 },
+    /// Deep model from artifacts/ (preset = tiny|small|e2e|big).
+    DeepModel {
+        preset: String,
+        /// Dataset noise σ.
+        sigma: f32,
+        /// T_comp override; <= 0 means the §4.2 convention
+        /// ModelSize / AverageBandwidth.
+        t_comp: f64,
+    },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct OptimizerSpec {
+    pub gamma: f64,
+    /// Per-layer weights w_i (empty = 1.0 everywhere).
+    pub layer_weights: Vec<f64>,
+}
+
+/// A full experiment: the unit both the CLI and the benches consume.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    pub name: String,
+    /// Number of workers M.
+    pub m: usize,
+    pub workload: WorkloadSpec,
+    pub budget: BudgetParams,
+    pub up_policy: CompressPolicy,
+    pub down_policy: CompressPolicy,
+    pub optimizer: OptimizerSpec,
+    /// Uplink bandwidth pattern (per-worker variants derived).
+    pub uplink: TraceSpec,
+    /// Downlink pattern.
+    pub downlink: TraceSpec,
+    /// Broadcast congestion coefficient α (§3.1); 1.0 = none.
+    pub alpha: f64,
+    /// Rounds to simulate.
+    pub rounds: u64,
+    /// Cold-start bandwidth prior (bits/s); <= 0 = mean of the pattern.
+    pub prior_bps: f64,
+    pub warm_start: bool,
+    /// Use the whole model as ONE compression layer (plain Kimad);
+    /// false = per-layer (Kimad+ granularity).
+    pub single_layer: bool,
+    /// Safety factor on the Eq. (2) budget (see SimConfig).
+    pub budget_safety: f64,
+    pub seed: u64,
+}
+
+// ---------------------------------------------------------------------
+// JSON codecs
+// ---------------------------------------------------------------------
+
+fn budget_to_json(b: &BudgetParams) -> Value {
+    match b {
+        BudgetParams::RoundBudget { t, t_comp } => Value::obj(vec![
+            ("mode", Value::str("round_budget")),
+            ("t", Value::num(*t)),
+            ("t_comp", Value::num(*t_comp)),
+        ]),
+        BudgetParams::PerDirection { t_comm } => Value::obj(vec![
+            ("mode", Value::str("per_direction")),
+            ("t_comm", Value::num(*t_comm)),
+        ]),
+    }
+}
+
+fn budget_from_json(v: &Value) -> anyhow::Result<BudgetParams> {
+    Ok(match v.get("mode")?.as_str()? {
+        "round_budget" => BudgetParams::RoundBudget {
+            t: v.get("t")?.as_f64()?,
+            t_comp: v.get("t_comp")?.as_f64()?,
+        },
+        "per_direction" => BudgetParams::PerDirection { t_comm: v.get("t_comm")?.as_f64()? },
+        other => anyhow::bail!("unknown budget mode '{other}'"),
+    })
+}
+
+fn policy_to_json(p: &CompressPolicy) -> Value {
+    match p {
+        CompressPolicy::FixedRatio { ratio } => Value::obj(vec![
+            ("kind", Value::str("fixed_ratio")),
+            ("ratio", Value::num(*ratio)),
+        ]),
+        CompressPolicy::KimadUniform => {
+            Value::obj(vec![("kind", Value::str("kimad_uniform"))])
+        }
+        CompressPolicy::KimadPlus { discretization, ratios } => Value::obj(vec![
+            ("kind", Value::str("kimad_plus")),
+            ("discretization", Value::num(*discretization as f64)),
+            (
+                "ratios",
+                Value::Arr(ratios.iter().map(|&r| Value::num(r)).collect()),
+            ),
+        ]),
+        CompressPolicy::WholeModelTopK => {
+            Value::obj(vec![("kind", Value::str("whole_model_topk"))])
+        }
+    }
+}
+
+fn policy_from_json(v: &Value) -> anyhow::Result<CompressPolicy> {
+    Ok(match v.get("kind")?.as_str()? {
+        "fixed_ratio" => CompressPolicy::FixedRatio { ratio: v.get("ratio")?.as_f64()? },
+        "kimad_uniform" => CompressPolicy::KimadUniform,
+        "kimad_plus" => CompressPolicy::KimadPlus {
+            discretization: v.get("discretization")?.as_usize()?,
+            ratios: match v.opt("ratios") {
+                None => vec![],
+                Some(a) => a
+                    .as_arr()?
+                    .iter()
+                    .map(|r| r.as_f64())
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+            },
+        },
+        "whole_model_topk" => CompressPolicy::WholeModelTopK,
+        other => anyhow::bail!("unknown policy kind '{other}'"),
+    })
+}
+
+fn workload_to_json(w: &WorkloadSpec) -> Value {
+    match w {
+        WorkloadSpec::Quadratic { d, n_layers, t_comp } => Value::obj(vec![
+            ("kind", Value::str("quadratic")),
+            ("d", Value::num(*d as f64)),
+            ("n_layers", Value::num(*n_layers as f64)),
+            ("t_comp", Value::num(*t_comp)),
+        ]),
+        WorkloadSpec::DeepModel { preset, sigma, t_comp } => Value::obj(vec![
+            ("kind", Value::str("deep_model")),
+            ("preset", Value::str(preset.clone())),
+            ("sigma", Value::num(*sigma as f64)),
+            ("t_comp", Value::num(*t_comp)),
+        ]),
+    }
+}
+
+fn workload_from_json(v: &Value) -> anyhow::Result<WorkloadSpec> {
+    Ok(match v.get("kind")?.as_str()? {
+        "quadratic" => WorkloadSpec::Quadratic {
+            d: v.get("d")?.as_usize()?,
+            n_layers: v.get("n_layers")?.as_usize()?,
+            t_comp: v.get("t_comp")?.as_f64()?,
+        },
+        "deep_model" => WorkloadSpec::DeepModel {
+            preset: v.get("preset")?.as_str()?.to_string(),
+            sigma: v.opt("sigma").and_then(|s| s.as_f64().ok()).unwrap_or(0.3) as f32,
+            t_comp: v.opt("t_comp").and_then(|s| s.as_f64().ok()).unwrap_or(0.0),
+        },
+        other => anyhow::bail!("unknown workload kind '{other}'"),
+    })
+}
+
+impl ExperimentConfig {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("name", Value::str(self.name.clone())),
+            ("m", Value::num(self.m as f64)),
+            ("workload", workload_to_json(&self.workload)),
+            ("budget", budget_to_json(&self.budget)),
+            ("up_policy", policy_to_json(&self.up_policy)),
+            ("down_policy", policy_to_json(&self.down_policy)),
+            (
+                "optimizer",
+                Value::obj(vec![
+                    ("gamma", Value::num(self.optimizer.gamma)),
+                    (
+                        "layer_weights",
+                        Value::Arr(
+                            self.optimizer
+                                .layer_weights
+                                .iter()
+                                .map(|&w| Value::num(w))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+            ("uplink", self.uplink.to_json()),
+            ("downlink", self.downlink.to_json()),
+            ("alpha", Value::num(self.alpha)),
+            ("rounds", Value::num(self.rounds as f64)),
+            ("prior_bps", Value::num(self.prior_bps)),
+            ("warm_start", Value::Bool(self.warm_start)),
+            ("single_layer", Value::Bool(self.single_layer)),
+            ("budget_safety", Value::num(self.budget_safety)),
+            ("seed", Value::num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            m: v.get("m")?.as_usize()?,
+            workload: workload_from_json(v.get("workload")?)?,
+            budget: budget_from_json(v.get("budget")?)?,
+            up_policy: policy_from_json(v.get("up_policy")?)?,
+            down_policy: policy_from_json(v.get("down_policy")?)?,
+            optimizer: {
+                let o = v.get("optimizer")?;
+                OptimizerSpec {
+                    gamma: o.get("gamma")?.as_f64()?,
+                    layer_weights: match o.opt("layer_weights") {
+                        None => vec![],
+                        Some(a) => a
+                            .as_arr()?
+                            .iter()
+                            .map(|w| w.as_f64())
+                            .collect::<anyhow::Result<Vec<_>>>()?,
+                    },
+                }
+            },
+            uplink: TraceSpec::from_json(v.get("uplink")?)?,
+            downlink: TraceSpec::from_json(v.get("downlink")?)?,
+            alpha: v.opt("alpha").and_then(|a| a.as_f64().ok()).unwrap_or(1.0),
+            rounds: v.get("rounds")?.as_u64()?,
+            prior_bps: v.opt("prior_bps").and_then(|a| a.as_f64().ok()).unwrap_or(0.0),
+            warm_start: v
+                .opt("warm_start")
+                .and_then(|a| a.as_bool().ok())
+                .unwrap_or(true),
+            single_layer: v
+                .opt("single_layer")
+                .and_then(|a| a.as_bool().ok())
+                .unwrap_or(false),
+            budget_safety: v
+                .opt("budget_safety")
+                .and_then(|a| a.as_f64().ok())
+                .unwrap_or(1.0),
+            seed: v.opt("seed").and_then(|a| a.as_u64().ok()).unwrap_or(21),
+        })
+    }
+
+    pub fn from_json_file(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_json(&Value::parse(&text)?)
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ExperimentConfig {
+        ExperimentConfig {
+            name: "fig8".into(),
+            m: 4,
+            workload: WorkloadSpec::DeepModel {
+                preset: "e2e".into(),
+                sigma: 0.3,
+                t_comp: 0.0,
+            },
+            budget: BudgetParams::PerDirection { t_comm: 1.0 },
+            up_policy: CompressPolicy::KimadPlus { discretization: 1000, ratios: vec![0.1, 0.5] },
+            down_policy: CompressPolicy::KimadUniform,
+            optimizer: OptimizerSpec { gamma: 0.01, layer_weights: vec![1.0, 0.5] },
+            uplink: TraceSpec::SinSquared { eta: 300e6, theta: 0.7, delta: 30e6, phase: 0.0 },
+            downlink: TraceSpec::Constant { bps: 1e9 },
+            alpha: 1.0,
+            rounds: 100,
+            prior_bps: 0.0,
+            warm_start: true,
+            single_layer: false,
+            budget_safety: 0.9,
+            seed: 21,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = sample();
+        let text = cfg.to_json_string();
+        let back = ExperimentConfig::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        let mut cfg = sample();
+        cfg.workload = WorkloadSpec::Quadratic { d: 30, n_layers: 3, t_comp: 0.1 };
+        cfg.budget = BudgetParams::RoundBudget { t: 1.0, t_comp: 0.2 };
+        cfg.up_policy = CompressPolicy::FixedRatio { ratio: 0.2 };
+        cfg.down_policy = CompressPolicy::WholeModelTopK;
+        let back =
+            ExperimentConfig::from_json(&Value::parse(&cfg.to_json_string()).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let text = r#"{
+            "name": "min", "m": 2, "rounds": 10,
+            "workload": {"kind": "quadratic", "d": 30, "n_layers": 3, "t_comp": 0.0},
+            "budget": {"mode": "per_direction", "t_comm": 1.0},
+            "up_policy": {"kind": "kimad_uniform"},
+            "down_policy": {"kind": "kimad_uniform"},
+            "optimizer": {"gamma": 0.05},
+            "uplink": {"kind": "constant", "bps": 1000.0},
+            "downlink": {"kind": "constant", "bps": 1000.0}
+        }"#;
+        let cfg = ExperimentConfig::from_json(&Value::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.alpha, 1.0);
+        assert!(cfg.warm_start);
+        assert!(!cfg.single_layer);
+        assert_eq!(cfg.prior_bps, 0.0);
+        assert_eq!(cfg.seed, 21);
+    }
+
+    #[test]
+    fn rejects_unknown_kinds() {
+        let text = r#"{"kind": "nope"}"#;
+        assert!(policy_from_json(&Value::parse(text).unwrap()).is_err());
+        assert!(workload_from_json(&Value::parse(text).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,23 @@
+//! The Parameter-Server coordinator: Algorithm 3 over the netsim.
+//!
+//! This is the paper's system contribution wired together: per-endpoint
+//! bandwidth monitors feed Eq. (2) budgets, `A^compress` picks
+//! compressors, bidirectional EF21 estimators advance by compressed
+//! differences, and the virtual clock advances by the max per-worker
+//! round time (synchronous PS).
+//!
+//! Layer map:
+//!   server.rs — server-side state (model x, x̂, û_m mirrors)
+//!   worker.rs — worker-side state + the GradientSource abstraction
+//!   round.rs  — per-round records the figures/tables read
+//!   sim.rs    — the round loop itself
+
+pub mod round;
+pub mod server;
+pub mod sim;
+pub mod worker;
+
+pub use round::{RoundRecord, WorkerRound};
+pub use server::ServerState;
+pub use sim::{SimConfig, Simulation};
+pub use worker::{GradientSource, QuadraticSource, WorkerState};

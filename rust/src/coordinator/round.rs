@@ -1,0 +1,93 @@
+//! Per-round records: everything Figs. 7–9 and Tables 1–2 read.
+
+/// One worker's view of one communication round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerRound {
+    /// Bits actually sent on the uplink this round.
+    pub up_bits: u64,
+    /// Uplink transfer seconds.
+    pub up_seconds: f64,
+    /// Downlink (broadcast) transfer seconds for this worker.
+    pub down_seconds: f64,
+    /// Worker's training loss at the round's model estimate.
+    pub loss: f64,
+    /// Compression error ||û_m − u_m||² after the round (Fig. 9).
+    pub compression_error: f64,
+    /// The uplink bandwidth estimate the worker budgeted with.
+    pub est_up_bps: f64,
+    /// Ground-truth uplink bandwidth at round start (plots only).
+    pub true_up_bps: f64,
+}
+
+/// One full communication round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundRecord {
+    pub step: u64,
+    /// Virtual time at the START of the round.
+    pub t_start: f64,
+    /// Wall (virtual) duration of the round: max over workers of
+    /// down + compute + up.
+    pub duration: f64,
+    /// Bits broadcast on the downlink (same message to every worker).
+    pub down_bits: u64,
+    pub workers: Vec<WorkerRound>,
+    /// Mean worker loss.
+    pub loss: f64,
+    /// Objective value at the server's model x (when the source can
+    /// evaluate it; NaN otherwise).
+    pub f_x: f64,
+    /// Squared gradient-norm proxy: ||Σ w_m û_m||² (descent tracking).
+    pub agg_norm_sq: f64,
+}
+
+impl RoundRecord {
+    pub fn t_end(&self) -> f64 {
+        self.t_start + self.duration
+    }
+
+    pub fn total_up_bits(&self) -> u64 {
+        self.workers.iter().map(|w| w.up_bits).sum()
+    }
+
+    pub fn mean_compression_error(&self) -> f64 {
+        if self.workers.is_empty() {
+            return 0.0;
+        }
+        self.workers.iter().map(|w| w.compression_error).sum::<f64>()
+            / self.workers.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wr(bits: u64, err: f64) -> WorkerRound {
+        WorkerRound {
+            up_bits: bits,
+            up_seconds: 1.0,
+            down_seconds: 0.5,
+            loss: 2.0,
+            compression_error: err,
+            est_up_bps: 1.0,
+            true_up_bps: 1.0,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let r = RoundRecord {
+            step: 3,
+            t_start: 10.0,
+            duration: 2.5,
+            down_bits: 64,
+            workers: vec![wr(100, 1.0), wr(50, 3.0)],
+            loss: 2.0,
+            f_x: f64::NAN,
+            agg_norm_sq: 0.0,
+        };
+        assert_eq!(r.t_end(), 12.5);
+        assert_eq!(r.total_up_bits(), 150);
+        assert!((r.mean_compression_error() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,98 @@
+//! Server-side state: the model x, the broadcast estimator x̂, and the
+//! server's mirrors of every worker's û_m (Algorithm 3 line 14).
+
+use crate::bandwidth::{BandwidthMonitor, EwmaMonitor};
+use crate::ef21::Estimator;
+
+pub struct ServerState {
+    /// The global model x^k — only the server stores it (§3).
+    pub x: Vec<f32>,
+    /// Broadcast estimator x̂ (identical on server and all workers: it
+    /// advances only by the broadcast compressed message, so one copy
+    /// stands for both sides; the sync is asserted in tests).
+    pub x_hat: Estimator,
+    /// Server-side mirrors of the worker update estimators û_m.
+    pub u_hats: Vec<Estimator>,
+    /// Downlink bandwidth monitors, one per worker link.
+    pub down_monitors: Vec<Box<dyn BandwidthMonitor>>,
+    /// Scratch: aggregated direction Σ w_m û_m.
+    pub agg: Vec<f32>,
+    /// Scratch: compression difference buffer.
+    pub scratch: Vec<f32>,
+}
+
+impl ServerState {
+    pub fn new(x0: Vec<f32>, m: usize) -> Self {
+        let dim = x0.len();
+        Self {
+            x: x0,
+            x_hat: Estimator::zeros(dim),
+            u_hats: (0..m).map(|_| Estimator::zeros(dim)).collect(),
+            down_monitors: (0..m)
+                .map(|_| Box::new(EwmaMonitor::new(0.7)) as Box<dyn BandwidthMonitor>)
+                .collect(),
+            agg: vec![0.0; dim],
+            scratch: Vec::with_capacity(dim),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.u_hats.len()
+    }
+
+    /// Aggregate Σ w_m û_m into the scratch direction buffer and return
+    /// its squared norm (Algorithm 3 line 15's direction).
+    pub fn aggregate(&mut self, weights: &[f64]) -> f64 {
+        debug_assert_eq!(weights.len(), self.u_hats.len());
+        self.agg.iter_mut().for_each(|v| *v = 0.0);
+        for (w, u_hat) in weights.iter().zip(&self.u_hats) {
+            let w = *w as f32;
+            for (a, &u) in self.agg.iter_mut().zip(&u_hat.value) {
+                *a += w * u;
+            }
+        }
+        self.agg.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// Conservative broadcast bandwidth estimate: the slowest worker's
+    /// downlink (the broadcast is done when the last worker has it).
+    pub fn broadcast_estimate(&self, prior: f64) -> f64 {
+        self.down_monitors
+            .iter()
+            .map(|m| m.estimate_or(prior))
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregate_weighted() {
+        let mut s = ServerState::new(vec![0.0; 2], 2);
+        s.u_hats[0].value = vec![1.0, 0.0];
+        s.u_hats[1].value = vec![0.0, 2.0];
+        let norm = s.aggregate(&[0.5, 0.5]);
+        assert_eq!(s.agg, vec![0.5, 1.0]);
+        assert!((norm - 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn broadcast_estimate_is_min() {
+        let mut s = ServerState::new(vec![0.0; 1], 2);
+        s.down_monitors[0].observe(100.0, 1.0);
+        s.down_monitors[1].observe(10.0, 1.0);
+        assert_eq!(s.broadcast_estimate(999.0), 10.0);
+    }
+
+    #[test]
+    fn cold_start_uses_prior() {
+        let s = ServerState::new(vec![0.0; 1], 2);
+        assert_eq!(s.broadcast_estimate(42.0), 42.0);
+    }
+}

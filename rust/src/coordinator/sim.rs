@@ -1,0 +1,467 @@
+//! The synchronous PS round loop (Algorithm 3) over virtual time.
+
+use crate::compress::{Identity, TopK};
+use crate::kimad::{compression_budget, BudgetParams, CompressPolicy, Selector};
+use crate::model::Layer;
+use crate::netsim::{Direction, NetSim};
+use crate::optim::LayerwiseSgd;
+
+use super::round::{RoundRecord, WorkerRound};
+use super::server::ServerState;
+use super::worker::{GradientSource, WorkerState};
+
+/// Full experiment configuration for one simulated training run.
+pub struct SimConfig {
+    /// Number of workers M.
+    pub m: usize,
+    /// Aggregation weights w_m (empty = uniform 1/M).
+    pub weights: Vec<f64>,
+    /// Eq. (2) parameters (time budget).
+    pub budget: BudgetParams,
+    /// `A^compress` policy for worker→server messages.
+    pub up_policy: CompressPolicy,
+    /// `A^compress` policy for the server broadcast.
+    pub down_policy: CompressPolicy,
+    /// Server-side optimizer (γ^k, optional layer weights).
+    pub optimizer: LayerwiseSgd,
+    /// Compression layers (Kimad+ granularity).
+    pub layers: Vec<Layer>,
+    /// Initialize estimators from the first uncompressed round (the
+    /// paper's §4.2 warmup) instead of zeros.
+    pub warm_start: bool,
+    /// Bandwidth prior for cold-start rounds (bits/s).
+    pub prior_bps: f64,
+    /// Synchronized round schedule: every round lasts at least this
+    /// long (the user's time budget t — rounds are *scheduled* at this
+    /// cadence: stragglers overrun it, fast rounds wait for it). None =
+    /// free-running rounds.
+    pub round_deadline: Option<f64>,
+    /// Safety factor on the Eq. (2) budget (DC2-style conservatism):
+    /// the bandwidth estimate is a trailing average, so budgeting at
+    /// 100% of it overruns the deadline whenever bandwidth is falling.
+    /// 1.0 = trust the estimate fully.
+    pub budget_safety: f64,
+}
+
+impl SimConfig {
+    pub fn weights_or_uniform(&self) -> Vec<f64> {
+        if self.weights.is_empty() {
+            vec![1.0 / self.m as f64; self.m]
+        } else {
+            assert_eq!(self.weights.len(), self.m);
+            self.weights.clone()
+        }
+    }
+}
+
+/// A running simulation: server + M workers + network + source.
+pub struct Simulation<S: GradientSource> {
+    pub cfg: SimConfig,
+    pub net: NetSim,
+    pub source: S,
+    pub server: ServerState,
+    pub workers: Vec<WorkerState>,
+    pub clock: f64,
+    pub step: u64,
+    weights: Vec<f64>,
+    up_selector: Selector,
+    down_selector: Selector,
+    /// Reusable difference buffer (allocation-free rounds).
+    diff: Vec<f32>,
+    warmed: bool,
+}
+
+impl<S: GradientSource> Simulation<S> {
+    pub fn new(cfg: SimConfig, net: NetSim, source: S, x0: Vec<f32>) -> Self {
+        assert_eq!(net.n_workers(), cfg.m, "netsim links != M");
+        assert_eq!(x0.len(), source.dim(), "x0 dim != source dim");
+        let dim = x0.len();
+        let weights = cfg.weights_or_uniform();
+        let up_selector = Selector::new(cfg.up_policy.clone());
+        let down_selector = Selector::new(cfg.down_policy.clone());
+        let server = ServerState::new(x0, cfg.m);
+        let workers = (0..cfg.m).map(|i| WorkerState::new(i, dim)).collect();
+        Self {
+            cfg,
+            net,
+            source,
+            server,
+            workers,
+            clock: 0.0,
+            step: 0,
+            weights,
+            up_selector,
+            down_selector,
+            diff: vec![0.0; dim],
+            warmed: false,
+        }
+    }
+
+    /// The warmup initialization (§4.2): one uncompressed exchange so
+    /// x̂ = x⁰ and û_m = u_m⁰. Costs no virtual time (the paper runs 5
+    /// warmup epochs outside the timed window).
+    fn warm_start(&mut self) -> anyhow::Result<()> {
+        let id = Identity;
+        let layers = self.cfg.layers.clone();
+        for l in &layers {
+            let target = &self.server.x[l.offset..l.offset + l.size];
+            self.server
+                .x_hat
+                .compress_advance(&id, target, l, &mut self.server.scratch);
+        }
+        for w in &mut self.workers {
+            self.source
+                .update(w.id, 0, &self.server.x_hat.value, &mut w.u)?;
+            for l in &layers {
+                let target = &w.u[l.offset..l.offset + l.size];
+                let msg = w.u_hat.compress_advance(&id, target, l, &mut w.scratch);
+                self.server.u_hats[w.id].apply(&msg, l);
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute one full communication round; returns its record.
+    pub fn round(&mut self) -> anyhow::Result<RoundRecord> {
+        if self.cfg.warm_start && !self.warmed {
+            self.warm_start()?;
+            self.warmed = true;
+        }
+        let k = self.step;
+        let t0 = self.clock;
+        let layers = &self.cfg.layers;
+        let t_comp = self.source.t_comp();
+
+
+        // ---- Continuous bandwidth monitoring (§2.4, §3): the monitor
+        // samples the link each round (NIC-counter style), independent
+        // of training traffic — without this, a zero-bit round would
+        // starve the estimator at trough level forever. The observation
+        // is the instantaneous rate at round start; the EWMA smooths it.
+        const PROBE_BITS: f64 = 1.0e4;
+        const PROBE_WINDOW: f64 = 0.5;
+        for w in &mut self.workers {
+            let bd = self.net.window_bps(w.id, Direction::Down, t0, PROBE_WINDOW);
+            self.server.down_monitors[w.id].observe(PROBE_BITS, PROBE_BITS / bd.max(1e-9));
+        }
+
+        // ---- Server: select broadcast compressor under Eq. (2) budget.
+        let b_down = self.server.broadcast_estimate(self.cfg.prior_bps);
+        let c_down =
+            (compression_budget(self.cfg.budget, b_down) as f64 * self.cfg.budget_safety) as u64;
+        for (d, (&x, &xh)) in self
+            .diff
+            .iter_mut()
+            .zip(self.server.x.iter().zip(&self.server.x_hat.value))
+        {
+            *d = x - xh;
+        }
+        let sel_down = self.down_selector.select(&self.diff, layers, c_down);
+
+        // ---- Server: compress-advance x̂ and measure the wire size.
+        let mut down_bits = 0u64;
+        for (l, &kk) in layers.iter().zip(&sel_down.k_per_layer) {
+            let target = &self.server.x[l.offset..l.offset + l.size];
+            let msg = if kk >= l.size {
+                self.server
+                    .x_hat
+                    .compress_advance(&Identity, target, l, &mut self.server.scratch)
+            } else {
+                self.server.x_hat.compress_advance(
+                    &TopK::new(kk),
+                    target,
+                    l,
+                    &mut self.server.scratch,
+                )
+            };
+            down_bits += msg.wire_bits();
+        }
+
+        // ---- Broadcast to every worker (worker x̂ mirrors the server's
+        // x̂ exactly — single-copy representation, sync asserted in
+        // tests) and record per-worker transfer times.
+        let mut worker_rounds = Vec::with_capacity(self.cfg.m);
+        let mut loss_sum = 0.0;
+        let mut duration = 0.0f64;
+        for w in &mut self.workers {
+            let down_tr = self
+                .net
+                .transfer(w.id, Direction::Down, t0, down_bits as f64);
+            self.server.down_monitors[w.id].observe(down_bits as f64, down_tr.seconds);
+
+            // ---- Worker: compute update at x̂.
+            let loss = self
+                .source
+                .update(w.id, k, &self.server.x_hat.value, &mut w.u)?;
+            loss_sum += loss;
+
+            // ---- Worker: uplink budget read "when communication is
+            // triggered" (§3.1) — i.e. at upload time, after download
+            // and compute, not at round start.
+            let up_start = t0 + down_tr.seconds + t_comp;
+            let b_probe = self.net.window_bps(w.id, Direction::Up, up_start, PROBE_WINDOW);
+            w.monitor.observe(PROBE_BITS, PROBE_BITS / b_probe.max(1e-9));
+            let true_up = self.net.true_bps(w.id, Direction::Up, up_start);
+            let b_up = w.monitor.estimate_or(self.cfg.prior_bps);
+            let c_up =
+                (compression_budget(self.cfg.budget, b_up) as f64 * self.cfg.budget_safety) as u64;
+            for (d, (&u, &uh)) in self
+                .diff
+                .iter_mut()
+                .zip(w.u.iter().zip(&w.u_hat.value))
+            {
+                *d = u - uh;
+            }
+            let sel_up = self.up_selector.select(&self.diff, layers, c_up);
+
+            // ---- Worker: compress-advance û_m, mirror on the server.
+            let mut up_bits = 0u64;
+            for (l, &kk) in layers.iter().zip(&sel_up.k_per_layer) {
+                let target = &w.u[l.offset..l.offset + l.size];
+                let msg = if kk >= l.size {
+                    w.u_hat.compress_advance(&Identity, target, l, &mut w.scratch)
+                } else {
+                    w.u_hat
+                        .compress_advance(&TopK::new(kk), target, l, &mut w.scratch)
+                };
+                self.server.u_hats[w.id].apply(&msg, l);
+                up_bits += msg.wire_bits();
+            }
+
+            let down_secs = down_tr.seconds;
+            let up_tr = self.net.transfer(w.id, Direction::Up, up_start, up_bits as f64);
+            w.monitor.observe(up_bits as f64, up_tr.seconds);
+            let up_secs = up_tr.seconds;
+
+            // Compression error ||û_m − u_m||² after the round (Fig. 9).
+            let comp_err: f64 = w
+                .u
+                .iter()
+                .zip(&w.u_hat.value)
+                .map(|(&u, &uh)| ((u - uh) as f64).powi(2))
+                .sum();
+
+            duration = duration.max(down_secs + t_comp + up_secs);
+            worker_rounds.push(WorkerRound {
+                up_bits,
+                up_seconds: up_secs,
+                down_seconds: down_secs,
+                loss,
+                compression_error: comp_err,
+                est_up_bps: b_up,
+                true_up_bps: true_up,
+            });
+        }
+
+        // ---- Server: aggregate and step (Algorithm 3 line 15).
+        // Zero-information rounds (every worker's budget rounded to no
+        // coordinates) are deadline-preserving no-ops: stepping again on
+        // the unchanged, stale estimators is outside the EF21 regime —
+        // Theorem 1 requires contraction alpha_i > 0 — and measurably
+        // destabilizes the quadratic workload during bandwidth troughs.
+        let total_up: u64 = worker_rounds.iter().map(|w| w.up_bits).sum();
+        let agg_norm_sq = if total_up > 0 || k == 0 {
+            let n = self.server.aggregate(&self.weights);
+            self.cfg
+                .optimizer
+                .step(k as usize, &mut self.server.x, &self.server.agg, layers);
+            n
+        } else {
+            0.0
+        };
+
+        // Synchronized schedule: fast rounds wait for the deadline.
+        if let Some(deadline) = self.cfg.round_deadline {
+            duration = duration.max(deadline);
+        }
+
+        let f_x = self.source.objective(&self.server.x).unwrap_or(f64::NAN);
+        self.clock = t0 + duration;
+        self.step += 1;
+        Ok(RoundRecord {
+            step: k,
+            t_start: t0,
+            duration,
+            down_bits,
+            workers: worker_rounds,
+            loss: loss_sum / self.cfg.m as f64,
+            f_x,
+            agg_norm_sq,
+        })
+    }
+
+    /// Run `n` rounds, collecting the records.
+    pub fn run(&mut self, n: u64) -> anyhow::Result<Vec<RoundRecord>> {
+        let mut out = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            out.push(self.round()?);
+        }
+        Ok(out)
+    }
+
+    /// Run until virtual time exceeds `deadline` seconds (or `max`
+    /// rounds as a backstop).
+    pub fn run_until(&mut self, deadline: f64, max: u64) -> anyhow::Result<Vec<RoundRecord>> {
+        let mut out = Vec::new();
+        while self.clock < deadline && (out.len() as u64) < max {
+            out.push(self.round()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandwidth::ConstantTrace;
+    use crate::kimad::BudgetParams;
+    use crate::netsim::Link;
+    use crate::optim::{LayerwiseSgd, Schedule};
+    use crate::quadratic::Quadratic;
+
+    fn constant_net(m: usize, bps: f64) -> NetSim {
+        NetSim::new(
+            (0..m)
+                .map(|_| {
+                    Link::new(
+                        Box::new(ConstantTrace::new(bps)),
+                        Box::new(ConstantTrace::new(bps)),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    fn sim(
+        m: usize,
+        bps: f64,
+        policy: CompressPolicy,
+        gamma: f64,
+    ) -> Simulation<crate::coordinator::QuadraticSource> {
+        let q = Quadratic::paper_instance(30);
+        let layout = q.layout(3);
+        let layers = layout.layers();
+        let src = crate::coordinator::QuadraticSource::new(q, 0.01);
+        let cfg = SimConfig {
+            m,
+            weights: vec![],
+            budget: BudgetParams::PerDirection { t_comm: 1.0 },
+            up_policy: policy.clone(),
+            down_policy: policy,
+            optimizer: LayerwiseSgd::new(Schedule::Constant(gamma)),
+            layers,
+            warm_start: true,
+            prior_bps: bps,
+            round_deadline: Some(1.0),
+            budget_safety: 1.0,
+        };
+        Simulation::new(cfg, constant_net(m, bps), src, vec![1.0f32; 30])
+    }
+
+    #[test]
+    fn identity_policy_matches_gd() {
+        // Enough bandwidth for uncompressed rounds: Kimad = plain GD.
+        let mut s = sim(2, 1e9, CompressPolicy::KimadUniform, 0.05);
+        let recs = s.run(50).unwrap();
+        assert!(recs.last().unwrap().f_x < 1e-3 * recs[0].f_x);
+        // All coordinates kept: wire bits = dense encoding.
+        assert_eq!(recs[5].down_bits, 30 * 32 + 3 * 32);
+    }
+
+    #[test]
+    fn kimad_converges_under_tight_budget() {
+        let mut s = sim(2, 64.0 * 8.0, CompressPolicy::KimadUniform, 0.02);
+        let recs = s.run(400).unwrap();
+        let first = recs[0].f_x;
+        let last = recs.last().unwrap().f_x;
+        assert!(last < first * 0.05, "f0={first} fK={last}");
+    }
+
+    #[test]
+    fn budget_never_exceeded_by_uplink() {
+        let bps = 64.0 * 4.0;
+        let mut s = sim(3, bps, CompressPolicy::KimadUniform, 0.02);
+        let recs = s.run(20).unwrap();
+        for r in recs.iter().skip(1) {
+            for w in &r.workers {
+                // planned <= budget = t_comm * B (cold start skipped).
+                assert!(w.up_bits as f64 <= bps * 1.0 + 64.0, "{}", w.up_bits);
+            }
+        }
+    }
+
+    #[test]
+    fn round_time_includes_all_phases() {
+        let mut s = sim(1, 1000.0, CompressPolicy::KimadUniform, 0.01);
+        let r = s.round().unwrap();
+        let w = &r.workers[0];
+        let phases = w.down_seconds + 0.01 + w.up_seconds;
+        // Deadline-scheduled: duration = max(phases, deadline).
+        assert!((r.duration - phases.max(1.0)).abs() < 1e-12);
+        assert!(r.t_start == 0.0 && s.clock == r.duration);
+    }
+
+    #[test]
+    fn zero_budget_rounds_still_advance_clock() {
+        // Near-zero bandwidth: Kimad sends ~nothing but the round still
+        // takes the time budget (no zero-duration spinning).
+        let mut s = sim(1, 2.0, CompressPolicy::KimadUniform, 0.01);
+        let recs = s.run(5).unwrap();
+        for r in &recs {
+            assert!(r.duration >= 1.0);
+        }
+        assert!(s.clock >= 5.0);
+        // And the model was not destabilized by the empty rounds.
+        assert!(recs.last().unwrap().f_x.is_finite());
+    }
+
+    #[test]
+    fn fixed_ratio_baseline_constant_bits() {
+        let mut s = sim(2, 500.0, CompressPolicy::FixedRatio { ratio: 0.2 }, 0.02);
+        let recs = s.run(5).unwrap();
+        let bits0 = recs[1].workers[0].up_bits;
+        for r in recs.iter().skip(1) {
+            assert_eq!(r.workers[0].up_bits, bits0);
+        }
+    }
+
+    #[test]
+    fn kimad_plus_runs_and_converges() {
+        let mut s = sim(
+            2,
+            64.0 * 8.0,
+            CompressPolicy::KimadPlus { discretization: 200, ratios: vec![] },
+            0.02,
+        );
+        let recs = s.run(300).unwrap();
+        assert!(recs.last().unwrap().f_x < recs[0].f_x * 0.1);
+    }
+
+    #[test]
+    fn ef21_estimator_error_shrinks_on_static_target() {
+        // With a tiny learning rate the gradient barely moves, so the
+        // EF21 error must contract round over round. Cold estimators
+        // (no warmup) so the error starts large.
+        let q = Quadratic::paper_instance(30);
+        let layers = q.layout(3).layers();
+        let src = crate::coordinator::QuadraticSource::new(q, 0.01);
+        let cfg = SimConfig {
+            m: 1,
+            weights: vec![],
+            budget: BudgetParams::PerDirection { t_comm: 1.0 },
+            up_policy: CompressPolicy::KimadUniform,
+            down_policy: CompressPolicy::FixedRatio { ratio: 1.0 },
+            optimizer: LayerwiseSgd::new(Schedule::Constant(1e-6)),
+            layers,
+            warm_start: false,
+            prior_bps: 128.0,
+            round_deadline: Some(1.0),
+            budget_safety: 1.0,
+        };
+        let mut s = Simulation::new(cfg, constant_net(1, 128.0), src, vec![1.0f32; 30]);
+        let recs = s.run(30).unwrap();
+        let first = recs[2].workers[0].compression_error;
+        let last = recs.last().unwrap().workers[0].compression_error;
+        assert!(last < first, "first={first} last={last}");
+    }
+}

@@ -1,0 +1,129 @@
+//! Worker-side state and the gradient computation abstraction.
+
+use crate::bandwidth::{BandwidthMonitor, EwmaMonitor};
+use crate::ef21::Estimator;
+
+/// Where update vectors come from. The quadratic workload implements
+/// this in pure rust; the deep model implements it over the PJRT
+/// runtime (`runtime::PjrtModelSource`) — the coordinator cannot tell
+/// the difference, which is what keeps Python off the hot path.
+pub trait GradientSource {
+    /// Flat model dimension.
+    fn dim(&self) -> usize;
+
+    /// Compute worker `m`'s update u_m^k at the model estimate `x_hat`,
+    /// writing it into `out` (len == dim). Returns the training loss at
+    /// `x_hat` (NaN if the source has no loss notion).
+    fn update(
+        &mut self,
+        worker: usize,
+        step: u64,
+        x_hat: &[f32],
+        out: &mut [f32],
+    ) -> anyhow::Result<f64>;
+
+    /// Virtual seconds one update computation takes (T_comp). The paper
+    /// abstracts this as constant per task (§3.1).
+    fn t_comp(&self) -> f64;
+
+    /// Objective value at a model point, if computable (quadratic: f(x);
+    /// deep model: None — loss is per-batch).
+    fn objective(&self, _x: &[f32]) -> Option<f64> {
+        None
+    }
+}
+
+/// The paper's §4.1 synthetic source: full-batch gradient of the
+/// quadratic, identical data on every worker (M=1 in the paper's
+/// synthetic runs; with M>1 all workers agree, which keeps the
+/// aggregation semantics intact).
+pub struct QuadraticSource {
+    pub q: crate::quadratic::Quadratic,
+    pub t_comp: f64,
+}
+
+impl QuadraticSource {
+    pub fn new(q: crate::quadratic::Quadratic, t_comp: f64) -> Self {
+        Self { q, t_comp }
+    }
+}
+
+impl GradientSource for QuadraticSource {
+    fn dim(&self) -> usize {
+        self.q.dim()
+    }
+
+    fn update(
+        &mut self,
+        _worker: usize,
+        _step: u64,
+        x_hat: &[f32],
+        out: &mut [f32],
+    ) -> anyhow::Result<f64> {
+        self.q.grad_into(x_hat, out);
+        Ok(self.q.value(x_hat))
+    }
+
+    fn t_comp(&self) -> f64 {
+        self.t_comp
+    }
+
+    fn objective(&self, x: &[f32]) -> Option<f64> {
+        Some(self.q.value(x))
+    }
+}
+
+/// Per-worker mutable state: the EF21 uplink estimator û_m, the local
+/// mirror of x̂, the uplink bandwidth monitor, and scratch buffers
+/// (allocation-free round loop — see EXPERIMENTS.md §Perf).
+pub struct WorkerState {
+    pub id: usize,
+    pub u_hat: Estimator,
+    pub monitor: Box<dyn BandwidthMonitor>,
+    /// Scratch: the update vector u_m^k.
+    pub u: Vec<f32>,
+    /// Scratch: per-layer difference buffer.
+    pub scratch: Vec<f32>,
+}
+
+impl WorkerState {
+    pub fn new(id: usize, dim: usize) -> Self {
+        Self {
+            id,
+            u_hat: Estimator::zeros(dim),
+            monitor: Box::new(EwmaMonitor::new(0.7)),
+            u: vec![0.0; dim],
+            scratch: Vec::with_capacity(dim),
+        }
+    }
+
+    pub fn with_monitor(mut self, m: Box<dyn BandwidthMonitor>) -> Self {
+        self.monitor = m;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quadratic::Quadratic;
+
+    #[test]
+    fn quadratic_source_grad_and_loss() {
+        let mut src = QuadraticSource::new(Quadratic::new(vec![2.0, 4.0]), 0.1);
+        let mut out = vec![0.0f32; 2];
+        let loss = src.update(0, 0, &[1.0, 1.0], &mut out).unwrap();
+        assert_eq!(out, vec![2.0, 4.0]);
+        assert!((loss - 3.0).abs() < 1e-9);
+        assert_eq!(src.t_comp(), 0.1);
+        assert_eq!(src.objective(&[1.0, 1.0]), Some(3.0));
+    }
+
+    #[test]
+    fn worker_state_dims() {
+        let w = WorkerState::new(3, 10);
+        assert_eq!(w.u_hat.dim(), 10);
+        assert_eq!(w.u.len(), 10);
+        assert_eq!(w.id, 3);
+    }
+}

@@ -1,0 +1,131 @@
+//! Synthetic classification data: the CIFAR10 stand-in (DESIGN.md §3).
+//!
+//! A 10-class "prototype + noise" generator over patch tokens: class c
+//! has a fixed random prototype P_c ∈ R^{seq×d_in}; a sample is
+//! `x = P_y + σ·ε`. Learnable signal, seeded, shardable per worker —
+//! exactly the structure the data-parallel PS loop needs, with Python
+//! nowhere in sight at runtime.
+
+use crate::util::rng::Rng;
+
+/// One batch in the layout the HLO executable expects.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    /// Row-major `[batch, seq, d_in]`.
+    pub x: Vec<f32>,
+    /// `[batch]` class labels.
+    pub y: Vec<i32>,
+}
+
+/// Seeded synthetic dataset; workers get disjoint shards by stream id.
+#[derive(Debug, Clone)]
+pub struct SyntheticDataset {
+    pub seq: usize,
+    pub d_in: usize,
+    pub n_classes: usize,
+    /// Noise scale σ: higher = harder task.
+    pub sigma: f32,
+    prototypes: Vec<f32>, // [n_classes, seq, d_in]
+}
+
+impl SyntheticDataset {
+    pub fn new(seq: usize, d_in: usize, n_classes: usize, sigma: f32, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let prototypes = (0..n_classes * seq * d_in)
+            .map(|_| rng.range_f32(-1.0, 1.0))
+            .collect();
+        Self { seq, d_in, n_classes, sigma, prototypes }
+    }
+
+    /// Per-worker, per-step deterministic batch: worker `m`'s shard is
+    /// the stream seeded by (m, step), disjoint from every other worker.
+    pub fn batch(&self, batch: usize, worker: usize, step: u64) -> Batch {
+        let seed = (worker as u64)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(step)
+            .wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        let mut rng = Rng::seed_from_u64(seed);
+        let tok = self.seq * self.d_in;
+        let mut x = Vec::with_capacity(batch * tok);
+        let mut y = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let c = rng.range_usize(0, self.n_classes);
+            y.push(c as i32);
+            let proto = &self.prototypes[c * tok..(c + 1) * tok];
+            for &p in proto {
+                x.push(p + self.sigma * rng.range_f32(-1.0, 1.0));
+            }
+        }
+        Batch { x, y }
+    }
+
+    /// A fixed evaluation set (same for every worker): worker id
+    /// `usize::MAX - 1` so it never collides with training shards.
+    pub fn eval_batches(&self, batch: usize, n_batches: usize) -> Vec<Batch> {
+        (0..n_batches)
+            .map(|i| self.batch(batch, usize::MAX - 1, u64::MAX - i as u64))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ds() -> SyntheticDataset {
+        SyntheticDataset::new(4, 8, 10, 0.3, 21)
+    }
+
+    #[test]
+    fn shapes_and_label_range() {
+        let b = ds().batch(16, 0, 0);
+        assert_eq!(b.x.len(), 16 * 4 * 8);
+        assert_eq!(b.y.len(), 16);
+        assert!(b.y.iter().all(|&y| (0..10).contains(&y)));
+    }
+
+    #[test]
+    fn deterministic_per_worker_step() {
+        let d = ds();
+        assert_eq!(d.batch(8, 1, 5), d.batch(8, 1, 5));
+        assert_ne!(d.batch(8, 1, 5), d.batch(8, 2, 5));
+        assert_ne!(d.batch(8, 1, 5), d.batch(8, 1, 6));
+    }
+
+    #[test]
+    fn signal_above_noise() {
+        // Same-class samples must be closer than cross-class on average.
+        let d = ds();
+        let b = d.batch(64, 0, 0);
+        let tok = d.seq * d.d_in;
+        let mut same = (0.0f64, 0usize);
+        let mut diff = (0.0f64, 0usize);
+        for i in 0..32 {
+            for j in 32..64 {
+                let dist: f64 = (0..tok)
+                    .map(|t| {
+                        let a = b.x[i * tok + t] - b.x[j * tok + t];
+                        (a as f64) * (a as f64)
+                    })
+                    .sum();
+                if b.y[i] == b.y[j] {
+                    same = (same.0 + dist, same.1 + 1);
+                } else {
+                    diff = (diff.0 + dist, diff.1 + 1);
+                }
+            }
+        }
+        if same.1 > 0 && diff.1 > 0 {
+            assert!(same.0 / same.1 as f64 + 1e-9 < diff.0 / diff.1 as f64);
+        }
+    }
+
+    #[test]
+    fn eval_batches_fixed() {
+        let d = ds();
+        let a = d.eval_batches(8, 2);
+        let b = d.eval_batches(8, 2);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 2);
+    }
+}

@@ -1,0 +1,226 @@
+//! Experiment driver: turn an [`ExperimentConfig`] into a running
+//! simulation — shared by the CLI, the examples and every bench.
+
+use crate::bandwidth::{BandwidthTrace, PerWorkerTraces};
+use crate::config::{ExperimentConfig, WorkloadSpec};
+use crate::coordinator::{QuadraticSource, RoundRecord, SimConfig, Simulation};
+use crate::kimad::BudgetParams;
+use crate::model::Layer;
+use crate::netsim::{Link, NetSim};
+use crate::optim::{LayerwiseSgd, Schedule};
+use crate::quadratic::Quadratic;
+use crate::runtime::{ArtifactStore, EvalMetrics, PjrtModelSource, Runtime};
+
+/// Everything an experiment produced.
+pub struct ExperimentResult {
+    pub records: Vec<RoundRecord>,
+    pub layers: Vec<Layer>,
+    pub n_params: usize,
+    /// Final-model evaluation (deep model only).
+    pub eval: Option<EvalMetrics>,
+    /// Virtual seconds simulated.
+    pub total_time: f64,
+}
+
+impl ExperimentResult {
+    pub fn mean_step_time(&self) -> f64 {
+        if self.records.is_empty() {
+            return 0.0;
+        }
+        self.records.iter().map(|r| r.duration).sum::<f64>() / self.records.len() as f64
+    }
+}
+
+/// Numerical mean of a trace over its first `horizon` seconds.
+pub fn trace_mean_bps(trace: &dyn BandwidthTrace, horizon: f64) -> f64 {
+    trace.integrate(0.0, horizon) / horizon
+}
+
+/// Build the M-link netsim from the config's trace specs.
+pub fn build_netsim(cfg: &ExperimentConfig) -> NetSim {
+    let pairs = PerWorkerTraces::build(&cfg.uplink, &cfg.downlink, cfg.m);
+    NetSim::new(
+        pairs
+            .into_iter()
+            .map(|(up, down)| Link::new(up, down))
+            .collect(),
+    )
+    .with_alpha(cfg.alpha)
+}
+
+fn prior_bps(cfg: &ExperimentConfig) -> f64 {
+    if cfg.prior_bps > 0.0 {
+        cfg.prior_bps
+    } else {
+        trace_mean_bps(cfg.uplink.build().as_ref(), 120.0)
+    }
+}
+
+/// The synchronized round schedule implied by the budget: the paper's
+/// user-given t covers down + compute + up (§3.1).
+fn round_deadline(budget: &crate::kimad::BudgetParams, t_comp: f64) -> f64 {
+    match budget {
+        crate::kimad::BudgetParams::RoundBudget { t, .. } => *t,
+        crate::kimad::BudgetParams::PerDirection { t_comm } => 2.0 * t_comm + t_comp,
+    }
+}
+
+fn sim_config(cfg: &ExperimentConfig, layers: Vec<Layer>, t_comp: f64) -> SimConfig {
+    SimConfig {
+        m: cfg.m,
+        weights: vec![],
+        budget: cfg.budget,
+        up_policy: cfg.up_policy.clone(),
+        down_policy: cfg.down_policy.clone(),
+        optimizer: LayerwiseSgd::new(Schedule::Constant(cfg.optimizer.gamma))
+            .with_layer_weights(cfg.optimizer.layer_weights.clone()),
+        layers,
+        warm_start: cfg.warm_start,
+        prior_bps: prior_bps(cfg),
+        round_deadline: Some(round_deadline(&cfg.budget, t_comp)),
+        budget_safety: cfg.budget_safety,
+    }
+}
+
+/// Run a full experiment to completion.
+///
+/// `artifacts`: directory for deep-model workloads (ignored for the
+/// quadratic). Evaluation batches for the deep model: `eval_batches`.
+pub fn run_experiment(
+    cfg: &ExperimentConfig,
+    artifacts: Option<&str>,
+    eval_batches: usize,
+) -> anyhow::Result<ExperimentResult> {
+    match &cfg.workload {
+        WorkloadSpec::Quadratic { d, n_layers, t_comp } => {
+            let q = Quadratic::paper_instance(*d);
+            let layout = q.layout(*n_layers);
+            let layers = if cfg.single_layer {
+                layout.single_layer()
+            } else {
+                layout.layers()
+            };
+            let src = QuadraticSource::new(q, *t_comp);
+            let x0 = vec![1.0f32; *d];
+            let mut sim =
+                Simulation::new(sim_config(cfg, layers.clone(), *t_comp), build_netsim(cfg), src, x0);
+            let records = sim.run(cfg.rounds)?;
+            let total_time = sim.clock;
+            Ok(ExperimentResult { records, layers, n_params: *d, eval: None, total_time })
+        }
+        WorkloadSpec::DeepModel { preset, sigma, t_comp } => {
+            let store = match artifacts {
+                Some(dir) => ArtifactStore::open(dir)?,
+                None => ArtifactStore::open_default()?,
+            };
+            let rt = Runtime::cpu()?;
+            let layout = store.layout(preset)?;
+            // §4.2: T_comp = ModelSize / AverageBandwidth when not given.
+            let t_comp = if *t_comp > 0.0 {
+                *t_comp
+            } else {
+                let avg = trace_mean_bps(cfg.uplink.build().as_ref(), 120.0);
+                layout.wire_bits() as f64 / avg
+            };
+            let src = PjrtModelSource::load(&rt, &store, preset, *sigma, t_comp)?;
+            let layers = if cfg.single_layer {
+                layout.single_layer()
+            } else {
+                layout.layers()
+            };
+            let x0 = store.initial_params(preset)?;
+            let n_params = layout.n_params;
+            let mut sim =
+                Simulation::new(sim_config(cfg, layers.clone(), t_comp), build_netsim(cfg), src, x0);
+            let records = sim.run(cfg.rounds)?;
+            let total_time = sim.clock;
+            let eval = if eval_batches > 0 {
+                Some(sim.source.evaluate(&sim.server.x, eval_batches)?)
+            } else {
+                None
+            };
+            Ok(ExperimentResult { records, layers, n_params, eval, total_time })
+        }
+    }
+}
+
+/// The §4.2 bandwidth pattern (30–330 Mbps sin², per-worker noise) used
+/// by the deep-model experiments; factored here so benches, examples
+/// and configs stay consistent.
+pub fn paper_bandwidth_spec(seed: u64) -> crate::bandwidth::TraceSpec {
+    // theta 0.05 -> ~125 s period, matching the slow swings visible in
+    // the paper's Fig. 7 time axis; multi-round troughs are what make
+    // fixed-size messages miss the deadline (Table 1's straggler tail).
+    crate::bandwidth::TraceSpec::NoisySinSquared {
+        eta: 300e6,
+        theta: 0.05,
+        delta: 30e6,
+        phase: 0.0,
+        noise_sigma: 0.15,
+        seed,
+        horizon: 100_000.0,
+    }
+}
+
+/// Eq.(2)/§4.2 budget helper used across experiments.
+pub fn per_direction(t_comm: f64) -> BudgetParams {
+    BudgetParams::PerDirection { t_comm }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandwidth::TraceSpec;
+    use crate::config::OptimizerSpec;
+    use crate::kimad::CompressPolicy;
+
+    fn quad_cfg() -> ExperimentConfig {
+        ExperimentConfig {
+            name: "t".into(),
+            m: 2,
+            workload: WorkloadSpec::Quadratic { d: 30, n_layers: 3, t_comp: 0.01 },
+            budget: BudgetParams::PerDirection { t_comm: 1.0 },
+            up_policy: CompressPolicy::KimadUniform,
+            down_policy: CompressPolicy::KimadUniform,
+            optimizer: OptimizerSpec { gamma: 0.02, layer_weights: vec![] },
+            uplink: TraceSpec::Constant { bps: 512.0 },
+            downlink: TraceSpec::Constant { bps: 512.0 },
+            alpha: 1.0,
+            rounds: 50,
+            prior_bps: 0.0,
+            warm_start: true,
+            single_layer: false,
+            budget_safety: 1.0,
+            seed: 21,
+        }
+    }
+
+    #[test]
+    fn quadratic_experiment_runs() {
+        let res = run_experiment(&quad_cfg(), None, 0).unwrap();
+        assert_eq!(res.records.len(), 50);
+        assert!(res.total_time > 0.0);
+        assert!(res.mean_step_time() > 0.0);
+        assert!(res.records.last().unwrap().f_x < res.records[0].f_x);
+    }
+
+    #[test]
+    fn netsim_has_m_links() {
+        let net = build_netsim(&quad_cfg());
+        assert_eq!(net.n_workers(), 2);
+    }
+
+    #[test]
+    fn trace_mean_constant() {
+        let t = TraceSpec::Constant { bps: 100.0 }.build();
+        assert!((trace_mean_bps(t.as_ref(), 10.0) - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn single_layer_flag() {
+        let mut cfg = quad_cfg();
+        cfg.single_layer = true;
+        let res = run_experiment(&cfg, None, 0).unwrap();
+        assert_eq!(res.layers.len(), 1);
+    }
+}

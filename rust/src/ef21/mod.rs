@@ -1,0 +1,146 @@
+//! EF21 error feedback (§2.3, §3.3), layer-wise and bidirectional.
+//!
+//! Both endpoints of every link hold *estimators* that advance only by
+//! compressed differences, so they stay bit-identical on both sides:
+//!
+//!   worker m uplink:  û_m^k = û_m^{k-1} + C_m^k(u_m^k − û_m^{k-1})
+//!   server downlink:  x̂^k   = x̂^{k-1}  + C^k(x^k − x̂^{k-1})
+//!
+//! `theory` implements Theorem 1's constants (θ_i, β_i, the Eq. 9 step
+//! size bound) used by tests and the synthetic experiments' tuning.
+
+pub mod theory;
+
+use crate::compress::{Compressed, Compressor};
+use crate::model::Layer;
+
+/// One EF21 estimator over a flat vector (an `û_m` or the `x̂`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Estimator {
+    pub value: Vec<f32>,
+}
+
+impl Estimator {
+    pub fn zeros(dim: usize) -> Self {
+        Self { value: vec![0.0; dim] }
+    }
+
+    /// Warm init from a concrete vector (the paper's §4.2 warmup:
+    /// "û and x̂ are initialized as u^5 and x^5").
+    pub fn from_vec(v: Vec<f32>) -> Self {
+        Self { value: v }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.value.len()
+    }
+
+    /// Compress the difference `target − estimate` on one layer span and
+    /// advance the estimator by the compressed message. Returns the
+    /// message so the caller can "send" it (netsim wire accounting).
+    pub fn compress_advance(
+        &mut self,
+        compressor: &dyn Compressor,
+        target_layer: &[f32],
+        layer: &Layer,
+        scratch: &mut Vec<f32>,
+    ) -> Compressed {
+        let span = &mut self.value[layer.offset..layer.offset + layer.size];
+        scratch.clear();
+        scratch.extend(target_layer.iter().zip(span.iter()).map(|(&t, &e)| t - e));
+        let msg = compressor.compress(scratch);
+        msg.add_into(span);
+        msg
+    }
+
+    /// Receiver side: advance by an already-received message.
+    pub fn apply(&mut self, msg: &Compressed, layer: &Layer) {
+        let span = &mut self.value[layer.offset..layer.offset + layer.size];
+        msg.add_into(span);
+    }
+
+    /// Squared L2 distance to a target on one layer (compression error
+    /// *after* the round — the Fig. 9 series).
+    pub fn layer_error(&self, target_layer: &[f32], layer: &Layer) -> f64 {
+        self.value[layer.offset..layer.offset + layer.size]
+            .iter()
+            .zip(target_layer)
+            .map(|(&e, &t)| ((e - t) as f64).powi(2))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{Identity, TopK};
+    use crate::model::ModelLayout;
+
+    fn layer(dim: usize) -> Layer {
+        Layer { id: 0, name: "l".into(), offset: 0, size: dim }
+    }
+
+    #[test]
+    fn identity_compressor_converges_in_one_step() {
+        let mut est = Estimator::zeros(4);
+        let target = [1.0f32, -2.0, 3.0, 0.5];
+        let l = layer(4);
+        let mut scratch = Vec::new();
+        let msg = est.compress_advance(&Identity, &target, &l, &mut scratch);
+        assert_eq!(est.value, target.to_vec());
+        assert_eq!(msg.wire_bits(), 4 * 32 + 32);
+        assert_eq!(est.layer_error(&target, &l), 0.0);
+    }
+
+    #[test]
+    fn topk_contracts_monotonically() {
+        let mut est = Estimator::zeros(8);
+        let target = [8.0f32, -7.0, 6.0, -5.0, 4.0, -3.0, 2.0, -1.0];
+        let l = layer(8);
+        let c = TopK::new(2);
+        let mut scratch = Vec::new();
+        let mut prev = f64::INFINITY;
+        for _ in 0..10 {
+            est.compress_advance(&c, &target, &l, &mut scratch);
+            let err = est.layer_error(&target, &l);
+            assert!(err <= prev + 1e-9, "EF21 error must not increase");
+            prev = err;
+        }
+        assert!(prev < 1e-9, "TopK(2) over 8 dims converges in ceil(8/2) rounds");
+    }
+
+    #[test]
+    fn sender_receiver_stay_in_sync() {
+        let mut sender = Estimator::zeros(6);
+        let mut receiver = Estimator::zeros(6);
+        let layout = ModelLayout::synthetic(&[3, 3]);
+        let layers = layout.layers();
+        let target = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let c = TopK::new(1);
+        let mut scratch = Vec::new();
+        for _ in 0..5 {
+            for l in &layers {
+                let msg = sender.compress_advance(
+                    &c,
+                    &target[l.offset..l.offset + l.size],
+                    l,
+                    &mut scratch,
+                );
+                receiver.apply(&msg, l);
+            }
+        }
+        assert_eq!(sender.value, receiver.value);
+    }
+
+    #[test]
+    fn layerwise_independent_spans() {
+        let mut est = Estimator::zeros(4);
+        let layout = ModelLayout::synthetic(&[2, 2]);
+        let layers = layout.layers();
+        let target = [1.0f32, 1.0, 9.0, 9.0];
+        let mut scratch = Vec::new();
+        // Only advance layer 0.
+        est.compress_advance(&Identity, &target[0..2], &layers[0], &mut scratch);
+        assert_eq!(est.value, vec![1.0, 1.0, 0.0, 0.0]);
+    }
+}

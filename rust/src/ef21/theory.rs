@@ -1,0 +1,144 @@
+//! Theorem 1 constants: θ_i, β_i and the Eq. (9) step-size bound.
+//!
+//! θ_i := 1 − (1 − α_i)(1 + ζ_i),  β_i := (1 − α_i)(1 + ζ_i⁻¹)
+//!
+//! and γ must satisfy, for every layer i,
+//!
+//!   γ² · w_i (max_j w_j/δ_j)(max_j δ_j β_j) L² / θ  +  γ L_i w_i ≤ 1.
+//!
+//! Used by the synthetic experiments to pick provably-safe step sizes
+//! and by property tests (Lyapunov descent on quadratics).
+
+/// Per-layer EF21 constants for a compressor with contraction α.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerConsts {
+    pub alpha: f64,
+    pub zeta: f64,
+    pub theta: f64,
+    pub beta: f64,
+}
+
+/// Standard choice ζ_i s.t. (1−α)(1+ζ) < 1: ζ = α / (2(1−α)) giving
+/// θ = α/2 (EF21 paper's canonical tuning), β = (1−α)(1+ζ⁻¹).
+pub fn canonical_consts(alpha: f64) -> LayerConsts {
+    let alpha = alpha.clamp(1e-12, 1.0);
+    if alpha >= 1.0 {
+        return LayerConsts { alpha: 1.0, zeta: 0.0, theta: 1.0, beta: 0.0 };
+    }
+    let zeta = alpha / (2.0 * (1.0 - alpha));
+    let theta = 1.0 - (1.0 - alpha) * (1.0 + zeta);
+    let beta = (1.0 - alpha) * (1.0 + 1.0 / zeta);
+    LayerConsts { alpha, zeta, theta, beta }
+}
+
+/// Largest γ satisfying Eq. (9) for layer constants and weights.
+///
+/// * `alphas[i]` — compressor contraction per layer
+/// * `l_layers[i]` — layer smoothness L_i (Assumption 1)
+/// * `l_global` — global smoothness L (Assumption 2)
+/// * `w[i]` — layer step-size weights (γ_i = γ w_i)
+/// * `deltas[i]` — the δ_i > 0 of Definition (12); pass `None` for δ_i=1
+pub fn max_gamma(
+    alphas: &[f64],
+    l_layers: &[f64],
+    l_global: f64,
+    w: &[f64],
+    deltas: Option<&[f64]>,
+) -> f64 {
+    let ell = alphas.len();
+    assert!(ell > 0 && l_layers.len() == ell && w.len() == ell);
+    let ones = vec![1.0; ell];
+    let deltas = deltas.unwrap_or(&ones);
+    assert_eq!(deltas.len(), ell);
+
+    let consts: Vec<LayerConsts> = alphas.iter().map(|&a| canonical_consts(a)).collect();
+    let theta = consts
+        .iter()
+        .map(|c| c.theta)
+        .fold(f64::INFINITY, f64::min)
+        .max(1e-12);
+    let max_w_over_delta = w
+        .iter()
+        .zip(deltas)
+        .map(|(&wi, &di)| wi / di)
+        .fold(0.0, f64::max);
+    let max_delta_beta = consts
+        .iter()
+        .zip(deltas)
+        .map(|(c, &di)| di * c.beta)
+        .fold(0.0, f64::max);
+
+    // Per-layer quadratic in γ: A w_i γ² + L_i w_i γ − 1 ≤ 0 with
+    // A = max_w_over_delta * max_delta_beta * L² / θ.
+    let a_coef = max_w_over_delta * max_delta_beta * l_global * l_global / theta;
+    let mut gamma = f64::INFINITY;
+    for i in 0..ell {
+        let a = a_coef * w[i];
+        let b = l_layers[i] * w[i];
+        let g = if a < 1e-18 {
+            if b < 1e-18 {
+                f64::INFINITY
+            } else {
+                1.0 / b
+            }
+        } else {
+            // γ = (−b + sqrt(b² + 4a)) / (2a)
+            (-b + (b * b + 4.0 * a).sqrt()) / (2.0 * a)
+        };
+        gamma = gamma.min(g);
+    }
+    gamma
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_theta_is_half_alpha() {
+        for &a in &[0.1, 0.3, 0.7, 0.99] {
+            let c = canonical_consts(a);
+            assert!((c.theta - a / 2.0).abs() < 1e-9, "alpha={a}");
+            assert!((1.0 - c.alpha) * (1.0 + c.zeta) < 1.0);
+        }
+    }
+
+    #[test]
+    fn lossless_gives_gd_stepsize() {
+        // α = 1 (no compression): θ = 1, β = 0 ⇒ γ ≤ 1/L_i (GD bound).
+        let g = max_gamma(&[1.0], &[2.0], 2.0, &[1.0], None);
+        assert!((g - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn smaller_alpha_smaller_gamma() {
+        let g1 = max_gamma(&[0.5], &[1.0], 1.0, &[1.0], None);
+        let g2 = max_gamma(&[0.05], &[1.0], 1.0, &[1.0], None);
+        assert!(g2 < g1);
+        assert!(g1 < 1.0); // always below the GD step
+    }
+
+    #[test]
+    fn eq9_satisfied_at_max_gamma() {
+        let alphas = [0.3, 0.6];
+        let ls = [2.0, 5.0];
+        let lg = 5.0;
+        let w = [1.0, 0.5];
+        let g = max_gamma(&alphas, &ls, lg, &w, None);
+        let consts: Vec<_> = alphas.iter().map(|&a| canonical_consts(a)).collect();
+        let theta = consts.iter().map(|c| c.theta).fold(f64::INFINITY, f64::min);
+        let max_beta = consts.iter().map(|c| c.beta).fold(0.0, f64::max);
+        let max_w = w.iter().cloned().fold(0.0, f64::max);
+        for i in 0..2 {
+            let lhs = g * g * w[i] * max_w * max_beta * lg * lg / theta + g * ls[i] * w[i];
+            assert!(lhs <= 1.0 + 1e-6, "layer {i}: lhs={lhs}");
+        }
+    }
+
+    #[test]
+    fn weights_scale_inverse() {
+        let g1 = max_gamma(&[0.5], &[1.0], 1.0, &[1.0], None);
+        let g2 = max_gamma(&[0.5], &[1.0], 1.0, &[2.0], None);
+        assert!(g2 < g1);
+    }
+}

@@ -1,0 +1,82 @@
+//! Eq. (2): the compression budget.
+//!
+//! With time budget `t` for a full round, computation time `T_comp` and
+//! current bandwidth estimate `B`, the bits a single direction may put
+//! on the wire are
+//!
+//! `c = B · (t − T_comp) / 2`                                   (2)
+//!
+//! (the ½ splits the remaining time between uplink and downlink). §4.2
+//! also uses the single-direction form `c = T_comm · B` when the user
+//! budgets communication time per direction explicitly — both are
+//! provided.
+
+/// How the per-round time budget is specified.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BudgetParams {
+    /// Paper Eq. (2): `t` covers down + compute + up; the non-compute
+    /// remainder is split between the two directions.
+    RoundBudget { t: f64, t_comp: f64 },
+    /// §4.2 convention: a fixed communication-time budget per direction
+    /// (`T_comm`), so `c = T_comm · B`.
+    PerDirection { t_comm: f64 },
+}
+
+impl BudgetParams {
+    /// Time available to ONE direction of communication.
+    pub fn direction_seconds(&self) -> f64 {
+        match *self {
+            BudgetParams::RoundBudget { t, t_comp } => ((t - t_comp) / 2.0).max(0.0),
+            BudgetParams::PerDirection { t_comm } => t_comm.max(0.0),
+        }
+    }
+}
+
+/// Eq. (2): budget in bits for one direction given bandwidth estimate
+/// `b_bps`. Returns 0 when the time budget is already exhausted by
+/// computation (the compressor will then send the cheapest message it
+/// can — Kimad never sends *nothing*, see `select.rs`).
+pub fn compression_budget(params: BudgetParams, b_bps: f64) -> u64 {
+    let secs = params.direction_seconds();
+    if secs <= 0.0 || b_bps <= 0.0 {
+        return 0;
+    }
+    (b_bps * secs).floor() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq2_halves_remaining_time() {
+        let p = BudgetParams::RoundBudget { t: 1.0, t_comp: 0.5 };
+        // c = B (t - T_comp)/2 = 100 * 0.25
+        assert_eq!(compression_budget(p, 100.0), 25);
+    }
+
+    #[test]
+    fn per_direction_is_t_comm_times_b() {
+        let p = BudgetParams::PerDirection { t_comm: 1.0 };
+        assert_eq!(compression_budget(p, 330e6), 330_000_000);
+    }
+
+    #[test]
+    fn exhausted_budget_is_zero() {
+        let p = BudgetParams::RoundBudget { t: 0.4, t_comp: 0.5 };
+        assert_eq!(compression_budget(p, 1e9), 0);
+        assert_eq!(
+            compression_budget(BudgetParams::PerDirection { t_comm: 1.0 }, 0.0),
+            0
+        );
+    }
+
+    #[test]
+    fn budget_scales_linearly_with_bandwidth() {
+        let p = BudgetParams::PerDirection { t_comm: 0.5 };
+        assert_eq!(
+            compression_budget(p, 200.0),
+            2 * compression_budget(p, 100.0)
+        );
+    }
+}

@@ -1,0 +1,114 @@
+//! The TopK error curve ε(K) = ||u − TopK(u)||² for all K at once.
+//!
+//! This is the rust twin of the L1 Pallas kernel
+//! `python/compile/kernels/topk_error.py` (same math: sort squared
+//! magnitudes descending, suffix-sum). The coordinator uses this native
+//! implementation on its hot path; an integration test
+//! (`rust/tests/integration_runtime.rs`) checks it against the
+//! PJRT-executed Pallas kernel artifact bit-for-bit (within f32 accum
+//! tolerance), proving the two stacks compute the same quantity.
+
+/// Precomputed ε(K) for K = 0..=d over one layer's update vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ErrorCurve {
+    /// err[k] = squared L2 error of keeping the k largest-|u| coords.
+    pub err: Vec<f64>,
+}
+
+impl ErrorCurve {
+    /// O(d log d) build (sort dominates; the suffix sum is one pass).
+    pub fn build(u: &[f32]) -> Self {
+        let mut sq: Vec<f64> = u.iter().map(|&v| (v as f64) * (v as f64)).collect();
+        sq.sort_by(|a, b| b.total_cmp(a));
+        let d = sq.len();
+        let mut err = vec![0.0; d + 1];
+        let mut acc = 0.0;
+        for k in (0..d).rev() {
+            acc += sq[k];
+            err[k] = acc;
+        }
+        Self { err }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.err.len() - 1
+    }
+
+    /// ε(K), clamping K to [0, d].
+    pub fn at(&self, k: usize) -> f64 {
+        self.err[k.min(self.dim())]
+    }
+
+    /// Total energy ||u||² = ε(0).
+    pub fn total(&self) -> f64 {
+        self.err[0]
+    }
+
+    /// Smallest K with ε(K) ≤ `target` (the "optimal whole-model TopK"
+    /// baseline of Fig. 9 inverts the curve this way).
+    pub fn min_k_for_error(&self, target: f64) -> usize {
+        // err is non-increasing: binary search the first index <= target.
+        let mut lo = 0usize;
+        let mut hi = self.dim();
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.err[mid] <= target {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        lo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{compression_error, TopK};
+
+    #[test]
+    fn matches_explicit_compression() {
+        let u = [4.0f32, -3.0, 2.0, 1.0, 0.0];
+        let c = ErrorCurve::build(&u);
+        for k in 0..=5 {
+            let want = compression_error(&TopK::new(k), &u);
+            assert!((c.at(k) - want).abs() < 1e-9, "k={k}");
+        }
+    }
+
+    #[test]
+    fn endpoints() {
+        let u = [1.0f32, 2.0];
+        let c = ErrorCurve::build(&u);
+        assert!((c.total() - 5.0).abs() < 1e-12);
+        assert_eq!(c.at(2), 0.0);
+        assert_eq!(c.at(99), 0.0);
+    }
+
+    #[test]
+    fn monotone_nonincreasing() {
+        let u: Vec<f32> = (0..100).map(|i| ((i * 37) % 19) as f32 - 9.0).collect();
+        let c = ErrorCurve::build(&u);
+        for k in 1..=100 {
+            assert!(c.err[k] <= c.err[k - 1] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn min_k_inverts() {
+        let u = [3.0f32, 2.0, 1.0];
+        let c = ErrorCurve::build(&u); // err = [14, 5, 1, 0]
+        assert_eq!(c.min_k_for_error(14.0), 0);
+        assert_eq!(c.min_k_for_error(5.0), 1);
+        assert_eq!(c.min_k_for_error(4.9), 2);
+        assert_eq!(c.min_k_for_error(0.0), 3);
+    }
+
+    #[test]
+    fn empty_vector() {
+        let c = ErrorCurve::build(&[]);
+        assert_eq!(c.dim(), 0);
+        assert_eq!(c.at(0), 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! The paper's contribution: bandwidth-adaptive compression (Kimad,
+//! §3.1), layer-adaptive budget allocation (Kimad+, §3.2), and the
+//! compressor-selection algorithm `A^compress` of Algorithm 3.
+
+pub mod budget;
+pub mod error_curve;
+pub mod knapsack;
+pub mod select;
+
+pub use budget::{compression_budget, BudgetParams};
+pub use error_curve::ErrorCurve;
+pub use knapsack::{allocate, Allocation, KnapsackParams};
+pub use select::{CompressPolicy, Selection, Selector};

@@ -1,0 +1,270 @@
+//! `A^compress` (Algorithm 3 lines 4/11): choose compressors from Ω
+//! given the vector to compress, the layer structure, and the budget.
+//!
+//! Four policies cover the paper's methods and baselines:
+//!
+//! * `FixedRatio` — the EF21 baseline (§4.2): the same TopK ratio for
+//!   every layer and every round, bandwidth-oblivious.
+//! * `KimadUniform` — Kimad (§3.1): the budget from Eq. (2) spread at a
+//!   uniform ratio across layers ("per-layer basis, in accordance with
+//!   common practice").
+//! * `KimadPlus` — Kimad+ (§3.2): the knapsack DP allocates the same
+//!   budget non-uniformly to minimize total error.
+//! * `WholeModelTopK` — the Fig. 9 "optimal" baseline: select K with
+//!   whole-model information (one global TopK over the concatenated
+//!   vector), which is the error-optimal allocation for sparsification.
+
+use crate::compress::{TopK, F32_BITS, IDX_BITS};
+use crate::kimad::knapsack::{allocate, topk_options, KnapsackParams};
+use crate::kimad::ErrorCurve;
+use crate::model::Layer;
+
+/// Bits per kept coordinate for sparse TopK payloads.
+pub const SPARSE_COORD_BITS: u64 = IDX_BITS + F32_BITS;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum CompressPolicy {
+    /// Same ratio everywhere, every round (EF21 fixed baseline).
+    FixedRatio { ratio: f64 },
+    /// Kimad: budget-derived uniform ratio.
+    KimadUniform,
+    /// Kimad+: knapsack DP over a ratio grid.
+    KimadPlus {
+        discretization: usize,
+        /// Candidate ratios; empty = the paper's grid {0.01 + 0.02k}.
+        ratios: Vec<f64>,
+    },
+    /// Whole-model-information TopK (Fig. 9 optimal baseline).
+    WholeModelTopK,
+}
+
+/// The outcome of one `A^compress` call: per-layer TopK sizes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Selection {
+    pub k_per_layer: Vec<usize>,
+    pub planned_bits: u64,
+}
+
+impl Selection {
+    pub fn compressors(&self) -> Vec<TopK> {
+        self.k_per_layer.iter().map(|&k| TopK::new(k)).collect()
+    }
+
+    /// Predicted squared error from precomputed curves (no compression
+    /// performed) — used by Fig. 9 without a second pass.
+    pub fn predicted_error(&self, curves: &[ErrorCurve]) -> f64 {
+        self.k_per_layer
+            .iter()
+            .zip(curves)
+            .map(|(&k, c)| c.at(k))
+            .sum()
+    }
+}
+
+/// Stateless selector (the per-endpoint instance exists so policies
+/// with internal state — none today — stay possible).
+#[derive(Debug, Clone)]
+pub struct Selector {
+    pub policy: CompressPolicy,
+}
+
+impl Selector {
+    pub fn new(policy: CompressPolicy) -> Self {
+        Self { policy }
+    }
+
+    /// Select compressors for `diff` (the EF21 difference vector)
+    /// partitioned by `layers`, under `budget_bits` for this direction.
+    /// `FixedRatio` ignores the budget (that is the point of the
+    /// baseline); all other policies respect it exactly.
+    pub fn select(&self, diff: &[f32], layers: &[Layer], budget_bits: u64) -> Selection {
+        match &self.policy {
+            CompressPolicy::FixedRatio { ratio } => {
+                let k_per_layer: Vec<usize> = layers
+                    .iter()
+                    .map(|l| ratio_to_k(*ratio, l.size))
+                    .collect();
+                let planned = planned_bits(&k_per_layer);
+                Selection { k_per_layer, planned_bits: planned }
+            }
+            CompressPolicy::KimadUniform => {
+                let d_total: usize = layers.iter().map(|l| l.size).sum();
+                let k_budget = (budget_bits / SPARSE_COORD_BITS) as usize;
+                let ratio = if d_total == 0 {
+                    0.0
+                } else {
+                    (k_budget as f64 / d_total as f64).min(1.0)
+                };
+                // Floor per layer so the total never exceeds budget.
+                let mut k_per_layer: Vec<usize> = layers
+                    .iter()
+                    .map(|l| ((ratio * l.size as f64).floor() as usize).min(l.size))
+                    .collect();
+                // Distribute the remainder greedily by layer size.
+                let mut used: usize = k_per_layer.iter().sum();
+                if ratio < 1.0 {
+                    let mut order: Vec<usize> = (0..layers.len()).collect();
+                    order.sort_by_key(|&i| std::cmp::Reverse(layers[i].size));
+                    for &i in order.iter().cycle().take(layers.len() * 2) {
+                        if used >= k_budget.min(d_total) {
+                            break;
+                        }
+                        if k_per_layer[i] < layers[i].size {
+                            k_per_layer[i] += 1;
+                            used += 1;
+                        }
+                    }
+                }
+                let planned = planned_bits(&k_per_layer);
+                Selection { k_per_layer, planned_bits: planned }
+            }
+            CompressPolicy::KimadPlus { discretization, ratios } => {
+                let grid = if ratios.is_empty() {
+                    crate::kimad::knapsack::paper_ratio_grid()
+                } else {
+                    ratios.clone()
+                };
+                let curves: Vec<ErrorCurve> = layers
+                    .iter()
+                    .map(|l| ErrorCurve::build(&diff[l.offset..l.offset + l.size]))
+                    .collect();
+                let options = topk_options(&curves, &grid, SPARSE_COORD_BITS);
+                let alloc = allocate(
+                    &options,
+                    KnapsackParams { budget_bits, discretization: *discretization },
+                );
+                // Map chosen option back to K (option bits / coord bits).
+                let k_per_layer: Vec<usize> = alloc
+                    .choice
+                    .iter()
+                    .zip(&options)
+                    .map(|(&j, o)| (o[j].bits / SPARSE_COORD_BITS) as usize)
+                    .collect();
+                let planned = planned_bits(&k_per_layer);
+                Selection { k_per_layer, planned_bits: planned }
+            }
+            CompressPolicy::WholeModelTopK => {
+                let d_total: usize = layers.iter().map(|l| l.size).sum();
+                let k_global = ((budget_bits / SPARSE_COORD_BITS) as usize).min(d_total);
+                let idx = TopK::select_indices(diff, k_global);
+                let mut k_per_layer = vec![0usize; layers.len()];
+                for &i in &idx {
+                    let i = i as usize;
+                    // Layers are contiguous and sorted by offset.
+                    let li = layers
+                        .partition_point(|l| l.offset + l.size <= i)
+                        .min(layers.len() - 1);
+                    k_per_layer[li] += 1;
+                }
+                let planned = planned_bits(&k_per_layer);
+                Selection { k_per_layer, planned_bits: planned }
+            }
+        }
+    }
+}
+
+fn ratio_to_k(ratio: f64, d: usize) -> usize {
+    ((ratio.clamp(0.0, 1.0) * d as f64).ceil() as usize).min(d)
+}
+
+fn planned_bits(k_per_layer: &[usize]) -> u64 {
+    k_per_layer.iter().map(|&k| k as u64 * SPARSE_COORD_BITS).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelLayout;
+
+    fn layers3() -> Vec<Layer> {
+        ModelLayout::synthetic(&[10, 20, 10]).layers()
+    }
+
+    fn diff40() -> Vec<f32> {
+        (0..40).map(|i| (40 - i) as f32 / 10.0).collect()
+    }
+
+    #[test]
+    fn fixed_ratio_ignores_budget() {
+        let s = Selector::new(CompressPolicy::FixedRatio { ratio: 0.5 });
+        let sel = s.select(&diff40(), &layers3(), 0);
+        assert_eq!(sel.k_per_layer, vec![5, 10, 5]);
+    }
+
+    #[test]
+    fn kimad_uniform_respects_budget() {
+        let s = Selector::new(CompressPolicy::KimadUniform);
+        for budget_k in [0u64, 1, 7, 20, 40, 100] {
+            let sel = s.select(&diff40(), &layers3(), budget_k * SPARSE_COORD_BITS);
+            let total: usize = sel.k_per_layer.iter().sum();
+            assert!(total as u64 <= budget_k.min(40), "budget_k={budget_k} total={total}");
+            assert!(sel.planned_bits <= budget_k * SPARSE_COORD_BITS);
+            // Uses the whole budget when it can.
+            if budget_k <= 40 {
+                assert_eq!(total as u64, budget_k.min(40));
+            }
+        }
+    }
+
+    #[test]
+    fn kimad_plus_no_worse_than_uniform() {
+        let layers = layers3();
+        // Heterogeneous layer energies: first layer has huge entries.
+        let mut diff = vec![0.1f32; 40];
+        for i in 0..10 {
+            diff[i] = 10.0 - i as f32;
+        }
+        let budget = 10 * SPARSE_COORD_BITS;
+        let uni = Selector::new(CompressPolicy::KimadUniform).select(&diff, &layers, budget);
+        let plus = Selector::new(CompressPolicy::KimadPlus { discretization: 1000, ratios: vec![] })
+            .select(&diff, &layers, budget);
+        let curves: Vec<ErrorCurve> = layers
+            .iter()
+            .map(|l| ErrorCurve::build(&diff[l.offset..l.offset + l.size]))
+            .collect();
+        assert!(plus.planned_bits <= budget);
+        assert!(
+            plus.predicted_error(&curves) <= uni.predicted_error(&curves) + 1e-9,
+            "plus {} uniform {}",
+            plus.predicted_error(&curves),
+            uni.predicted_error(&curves)
+        );
+    }
+
+    #[test]
+    fn whole_model_is_optimal_for_sparsification() {
+        let layers = layers3();
+        let diff = diff40();
+        let budget = 12 * SPARSE_COORD_BITS;
+        let whole = Selector::new(CompressPolicy::WholeModelTopK).select(&diff, &layers, budget);
+        let plus = Selector::new(CompressPolicy::KimadPlus { discretization: 4000, ratios: vec![] })
+            .select(&diff, &layers, budget);
+        let curves: Vec<ErrorCurve> = layers
+            .iter()
+            .map(|l| ErrorCurve::build(&diff[l.offset..l.offset + l.size]))
+            .collect();
+        let total_k: usize = whole.k_per_layer.iter().sum();
+        assert_eq!(total_k, 12);
+        assert!(
+            whole.predicted_error(&curves) <= plus.predicted_error(&curves) + 1e-9,
+            "whole-model TopK must lower-bound grid-restricted Kimad+"
+        );
+    }
+
+    #[test]
+    fn whole_model_layer_attribution() {
+        let layers = ModelLayout::synthetic(&[2, 2]).layers();
+        let diff = [0.1f32, 9.0, 8.0, 0.2];
+        let sel = Selector::new(CompressPolicy::WholeModelTopK)
+            .select(&diff, &layers, 2 * SPARSE_COORD_BITS);
+        assert_eq!(sel.k_per_layer, vec![1, 1]);
+    }
+
+    #[test]
+    fn zero_dim_layers_safe() {
+        let s = Selector::new(CompressPolicy::KimadUniform);
+        let sel = s.select(&[], &[], 100);
+        assert!(sel.k_per_layer.is_empty());
+        assert_eq!(sel.planned_bits, 0);
+    }
+}

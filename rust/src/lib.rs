@@ -1,0 +1,42 @@
+//! # Kimad: Adaptive Gradient Compression with Bandwidth Awareness
+//!
+//! A production-shaped reproduction of the paper (Xin, Ilin, Zhang,
+//! Canini, Richtárik, 2023) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordination contribution: a virtual-time
+//!   Parameter-Server simulator ([`netsim`]), bandwidth monitoring
+//!   ([`bandwidth`]), the Eq. (2) compression budget, `A^compress`
+//!   selection, the Kimad+ knapsack DP ([`kimad`]), bidirectional EF21
+//!   ([`ef21`]) and the round loop ([`coordinator`]).
+//! * **L2/L1 (build-time Python)** — the deep-model workload
+//!   (transformer fwd/bwd in JAX, FFN/error-curve hot spots as Pallas
+//!   kernels) AOT-lowered to HLO text and executed via [`runtime`]
+//!   (PJRT). Python never runs on the request path.
+//!
+//! Quick start:
+//!
+//! ```no_run
+//! use kimad::config::ExperimentConfig;
+//! use kimad::driver::run_experiment;
+//!
+//! let cfg = ExperimentConfig::from_json_file("configs/fig8_kimad.json".as_ref()).unwrap();
+//! let res = run_experiment(&cfg, Some("artifacts"), 4).unwrap();
+//! println!("final loss = {}", res.records.last().unwrap().loss);
+//! ```
+
+pub mod bandwidth;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod driver;
+pub mod ef21;
+pub mod kimad;
+pub mod metrics;
+pub mod model;
+pub mod netsim;
+pub mod optim;
+pub mod quadratic;
+pub mod reports;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,165 @@
+//! `kimad` — the CLI launcher for the Kimad reproduction.
+//!
+//! Subcommands:
+//!   train     run an experiment from a JSON config, write CSVs
+//!   report    regenerate a paper figure/table (fig1, fig3..fig9,
+//!             table1, table2, or `all`)
+//!   synthetic quick §4.1 quadratic comparison for one scenario
+//!   trace     sample a bandwidth trace spec (JSON) to stdout
+//!   presets   list AOT model presets available in artifacts/
+
+use std::path::PathBuf;
+
+use kimad::config::ExperimentConfig;
+use kimad::driver::run_experiment;
+use kimad::metrics::{Series, SeriesSet};
+use kimad::reports::{self, ReportCtx};
+use kimad::util::cli::Args;
+use kimad::util::json::Value;
+
+const USAGE: &str = "\
+kimad — adaptive gradient compression with bandwidth awareness (reproduction)
+
+USAGE:
+  kimad train --config <file.json> [--artifacts DIR] [--eval-batches N] [--csv OUT]
+  kimad report <fig1|fig3..fig9|fig3to6|table1|table2|all> [--artifacts DIR] [--out-dir DIR] [--fast]
+  kimad synthetic [--scenario xsmall|small|oscillation|high] [--fast] [--out-dir DIR]
+  kimad trace --spec '<json TraceSpec>' [--seconds S] [--step S]
+  kimad presets [--artifacts DIR]
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> anyhow::Result<()> {
+    let args = Args::parse(argv, &["fast", "help"])?;
+    if args.flag("help") || args.positional.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match args.positional[0].as_str() {
+        "train" => train(&args),
+        "report" => report(&args),
+        "synthetic" => synthetic(&args),
+        "trace" => trace(&args),
+        "presets" => presets(&args),
+        other => anyhow::bail!("unknown subcommand '{other}'\n{USAGE}"),
+    }
+}
+
+fn train(args: &Args) -> anyhow::Result<()> {
+    let config = args
+        .opt("config")
+        .ok_or_else(|| anyhow::anyhow!("train requires --config <file.json>"))?;
+    let artifacts = args.opt_or("artifacts", "artifacts");
+    let eval_batches = args.opt_usize("eval-batches", 4)?;
+    let cfg = ExperimentConfig::from_json_file(config.as_ref())?;
+    eprintln!("running '{}' (M={}, {} rounds)...", cfg.name, cfg.m, cfg.rounds);
+    let res = run_experiment(&cfg, Some(&artifacts), eval_batches)?;
+    let last = res.records.last().expect("no rounds");
+    println!(
+        "rounds={} virtual_time={:.1}s mean_step={:.3}s final_loss={:.5} f_x={:.4e}",
+        res.records.len(),
+        res.total_time,
+        res.mean_step_time(),
+        last.loss,
+        last.f_x
+    );
+    if let Some(e) = res.eval {
+        println!(
+            "eval: loss={:.4} top1={:.2}% top5={:.2}% (n={})",
+            e.loss,
+            e.top1 * 100.0,
+            e.top5 * 100.0,
+            e.n
+        );
+    }
+    if let Some(path) = args.opt("csv") {
+        let mut set = SeriesSet::default();
+        let mut loss = Series::new("loss");
+        let mut bits = Series::new("up_bits_w0");
+        let mut fx = Series::new("f_x");
+        for r in &res.records {
+            loss.push(r.t_end(), r.loss);
+            bits.push(r.t_start, r.workers[0].up_bits as f64);
+            fx.push(r.t_end(), r.f_x);
+        }
+        set.push(loss);
+        set.push(bits);
+        set.push(fx);
+        set.write_csv(path.as_ref(), "time_s", "value")?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn report(args: &Args) -> anyhow::Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("report requires an id (e.g. fig8, table1, all)"))?;
+    let ctx = ReportCtx {
+        artifacts: args.opt_or("artifacts", "artifacts"),
+        out_dir: PathBuf::from(args.opt_or("out-dir", "reports")),
+        fast: args.flag("fast"),
+    };
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    if id == "all" {
+        for id in reports::ALL_REPORTS {
+            println!("{}", reports::generate(id, &ctx)?);
+        }
+    } else {
+        println!("{}", reports::generate(id, &ctx)?);
+    }
+    Ok(())
+}
+
+fn synthetic(args: &Args) -> anyhow::Result<()> {
+    use kimad::reports::synthetic::Scenario;
+    let scn = match args.opt_or("scenario", "xsmall").as_str() {
+        "xsmall" => Scenario::XSmall,
+        "small" => Scenario::Small,
+        "oscillation" => Scenario::Oscillation,
+        "high" => Scenario::High,
+        other => anyhow::bail!("unknown scenario '{other}'"),
+    };
+    let ctx = ReportCtx {
+        artifacts: "artifacts".into(),
+        out_dir: PathBuf::from(args.opt_or("out-dir", "reports")),
+        fast: args.flag("fast"),
+    };
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    println!("{}", kimad::reports::synthetic::generate_one(&ctx, scn)?);
+    Ok(())
+}
+
+fn trace(args: &Args) -> anyhow::Result<()> {
+    let spec_text = args
+        .opt("spec")
+        .ok_or_else(|| anyhow::anyhow!("trace requires --spec '<json>'"))?;
+    let spec = kimad::bandwidth::TraceSpec::from_json(&Value::parse(spec_text)?)?;
+    let seconds = args.opt_f64("seconds", 60.0)?;
+    let step = args.opt_f64("step", 0.5)?;
+    let tr = spec.build();
+    println!("time_s,bps");
+    let mut t = 0.0;
+    while t <= seconds {
+        println!("{t},{}", tr.at(t));
+        t += step;
+    }
+    Ok(())
+}
+
+fn presets(args: &Args) -> anyhow::Result<()> {
+    let store = kimad::runtime::ArtifactStore::open(args.opt_or("artifacts", "artifacts"))?;
+    for p in store.model_presets() {
+        let m = store.model(p)?;
+        println!("{p}: {} params ({})", m.n_params, m.train_hlo);
+    }
+    Ok(())
+}

@@ -1,0 +1,195 @@
+//! Metrics: time/loss/error series, CSV emission, run manifests.
+//!
+//! Every experiment (benches, examples, `kimad report ...`) writes its
+//! series through this module so the paper's figures regenerate from
+//! plain CSV with stable headers.
+
+use std::io::Write;
+use std::path::Path;
+
+/// One named column-oriented series (e.g. a loss curve).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    pub fn last_y(&self) -> Option<f64> {
+        self.points.last().map(|p| p.1)
+    }
+
+    pub fn min_y(&self) -> Option<f64> {
+        self.points
+            .iter()
+            .map(|p| p.1)
+            .min_by(|a, b| a.total_cmp(b))
+    }
+
+    /// First x where y <= threshold (time-to-target metrics).
+    pub fn first_x_below(&self, threshold: f64) -> Option<f64> {
+        self.points.iter().find(|p| p.1 <= threshold).map(|p| p.0)
+    }
+
+    /// Mean of y values.
+    pub fn mean_y(&self) -> Option<f64> {
+        if self.points.is_empty() {
+            None
+        } else {
+            Some(self.points.iter().map(|p| p.1).sum::<f64>() / self.points.len() as f64)
+        }
+    }
+}
+
+/// A bundle of series sharing an x-axis meaning, written as wide CSV
+/// (x, series1, series2, ...) with x values merged by exact match or as
+/// long CSV (series, x, y) when x axes differ.
+#[derive(Debug, Default, Clone)]
+pub struct SeriesSet {
+    pub series: Vec<Series>,
+}
+
+impl SeriesSet {
+    pub fn push(&mut self, s: Series) {
+        self.series.push(s);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Series> {
+        self.series.iter().find(|s| s.name == name)
+    }
+
+    /// Long-format CSV: `series,x,y` — robust to unaligned x axes.
+    pub fn to_csv_long(&self, x_name: &str, y_name: &str) -> String {
+        let mut out = format!("series,{x_name},{y_name}\n");
+        for s in &self.series {
+            for &(x, y) in &s.points {
+                out.push_str(&format!("{},{x},{y}\n", s.name));
+            }
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: &Path, x_name: &str, y_name: &str) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv_long(x_name, y_name).as_bytes())?;
+        Ok(())
+    }
+}
+
+/// A paper table: rows x columns of f64 with labels, printed in the
+/// same shape the paper reports.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub col_labels: Vec<String>,
+    pub row_labels: Vec<String>,
+    pub cells: Vec<Vec<f64>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, cols: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            col_labels: cols.iter().map(|s| s.to_string()).collect(),
+            row_labels: Vec::new(),
+            cells: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, label: impl Into<String>, cells: Vec<f64>) {
+        assert_eq!(cells.len(), self.col_labels.len(), "row width mismatch");
+        self.row_labels.push(label.into());
+        self.cells.push(cells);
+    }
+
+    pub fn render(&self, unit: &str, decimals: usize) -> String {
+        let mut out = format!("## {}\n\n|       |", self.title);
+        for c in &self.col_labels {
+            out.push_str(&format!(" {c} |"));
+        }
+        out.push_str("\n|-------|");
+        out.push_str(&"--------|".repeat(self.col_labels.len()));
+        out.push('\n');
+        for (label, row) in self.row_labels.iter().zip(&self.cells) {
+            out.push_str(&format!("| {label} |"));
+            for v in row {
+                out.push_str(&format!(" {v:.decimals$}{unit} |"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("row");
+        for c in &self.col_labels {
+            out.push_str(&format!(",{c}"));
+        }
+        out.push('\n');
+        for (label, row) in self.row_labels.iter().zip(&self.cells) {
+            out.push_str(label);
+            for v in row {
+                out.push_str(&format!(",{v}"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_stats() {
+        let mut s = Series::new("loss");
+        s.push(0.0, 3.0);
+        s.push(1.0, 1.0);
+        s.push(2.0, 2.0);
+        assert_eq!(s.last_y(), Some(2.0));
+        assert_eq!(s.min_y(), Some(1.0));
+        assert_eq!(s.first_x_below(1.5), Some(1.0));
+        assert_eq!(s.mean_y(), Some(2.0));
+    }
+
+    #[test]
+    fn long_csv_format() {
+        let mut set = SeriesSet::default();
+        let mut s = Series::new("a");
+        s.push(0.0, 1.0);
+        set.push(s);
+        let csv = set.to_csv_long("t", "v");
+        assert_eq!(csv, "series,t,v\na,0,1\n");
+    }
+
+    #[test]
+    fn table_render_and_csv() {
+        let mut t = Table::new("Tab", &["1.0s", "0.5s"]);
+        t.push_row("EF21", vec![486.1, 360.6]);
+        t.push_row("Kimad", vec![385.2, 285.2]);
+        let md = t.render("s", 1);
+        assert!(md.contains("| EF21 | 486.1s | 360.6s |"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("row,1.0s,0.5s\n"));
+        assert!(csv.contains("Kimad,385.2,285.2"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn table_width_checked() {
+        let mut t = Table::new("T", &["a"]);
+        t.push_row("r", vec![1.0, 2.0]);
+    }
+}

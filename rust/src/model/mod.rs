@@ -1,0 +1,249 @@
+//! Model metadata: parameter layout, layer grouping, flat-vector views.
+//!
+//! The coordinator treats a model as one flat `f32` vector partitioned
+//! into *layers* (Kimad+ allocates its budget across these). For the
+//! deep model the layout is loaded from `artifacts/layout-<preset>.json`
+//! written by `python/compile/aot.py`; synthetic workloads build layouts
+//! programmatically.
+
+use std::path::Path;
+
+use crate::util::json::Value;
+
+/// One parameter tensor slot (mirrors python ParamMeta).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSlot {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Kimad+ layer group id (embed=0, block i=i+1, head=last).
+    pub group: usize,
+    /// Element offset into the flat vector.
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Full model layout: slots in wire order + derived group spans.
+#[derive(Debug, Clone)]
+pub struct ModelLayout {
+    pub preset: String,
+    pub batch: usize,
+    pub seq: usize,
+    pub d_in: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_blocks: usize,
+    pub d_ff: usize,
+    pub n_classes: usize,
+    pub n_params: usize,
+    pub n_groups: usize,
+    pub params: Vec<ParamSlot>,
+}
+
+/// A contiguous "layer" for compression purposes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Layer {
+    pub id: usize,
+    pub name: String,
+    pub offset: usize,
+    pub size: usize,
+}
+
+impl ModelLayout {
+    pub fn from_json_file(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let layout = Self::from_json(&Value::parse(&text)?)?;
+        layout.validate()?;
+        Ok(layout)
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let us = |k: &str| -> usize {
+            v.opt(k).and_then(|x| x.as_usize().ok()).unwrap_or(0)
+        };
+        let params = v
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamSlot {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|s| s.as_usize())
+                        .collect::<anyhow::Result<Vec<_>>>()?,
+                    group: p.get("group")?.as_usize()?,
+                    offset: p.get("offset")?.as_usize()?,
+                    size: p.get("size")?.as_usize()?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Self {
+            preset: v
+                .opt("preset")
+                .and_then(|x| x.as_str().ok())
+                .unwrap_or("")
+                .to_string(),
+            batch: us("batch"),
+            seq: us("seq"),
+            d_in: us("d_in"),
+            d_model: us("d_model"),
+            n_heads: us("n_heads"),
+            n_blocks: us("n_blocks"),
+            d_ff: us("d_ff"),
+            n_classes: us("n_classes"),
+            n_params: v.get("n_params")?.as_usize()?,
+            n_groups: us("n_groups"),
+            params,
+        })
+    }
+
+    /// A synthetic layout: `sizes[i]` elements in layer i (used by the
+    /// quadratic workload and unit tests).
+    pub fn synthetic(sizes: &[usize]) -> Self {
+        let mut params = Vec::with_capacity(sizes.len());
+        let mut off = 0;
+        for (i, &s) in sizes.iter().enumerate() {
+            params.push(ParamSlot {
+                name: format!("layer{i}"),
+                shape: vec![s],
+                group: i,
+                offset: off,
+                size: s,
+            });
+            off += s;
+        }
+        Self {
+            preset: "synthetic".into(),
+            batch: 0,
+            seq: 0,
+            d_in: 0,
+            d_model: 0,
+            n_heads: 0,
+            n_blocks: 0,
+            d_ff: 0,
+            n_classes: 0,
+            n_params: off,
+            n_groups: sizes.len(),
+            params,
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let mut off = 0;
+        for p in &self.params {
+            if p.offset != off {
+                anyhow::bail!("slot {} offset {} != expected {off}", p.name, p.offset);
+            }
+            let numel: usize = p.shape.iter().product::<usize>().max(1);
+            if numel != p.size && !p.shape.is_empty() {
+                anyhow::bail!("slot {} size {} != shape prod {numel}", p.name, p.size);
+            }
+            off += p.size;
+        }
+        if off != self.n_params {
+            anyhow::bail!("sum of slot sizes {off} != n_params {}", self.n_params);
+        }
+        Ok(())
+    }
+
+    /// Compression layers = group spans (contiguous by construction).
+    pub fn layers(&self) -> Vec<Layer> {
+        let mut layers: Vec<Layer> = Vec::new();
+        for p in &self.params {
+            match layers.last_mut() {
+                Some(l) if l.id == p.group => {
+                    debug_assert_eq!(l.offset + l.size, p.offset, "groups must be contiguous");
+                    l.size += p.size;
+                }
+                _ => layers.push(Layer {
+                    id: p.group,
+                    name: group_name(&p.name),
+                    offset: p.offset,
+                    size: p.size,
+                }),
+            }
+        }
+        layers
+    }
+
+    /// Treat the whole model as a single layer (plain Kimad / EF21).
+    pub fn single_layer(&self) -> Vec<Layer> {
+        vec![Layer { id: 0, name: "model".into(), offset: 0, size: self.n_params }]
+    }
+
+    /// Total uncompressed wire size in bits.
+    pub fn wire_bits(&self) -> u64 {
+        self.n_params as u64 * 32
+    }
+}
+
+fn group_name(param_name: &str) -> String {
+    param_name
+        .split('/')
+        .next()
+        .unwrap_or(param_name)
+        .to_string()
+}
+
+/// Split a flat vector according to layers, yielding (layer, slice).
+pub fn layer_slices<'a>(flat: &'a [f32], layers: &'a [Layer]) -> impl Iterator<Item = (&'a Layer, &'a [f32])> {
+    layers
+        .iter()
+        .map(move |l| (l, &flat[l.offset..l.offset + l.size]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_layout_valid() {
+        let l = ModelLayout::synthetic(&[10, 20, 5]);
+        assert_eq!(l.n_params, 35);
+        l.validate().unwrap();
+        let layers = l.layers();
+        assert_eq!(layers.len(), 3);
+        assert_eq!(layers[1].offset, 10);
+        assert_eq!(layers[2].size, 5);
+    }
+
+    #[test]
+    fn groups_merge_contiguous_slots() {
+        let mut l = ModelLayout::synthetic(&[4, 4]);
+        // Rewrite as two slots in the same group.
+        l.params[1].group = 0;
+        let layers = l.layers();
+        assert_eq!(layers.len(), 1);
+        assert_eq!(layers[0].size, 8);
+    }
+
+    #[test]
+    fn validate_rejects_gap() {
+        let mut l = ModelLayout::synthetic(&[4, 4]);
+        l.params[1].offset = 5;
+        assert!(l.validate().is_err());
+    }
+
+    #[test]
+    fn single_layer_spans_model() {
+        let l = ModelLayout::synthetic(&[3, 3, 3]);
+        let s = l.single_layer();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].size, 9);
+        assert_eq!(l.wire_bits(), 9 * 32);
+    }
+
+    #[test]
+    fn layer_slices_iterate() {
+        let l = ModelLayout::synthetic(&[2, 3]);
+        let flat = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let layers = l.layers();
+        let got: Vec<_> = layer_slices(&flat, &layers)
+            .map(|(_, s)| s.to_vec())
+            .collect();
+        assert_eq!(got, vec![vec![1.0, 2.0], vec![3.0, 4.0, 5.0]]);
+    }
+}

@@ -1,0 +1,119 @@
+//! Optimizers and learning-rate schedules.
+//!
+//! The server-side update of Algorithm 3 line 15 is plain (S)GD over the
+//! aggregated EF21 estimators; Theorem 1 additionally allows layer-wise
+//! step sizes γ_i^k = γ·w_i, which [`LayerwiseSgd`] implements.
+
+use crate::model::Layer;
+
+/// Learning-rate schedule γ^k.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Schedule {
+    Constant(f64),
+    /// γ / (1 + decay·k)
+    InverseTime { gamma0: f64, decay: f64 },
+    /// γ·factor^(k / step)
+    StepDecay { gamma0: f64, factor: f64, every: usize },
+}
+
+impl Schedule {
+    pub fn at(&self, k: usize) -> f64 {
+        match *self {
+            Schedule::Constant(g) => g,
+            Schedule::InverseTime { gamma0, decay } => gamma0 / (1.0 + decay * k as f64),
+            Schedule::StepDecay { gamma0, factor, every } => {
+                gamma0 * factor.powi((k / every.max(1)) as i32)
+            }
+        }
+    }
+}
+
+/// SGD with optional per-layer weights w_i (γ_i^k = γ^k · w_i).
+#[derive(Debug, Clone)]
+pub struct LayerwiseSgd {
+    pub schedule: Schedule,
+    /// One weight per layer id; empty = all 1.0.
+    pub layer_weights: Vec<f64>,
+}
+
+impl LayerwiseSgd {
+    pub fn new(schedule: Schedule) -> Self {
+        Self { schedule, layer_weights: Vec::new() }
+    }
+
+    pub fn with_layer_weights(mut self, w: Vec<f64>) -> Self {
+        self.layer_weights = w;
+        self
+    }
+
+    fn weight(&self, layer_id: usize) -> f64 {
+        self.layer_weights.get(layer_id).copied().unwrap_or(1.0)
+    }
+
+    /// x ← x − γ_i^k · dir on each layer span.
+    pub fn step(&self, k: usize, x: &mut [f32], dir: &[f32], layers: &[Layer]) {
+        debug_assert_eq!(x.len(), dir.len());
+        let gamma = self.schedule.at(k);
+        for l in layers {
+            let g = (gamma * self.weight(l.id)) as f32;
+            let (xs, ds) = (
+                &mut x[l.offset..l.offset + l.size],
+                &dir[l.offset..l.offset + l.size],
+            );
+            for (xi, &di) in xs.iter_mut().zip(ds) {
+                *xi -= g * di;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelLayout;
+
+    #[test]
+    fn schedules() {
+        assert_eq!(Schedule::Constant(0.1).at(99), 0.1);
+        let it = Schedule::InverseTime { gamma0: 1.0, decay: 1.0 };
+        assert!((it.at(0) - 1.0).abs() < 1e-12);
+        assert!((it.at(1) - 0.5).abs() < 1e-12);
+        let sd = Schedule::StepDecay { gamma0: 1.0, factor: 0.5, every: 10 };
+        assert!((sd.at(9) - 1.0).abs() < 1e-12);
+        assert!((sd.at(10) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step_moves_against_direction() {
+        let layout = ModelLayout::synthetic(&[2, 2]);
+        let layers = layout.layers();
+        let sgd = LayerwiseSgd::new(Schedule::Constant(0.5));
+        let mut x = vec![1.0f32; 4];
+        sgd.step(0, &mut x, &[2.0, 2.0, 2.0, 2.0], &layers);
+        assert_eq!(x, vec![0.0; 4]);
+    }
+
+    #[test]
+    fn layer_weights_apply_per_span() {
+        let layout = ModelLayout::synthetic(&[2, 2]);
+        let layers = layout.layers();
+        let sgd = LayerwiseSgd::new(Schedule::Constant(1.0)).with_layer_weights(vec![1.0, 0.0]);
+        let mut x = vec![1.0f32; 4];
+        sgd.step(0, &mut x, &[1.0, 1.0, 1.0, 1.0], &layers);
+        assert_eq!(x, vec![0.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn quadratic_descent() {
+        // f(x) = 0.5 x^2 per coordinate: GD with γ=0.5 halves x.
+        let layout = ModelLayout::synthetic(&[3]);
+        let layers = layout.layers();
+        let sgd = LayerwiseSgd::new(Schedule::Constant(0.5));
+        let mut x = vec![8.0f32, -4.0, 2.0];
+        for _ in 0..3 {
+            let g = x.clone();
+            sgd.step(0, &mut x, &g, &layers);
+        }
+        assert_eq!(x, vec![1.0, -0.5, 0.25]);
+    }
+}

@@ -1,0 +1,151 @@
+//! The paper's synthetic workload (§4.1): f(x) = ½ Σ a_i x_i², d = 30.
+//!
+//! Lower-bounded by 0, layer-smooth (Assumption 1 with L_i = max a over
+//! the layer's coordinates) and globally smooth (L = max_i a_i), so it
+//! sits exactly inside Theorem 1's assumptions — the reason the paper
+//! uses it to fine-tune learning rates per compression ratio.
+
+use crate::model::{Layer, ModelLayout};
+
+/// f(x) = ½ Σ a_i x_i² with a_i > 0.
+#[derive(Debug, Clone)]
+pub struct Quadratic {
+    pub a: Vec<f64>,
+}
+
+impl Quadratic {
+    pub fn new(a: Vec<f64>) -> Self {
+        assert!(a.iter().all(|&v| v > 0.0), "a_i must be positive");
+        Self { a }
+    }
+
+    /// The paper's d=30 instance: a_i log-spaced over [1, 10] so layers
+    /// have heterogeneous curvature (seeded, deterministic).
+    pub fn paper_instance(d: usize) -> Self {
+        let a = (0..d)
+            .map(|i| 10f64.powf(i as f64 / (d.max(2) - 1) as f64))
+            .collect();
+        Self::new(a)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.a.len()
+    }
+
+    pub fn value(&self, x: &[f32]) -> f64 {
+        0.5 * x
+            .iter()
+            .zip(&self.a)
+            .map(|(&xi, &ai)| ai * (xi as f64) * (xi as f64))
+            .sum::<f64>()
+    }
+
+    /// ∇f(x) = a ⊙ x, written into `out`.
+    pub fn grad_into(&self, x: &[f32], out: &mut [f32]) {
+        for ((o, &xi), &ai) in out.iter_mut().zip(x).zip(&self.a) {
+            *o = (ai as f32) * xi;
+        }
+    }
+
+    pub fn grad(&self, x: &[f32]) -> Vec<f32> {
+        let mut g = vec![0.0; self.dim()];
+        self.grad_into(x, &mut g);
+        g
+    }
+
+    pub fn grad_norm_sq(&self, x: &[f32]) -> f64 {
+        x.iter()
+            .zip(&self.a)
+            .map(|(&xi, &ai)| (ai * xi as f64).powi(2))
+            .sum()
+    }
+
+    /// Global smoothness constant L (Assumption 2).
+    pub fn l_global(&self) -> f64 {
+        self.a.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Layer smoothness constants L_i (Assumption 1) for a layout.
+    pub fn l_layers(&self, layers: &[Layer]) -> Vec<f64> {
+        layers
+            .iter()
+            .map(|l| {
+                self.a[l.offset..l.offset + l.size]
+                    .iter()
+                    .cloned()
+                    .fold(0.0, f64::max)
+            })
+            .collect()
+    }
+
+    /// Split the d coordinates into `n_layers` roughly equal layers.
+    pub fn layout(&self, n_layers: usize) -> ModelLayout {
+        let d = self.dim();
+        let n = n_layers.clamp(1, d);
+        let base = d / n;
+        let extra = d % n;
+        let sizes: Vec<usize> = (0..n).map(|i| base + usize::from(i < extra)).collect();
+        ModelLayout::synthetic(&sizes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_and_grad() {
+        let q = Quadratic::new(vec![1.0, 2.0]);
+        let x = [3.0f32, 1.0];
+        assert!((q.value(&x) - (0.5 * 9.0 + 1.0)).abs() < 1e-9);
+        assert_eq!(q.grad(&x), vec![3.0, 2.0]);
+        assert!((q.grad_norm_sq(&x) - (9.0 + 4.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_instance_properties() {
+        let q = Quadratic::paper_instance(30);
+        assert_eq!(q.dim(), 30);
+        assert!((q.a[0] - 1.0).abs() < 1e-12);
+        assert!((q.a[29] - 10.0).abs() < 1e-9);
+        assert!((q.l_global() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn layer_constants() {
+        let q = Quadratic::new(vec![1.0, 5.0, 2.0, 9.0]);
+        let layout = q.layout(2);
+        let layers = layout.layers();
+        assert_eq!(layers.len(), 2);
+        assert_eq!(q.l_layers(&layers), vec![5.0, 9.0]);
+    }
+
+    #[test]
+    fn layout_uneven_split() {
+        let q = Quadratic::paper_instance(30);
+        let layout = q.layout(4);
+        let sizes: Vec<usize> = layout.layers().iter().map(|l| l.size).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 30);
+        assert_eq!(sizes, vec![8, 8, 7, 7]);
+    }
+
+    #[test]
+    fn gd_converges_under_l_step() {
+        let q = Quadratic::paper_instance(10);
+        let mut x = vec![1.0f32; 10];
+        let gamma = (1.0 / q.l_global()) as f32;
+        for _ in 0..500 {
+            let g = q.grad(&x);
+            for (xi, gi) in x.iter_mut().zip(g) {
+                *xi -= gamma * gi;
+            }
+        }
+        assert!(q.value(&x) < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn rejects_nonpositive() {
+        Quadratic::new(vec![1.0, 0.0]);
+    }
+}

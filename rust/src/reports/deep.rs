@@ -1,0 +1,294 @@
+//! Deep-model reports: Fig. 7 (communication adaptivity), Fig. 8 (loss
+//! curve), Fig. 9 (compression error), Table 1 (step time), Table 2
+//! (Top-5 accuracy vs M). All run the AOT transformer through PJRT.
+
+use crate::config::{ExperimentConfig, OptimizerSpec, WorkloadSpec};
+use crate::driver::{paper_bandwidth_spec, run_experiment, ExperimentResult};
+use crate::kimad::{BudgetParams, CompressPolicy};
+use crate::metrics::{Series, SeriesSet, Table};
+
+use super::ReportCtx;
+
+/// ResNet18's wire size (11.69M params x 32 bit) — what the paper's
+/// 30–330 Mbps band was calibrated against.
+const RESNET18_BITS: f64 = 11_689_512.0 * 32.0;
+
+/// Scale the paper's bandwidth band to OUR model so the fit ratio
+/// B·t / model_bits — the quantity that decides how much compression
+/// the budget forces — matches the paper's setting (DESIGN.md §3).
+fn bandwidth_scale(ctx: &ReportCtx) -> f64 {
+    let n_params = match ctx.preset() {
+        "small" => 18_282.0,
+        "e2e" => 800_906.0,
+        _ => 800_906.0,
+    };
+    (n_params * 32.0) / RESNET18_BITS
+}
+
+/// The §4.2 base experiment: M=4, sin² 30–330 Mbps (scaled to the
+/// model, see bandwidth_scale) with per-worker noise, T_comm = 1 s,
+/// γ = 0.01, TopK family, warm start.
+pub fn base_config(ctx: &ReportCtx, policy: CompressPolicy, t_comm: f64, m: usize) -> ExperimentConfig {
+    let s = bandwidth_scale(ctx);
+    let scaled = |seed: u64| match paper_bandwidth_spec(seed) {
+        crate::bandwidth::TraceSpec::NoisySinSquared {
+            eta, theta, delta, phase, noise_sigma, seed, horizon,
+        } => crate::bandwidth::TraceSpec::NoisySinSquared {
+            eta: eta * s,
+            theta,
+            delta: delta * s,
+            phase,
+            noise_sigma,
+            seed,
+            horizon,
+        },
+        other => other,
+    };
+    ExperimentConfig {
+        name: "deep".into(),
+        m,
+        workload: WorkloadSpec::DeepModel {
+            preset: ctx.preset().into(),
+            sigma: 0.3,
+            t_comp: 0.0, // §4.2: ModelSize / AverageBandwidth
+        },
+        budget: BudgetParams::PerDirection { t_comm },
+        up_policy: policy.clone(),
+        down_policy: policy,
+        optimizer: OptimizerSpec { gamma: 0.01, layer_weights: vec![] },
+        uplink: scaled(21),
+        downlink: scaled(1021),
+        alpha: 1.0,
+        rounds: if ctx.fast { 30 } else { 200 },
+        prior_bps: 0.0,
+        warm_start: true,
+        single_layer: false,
+        // Conservative budget: the trailing-window estimate overruns
+        // the deadline on falling bandwidth without margin (DC2-style).
+        budget_safety: 0.8,
+        seed: 21,
+    }
+}
+
+fn run(ctx: &ReportCtx, cfg: &ExperimentConfig, eval_batches: usize) -> anyhow::Result<ExperimentResult> {
+    run_experiment(cfg, Some(&ctx.artifacts), eval_batches)
+}
+
+/// Mean uplink bits/round/worker — used to hand EF21 the *same* total
+/// communication as Kimad (the §4.2 baseline construction).
+fn mean_up_bits(res: &ExperimentResult) -> f64 {
+    let mut total = 0u64;
+    let mut n = 0u64;
+    for r in &res.records {
+        for w in &r.workers {
+            total += w.up_bits;
+            n += 1;
+        }
+    }
+    total as f64 / n.max(1) as f64
+}
+
+fn matched_ef21_ratio(res: &ExperimentResult, n_params: usize) -> f64 {
+    (mean_up_bits(res) / (n_params as f64 * 64.0)).clamp(0.0, 1.0)
+}
+
+// ---------------------------------------------------------------------
+// Fig. 7 — communication size over time, per T_comm.
+// ---------------------------------------------------------------------
+
+pub fn fig7(ctx: &ReportCtx) -> anyhow::Result<String> {
+    let t_comms = [1.0, 0.5, 0.2, 0.1];
+    let mut set = SeriesSet::default();
+    let mut md = String::from("## fig7 (communication adaptivity, M=4)\n\n");
+    md.push_str("| T_comm | mean up Mbit/round | max (uncompressed) Mbit | rounds at cap |\n|---|---|---|---|\n");
+    #[allow(unused_assignments)]
+    let mut max_bits = 0.0f64;
+    for &t_comm in &t_comms {
+        let cfg = base_config(ctx, CompressPolicy::KimadUniform, t_comm, 4);
+        let res = run(ctx, &cfg, 0)?;
+        max_bits = res.n_params as f64 * 32.0;
+        // Worker 0's sent bits against virtual time (the paper plots one
+        // worker); plus the ground-truth bandwidth for the dashed curve.
+        let mut s = Series::new(format!("kimad_t{t_comm}"));
+        let mut bw = Series::new(format!("bandwidth_t{t_comm}"));
+        let mut at_cap = 0usize;
+        for r in &res.records {
+            let w = &r.workers[0];
+            s.push(r.t_start, w.up_bits as f64);
+            bw.push(r.t_start, w.true_up_bps);
+            if (w.up_bits as f64) >= max_bits {
+                at_cap += 1;
+            }
+        }
+        md.push_str(&format!(
+            "| {t_comm}s | {:.2} | {:.2} | {}/{} |\n",
+            mean_up_bits(&res) / 1e6,
+            max_bits / 1e6,
+            at_cap,
+            res.records.len()
+        ));
+        set.push(s);
+        set.push(bw);
+    }
+    let csv = ctx.csv_path("fig7_comm.csv");
+    set.write_csv(&csv, "time_s", "bits_or_bps")?;
+    md.push_str(&format!(
+        "\nPlateau check: larger T_comm ⇒ more rounds at the uncompressed cap.\nCSV: {}\n",
+        csv.display()
+    ));
+    Ok(md)
+}
+
+// ---------------------------------------------------------------------
+// Fig. 8 — loss vs time, Kimad vs comm-matched EF21.
+// ---------------------------------------------------------------------
+
+pub fn fig8(ctx: &ReportCtx) -> anyhow::Result<String> {
+    let kimad_cfg = base_config(ctx, CompressPolicy::KimadUniform, 1.0, 4);
+    let kimad = run(ctx, &kimad_cfg, 0)?;
+    let ratio = matched_ef21_ratio(&kimad, kimad.n_params);
+    let mut ef_cfg = base_config(ctx, CompressPolicy::FixedRatio { ratio }, 1.0, 4);
+    ef_cfg.rounds = kimad_cfg.rounds;
+    let ef = run(ctx, &ef_cfg, 0)?;
+
+    let mut set = SeriesSet::default();
+    for (name, res) in [("Kimad", &kimad), ("EF21", &ef)] {
+        let mut s = Series::new(name);
+        for r in &res.records {
+            s.push(r.t_end(), r.loss);
+        }
+        set.push(s);
+    }
+    let csv = ctx.csv_path("fig8_loss.csv");
+    set.write_csv(&csv, "time_s", "loss")?;
+
+    let k_end = kimad.total_time;
+    let e_end = ef.total_time;
+    let mut md = String::from("## fig8 (loss curve, M=4, T_comm=1.0s)\n\n");
+    md.push_str(&format!(
+        "| method | rounds | total time | final loss |\n|---|---|---|---|\n\
+         | Kimad | {} | {k_end:.1}s | {:.4} |\n| EF21 (ratio {ratio:.3}) | {} | {e_end:.1}s | {:.4} |\n",
+        kimad.records.len(),
+        kimad.records.last().map(|r| r.loss).unwrap_or(f64::NAN),
+        ef.records.len(),
+        ef.records.last().map(|r| r.loss).unwrap_or(f64::NAN),
+    ));
+    md.push_str(&format!(
+        "\nShape: same rounds & comm volume, Kimad finishes in {:.0}% of EF21's time.\nCSV: {}\n",
+        100.0 * k_end / e_end,
+        csv.display()
+    ));
+    Ok(md)
+}
+
+// ---------------------------------------------------------------------
+// Fig. 9 — compression error: Kimad vs Kimad+ vs optimal.
+// ---------------------------------------------------------------------
+
+pub fn fig9(ctx: &ReportCtx) -> anyhow::Result<String> {
+    let policies = [
+        ("Kimad", CompressPolicy::KimadUniform),
+        (
+            "Kimad+",
+            CompressPolicy::KimadPlus { discretization: 1000, ratios: vec![] },
+        ),
+        ("Optimal", CompressPolicy::WholeModelTopK),
+    ];
+    let mut set = SeriesSet::default();
+    let mut means = Vec::new();
+    for (name, policy) in policies {
+        let cfg = base_config(ctx, policy, 1.0, 4);
+        let res = run(ctx, &cfg, 0)?;
+        let mut s = Series::new(name);
+        for r in &res.records {
+            s.push(r.t_start, r.workers[0].compression_error);
+        }
+        means.push((name, s.mean_y().unwrap_or(f64::NAN)));
+        set.push(s);
+    }
+    let csv = ctx.csv_path("fig9_error.csv");
+    set.write_csv(&csv, "time_s", "compression_error")?;
+
+    let mut md = String::from("## fig9 (compression error at worker 0, T_comm=1.0s)\n\n");
+    md.push_str("| policy | mean ||u − û||² |\n|---|---|\n");
+    for (name, m) in &means {
+        md.push_str(&format!("| {name} | {m:.4e} |\n"));
+    }
+    md.push_str(&format!(
+        "\nExpected order: Optimal <= Kimad+ <= Kimad.\nCSV: {}\n",
+        csv.display()
+    ));
+    Ok(md)
+}
+
+// ---------------------------------------------------------------------
+// Table 1 — average step time across T_comm, Kimad vs matched EF21.
+// ---------------------------------------------------------------------
+
+pub fn table1(ctx: &ReportCtx) -> anyhow::Result<String> {
+    let t_comms = [1.0, 0.5, 0.2, 0.1];
+    let mut ef_row = Vec::new();
+    let mut kimad_row = Vec::new();
+    for &t_comm in &t_comms {
+        let kcfg = base_config(ctx, CompressPolicy::KimadUniform, t_comm, 4);
+        let kres = run(ctx, &kcfg, 0)?;
+        let ratio = matched_ef21_ratio(&kres, kres.n_params);
+        let ecfg = base_config(ctx, CompressPolicy::FixedRatio { ratio }, t_comm, 4);
+        let eres = run(ctx, &ecfg, 0)?;
+        kimad_row.push(kres.mean_step_time());
+        ef_row.push(eres.mean_step_time());
+    }
+    let mut table = Table::new(
+        "table1 (average step time, M=4)",
+        &["1.0s", "0.5s", "0.2s", "0.1s"],
+    );
+    table.push_row("EF21", ef_row.clone());
+    table.push_row("Kimad", kimad_row.clone());
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    std::fs::write(ctx.csv_path("table1_steptime.csv"), table.to_csv())?;
+
+    let mut md = table.render("s", 3);
+    let saving: f64 = ef_row
+        .iter()
+        .zip(&kimad_row)
+        .map(|(e, k)| 1.0 - k / e)
+        .sum::<f64>()
+        / ef_row.len() as f64;
+    md.push_str(&format!(
+        "\nMean saving: {:.1}% (paper reports ≈20%).\n",
+        100.0 * saving
+    ));
+    Ok(md)
+}
+
+// ---------------------------------------------------------------------
+// Table 2 — Top-5 accuracy across M.
+// ---------------------------------------------------------------------
+
+pub fn table2(ctx: &ReportCtx) -> anyhow::Result<String> {
+    let ms = [2usize, 4, 8, 16];
+    let eval_batches = if ctx.fast { 2 } else { 8 };
+    let mut ef_row = Vec::new();
+    let mut kimad_row = Vec::new();
+    for &m in &ms {
+        let kcfg = base_config(ctx, CompressPolicy::KimadUniform, 1.0, m);
+        let kres = run(ctx, &kcfg, eval_batches)?;
+        let ratio = matched_ef21_ratio(&kres, kres.n_params);
+        let ecfg = base_config(ctx, CompressPolicy::FixedRatio { ratio }, 1.0, m);
+        let eres = run(ctx, &ecfg, eval_batches)?;
+        kimad_row.push(kres.eval.map(|e| e.top5 * 100.0).unwrap_or(f64::NAN));
+        ef_row.push(eres.eval.map(|e| e.top5 * 100.0).unwrap_or(f64::NAN));
+    }
+    let mut table = Table::new(
+        "table2 (Top-5 accuracy %, T_comm=1s)",
+        &["2", "4", "8", "16"],
+    );
+    table.push_row("EF21", ef_row);
+    table.push_row("Kimad", kimad_row);
+    std::fs::create_dir_all(&ctx.out_dir)?;
+    std::fs::write(ctx.csv_path("table2_scaling.csv"), table.to_csv())?;
+
+    let mut md = table.render("%", 2);
+    md.push_str("\nShape: comparable accuracy across M for both methods.\n");
+    Ok(md)
+}

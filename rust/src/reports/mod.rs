@@ -1,0 +1,75 @@
+//! Report generators: one function per paper figure/table.
+//!
+//! Each regenerates the corresponding evaluation artifact (same rows /
+//! series the paper shows) from the simulator, writes CSVs under the
+//! output directory, and returns a markdown summary. The criterion
+//! benches and the `kimad report` CLI both call these (DESIGN.md §5).
+
+pub mod ablations;
+pub mod deep;
+pub mod fig1;
+pub mod synthetic;
+
+use std::path::PathBuf;
+
+/// Shared context for report generation.
+#[derive(Debug, Clone)]
+pub struct ReportCtx {
+    /// artifacts/ directory (deep-model workloads).
+    pub artifacts: String,
+    /// Where CSVs land.
+    pub out_dir: PathBuf,
+    /// Fast mode: fewer rounds / smaller presets (used by benches and
+    /// CI); full mode reproduces the paper-scale runs.
+    pub fast: bool,
+}
+
+impl Default for ReportCtx {
+    fn default() -> Self {
+        Self { artifacts: "artifacts".into(), out_dir: "reports".into(), fast: false }
+    }
+}
+
+impl ReportCtx {
+    pub fn fast() -> Self {
+        Self { fast: true, ..Default::default() }
+    }
+
+    /// Deep-model preset: the benches use `small`, full runs `e2e`.
+    pub fn preset(&self) -> &'static str {
+        if self.fast {
+            "small"
+        } else {
+            "e2e"
+        }
+    }
+
+    pub fn csv_path(&self, name: &str) -> PathBuf {
+        self.out_dir.join(name)
+    }
+}
+
+/// Dispatch by report id ("fig1", "fig3".."fig9", "table1", "table2").
+pub fn generate(id: &str, ctx: &ReportCtx) -> anyhow::Result<String> {
+    match id {
+        "fig1" => fig1::generate(ctx),
+        "fig3" => synthetic::generate_one(ctx, synthetic::Scenario::XSmall),
+        "fig4" => synthetic::generate_one(ctx, synthetic::Scenario::Small),
+        "fig5" => synthetic::generate_one(ctx, synthetic::Scenario::Oscillation),
+        "fig6" => synthetic::generate_one(ctx, synthetic::Scenario::High),
+        "fig3to6" => synthetic::generate_all(ctx),
+        "fig7" => deep::fig7(ctx),
+        "fig8" => deep::fig8(ctx),
+        "fig9" => deep::fig9(ctx),
+        "table1" => deep::table1(ctx),
+        "table2" => deep::table2(ctx),
+        "ablations" => ablations::generate(ctx),
+        other => anyhow::bail!(
+            "unknown report '{other}' (try fig1, fig3..fig9, fig3to6, table1, table2, ablations)"
+        ),
+    }
+}
+
+pub const ALL_REPORTS: &[&str] = &[
+    "fig1", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "table1", "table2",
+];

@@ -1,0 +1,190 @@
+//! Artifact store: the manifest written by `python/compile/aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::model::ModelLayout;
+use crate::util::json::Value;
+
+#[derive(Debug, Clone)]
+pub struct ModelArtifact {
+    pub train_hlo: String,
+    pub eval_hlo: String,
+    pub layout: String,
+    pub n_params: usize,
+    pub params: Option<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct KernelArtifact {
+    pub hlo: String,
+    pub d: usize,
+}
+
+#[derive(Debug, Clone)]
+struct Manifest {
+    seed: u64,
+    models: BTreeMap<String, ModelArtifact>,
+    kernels: BTreeMap<String, KernelArtifact>,
+}
+
+impl Manifest {
+    fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let mut models = BTreeMap::new();
+        for (name, m) in v.get("models")?.as_obj()? {
+            models.insert(
+                name.clone(),
+                ModelArtifact {
+                    train_hlo: m.get("train_hlo")?.as_str()?.to_string(),
+                    eval_hlo: m.get("eval_hlo")?.as_str()?.to_string(),
+                    layout: m.get("layout")?.as_str()?.to_string(),
+                    n_params: m.get("n_params")?.as_usize()?,
+                    params: m
+                        .opt("params")
+                        .and_then(|p| p.as_str().ok())
+                        .map(|s| s.to_string()),
+                },
+            );
+        }
+        let mut kernels = BTreeMap::new();
+        for (name, k) in v.get("kernels")?.as_obj()? {
+            kernels.insert(
+                name.clone(),
+                KernelArtifact {
+                    hlo: k.get("hlo")?.as_str()?.to_string(),
+                    d: k.get("d")?.as_usize()?,
+                },
+            );
+        }
+        Ok(Self { seed: v.get("seed")?.as_u64()?, models, kernels })
+    }
+}
+
+/// The artifacts/ directory, parsed.
+#[derive(Debug)]
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl ArtifactStore {
+    pub fn open(dir: impl Into<PathBuf>) -> anyhow::Result<Self> {
+        let dir = dir.into();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "reading {} failed ({e}); run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let manifest = Manifest::from_json(&Value::parse(&text)?)?;
+        Ok(Self { dir, manifest })
+    }
+
+    /// Default location: ./artifacts or $KIMAD_ARTIFACTS.
+    pub fn open_default() -> anyhow::Result<Self> {
+        let dir = std::env::var("KIMAD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::open(dir)
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.manifest.seed
+    }
+
+    pub fn model(&self, preset: &str) -> anyhow::Result<&ModelArtifact> {
+        self.manifest
+            .models
+            .get(preset)
+            .ok_or_else(|| anyhow::anyhow!("preset '{preset}' not in manifest"))
+    }
+
+    pub fn model_presets(&self) -> Vec<&str> {
+        self.manifest.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn kernel(&self, name: &str) -> anyhow::Result<&KernelArtifact> {
+        self.manifest
+            .kernels
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("kernel '{name}' not in manifest"))
+    }
+
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.dir.join(rel)
+    }
+
+    pub fn layout(&self, preset: &str) -> anyhow::Result<ModelLayout> {
+        let m = self.model(preset)?;
+        ModelLayout::from_json_file(&self.path(&m.layout))
+    }
+
+    /// The seeded initial parameters (f32 LE), when exported.
+    pub fn initial_params(&self, preset: &str) -> anyhow::Result<Vec<f32>> {
+        let m = self.model(preset)?;
+        let rel = m
+            .params
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("preset '{preset}' has no params.bin"))?;
+        read_f32_le(&self.path(rel))
+    }
+}
+
+/// Read a little-endian f32 binary file.
+pub fn read_f32_le(path: &Path) -> anyhow::Result<Vec<f32>> {
+    let bytes = std::fs::read(path)?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "file size not a multiple of 4");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("kimad-artifact-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = tmpdir("parse");
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"seed": 21, "models": {"tiny": {"train_hlo": "a", "eval_hlo": "b",
+                "layout": "c", "n_params": 10, "params": "d"}},
+               "kernels": {"k": {"hlo": "e", "d": 4096}}}"#,
+        )
+        .unwrap();
+        let store = ArtifactStore::open(&dir).unwrap();
+        assert_eq!(store.seed(), 21);
+        assert_eq!(store.model("tiny").unwrap().n_params, 10);
+        assert_eq!(store.kernel("k").unwrap().d, 4096);
+        assert!(store.model("nope").is_err());
+        assert_eq!(store.model_presets(), vec!["tiny"]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_manifest_hints_make() {
+        let dir = tmpdir("missing");
+        let err = ArtifactStore::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn f32_le_roundtrip() {
+        let dir = tmpdir("f32");
+        let p = dir.join("x.bin");
+        let vals = [1.0f32, -2.5, 3.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&p, bytes).unwrap();
+        assert_eq!(read_f32_le(&p).unwrap(), vals.to_vec());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

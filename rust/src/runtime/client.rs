@@ -1,0 +1,97 @@
+//! Thin, typed wrappers over the `xla` crate's PJRT client.
+
+use std::path::Path;
+
+use crate::model::ModelLayout;
+
+/// One PJRT client per process (CPU plugin).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> anyhow::Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> anyhow::Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(wrap)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(wrap)?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled executable returning a single tuple (return_tuple=True).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; unwrap the tuple output.
+    pub fn run(&self, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs).map_err(wrap)?;
+        let lit = result[0][0].to_literal_sync().map_err(wrap)?;
+        lit.to_tuple().map_err(wrap)
+    }
+}
+
+/// Build a rank-N f32 literal from a flat slice.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
+    let numel: usize = shape.iter().product::<usize>().max(1);
+    anyhow::ensure!(numel == data.len(), "literal shape/product mismatch");
+    let dims: Vec<i64> = shape.iter().map(|&s| s as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).map_err(wrap)
+}
+
+/// Build a rank-1 i32 literal.
+pub fn literal_i32(data: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Marshal a flat parameter vector into per-slot literals in wire order.
+pub fn params_to_literals(flat: &[f32], layout: &ModelLayout) -> anyhow::Result<Vec<xla::Literal>> {
+    anyhow::ensure!(flat.len() == layout.n_params, "flat params dim mismatch");
+    layout
+        .params
+        .iter()
+        .map(|p| literal_f32(&flat[p.offset..p.offset + p.size], &p.shape))
+        .collect()
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+    }
+
+    #[test]
+    fn literal_shape_checked() {
+        assert!(literal_f32(&[1.0; 3], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn params_marshalling() {
+        let layout = ModelLayout::synthetic(&[2, 3]);
+        let flat = [1.0f32, 2.0, 3.0, 4.0, 5.0];
+        let lits = params_to_literals(&flat, &layout).unwrap();
+        assert_eq!(lits.len(), 2);
+        assert_eq!(lits[1].to_vec::<f32>().unwrap(), vec![3.0, 4.0, 5.0]);
+    }
+}

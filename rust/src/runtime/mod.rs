@@ -1,0 +1,18 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them on the
+//! L3 hot path — rust-only at runtime, Python only at build time.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §2).
+//!
+//!   artifact.rs   — manifest/layout/params loading
+//!   client.rs     — PJRT client + executable wrappers
+//!   model_exec.rs — the deep-model GradientSource over the runtime
+
+pub mod artifact;
+pub mod client;
+pub mod model_exec;
+
+pub use artifact::{ArtifactStore, KernelArtifact, ModelArtifact};
+pub use client::{Executable, Runtime};
+pub use model_exec::{EvalMetrics, PjrtModelSource};

@@ -1,0 +1,131 @@
+//! The deep-model gradient source: `train_step`/`eval_step` HLO
+//! executables driven from the coordinator (Python never runs here).
+
+use crate::coordinator::GradientSource;
+use crate::data::SyntheticDataset;
+use crate::model::ModelLayout;
+
+use super::artifact::ArtifactStore;
+use super::client::{literal_f32, literal_i32, params_to_literals, Executable, Runtime};
+
+/// Evaluation metrics over a held-out set (Table 2's Top-5 accuracy).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalMetrics {
+    pub loss: f64,
+    pub top1: f64,
+    pub top5: f64,
+    pub n: usize,
+}
+
+/// GradientSource backed by the AOT-compiled JAX model.
+pub struct PjrtModelSource {
+    pub layout: ModelLayout,
+    pub dataset: SyntheticDataset,
+    train: Executable,
+    eval: Executable,
+    /// Virtual computation time per round (§4.2 sets
+    /// `T_comp = ModelSize / AverageBandwidth`).
+    pub t_comp: f64,
+    /// Scratch for the incoming grads.
+    n_exec: u64,
+}
+
+impl PjrtModelSource {
+    /// Load a preset from the artifact store onto a PJRT runtime.
+    pub fn load(
+        rt: &Runtime,
+        store: &ArtifactStore,
+        preset: &str,
+        sigma: f32,
+        t_comp: f64,
+    ) -> anyhow::Result<Self> {
+        let art = store.model(preset)?;
+        let layout = store.layout(preset)?;
+        let train = rt.load_hlo_text(&store.path(&art.train_hlo))?;
+        let eval = rt.load_hlo_text(&store.path(&art.eval_hlo))?;
+        let dataset = SyntheticDataset::new(
+            layout.seq,
+            layout.d_in,
+            layout.n_classes,
+            sigma,
+            store.seed(),
+        );
+        Ok(Self { layout, dataset, train, eval, t_comp, n_exec: 0 })
+    }
+
+    /// Number of train/eval executions so far (perf accounting).
+    pub fn executions(&self) -> u64 {
+        self.n_exec
+    }
+
+    /// Evaluate `params` on `n_batches` held-out batches.
+    pub fn evaluate(&mut self, params: &[f32], n_batches: usize) -> anyhow::Result<EvalMetrics> {
+        let b = self.layout.batch;
+        let mut loss = 0.0;
+        let mut top1 = 0.0;
+        let mut top5 = 0.0;
+        for batch in self.dataset.eval_batches(b, n_batches) {
+            let mut inputs = params_to_literals(params, &self.layout)?;
+            inputs.push(literal_f32(
+                &batch.x,
+                &[b, self.layout.seq, self.layout.d_in],
+            )?);
+            inputs.push(literal_i32(&batch.y));
+            let out = self.eval.run(&inputs)?;
+            anyhow::ensure!(out.len() == 3, "eval_step must return 3 outputs");
+            self.n_exec += 1;
+            loss += out[0].to_vec::<f32>()?[0] as f64;
+            top1 += out[1].to_vec::<f32>()?[0] as f64;
+            top5 += out[2].to_vec::<f32>()?[0] as f64;
+        }
+        let n = n_batches * b;
+        Ok(EvalMetrics {
+            loss: loss / n_batches.max(1) as f64,
+            top1: top1 / n as f64,
+            top5: top5 / n as f64,
+            n,
+        })
+    }
+}
+
+impl GradientSource for PjrtModelSource {
+    fn dim(&self) -> usize {
+        self.layout.n_params
+    }
+
+    fn update(
+        &mut self,
+        worker: usize,
+        step: u64,
+        x_hat: &[f32],
+        out: &mut [f32],
+    ) -> anyhow::Result<f64> {
+        let b = self.layout.batch;
+        let batch = self.dataset.batch(b, worker, step);
+        let mut inputs = params_to_literals(x_hat, &self.layout)?;
+        inputs.push(literal_f32(
+            &batch.x,
+            &[b, self.layout.seq, self.layout.d_in],
+        )?);
+        inputs.push(literal_i32(&batch.y));
+        let outputs = self.train.run(&inputs)?;
+        anyhow::ensure!(
+            outputs.len() == 1 + self.layout.params.len(),
+            "train_step returned {} outputs, expected {}",
+            outputs.len(),
+            1 + self.layout.params.len()
+        );
+        self.n_exec += 1;
+        let loss = outputs[0].to_vec::<f32>()?[0] as f64;
+        for (slot, lit) in self.layout.params.iter().zip(&outputs[1..]) {
+            let g = lit.to_vec::<f32>()?;
+            anyhow::ensure!(g.len() == slot.size, "grad slot {} size mismatch", slot.name);
+            out[slot.offset..slot.offset + slot.size].copy_from_slice(&g);
+        }
+        Ok(loss)
+    }
+
+    fn t_comp(&self) -> f64 {
+        self.t_comp
+    }
+}

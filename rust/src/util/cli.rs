@@ -1,0 +1,108 @@
+//! Tiny CLI argument parser: `--flag`, `--key value`, positionals.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse, treating names in `flag_names` as boolean flags (no value).
+    pub fn parse(argv: &[String], flag_names: &[&str]) -> anyhow::Result<Self> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    i += 1;
+                    let v = argv
+                        .get(i)
+                        .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?;
+                    out.options.insert(name.to_string(), v.clone());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name}={v}: {e}")),
+        }
+    }
+
+    pub fn opt_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name}={v}: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn mixed_parsing() {
+        let a = Args::parse(
+            &sv(&["report", "--out", "dir", "--fast", "--k=3", "fig8"]),
+            &["fast"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["report", "fig8"]);
+        assert_eq!(a.opt("out"), Some("dir"));
+        assert_eq!(a.opt("k"), Some("3"));
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+    }
+
+    #[test]
+    fn typed_options() {
+        let a = Args::parse(&sv(&["--x", "2.5", "--n", "7"]), &[]).unwrap();
+        assert_eq!(a.opt_f64("x", 0.0).unwrap(), 2.5);
+        assert_eq!(a.opt_usize("n", 0).unwrap(), 7);
+        assert_eq!(a.opt_f64("missing", 1.5).unwrap(), 1.5);
+        assert!(Args::parse(&sv(&["--x", "abc"]), &[])
+            .unwrap()
+            .opt_f64("x", 0.0)
+            .is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(&sv(&["--out"]), &[]).is_err());
+    }
+}

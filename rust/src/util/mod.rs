@@ -1,0 +1,9 @@
+//! In-repo substrates (the build is fully offline, so these replace the
+//! usual crates): deterministic RNG, JSON, CLI parsing, a micro-bench
+//! harness, and a property-testing loop.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,48 @@
+//! Property-testing loop (proptest is unavailable offline): run a
+//! closure over N seeded random cases; on failure report the seed so
+//! the case replays exactly.
+
+use super::rng::Rng;
+
+/// Run `f(case_rng)` for `cases` deterministic random cases derived
+/// from `seed`. Panics with the failing case index + derived seed.
+pub fn check<F: FnMut(&mut Rng)>(name: &str, seed: u64, cases: usize, mut f: F) {
+    let base = Rng::seed_from_u64(seed);
+    for case in 0..cases {
+        let mut rng = base.derive(case as u64);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} \
+                 (replay: seed={seed}, derive({case})): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", 1, 50, |rng| {
+            let a = rng.range_f64(-10.0, 10.0);
+            let b = rng.range_f64(-10.0, 10.0);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 2, 10, |_| panic!("boom"));
+    }
+}

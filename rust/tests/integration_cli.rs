@@ -1,0 +1,128 @@
+//! CLI integration: drive the `kimad` binary end to end.
+
+use std::process::Command;
+
+fn kimad() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_kimad"))
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let out = kimad().arg("--help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["train", "report", "synthetic", "trace", "presets"] {
+        assert!(text.contains(cmd), "help missing '{cmd}'");
+    }
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let out = kimad().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown subcommand"));
+}
+
+#[test]
+fn trace_emits_csv() {
+    let out = kimad()
+        .args([
+            "trace",
+            "--spec",
+            r#"{"kind": "sin_squared", "eta": 100.0, "theta": 0.5, "delta": 10.0, "phase": 0.0}"#,
+            "--seconds",
+            "5",
+            "--step",
+            "1",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    let lines: Vec<&str> = text.trim().lines().collect();
+    assert_eq!(lines[0], "time_s,bps");
+    assert_eq!(lines.len(), 7); // header + t=0..5
+    let first_val: f64 = lines[1].split(',').nth(1).unwrap().parse().unwrap();
+    assert!((first_val - 10.0).abs() < 1e-6); // sin(0)=0 -> delta
+}
+
+#[test]
+fn trace_rejects_bad_spec() {
+    let out = kimad()
+        .args(["trace", "--spec", r#"{"kind": "nope"}"#])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn train_runs_quadratic_config_and_writes_csv() {
+    let dir = std::env::temp_dir().join(format!("kimad-cli-test-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("exp.json");
+    std::fs::write(
+        &cfg_path,
+        r#"{
+            "name": "cli-test", "m": 2, "rounds": 20, "seed": 21,
+            "workload": {"kind": "quadratic", "d": 30, "n_layers": 3, "t_comp": 0.1},
+            "budget": {"mode": "per_direction", "t_comm": 0.9},
+            "up_policy": {"kind": "kimad_uniform"},
+            "down_policy": {"kind": "kimad_uniform"},
+            "optimizer": {"gamma": 0.05},
+            "uplink": {"kind": "sin_squared", "eta": 512.0, "theta": 0.1, "delta": 64.0},
+            "downlink": {"kind": "constant", "bps": 1e7}
+        }"#,
+    )
+    .unwrap();
+    let csv_path = dir.join("out.csv");
+    let out = kimad()
+        .args([
+            "train",
+            "--config",
+            cfg_path.to_str().unwrap(),
+            "--csv",
+            csv_path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("rounds=20"), "{text}");
+    let csv = std::fs::read_to_string(&csv_path).unwrap();
+    assert!(csv.starts_with("series,time_s,value"));
+    assert!(csv.lines().count() > 40); // 3 series x 20 rounds + header
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn report_fig1_writes_csv() {
+    let dir = std::env::temp_dir().join(format!("kimad-cli-fig1-{}", std::process::id()));
+    let out = kimad()
+        .args(["report", "fig1", "--fast", "--out-dir", dir.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("fig1"));
+    assert!(dir.join("fig1_bandwidth.csv").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn report_unknown_id_fails() {
+    let out = kimad().args(["report", "fig99"]).output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn presets_lists_models_when_artifacts_exist() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let out = kimad().args(["presets"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("tiny"), "{text}");
+    assert!(text.contains("params"));
+}

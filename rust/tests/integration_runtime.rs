@@ -1,0 +1,154 @@
+//! Runtime integration: the rust coordinator driving the AOT-compiled
+//! JAX/Pallas artifacts through PJRT. Requires `make artifacts`; every
+//! test skips (with a message) when artifacts/ is absent so `cargo
+//! test` stays green on a fresh checkout.
+
+use kimad::coordinator::GradientSource;
+use kimad::kimad::ErrorCurve;
+use kimad::runtime::{ArtifactStore, PjrtModelSource, Runtime};
+use kimad::util::rng::Rng;
+
+fn store() -> Option<ArtifactStore> {
+    match ArtifactStore::open("artifacts") {
+        Ok(s) => Some(s),
+        Err(_) => {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn train_step_loss_and_grads() {
+    let Some(store) = store() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut src = PjrtModelSource::load(&rt, &store, "tiny", 0.3, 1.0).unwrap();
+    let layout = store.layout("tiny").unwrap();
+    let params = store.initial_params("tiny").unwrap();
+    let mut grads = vec![0.0f32; layout.n_params];
+    let loss = src.update(0, 0, &params, &mut grads).unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+    // At a random init the cross-entropy sits near ln(10).
+    assert!((loss - (10f64).ln()).abs() < 1.5, "loss={loss}");
+    let norm: f64 = grads.iter().map(|&g| (g as f64).powi(2)).sum();
+    assert!(norm > 0.0 && norm.is_finite());
+}
+
+#[test]
+fn sgd_on_pjrt_gradients_reduces_loss() {
+    let Some(store) = store() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut src = PjrtModelSource::load(&rt, &store, "tiny", 0.3, 1.0).unwrap();
+    let layout = store.layout("tiny").unwrap();
+    let mut params = store.initial_params("tiny").unwrap();
+    let mut grads = vec![0.0f32; layout.n_params];
+    let first = src.update(0, 0, &params, &mut grads).unwrap();
+    let mut last = first;
+    for step in 0..40 {
+        last = src.update(0, step, &params, &mut grads).unwrap();
+        for (p, &g) in params.iter_mut().zip(&grads) {
+            *p -= 0.05 * g;
+        }
+    }
+    assert!(
+        last < first - 0.15,
+        "loss did not drop: {first:.4} -> {last:.4}"
+    );
+}
+
+#[test]
+fn eval_step_counts_consistent() {
+    let Some(store) = store() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let mut src = PjrtModelSource::load(&rt, &store, "tiny", 0.3, 1.0).unwrap();
+    let params = store.initial_params("tiny").unwrap();
+    let e = src.evaluate(&params, 2).unwrap();
+    assert!(e.loss.is_finite());
+    assert!(e.top1 >= 0.0 && e.top1 <= 1.0);
+    assert!(e.top5 >= e.top1 && e.top5 <= 1.0);
+    assert_eq!(e.n, 2 * store.layout("tiny").unwrap().batch);
+    // Evaluation is deterministic.
+    let e2 = src.evaluate(&params, 2).unwrap();
+    assert_eq!(e.loss, e2.loss);
+    assert_eq!(e.top1, e2.top1);
+}
+
+#[test]
+fn pallas_error_curve_kernel_matches_rust() {
+    // The L1 Pallas kernel (compress_error) and the rust-native
+    // ErrorCurve must compute the same eps(K) — this pins the two
+    // stacks together numerically.
+    let Some(store) = store() else { return };
+    let Ok(kernel) = store.kernel("compress_error_d4096") else {
+        eprintln!("skipping: compress_error kernel not exported");
+        return;
+    };
+    let d = kernel.d;
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo_text(&store.path(&kernel.hlo)).unwrap();
+
+    let mut rng = Rng::seed_from_u64(42);
+    let u: Vec<f32> = (0..d).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+    let lit = kimad::runtime::client::literal_f32(&u, &[d]).unwrap();
+    let out = exe.run(&[lit]).unwrap();
+    assert_eq!(out.len(), 1);
+    let kernel_curve = out[0].to_vec::<f32>().unwrap();
+    assert_eq!(kernel_curve.len(), d + 1);
+
+    let rust_curve = ErrorCurve::build(&u);
+    for k in (0..=d).step_by(97) {
+        let a = kernel_curve[k] as f64;
+        let b = rust_curve.at(k);
+        assert!(
+            (a - b).abs() <= 1e-3 * b.abs().max(1.0),
+            "eps({k}): pallas {a} vs rust {b}"
+        );
+    }
+}
+
+#[test]
+fn pallas_ef21_kernel_matches_rust() {
+    let Some(store) = store() else { return };
+    let Ok(kernel) = store.kernel("ef21_apply_d4096") else {
+        eprintln!("skipping: ef21_apply kernel not exported");
+        return;
+    };
+    let d = kernel.d;
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load_hlo_text(&store.path(&kernel.hlo)).unwrap();
+
+    let mut rng = Rng::seed_from_u64(7);
+    let u: Vec<f32> = (0..d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let uh: Vec<f32> = (0..d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let mask: Vec<f32> = (0..d)
+        .map(|_| if rng.next_f64() < 0.3 { 1.0 } else { 0.0 })
+        .collect();
+
+    let out = exe
+        .run(&[
+            kimad::runtime::client::literal_f32(&u, &[d]).unwrap(),
+            kimad::runtime::client::literal_f32(&uh, &[d]).unwrap(),
+            kimad::runtime::client::literal_f32(&mask, &[d]).unwrap(),
+        ])
+        .unwrap();
+    let got = out[0].to_vec::<f32>().unwrap();
+    for i in (0..d).step_by(131) {
+        let want = uh[i] + mask[i] * (u[i] - uh[i]);
+        assert!((got[i] - want).abs() < 1e-6, "i={i}: {} vs {want}", got[i]);
+    }
+}
+
+#[test]
+fn full_deep_experiment_smoke() {
+    // The fig8-style pipeline end to end (tiny rounds count).
+    let Some(_store) = store() else { return };
+    use kimad::kimad::CompressPolicy;
+    use kimad::reports::{deep, ReportCtx};
+    let ctx = ReportCtx::fast();
+    let mut cfg = deep::base_config(&ctx, CompressPolicy::KimadUniform, 1.0, 2);
+    cfg.rounds = 5;
+    let res = kimad::driver::run_experiment(&cfg, Some("artifacts"), 1).unwrap();
+    assert_eq!(res.records.len(), 5);
+    assert!(res.records.iter().all(|r| r.loss.is_finite()));
+    assert!(res.eval.unwrap().top5 >= 0.0);
+}

@@ -1,0 +1,167 @@
+//! End-to-end simulator integration: full experiments through the
+//! driver, across policies, worker counts and bandwidth patterns.
+
+use kimad::bandwidth::TraceSpec;
+use kimad::config::{ExperimentConfig, OptimizerSpec, WorkloadSpec};
+use kimad::driver::run_experiment;
+use kimad::kimad::{BudgetParams, CompressPolicy};
+
+fn quad_cfg(m: usize, policy: CompressPolicy, rounds: u64) -> ExperimentConfig {
+    ExperimentConfig {
+        name: "it".into(),
+        m,
+        workload: WorkloadSpec::Quadratic { d: 30, n_layers: 3, t_comp: 0.1 },
+        budget: BudgetParams::PerDirection { t_comm: 0.9 },
+        up_policy: policy.clone(),
+        down_policy: policy,
+        optimizer: OptimizerSpec { gamma: 0.03, layer_weights: vec![] },
+        uplink: TraceSpec::SinSquared { eta: 512.0, theta: 0.1, delta: 64.0, phase: 0.0 },
+        downlink: TraceSpec::Constant { bps: 1e7 },
+        alpha: 1.0,
+        rounds,
+        prior_bps: 0.0,
+        warm_start: true,
+        single_layer: false,
+        budget_safety: 1.0,
+        seed: 21,
+    }
+}
+
+#[test]
+fn all_policies_converge_on_quadratic() {
+    for policy in [
+        CompressPolicy::KimadUniform,
+        CompressPolicy::KimadPlus { discretization: 300, ratios: vec![] },
+        CompressPolicy::WholeModelTopK,
+        CompressPolicy::FixedRatio { ratio: 0.3 },
+    ] {
+        let res = run_experiment(&quad_cfg(2, policy.clone(), 250), None, 0).unwrap();
+        let first = res.records[0].f_x;
+        let last = res.records.last().unwrap().f_x;
+        assert!(
+            last < first * 0.05,
+            "{policy:?}: f {first:.3e} -> {last:.3e}"
+        );
+    }
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let a = run_experiment(&quad_cfg(3, CompressPolicy::KimadUniform, 40), None, 0).unwrap();
+    let b = run_experiment(&quad_cfg(3, CompressPolicy::KimadUniform, 40), None, 0).unwrap();
+    assert_eq!(a.records.len(), b.records.len());
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra, rb, "simulation must be bit-reproducible");
+    }
+}
+
+#[test]
+fn worker_count_scales_structurally() {
+    for m in [1usize, 2, 8] {
+        let res = run_experiment(&quad_cfg(m, CompressPolicy::KimadUniform, 10), None, 0).unwrap();
+        for r in &res.records {
+            assert_eq!(r.workers.len(), m);
+        }
+    }
+}
+
+#[test]
+fn kimad_respects_budget_after_warmup() {
+    let res = run_experiment(&quad_cfg(2, CompressPolicy::KimadUniform, 60), None, 0).unwrap();
+    // After the monitor warms, uplink bits per round are bounded by the
+    // (estimate x window) budget; the true bandwidth never exceeds
+    // eta + delta, so bits <= (eta+delta) * t_comm plus slack for the
+    // EWMA overshoot.
+    let cap = (512.0 + 64.0) * 0.9 * 1.35 + 64.0;
+    for r in res.records.iter().skip(5) {
+        for w in &r.workers {
+            assert!(
+                (w.up_bits as f64) <= cap,
+                "round {} sent {} bits (cap {cap})",
+                r.step,
+                w.up_bits
+            );
+        }
+    }
+}
+
+#[test]
+fn kimad_plus_error_not_worse_than_uniform() {
+    // Same budget, layer-heterogeneous gradients (quadratic with
+    // log-spaced curvature): the DP allocation must not lose to the
+    // uniform split on mean compression error (Fig. 9's shape).
+    let uni = run_experiment(&quad_cfg(1, CompressPolicy::KimadUniform, 120), None, 0).unwrap();
+    let plus = run_experiment(
+        &quad_cfg(1, CompressPolicy::KimadPlus { discretization: 1000, ratios: vec![] }, 120),
+        None,
+        0,
+    )
+    .unwrap();
+    let mean = |r: &kimad::driver::ExperimentResult| {
+        r.records.iter().map(|x| x.mean_compression_error()).sum::<f64>()
+            / r.records.len() as f64
+    };
+    let (mu, mp) = (mean(&uni), mean(&plus));
+    assert!(
+        mp <= mu * 1.05 + 1e-12,
+        "kimad+ mean err {mp:.4e} vs uniform {mu:.4e}"
+    );
+}
+
+#[test]
+fn deadline_scheduling_floors_round_times() {
+    let res = run_experiment(&quad_cfg(2, CompressPolicy::KimadUniform, 30), None, 0).unwrap();
+    // deadline = 2 * t_comm + t_comp = 1.9s
+    for r in &res.records {
+        assert!(r.duration >= 1.9 - 1e-9, "round {} took {}", r.step, r.duration);
+    }
+}
+
+#[test]
+fn round_budget_mode_works_end_to_end() {
+    let mut cfg = quad_cfg(2, CompressPolicy::KimadUniform, 60);
+    cfg.budget = BudgetParams::RoundBudget { t: 2.0, t_comp: 0.1 };
+    let res = run_experiment(&cfg, None, 0).unwrap();
+    assert!(res.records.last().unwrap().f_x < res.records[0].f_x);
+    for r in &res.records {
+        assert!(r.duration >= 2.0 - 1e-9);
+    }
+}
+
+#[test]
+fn single_layer_vs_layered_both_converge() {
+    let mut cfg = quad_cfg(1, CompressPolicy::KimadUniform, 200);
+    cfg.single_layer = true;
+    let single = run_experiment(&cfg, None, 0).unwrap();
+    cfg.single_layer = false;
+    let layered = run_experiment(&cfg, None, 0).unwrap();
+    assert!(single.records.last().unwrap().f_x < single.records[0].f_x * 0.1);
+    assert!(layered.records.last().unwrap().f_x < layered.records[0].f_x * 0.1);
+}
+
+#[test]
+fn congestion_alpha_slows_rounds() {
+    let mut slow = quad_cfg(1, CompressPolicy::FixedRatio { ratio: 1.0 }, 15);
+    slow.downlink = TraceSpec::Constant { bps: 2000.0 };
+    let base = run_experiment(&slow, None, 0).unwrap();
+    slow.alpha = 4.0;
+    let congested = run_experiment(&slow, None, 0).unwrap();
+    assert!(
+        congested.total_time > base.total_time,
+        "alpha=4 should lengthen broadcasts: {} vs {}",
+        congested.total_time,
+        base.total_time
+    );
+}
+
+#[test]
+fn config_json_roundtrip_through_driver() {
+    let cfg = quad_cfg(2, CompressPolicy::KimadPlus { discretization: 500, ratios: vec![] }, 25);
+    let text = cfg.to_json_string();
+    let parsed =
+        ExperimentConfig::from_json(&kimad::util::json::Value::parse(&text).unwrap()).unwrap();
+    assert_eq!(parsed, cfg);
+    let a = run_experiment(&cfg, None, 0).unwrap();
+    let b = run_experiment(&parsed, None, 0).unwrap();
+    assert_eq!(a.records, b.records);
+}
