@@ -1,9 +1,13 @@
 //! Whole-stack hot-path micro-benchmarks — the §Perf working set
-//! (EXPERIMENTS.md): TopK selection, EF21 advance, error curves,
-//! knapsack DP, full simulator rounds, and (with artifacts) one PJRT
-//! train_step.
+//! (EXPERIMENTS.md): TopK selection, the allocating vs buffer-reuse
+//! compress paths (with a counting allocator proving the reuse path is
+//! allocation-free), EF21 advance, error curves, knapsack DP, full
+//! simulator rounds, and (with artifacts) one PJRT train_step.
 
-use kimad::compress::{Compressor, TopK};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use kimad::compress::{Compressed, Compressor, TopK};
 use kimad::coordinator::{QuadraticSource, SimConfig, Simulation};
 use kimad::ef21::Estimator;
 use kimad::kimad::{BudgetParams, CompressPolicy, ErrorCurve};
@@ -12,6 +16,36 @@ use kimad::optim::{LayerwiseSgd, Schedule};
 use kimad::quadratic::Quadratic;
 use kimad::util::bench::{bench, black_box, fmt_ns};
 use kimad::util::rng::Rng;
+
+/// Counts heap allocations so this bench can *prove* the buffer-reuse
+/// compress path performs zero per-call allocations once warm.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn grad(d: usize, seed: u64) -> Vec<f32> {
     let mut rng = Rng::seed_from_u64(seed);
@@ -30,8 +64,35 @@ fn main() {
         println!("    -> {mbps:.0} MB/s effective scan rate");
     }
 
-    // --- EF21 layer advance (compress + apply), 1M coords.
+    // --- Allocating vs buffer-reuse compress (the compress_into path
+    // the round loop runs). The counting allocator checks the claim.
     let d = 1_000_000;
+    let u = grad(d, 1);
+    let c = TopK::new(d / 100);
+    let alloc_r = bench("topk compress d=1M (allocating)", 10, || {
+        black_box(c.compress(black_box(&u)));
+    });
+    let mut msg = Compressed::default();
+    c.compress_into(&u, &mut msg); // warm buffers + thread-local scratch
+    let reuse_r = bench("topk compress_into d=1M (buffer reuse)", 10, || {
+        c.compress_into(black_box(&u), &mut msg);
+        black_box(&msg);
+    });
+    let before = ALLOCS.load(Ordering::Relaxed);
+    let reps = 100u64;
+    for _ in 0..reps {
+        c.compress_into(black_box(&u), &mut msg);
+    }
+    let delta = ALLOCS.load(Ordering::Relaxed) - before;
+    println!(
+        "    -> compress_into: {delta} heap allocations over {reps} calls (target 0); \
+         {:.2}x faster than the allocating path",
+        alloc_r.median_ns() / reuse_r.median_ns()
+    );
+    assert_eq!(delta, 0, "buffer-reuse compress path must not allocate per call");
+
+    // --- EF21 layer advance (compress + apply), 1M coords: allocating
+    // vs reuse form.
     let target = grad(d, 2);
     let layer = kimad::model::Layer { id: 0, name: "l".into(), offset: 0, size: d };
     let mut est = Estimator::zeros(d);
@@ -39,6 +100,32 @@ fn main() {
     bench("ef21 compress_advance d=1M k=1%", 10, || {
         black_box(est.compress_advance(&TopK::new(d / 100), &target, &layer, &mut scratch));
     });
+    let mut est2 = Estimator::zeros(d);
+    let mut msg2 = Compressed::default();
+    est2.compress_advance_into(&TopK::new(d / 100), &target, &layer, &mut scratch, &mut msg2);
+    bench("ef21 compress_advance_into d=1M k=1%", 10, || {
+        est2.compress_advance_into(
+            &TopK::new(d / 100),
+            &target,
+            &layer,
+            &mut scratch,
+            &mut msg2,
+        );
+        black_box(&msg2);
+    });
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..reps {
+        est2.compress_advance_into(
+            &TopK::new(d / 100),
+            &target,
+            &layer,
+            &mut scratch,
+            &mut msg2,
+        );
+    }
+    let delta = ALLOCS.load(Ordering::Relaxed) - before;
+    println!("    -> compress_advance_into: {delta} heap allocations over {reps} calls");
+    assert_eq!(delta, 0, "EF21 reuse path must not allocate per call");
 
     // --- Kimad+ machinery at transformer scale.
     let u = grad(131_072, 3);
@@ -61,6 +148,7 @@ fn main() {
         prior_bps: 6400.0,
         round_deadline: Some(1.0),
         budget_safety: 1.0,
+        threads: 0,
     };
     let net = NetSim::new(
         (0..4)
@@ -96,6 +184,7 @@ fn main() {
         prior_bps: 6400.0,
         round_deadline: Some(1.0),
         budget_safety: 1.0,
+        threads: 1,
     };
     let net2 = NetSim::new(vec![Link::new(
         Box::new(kimad::bandwidth::ConstantTrace::new(6400.0)),

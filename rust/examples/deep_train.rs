@@ -51,7 +51,11 @@ fn main() -> anyhow::Result<()> {
     }
     let first = res.records.first().unwrap().loss;
     let last = res.records.last().unwrap().loss;
-    println!("\nloss {first:.4} -> {last:.4} over {} rounds ({:.1} virtual s)", res.records.len(), res.total_time);
+    println!(
+        "\nloss {first:.4} -> {last:.4} over {} rounds ({:.1} virtual s)",
+        res.records.len(),
+        res.total_time
+    );
     println!("mean step time {:.2}s", res.mean_step_time());
     if let Some(e) = res.eval {
         println!(

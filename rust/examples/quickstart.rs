@@ -30,6 +30,7 @@ fn main() -> anyhow::Result<()> {
         warm_start: true,
         single_layer: false,
         budget_safety: 1.0,
+        threads: 0,
         seed: 21,
     };
 

@@ -1,7 +1,7 @@
 //! Identity (no compression) — the GD/no-compression baseline and the
 //! compressor Kimad falls back to when the budget exceeds the model.
 
-use super::{Compressed, Compressor};
+use super::{dense_parts, Compressed, Compressor};
 
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Identity;
@@ -9,6 +9,10 @@ pub struct Identity;
 impl Compressor for Identity {
     fn compress(&self, u: &[f32]) -> Compressed {
         Compressed::Dense { val: u.to_vec(), bits_per_val: super::F32_BITS }
+    }
+
+    fn compress_into(&self, u: &[f32], out: &mut Compressed) {
+        dense_parts(out, super::F32_BITS).extend_from_slice(u);
     }
 
     fn alpha(&self, _d: usize) -> f64 {

@@ -42,6 +42,48 @@ pub enum Compressed {
     Factors { rows: usize, cols: usize, u: Vec<f32>, v: Vec<f32> },
 }
 
+impl Default for Compressed {
+    /// An empty sparse message — the natural seed for a reusable
+    /// [`Compressor::compress_into`] buffer.
+    fn default() -> Self {
+        Compressed::Sparse { dim: 0, idx: Vec::new(), val: Vec::new() }
+    }
+}
+
+/// Make `out` a `Sparse` message for dimension `dim`, reusing its index
+/// and value buffers when the variant already matches (the hot path:
+/// zero allocations once capacity is warm).
+pub(crate) fn sparse_parts(out: &mut Compressed, dim: usize) -> (&mut Vec<u32>, &mut Vec<f32>) {
+    if !matches!(out, Compressed::Sparse { .. }) {
+        *out = Compressed::default();
+    }
+    match out {
+        Compressed::Sparse { dim: d, idx, val } => {
+            *d = dim;
+            idx.clear();
+            val.clear();
+            (idx, val)
+        }
+        _ => unreachable!("sparse_parts just normalized the variant"),
+    }
+}
+
+/// Make `out` a `Dense` message at `bits_per_val`, reusing its value
+/// buffer when the variant already matches.
+pub(crate) fn dense_parts(out: &mut Compressed, bits_per_val: u64) -> &mut Vec<f32> {
+    if !matches!(out, Compressed::Dense { .. }) {
+        *out = Compressed::Dense { val: Vec::new(), bits_per_val };
+    }
+    match out {
+        Compressed::Dense { val, bits_per_val: b } => {
+            *b = bits_per_val;
+            val.clear();
+            val
+        }
+        _ => unreachable!("dense_parts just normalized the variant"),
+    }
+}
+
 impl Compressed {
     /// Exact payload size in bits.
     pub fn wire_bits(&self) -> u64 {
@@ -100,6 +142,15 @@ impl Compressed {
 pub trait Compressor: Send + Sync {
     /// Compress `u`; the result decompresses to an approximation of `u`.
     fn compress(&self, u: &[f32]) -> Compressed;
+
+    /// Compress `u` into a caller-owned message buffer, reusing its
+    /// allocations when the variant matches. Semantically identical to
+    /// [`compress`](Self::compress); the sparsifiers and quantizers
+    /// override this to keep the round loop allocation-free
+    /// (EXPERIMENTS.md §Perf, `benches/hotpath.rs`).
+    fn compress_into(&self, u: &[f32], out: &mut Compressed) {
+        *out = self.compress(u);
+    }
 
     /// Contraction factor `alpha in (0, 1]` (1 = lossless) for dimension
     /// `d` — worst-case over inputs, as used by Theorem 1.
@@ -166,6 +217,28 @@ mod tests {
         let mut out = vec![1.0f32; 4];
         m.add_into(&mut out);
         assert_eq!(out, vec![2.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn compress_into_matches_compress_and_reuses_buffers() {
+        // RandK is excluded: its internal round counter makes each call
+        // a fresh sample by design (covered in randk.rs).
+        let u: Vec<f32> = (0..64).map(|i| ((i * 31 % 17) as f32) - 8.0).collect();
+        let comps: Vec<Box<dyn Compressor>> = vec![
+            Box::new(TopK::new(9)),
+            Box::new(QuantizeBits::new(6)),
+            Box::new(OneBitSign),
+            Box::new(Identity),
+            Box::new(LowRank::new(8, 8, 2)),
+        ];
+        for c in &comps {
+            let mut msg = Compressed::default();
+            c.compress_into(&u, &mut msg);
+            assert_eq!(msg, c.compress(&u), "{}", c.name());
+            // Second call into the warm buffer: identical result.
+            c.compress_into(&u, &mut msg);
+            assert_eq!(msg, c.compress(&u), "{} (reused)", c.name());
+        }
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Quantization compressors (§2.2): b-bit uniform and 1-bit sign.
 
-use super::{Compressed, Compressor};
+use super::{dense_parts, Compressed, Compressor};
 
 /// Uniform symmetric quantization to `bits` per value with a per-message
 /// max-abs scale; simulated by round-tripping values through the grid so
@@ -24,16 +24,20 @@ impl QuantizeBits {
 
 impl Compressor for QuantizeBits {
     fn compress(&self, u: &[f32]) -> Compressed {
+        let mut out = Compressed::default();
+        self.compress_into(u, &mut out);
+        out
+    }
+
+    fn compress_into(&self, u: &[f32], out: &mut Compressed) {
+        let val = dense_parts(out, self.bits);
         let scale = u.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
-        let val = if scale == 0.0 || self.bits >= 32 {
-            u.to_vec()
+        if scale == 0.0 || self.bits >= 32 {
+            val.extend_from_slice(u);
         } else {
             let l = self.levels();
-            u.iter()
-                .map(|&v| (v / scale * l).round() / l * scale)
-                .collect()
-        };
-        Compressed::Dense { val, bits_per_val: self.bits }
+            val.extend(u.iter().map(|&v| (v / scale * l).round() / l * scale));
+        }
     }
 
     fn alpha(&self, d: usize) -> f64 {
@@ -65,14 +69,20 @@ pub struct OneBitSign;
 
 impl Compressor for OneBitSign {
     fn compress(&self, u: &[f32]) -> Compressed {
+        let mut out = Compressed::default();
+        self.compress_into(u, &mut out);
+        out
+    }
+
+    fn compress_into(&self, u: &[f32], out: &mut Compressed) {
+        let val = dense_parts(out, 1);
         let d = u.len();
         let mag = if d == 0 {
             0.0
         } else {
             u.iter().map(|v| v.abs()).sum::<f32>() / d as f32
         };
-        let val = u.iter().map(|&v| mag * v.signum()).collect();
-        Compressed::Dense { val, bits_per_val: 1 }
+        val.extend(u.iter().map(|&v| mag * v.signum()));
     }
 
     fn alpha(&self, d: usize) -> f64 {

@@ -8,7 +8,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::util::rng::Rng;
 
-use super::{Compressed, Compressor};
+use super::{sparse_parts, Compressed, Compressor};
 
 #[derive(Debug)]
 pub struct RandK {
@@ -43,15 +43,21 @@ impl Clone for RandK {
 
 impl Compressor for RandK {
     fn compress(&self, u: &[f32]) -> Compressed {
+        let mut out = Compressed::default();
+        self.compress_into(u, &mut out);
+        out
+    }
+
+    fn compress_into(&self, u: &[f32], out: &mut Compressed) {
         let d = u.len();
         let k = self.k.min(d);
         // Fresh randomness each call, but deterministic per (seed, call#).
         let call = self.round.fetch_add(1, Ordering::Relaxed);
         let mut rng = Rng::seed_from_u64(self.seed).derive(call);
-        let idx = rng.sample_indices(d, k);
+        let (idx, val) = sparse_parts(out, d);
+        rng.sample_indices_into(d, k, idx);
         let factor = if self.scale && k > 0 { d as f32 / k as f32 } else { 1.0 };
-        let val = idx.iter().map(|&i| u[i as usize] * factor).collect();
-        Compressed::Sparse { dim: d, idx, val }
+        val.extend(idx.iter().map(|&i| u[i as usize] * factor));
     }
 
     fn alpha(&self, d: usize) -> f64 {
@@ -97,6 +103,20 @@ mod tests {
         let a = c.compress(&u);
         let b = c.compress(&u);
         assert_ne!(a, b, "successive rounds should resample");
+    }
+
+    #[test]
+    fn compress_into_matches_fresh_compress() {
+        // Same seed, same call counter: the reuse path must replay the
+        // exact sampling stream of the allocating path.
+        let u: Vec<f32> = (0..40).map(|i| i as f32).collect();
+        let a = RandK::new(7, 5);
+        let b = RandK::new(7, 5);
+        let mut msg = Compressed::default();
+        a.compress_into(&u, &mut msg);
+        assert_eq!(msg, b.compress(&u));
+        a.compress_into(&u, &mut msg);
+        assert_eq!(msg, b.compress(&u));
     }
 
     #[test]

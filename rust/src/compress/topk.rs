@@ -5,7 +5,17 @@
 //! be O(d log d) and dominates the coordinator hot path at d ~ 10^7 —
 //! see EXPERIMENTS.md §Perf).
 
-use super::{Compressed, Compressor};
+use std::cell::RefCell;
+
+use super::{sparse_parts, Compressed, Compressor};
+
+thread_local! {
+    /// Packed-key scratch for the quickselect: one warm buffer per
+    /// thread keeps [`TopK::select_indices_into`] allocation-free on
+    /// the round loop's hot path (and safe under the parallel worker
+    /// phase — each worker thread owns its own copy).
+    static PACKED: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
 
 /// Keep the K coordinates of largest absolute value.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -19,6 +29,13 @@ impl TopK {
     }
 
     /// Indices of the `k` largest |u| entries (unordered), O(d).
+    pub fn select_indices(u: &[f32], k: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        Self::select_indices_into(u, k, &mut out);
+        out
+    }
+
+    /// [`select_indices`](Self::select_indices) into a reused buffer.
     ///
     /// Keys are packed as `(abs_bits << 32) | index` u64s so the
     /// quickselect compares plain integers instead of chasing f32s
@@ -26,34 +43,42 @@ impl TopK {
     /// like their values for finite floats (sign bit cleared), and NaN
     /// payloads sort above everything, matching total_cmp. ~2-3x
     /// faster at d = 10^7 (EXPERIMENTS.md §Perf).
-    pub fn select_indices(u: &[f32], k: usize) -> Vec<u32> {
+    pub fn select_indices_into(u: &[f32], k: usize, out: &mut Vec<u32>) {
+        out.clear();
         let d = u.len();
         let k = k.min(d);
         if k == 0 {
-            return Vec::new();
+            return;
         }
         if k == d {
-            return (0..d as u32).collect();
+            out.extend(0..d as u32);
+            return;
         }
-        let mut packed: Vec<u64> = u
-            .iter()
-            .enumerate()
-            .map(|(i, &v)| {
+        PACKED.with(|cell| {
+            let mut packed = cell.borrow_mut();
+            packed.clear();
+            packed.extend(u.iter().enumerate().map(|(i, &v)| {
                 let abs_bits = (v.to_bits() & 0x7FFF_FFFF) as u64;
                 (abs_bits << 32) | i as u64
-            })
-            .collect();
-        // k-th largest == (d-k)-th smallest.
-        packed.select_nth_unstable(d - k);
-        packed[d - k..].iter().map(|&p| p as u32).collect()
+            }));
+            // k-th largest == (d-k)-th smallest.
+            packed.select_nth_unstable(d - k);
+            out.extend(packed[d - k..].iter().map(|&p| p as u32));
+        });
     }
 }
 
 impl Compressor for TopK {
     fn compress(&self, u: &[f32]) -> Compressed {
-        let idx = Self::select_indices(u, self.k);
-        let val = idx.iter().map(|&i| u[i as usize]).collect();
-        Compressed::Sparse { dim: u.len(), idx, val }
+        let mut out = Compressed::default();
+        self.compress_into(u, &mut out);
+        out
+    }
+
+    fn compress_into(&self, u: &[f32], out: &mut Compressed) {
+        let (idx, val) = sparse_parts(out, u.len());
+        Self::select_indices_into(u, self.k, idx);
+        val.extend(idx.iter().map(|&i| u[i as usize]));
     }
 
     fn alpha(&self, d: usize) -> f64 {

@@ -57,6 +57,9 @@ pub struct ExperimentConfig {
     pub single_layer: bool,
     /// Safety factor on the Eq. (2) budget (see SimConfig).
     pub budget_safety: f64,
+    /// Worker-phase thread count (see `SimConfig::threads`): 0 = auto,
+    /// 1 = serial. Results are bit-identical for every setting.
+    pub threads: usize,
     pub seed: u64,
 }
 
@@ -89,7 +92,8 @@ fn budget_from_json(v: &Value) -> anyhow::Result<BudgetParams> {
     })
 }
 
-fn policy_to_json(p: &CompressPolicy) -> Value {
+/// JSON codec for a [`CompressPolicy`] (shared with `scenarios`).
+pub fn policy_to_json(p: &CompressPolicy) -> Value {
     match p {
         CompressPolicy::FixedRatio { ratio } => Value::obj(vec![
             ("kind", Value::str("fixed_ratio")),
@@ -112,7 +116,8 @@ fn policy_to_json(p: &CompressPolicy) -> Value {
     }
 }
 
-fn policy_from_json(v: &Value) -> anyhow::Result<CompressPolicy> {
+/// Inverse of [`policy_to_json`].
+pub fn policy_from_json(v: &Value) -> anyhow::Result<CompressPolicy> {
     Ok(match v.get("kind")?.as_str()? {
         "fixed_ratio" => CompressPolicy::FixedRatio { ratio: v.get("ratio")?.as_f64()? },
         "kimad_uniform" => CompressPolicy::KimadUniform,
@@ -198,6 +203,7 @@ impl ExperimentConfig {
             ("warm_start", Value::Bool(self.warm_start)),
             ("single_layer", Value::Bool(self.single_layer)),
             ("budget_safety", Value::num(self.budget_safety)),
+            ("threads", Value::num(self.threads as f64)),
             ("seed", Value::num(self.seed as f64)),
         ])
     }
@@ -241,6 +247,10 @@ impl ExperimentConfig {
                 .opt("budget_safety")
                 .and_then(|a| a.as_f64().ok())
                 .unwrap_or(1.0),
+            threads: v
+                .opt("threads")
+                .and_then(|a| a.as_usize().ok())
+                .unwrap_or(0),
             seed: v.opt("seed").and_then(|a| a.as_u64().ok()).unwrap_or(21),
         })
     }
@@ -281,6 +291,7 @@ mod tests {
             warm_start: true,
             single_layer: false,
             budget_safety: 0.9,
+            threads: 0,
             seed: 21,
         }
     }
@@ -322,6 +333,7 @@ mod tests {
         assert!(cfg.warm_start);
         assert!(!cfg.single_layer);
         assert_eq!(cfg.prior_bps, 0.0);
+        assert_eq!(cfg.threads, 0);
         assert_eq!(cfg.seed, 21);
     }
 

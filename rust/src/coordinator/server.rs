@@ -2,6 +2,7 @@
 //! server's mirrors of every worker's û_m (Algorithm 3 line 14).
 
 use crate::bandwidth::{BandwidthMonitor, EwmaMonitor};
+use crate::compress::Compressed;
 use crate::ef21::Estimator;
 
 pub struct ServerState {
@@ -19,6 +20,8 @@ pub struct ServerState {
     pub agg: Vec<f32>,
     /// Scratch: compression difference buffer.
     pub scratch: Vec<f32>,
+    /// Reusable broadcast-message buffer (allocation-free rounds).
+    pub msg: Compressed,
 }
 
 impl ServerState {
@@ -33,6 +36,7 @@ impl ServerState {
                 .collect(),
             agg: vec![0.0; dim],
             scratch: Vec::with_capacity(dim),
+            msg: Compressed::default(),
         }
     }
 

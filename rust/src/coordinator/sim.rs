@@ -1,6 +1,22 @@
 //! The synchronous PS round loop (Algorithm 3) over virtual time.
+//!
+//! Round structure (M workers):
+//!
+//! 1. probe + broadcast selection + x̂ advance — serial (server state);
+//! 2. gradient computation per worker — serial (the [`GradientSource`]
+//!    is one mutable resource; PJRT executables are not re-entrant);
+//! 3. **parallel worker phase** — each worker's downlink timing, uplink
+//!    budget read, `A^compress` selection, EF21 compress-advance and
+//!    uplink transfer run on a scoped thread pool. Every buffer the
+//!    phase touches (monitor, û_m, the server's û_m mirror, diff/msg
+//!    scratch) is owned per worker, so the phase is data-race-free by
+//!    construction and bit-deterministic regardless of thread count;
+//! 4. aggregation + optimizer step — serial, in worker-index order, so
+//!    the f32 reduction order never depends on scheduling.
 
+use crate::bandwidth::BandwidthMonitor;
 use crate::compress::{Identity, TopK};
+use crate::ef21::Estimator;
 use crate::kimad::{compression_budget, BudgetParams, CompressPolicy, Selector};
 use crate::model::Layer;
 use crate::netsim::{Direction, NetSim};
@@ -9,6 +25,11 @@ use crate::optim::LayerwiseSgd;
 use super::round::{RoundRecord, WorkerRound};
 use super::server::ServerState;
 use super::worker::{GradientSource, WorkerState};
+
+/// Synthetic NIC-counter probe: bits/window observed by the continuous
+/// bandwidth monitor each round (§2.4, §3).
+const PROBE_BITS: f64 = 1.0e4;
+const PROBE_WINDOW: f64 = 0.5;
 
 /// Full experiment configuration for one simulated training run.
 pub struct SimConfig {
@@ -41,6 +62,10 @@ pub struct SimConfig {
     /// 100% of it overruns the deadline whenever bandwidth is falling.
     /// 1.0 = trust the estimate fully.
     pub budget_safety: f64,
+    /// Worker-phase thread count: 0 = one thread per worker up to the
+    /// machine's parallelism, 1 = serial, n = at most n threads. The
+    /// simulation is bit-identical for every setting.
+    pub threads: usize,
 }
 
 impl SimConfig {
@@ -52,6 +77,26 @@ impl SimConfig {
             self.weights.clone()
         }
     }
+}
+
+/// Auto mode (`threads == 0`) only goes parallel when the per-round
+/// work amortizes the scoped-thread spawn cost (~tens of µs) — below
+/// this many worker-elements the serial path is faster and keeps the
+/// per-thread TopK scratch warm. An explicit `threads = n` always wins.
+const PARALLEL_MIN_WORK: usize = 1 << 16;
+
+fn effective_threads(requested: usize, m: usize, dim: usize) -> usize {
+    let m = m.max(1);
+    if requested != 0 {
+        return requested.min(m);
+    }
+    if m < 2 || dim.saturating_mul(m) < PARALLEL_MIN_WORK {
+        return 1;
+    }
+    let auto = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    auto.min(m)
 }
 
 /// A running simulation: server + M workers + network + source.
@@ -66,9 +111,93 @@ pub struct Simulation<S: GradientSource> {
     weights: Vec<f64>,
     up_selector: Selector,
     down_selector: Selector,
-    /// Reusable difference buffer (allocation-free rounds).
+    /// Reusable broadcast difference buffer (allocation-free rounds).
     diff: Vec<f32>,
     warmed: bool,
+}
+
+/// Shared, immutable inputs of one round's parallel worker phase.
+struct RoundCtx<'a> {
+    cfg: &'a SimConfig,
+    net: &'a NetSim,
+    up_selector: &'a Selector,
+    t0: f64,
+    t_comp: f64,
+    down_bits: u64,
+}
+
+/// One worker's communication round: downlink timing, uplink budget
+/// read "when communication is triggered" (§3.1), `A^compress`
+/// selection, EF21 compress-advance mirrored onto the server, and the
+/// uplink transfer. Touches only per-worker state (plus the read-only
+/// [`RoundCtx`]), so workers run concurrently and deterministically.
+fn worker_phase(
+    ctx: &RoundCtx<'_>,
+    loss: f64,
+    w: &mut WorkerState,
+    u_hat_mirror: &mut Estimator,
+    down_monitor: &mut dyn BandwidthMonitor,
+) -> WorkerRound {
+    let down_tr = ctx
+        .net
+        .transfer(w.id, Direction::Down, ctx.t0, ctx.down_bits as f64);
+    down_monitor.observe(ctx.down_bits as f64, down_tr.seconds);
+
+    // Uplink budget read at upload time, after download and compute.
+    let up_start = ctx.t0 + down_tr.seconds + ctx.t_comp;
+    let b_probe = ctx
+        .net
+        .window_bps(w.id, Direction::Up, up_start, PROBE_WINDOW);
+    w.monitor.observe(PROBE_BITS, PROBE_BITS / b_probe.max(1e-9));
+    let true_up = ctx.net.true_bps(w.id, Direction::Up, up_start);
+    let b_up = w.monitor.estimate_or(ctx.cfg.prior_bps);
+    let c_up =
+        (compression_budget(ctx.cfg.budget, b_up) as f64 * ctx.cfg.budget_safety) as u64;
+    for (d, (&u, &uh)) in w.diff.iter_mut().zip(w.u.iter().zip(&w.u_hat.value)) {
+        *d = u - uh;
+    }
+    let sel_up = ctx.up_selector.select(&w.diff, &ctx.cfg.layers, c_up);
+
+    // Compress-advance û_m layer by layer, mirroring on the server.
+    let mut up_bits = 0u64;
+    for (l, &kk) in ctx.cfg.layers.iter().zip(&sel_up.k_per_layer) {
+        let target = &w.u[l.offset..l.offset + l.size];
+        if kk >= l.size {
+            w.u_hat
+                .compress_advance_into(&Identity, target, l, &mut w.scratch, &mut w.msg);
+        } else {
+            w.u_hat.compress_advance_into(
+                &TopK::new(kk),
+                target,
+                l,
+                &mut w.scratch,
+                &mut w.msg,
+            );
+        }
+        u_hat_mirror.apply(&w.msg, l);
+        up_bits += w.msg.wire_bits();
+    }
+
+    let up_tr = ctx.net.transfer(w.id, Direction::Up, up_start, up_bits as f64);
+    w.monitor.observe(up_bits as f64, up_tr.seconds);
+
+    // Compression error ||û_m − u_m||² after the round (Fig. 9).
+    let comp_err: f64 = w
+        .u
+        .iter()
+        .zip(&w.u_hat.value)
+        .map(|(&u, &uh)| ((u - uh) as f64).powi(2))
+        .sum();
+
+    WorkerRound {
+        up_bits,
+        up_seconds: up_tr.seconds,
+        down_seconds: down_tr.seconds,
+        loss,
+        compression_error: comp_err,
+        est_up_bps: b_up,
+        true_up_bps: true_up,
+    }
 }
 
 impl<S: GradientSource> Simulation<S> {
@@ -129,20 +258,16 @@ impl<S: GradientSource> Simulation<S> {
         }
         let k = self.step;
         let t0 = self.clock;
-        let layers = &self.cfg.layers;
         let t_comp = self.source.t_comp();
-
 
         // ---- Continuous bandwidth monitoring (§2.4, §3): the monitor
         // samples the link each round (NIC-counter style), independent
         // of training traffic — without this, a zero-bit round would
         // starve the estimator at trough level forever. The observation
         // is the instantaneous rate at round start; the EWMA smooths it.
-        const PROBE_BITS: f64 = 1.0e4;
-        const PROBE_WINDOW: f64 = 0.5;
-        for w in &mut self.workers {
-            let bd = self.net.window_bps(w.id, Direction::Down, t0, PROBE_WINDOW);
-            self.server.down_monitors[w.id].observe(PROBE_BITS, PROBE_BITS / bd.max(1e-9));
+        for (i, mon) in self.server.down_monitors.iter_mut().enumerate() {
+            let bd = self.net.window_bps(i, Direction::Down, t0, PROBE_WINDOW);
+            mon.observe(PROBE_BITS, PROBE_BITS / bd.max(1e-9));
         }
 
         // ---- Server: select broadcast compressor under Eq. (2) budget.
@@ -156,102 +281,99 @@ impl<S: GradientSource> Simulation<S> {
         {
             *d = x - xh;
         }
-        let sel_down = self.down_selector.select(&self.diff, layers, c_down);
+        let sel_down = self.down_selector.select(&self.diff, &self.cfg.layers, c_down);
 
         // ---- Server: compress-advance x̂ and measure the wire size.
         let mut down_bits = 0u64;
-        for (l, &kk) in layers.iter().zip(&sel_down.k_per_layer) {
+        for (l, &kk) in self.cfg.layers.iter().zip(&sel_down.k_per_layer) {
             let target = &self.server.x[l.offset..l.offset + l.size];
-            let msg = if kk >= l.size {
-                self.server
-                    .x_hat
-                    .compress_advance(&Identity, target, l, &mut self.server.scratch)
+            if kk >= l.size {
+                self.server.x_hat.compress_advance_into(
+                    &Identity,
+                    target,
+                    l,
+                    &mut self.server.scratch,
+                    &mut self.server.msg,
+                );
             } else {
-                self.server.x_hat.compress_advance(
+                self.server.x_hat.compress_advance_into(
                     &TopK::new(kk),
                     target,
                     l,
                     &mut self.server.scratch,
-                )
-            };
-            down_bits += msg.wire_bits();
+                    &mut self.server.msg,
+                );
+            }
+            down_bits += self.server.msg.wire_bits();
         }
 
-        // ---- Broadcast to every worker (worker x̂ mirrors the server's
-        // x̂ exactly — single-copy representation, sync asserted in
-        // tests) and record per-worker transfer times.
-        let mut worker_rounds = Vec::with_capacity(self.cfg.m);
-        let mut loss_sum = 0.0;
-        let mut duration = 0.0f64;
+        // ---- Gradient phase (serial: the source is one mutable
+        // resource). Every worker computes at the same broadcast x̂.
+        let mut losses = Vec::with_capacity(self.cfg.m);
         for w in &mut self.workers {
-            let down_tr = self
-                .net
-                .transfer(w.id, Direction::Down, t0, down_bits as f64);
-            self.server.down_monitors[w.id].observe(down_bits as f64, down_tr.seconds);
-
-            // ---- Worker: compute update at x̂.
             let loss = self
                 .source
                 .update(w.id, k, &self.server.x_hat.value, &mut w.u)?;
-            loss_sum += loss;
-
-            // ---- Worker: uplink budget read "when communication is
-            // triggered" (§3.1) — i.e. at upload time, after download
-            // and compute, not at round start.
-            let up_start = t0 + down_tr.seconds + t_comp;
-            let b_probe = self.net.window_bps(w.id, Direction::Up, up_start, PROBE_WINDOW);
-            w.monitor.observe(PROBE_BITS, PROBE_BITS / b_probe.max(1e-9));
-            let true_up = self.net.true_bps(w.id, Direction::Up, up_start);
-            let b_up = w.monitor.estimate_or(self.cfg.prior_bps);
-            let c_up =
-                (compression_budget(self.cfg.budget, b_up) as f64 * self.cfg.budget_safety) as u64;
-            for (d, (&u, &uh)) in self
-                .diff
-                .iter_mut()
-                .zip(w.u.iter().zip(&w.u_hat.value))
-            {
-                *d = u - uh;
-            }
-            let sel_up = self.up_selector.select(&self.diff, layers, c_up);
-
-            // ---- Worker: compress-advance û_m, mirror on the server.
-            let mut up_bits = 0u64;
-            for (l, &kk) in layers.iter().zip(&sel_up.k_per_layer) {
-                let target = &w.u[l.offset..l.offset + l.size];
-                let msg = if kk >= l.size {
-                    w.u_hat.compress_advance(&Identity, target, l, &mut w.scratch)
-                } else {
-                    w.u_hat
-                        .compress_advance(&TopK::new(kk), target, l, &mut w.scratch)
-                };
-                self.server.u_hats[w.id].apply(&msg, l);
-                up_bits += msg.wire_bits();
-            }
-
-            let down_secs = down_tr.seconds;
-            let up_tr = self.net.transfer(w.id, Direction::Up, up_start, up_bits as f64);
-            w.monitor.observe(up_bits as f64, up_tr.seconds);
-            let up_secs = up_tr.seconds;
-
-            // Compression error ||û_m − u_m||² after the round (Fig. 9).
-            let comp_err: f64 = w
-                .u
-                .iter()
-                .zip(&w.u_hat.value)
-                .map(|(&u, &uh)| ((u - uh) as f64).powi(2))
-                .sum();
-
-            duration = duration.max(down_secs + t_comp + up_secs);
-            worker_rounds.push(WorkerRound {
-                up_bits,
-                up_seconds: up_secs,
-                down_seconds: down_secs,
-                loss,
-                compression_error: comp_err,
-                est_up_bps: b_up,
-                true_up_bps: true_up,
-            });
+            losses.push(loss);
         }
+
+        // ---- Parallel worker phase: timing, budgets, selection, EF21.
+        let n_threads = effective_threads(self.cfg.threads, self.cfg.m, self.server.dim());
+        let ctx = RoundCtx {
+            cfg: &self.cfg,
+            net: &self.net,
+            up_selector: &self.up_selector,
+            t0,
+            t_comp,
+            down_bits,
+        };
+        let worker_rounds: Vec<WorkerRound> = if n_threads <= 1 {
+            self.workers
+                .iter_mut()
+                .zip(self.server.u_hats.iter_mut())
+                .zip(self.server.down_monitors.iter_mut())
+                .zip(&losses)
+                .map(|(((w, uh), dm), &loss)| worker_phase(&ctx, loss, w, uh, dm.as_mut()))
+                .collect()
+        } else {
+            let chunk = self.cfg.m.div_ceil(n_threads);
+            let workers = &mut self.workers;
+            let u_hats = &mut self.server.u_hats;
+            let down_monitors = &mut self.server.down_monitors;
+            let ctx = &ctx;
+            std::thread::scope(|s| {
+                let handles: Vec<_> = workers
+                    .chunks_mut(chunk)
+                    .zip(u_hats.chunks_mut(chunk))
+                    .zip(down_monitors.chunks_mut(chunk))
+                    .zip(losses.chunks(chunk))
+                    .map(|(((ws, us), ds), ls)| {
+                        s.spawn(move || {
+                            ws.iter_mut()
+                                .zip(us.iter_mut())
+                                .zip(ds.iter_mut())
+                                .zip(ls)
+                                .map(|(((w, uh), dm), &loss)| {
+                                    worker_phase(ctx, loss, w, uh, dm.as_mut())
+                                })
+                                .collect::<Vec<_>>()
+                        })
+                    })
+                    .collect();
+                // Chunks rejoin in spawn order, so the concatenation is
+                // exactly worker-index order — aggregation stays
+                // deterministic no matter how the threads interleave.
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().expect("worker phase thread panicked"))
+                    .collect()
+            })
+        };
+        let loss_sum: f64 = losses.iter().sum();
+        let mut duration = worker_rounds
+            .iter()
+            .map(|w| w.down_seconds + t_comp + w.up_seconds)
+            .fold(0.0f64, f64::max);
 
         // ---- Server: aggregate and step (Algorithm 3 line 15).
         // Zero-information rounds (every worker's budget rounded to no
@@ -262,9 +384,12 @@ impl<S: GradientSource> Simulation<S> {
         let total_up: u64 = worker_rounds.iter().map(|w| w.up_bits).sum();
         let agg_norm_sq = if total_up > 0 || k == 0 {
             let n = self.server.aggregate(&self.weights);
-            self.cfg
-                .optimizer
-                .step(k as usize, &mut self.server.x, &self.server.agg, layers);
+            self.cfg.optimizer.step(
+                k as usize,
+                &mut self.server.x,
+                &self.server.agg,
+                &self.cfg.layers,
+            );
             n
         } else {
             0.0
@@ -354,6 +479,7 @@ mod tests {
             prior_bps: bps,
             round_deadline: Some(1.0),
             budget_safety: 1.0,
+            threads: 1,
         };
         Simulation::new(cfg, constant_net(m, bps), src, vec![1.0f32; 30])
     }
@@ -438,6 +564,40 @@ mod tests {
     }
 
     #[test]
+    fn parallel_rounds_bit_match_serial() {
+        // The tentpole guarantee: thread count never changes results.
+        for policy in [
+            CompressPolicy::KimadUniform,
+            CompressPolicy::KimadPlus { discretization: 200, ratios: vec![] },
+            CompressPolicy::WholeModelTopK,
+        ] {
+            let mut serial = sim(4, 640.0, policy.clone(), 0.02);
+            serial.cfg.threads = 1;
+            let mut par2 = sim(4, 640.0, policy.clone(), 0.02);
+            par2.cfg.threads = 2;
+            let mut par_auto = sim(4, 640.0, policy.clone(), 0.02);
+            par_auto.cfg.threads = 0;
+            let a = serial.run(25).unwrap();
+            let b = par2.run(25).unwrap();
+            let c = par_auto.run(25).unwrap();
+            assert_eq!(a, b, "{policy:?}: threads=2 diverged");
+            assert_eq!(a, c, "{policy:?}: threads=auto diverged");
+        }
+    }
+
+    #[test]
+    fn thread_count_clamps() {
+        // Explicit thread counts win regardless of work size.
+        assert_eq!(effective_threads(1, 8, 30), 1);
+        assert_eq!(effective_threads(16, 3, 30), 3);
+        // Auto mode: small rounds stay serial, big ones parallelize.
+        assert_eq!(effective_threads(0, 4, 30), 1);
+        assert_eq!(effective_threads(0, 1, 10_000_000), 1);
+        let big = effective_threads(0, 64, 1_000_000);
+        assert!((1..=64).contains(&big));
+    }
+
+    #[test]
     fn ef21_estimator_error_shrinks_on_static_target() {
         // With a tiny learning rate the gradient barely moves, so the
         // EF21 error must contract round over round. Cold estimators
@@ -457,6 +617,7 @@ mod tests {
             prior_bps: 128.0,
             round_deadline: Some(1.0),
             budget_safety: 1.0,
+            threads: 1,
         };
         let mut s = Simulation::new(cfg, constant_net(1, 128.0), src, vec![1.0f32; 30]);
         let recs = s.run(30).unwrap();

@@ -1,6 +1,7 @@
 //! Worker-side state and the gradient computation abstraction.
 
 use crate::bandwidth::{BandwidthMonitor, EwmaMonitor};
+use crate::compress::Compressed;
 use crate::ef21::Estimator;
 
 /// Where update vectors come from. The quadratic workload implements
@@ -84,6 +85,11 @@ pub struct WorkerState {
     pub u: Vec<f32>,
     /// Scratch: per-layer difference buffer.
     pub scratch: Vec<f32>,
+    /// Scratch: full-dimension EF21 difference `u − û` — one per worker
+    /// so the parallel round phase never shares mutable buffers.
+    pub diff: Vec<f32>,
+    /// Reusable compressed-message buffer (allocation-free rounds).
+    pub msg: Compressed,
 }
 
 impl WorkerState {
@@ -94,6 +100,8 @@ impl WorkerState {
             monitor: Box::new(EwmaMonitor::new(0.7)),
             u: vec![0.0; dim],
             scratch: Vec::with_capacity(dim),
+            diff: vec![0.0; dim],
+            msg: Compressed::default(),
         }
     }
 

@@ -79,6 +79,7 @@ fn sim_config(cfg: &ExperimentConfig, layers: Vec<Layer>, t_comp: f64) -> SimCon
         prior_bps: prior_bps(cfg),
         round_deadline: Some(round_deadline(&cfg.budget, t_comp)),
         budget_safety: cfg.budget_safety,
+        threads: cfg.threads,
     }
 }
 
@@ -102,8 +103,8 @@ pub fn run_experiment(
             };
             let src = QuadraticSource::new(q, *t_comp);
             let x0 = vec![1.0f32; *d];
-            let mut sim =
-                Simulation::new(sim_config(cfg, layers.clone(), *t_comp), build_netsim(cfg), src, x0);
+            let sim_cfg = sim_config(cfg, layers.clone(), *t_comp);
+            let mut sim = Simulation::new(sim_cfg, build_netsim(cfg), src, x0);
             let records = sim.run(cfg.rounds)?;
             let total_time = sim.clock;
             Ok(ExperimentResult { records, layers, n_params: *d, eval: None, total_time })
@@ -130,8 +131,8 @@ pub fn run_experiment(
             };
             let x0 = store.initial_params(preset)?;
             let n_params = layout.n_params;
-            let mut sim =
-                Simulation::new(sim_config(cfg, layers.clone(), t_comp), build_netsim(cfg), src, x0);
+            let sim_cfg = sim_config(cfg, layers.clone(), t_comp);
+            let mut sim = Simulation::new(sim_cfg, build_netsim(cfg), src, x0);
             let records = sim.run(cfg.rounds)?;
             let total_time = sim.clock;
             let eval = if eval_batches > 0 {
@@ -191,6 +192,7 @@ mod tests {
             warm_start: true,
             single_layer: false,
             budget_safety: 1.0,
+            threads: 0,
             seed: 21,
         }
     }

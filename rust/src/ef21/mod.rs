@@ -45,12 +45,28 @@ impl Estimator {
         layer: &Layer,
         scratch: &mut Vec<f32>,
     ) -> Compressed {
+        let mut msg = Compressed::default();
+        self.compress_advance_into(compressor, target_layer, layer, scratch, &mut msg);
+        msg
+    }
+
+    /// [`compress_advance`](Self::compress_advance) into a caller-owned
+    /// message buffer — the allocation-free form the round loop uses
+    /// (the message's index/value vectors are reused across layers and
+    /// rounds; see EXPERIMENTS.md §Perf).
+    pub fn compress_advance_into(
+        &mut self,
+        compressor: &dyn Compressor,
+        target_layer: &[f32],
+        layer: &Layer,
+        scratch: &mut Vec<f32>,
+        msg: &mut Compressed,
+    ) {
         let span = &mut self.value[layer.offset..layer.offset + layer.size];
         scratch.clear();
         scratch.extend(target_layer.iter().zip(span.iter()).map(|(&t, &e)| t - e));
-        let msg = compressor.compress(scratch);
+        compressor.compress_into(scratch, msg);
         msg.add_into(span);
-        msg
     }
 
     /// Receiver side: advance by an already-received message.
@@ -78,6 +94,23 @@ mod tests {
 
     fn layer(dim: usize) -> Layer {
         Layer { id: 0, name: "l".into(), offset: 0, size: dim }
+    }
+
+    #[test]
+    fn compress_advance_into_matches_allocating_path() {
+        let mut a = Estimator::zeros(8);
+        let mut b = Estimator::zeros(8);
+        let target = [8.0f32, -7.0, 6.0, -5.0, 4.0, -3.0, 2.0, -1.0];
+        let l = layer(8);
+        let c = TopK::new(3);
+        let mut scratch = Vec::new();
+        let mut msg = Compressed::default();
+        for _ in 0..4 {
+            let want = a.compress_advance(&c, &target, &l, &mut scratch);
+            b.compress_advance_into(&c, &target, &l, &mut scratch, &mut msg);
+            assert_eq!(msg, want);
+        }
+        assert_eq!(a.value, b.value);
     }
 
     #[test]

@@ -329,7 +329,8 @@ mod tests {
                 .collect();
             let budget = rng.range_usize(0, 120) as u64;
             // D high enough to make discretization exact (step = 1 bit).
-            let params = KnapsackParams { budget_bits: budget, discretization: budget.max(1) as usize };
+            let params =
+                KnapsackParams { budget_bits: budget, discretization: budget.max(1) as usize };
             let a = allocate(&options, params);
 
             // Brute force.

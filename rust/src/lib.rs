@@ -7,7 +7,8 @@
 //!   Parameter-Server simulator ([`netsim`]), bandwidth monitoring
 //!   ([`bandwidth`]), the Eq. (2) compression budget, `A^compress`
 //!   selection, the Kimad+ knapsack DP ([`kimad`]), bidirectional EF21
-//!   ([`ef21`]) and the round loop ([`coordinator`]).
+//!   ([`ef21`]), the round loop ([`coordinator`]) and the parallel
+//!   scenario-matrix engine ([`scenarios`]).
 //! * **L2/L1 (build-time Python)** — the deep-model workload
 //!   (transformer fwd/bwd in JAX, FFN/error-curve hot spots as Pallas
 //!   kernels) AOT-lowered to HLO text and executed via [`runtime`]
@@ -39,4 +40,5 @@ pub mod optim;
 pub mod quadratic;
 pub mod reports;
 pub mod runtime;
+pub mod scenarios;
 pub mod util;

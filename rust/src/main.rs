@@ -4,6 +4,8 @@
 //!   train     run an experiment from a JSON config, write CSVs
 //!   report    regenerate a paper figure/table (fig1, fig3..fig9,
 //!             table1, table2, or `all`)
+//!   scenarios run a scenario matrix (traces × policies × workers ×
+//!             safety) in parallel, one JSON summary per cell
 //!   synthetic quick §4.1 quadratic comparison for one scenario
 //!   trace     sample a bandwidth trace spec (JSON) to stdout
 //!   presets   list AOT model presets available in artifacts/
@@ -22,7 +24,10 @@ kimad — adaptive gradient compression with bandwidth awareness (reproduction)
 
 USAGE:
   kimad train --config <file.json> [--artifacts DIR] [--eval-batches N] [--csv OUT]
-  kimad report <fig1|fig3..fig9|fig3to6|table1|table2|all> [--artifacts DIR] [--out-dir DIR] [--fast]
+  kimad report <fig1|fig3..fig9|fig3to6|table1|table2|all> [--artifacts DIR] \\
+               [--out-dir DIR] [--fast]
+  kimad scenarios [--grid <grid.json>] [--out-dir DIR] [--threads N] \\
+               [--rounds N] [--print-grid]
   kimad synthetic [--scenario xsmall|small|oscillation|high] [--fast] [--out-dir DIR]
   kimad trace --spec '<json TraceSpec>' [--seconds S] [--step S]
   kimad presets [--artifacts DIR]
@@ -37,7 +42,7 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> anyhow::Result<()> {
-    let args = Args::parse(argv, &["fast", "help"])?;
+    let args = Args::parse(argv, &["fast", "help", "print-grid"])?;
     if args.flag("help") || args.positional.is_empty() {
         println!("{USAGE}");
         return Ok(());
@@ -45,11 +50,52 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
     match args.positional[0].as_str() {
         "train" => train(&args),
         "report" => report(&args),
+        "scenarios" => scenarios(&args),
         "synthetic" => synthetic(&args),
         "trace" => trace(&args),
         "presets" => presets(&args),
         other => anyhow::bail!("unknown subcommand '{other}'\n{USAGE}"),
     }
+}
+
+/// `kimad scenarios` — run a scenario matrix in parallel and write one
+/// JSON summary per cell (plus index.json) under --out-dir.
+fn scenarios(args: &Args) -> anyhow::Result<()> {
+    let mut grid = match args.opt("grid") {
+        Some(path) => kimad::scenarios::ScenarioGrid::from_json_file(path.as_ref())?,
+        None => kimad::scenarios::ScenarioGrid::default_grid(),
+    };
+    if let Some(rounds) = args.opt("rounds") {
+        grid.base.rounds = rounds
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--rounds={rounds}: {e}"))?;
+    }
+    if args.flag("print-grid") {
+        println!("{}", grid.to_json());
+        return Ok(());
+    }
+    let threads = args.opt_usize("threads", 0)?;
+    let out_dir = PathBuf::from(args.opt_or("out-dir", "reports/scenarios"));
+    eprintln!(
+        "running grid '{}': {} cells ({} traces x {} policies x {} worker counts x {} safety)...",
+        grid.name,
+        grid.n_cells(),
+        grid.traces.len(),
+        grid.policies.len(),
+        grid.worker_counts.len(),
+        grid.safety_factors.len()
+    );
+    let t0 = std::time::Instant::now();
+    let summaries = kimad::scenarios::run_matrix(&grid, threads)?;
+    let wall = t0.elapsed().as_secs_f64();
+    kimad::scenarios::write_summaries(&out_dir, &grid, &summaries)?;
+    print!("{}", kimad::scenarios::render_table(&summaries));
+    println!(
+        "\n{} cells in {wall:.2}s wall; summaries under {}",
+        summaries.len(),
+        out_dir.display()
+    );
+    Ok(())
 }
 
 fn train(args: &Args) -> anyhow::Result<()> {

@@ -189,10 +189,11 @@ fn group_name(param_name: &str) -> String {
 }
 
 /// Split a flat vector according to layers, yielding (layer, slice).
-pub fn layer_slices<'a>(flat: &'a [f32], layers: &'a [Layer]) -> impl Iterator<Item = (&'a Layer, &'a [f32])> {
-    layers
-        .iter()
-        .map(move |l| (l, &flat[l.offset..l.offset + l.size]))
+pub fn layer_slices<'a>(
+    flat: &'a [f32],
+    layers: &'a [Layer],
+) -> impl Iterator<Item = (&'a Layer, &'a [f32])> {
+    layers.iter().map(move |l| (l, &flat[l.offset..l.offset + l.size]))
 }
 
 #[cfg(test)]

@@ -25,12 +25,13 @@ fn sim_with(budget_safety: f64, monitor_alpha: f64) -> Simulation<QuadraticSourc
     let q = Quadratic::paper_instance(200);
     let layers = q.layout(4).layers();
     let src = QuadraticSource::new(q, 0.2);
+    let wave = |phase: f64| SinSquaredTrace::new(6400.0, 0.05, 320.0).with_phase(phase);
     let net = NetSim::new(
         (0..2)
             .map(|i| {
                 Link::new(
-                    Box::new(SinSquaredTrace::new(6400.0, 0.05, 320.0).with_phase(0.3 * i as f64)),
-                    Box::new(SinSquaredTrace::new(6400.0, 0.05, 320.0).with_phase(1.0 + 0.3 * i as f64)),
+                    Box::new(wave(0.3 * i as f64)),
+                    Box::new(wave(1.0 + 0.3 * i as f64)),
                 )
             })
             .collect(),
@@ -47,6 +48,7 @@ fn sim_with(budget_safety: f64, monitor_alpha: f64) -> Simulation<QuadraticSourc
         prior_bps: 3520.0,
         round_deadline: Some(2.0),
         budget_safety,
+        threads: 1,
     };
     let mut sim = Simulation::new(cfg, net, src, vec![1.0f32; 200]);
     // Swap the monitors for the requested EWMA weight.
@@ -88,7 +90,10 @@ pub fn monitor_and_safety(ctx: &ReportCtx) -> anyhow::Result<String> {
     std::fs::create_dir_all(&ctx.out_dir)?;
     std::fs::write(ctx.csv_path("ablation_monitor_safety.csv"), table.to_csv())?;
     let mut md = table.render("", 3);
-    md.push_str("\nTradeoff: fresher estimates (higher a) and margin (lower s) cut deadline\noverruns at the cost of communicated volume.\n");
+    md.push_str(
+        "\nTradeoff: fresher estimates (higher a) and margin (lower s) cut deadline\n\
+         overruns at the cost of communicated volume.\n",
+    );
     Ok(md)
 }
 
@@ -135,7 +140,10 @@ pub fn discretization(ctx: &ReportCtx) -> anyhow::Result<String> {
     std::fs::create_dir_all(&ctx.out_dir)?;
     std::fs::write(ctx.csv_path("ablation_discretization.csv"), table.to_csv())?;
     let mut md = table.render("", 1);
-    md.push_str("\nD=1000 (the paper's setting) already sits at the error plateau; cost grows\nlinearly in D (O(N*K*D)).\n");
+    md.push_str(
+        "\nD=1000 (the paper's setting) already sits at the error plateau; cost grows\n\
+         linearly in D (O(N*K*D)).\n",
+    );
     Ok(md)
 }
 
@@ -153,7 +161,8 @@ mod tests {
     #[test]
     fn ablations_generate() {
         let dir = std::env::temp_dir().join(format!("kimad-abl-{}", std::process::id()));
-        let ctx = ReportCtx { artifacts: "artifacts".into(), out_dir: dir.clone(), fast: true };
+        let ctx =
+            ReportCtx { artifacts: "artifacts".into(), out_dir: dir.clone(), fast: true };
         let md = generate(&ctx).unwrap();
         assert!(md.contains("ablation: monitor"));
         assert!(md.contains("D=1000"));
@@ -168,7 +177,8 @@ mod tests {
         let options = topk_options(&curves, &crate::kimad::knapsack::paper_ratio_grid(), 64);
         let budget = 4000 * 64 / 8;
         let coarse = allocate(&options, KnapsackParams { budget_bits: budget, discretization: 50 });
-        let fine = allocate(&options, KnapsackParams { budget_bits: budget, discretization: 20000 });
+        let fine =
+            allocate(&options, KnapsackParams { budget_bits: budget, discretization: 20000 });
         assert!(fine.total_error <= coarse.total_error + 1e-9);
     }
 }

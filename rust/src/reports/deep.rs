@@ -28,7 +28,12 @@ fn bandwidth_scale(ctx: &ReportCtx) -> f64 {
 /// The §4.2 base experiment: M=4, sin² 30–330 Mbps (scaled to the
 /// model, see bandwidth_scale) with per-worker noise, T_comm = 1 s,
 /// γ = 0.01, TopK family, warm start.
-pub fn base_config(ctx: &ReportCtx, policy: CompressPolicy, t_comm: f64, m: usize) -> ExperimentConfig {
+pub fn base_config(
+    ctx: &ReportCtx,
+    policy: CompressPolicy,
+    t_comm: f64,
+    m: usize,
+) -> ExperimentConfig {
     let s = bandwidth_scale(ctx);
     let scaled = |seed: u64| match paper_bandwidth_spec(seed) {
         crate::bandwidth::TraceSpec::NoisySinSquared {
@@ -66,11 +71,16 @@ pub fn base_config(ctx: &ReportCtx, policy: CompressPolicy, t_comm: f64, m: usiz
         // Conservative budget: the trailing-window estimate overruns
         // the deadline on falling bandwidth without margin (DC2-style).
         budget_safety: 0.8,
+        threads: 0,
         seed: 21,
     }
 }
 
-fn run(ctx: &ReportCtx, cfg: &ExperimentConfig, eval_batches: usize) -> anyhow::Result<ExperimentResult> {
+fn run(
+    ctx: &ReportCtx,
+    cfg: &ExperimentConfig,
+    eval_batches: usize,
+) -> anyhow::Result<ExperimentResult> {
     run_experiment(cfg, Some(&ctx.artifacts), eval_batches)
 }
 
@@ -100,7 +110,10 @@ pub fn fig7(ctx: &ReportCtx) -> anyhow::Result<String> {
     let t_comms = [1.0, 0.5, 0.2, 0.1];
     let mut set = SeriesSet::default();
     let mut md = String::from("## fig7 (communication adaptivity, M=4)\n\n");
-    md.push_str("| T_comm | mean up Mbit/round | max (uncompressed) Mbit | rounds at cap |\n|---|---|---|---|\n");
+    md.push_str(
+        "| T_comm | mean up Mbit/round | max (uncompressed) Mbit | rounds at cap |\n\
+         |---|---|---|---|\n",
+    );
     #[allow(unused_assignments)]
     let mut max_bits = 0.0f64;
     for &t_comm in &t_comms {
@@ -167,7 +180,8 @@ pub fn fig8(ctx: &ReportCtx) -> anyhow::Result<String> {
     let mut md = String::from("## fig8 (loss curve, M=4, T_comm=1.0s)\n\n");
     md.push_str(&format!(
         "| method | rounds | total time | final loss |\n|---|---|---|---|\n\
-         | Kimad | {} | {k_end:.1}s | {:.4} |\n| EF21 (ratio {ratio:.3}) | {} | {e_end:.1}s | {:.4} |\n",
+         | Kimad | {} | {k_end:.1}s | {:.4} |\n\
+         | EF21 (ratio {ratio:.3}) | {} | {e_end:.1}s | {:.4} |\n",
         kimad.records.len(),
         kimad.records.last().map(|r| r.loss).unwrap_or(f64::NAN),
         ef.records.len(),

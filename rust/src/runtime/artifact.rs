@@ -144,7 +144,8 @@ mod tests {
     use super::*;
 
     fn tmpdir(tag: &str) -> PathBuf {
-        let dir = std::env::temp_dir().join(format!("kimad-artifact-test-{tag}-{}", std::process::id()));
+        let dir = std::env::temp_dir()
+            .join(format!("kimad-artifact-test-{tag}-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
         dir

@@ -6,10 +6,19 @@
 //! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §2).
 //!
 //!   artifact.rs   — manifest/layout/params loading
+//!   backend.rs    — PJRT bindings (stubbed in offline builds)
 //!   client.rs     — PJRT client + executable wrappers
 //!   model_exec.rs — the deep-model GradientSource over the runtime
 
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the `pjrt` feature needs the real xla PJRT bindings vendored under \
+     vendor/xla and wired into runtime::backend; this offline build \
+     ships only the stub"
+);
+
 pub mod artifact;
+pub mod backend;
 pub mod client;
 pub mod model_exec;
 

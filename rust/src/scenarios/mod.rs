@@ -1,0 +1,617 @@
+//! Scenario-matrix engine: sweep {bandwidth trace × compression policy
+//! × worker count × budget safety factor} and execute the cross-product
+//! in parallel, one JSON summary per cell.
+//!
+//! This is how the repo evaluates "as many scenarios as you can
+//! imagine" (ROADMAP) the way Accordion and the gradient-compression
+//! utility study sweep regimes: a grid is declared (in code or as a
+//! JSON file), expanded deterministically, and each cell runs a full
+//! [`crate::driver::run_experiment`] on a work-stealing thread pool.
+//! Cells pin their inner simulation to one thread
+//! (`ExperimentConfig::threads = 1`) so the grid level owns all the
+//! parallelism; per-cell results are bit-reproducible regardless of
+//! pool size.
+//!
+//! Outputs land under an output directory as `<cell-id>.json` plus an
+//! `index.json` manifest — the shape `reports/` consumes.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::bandwidth::TraceSpec;
+use crate::config::{
+    policy_from_json, policy_to_json, ExperimentConfig, OptimizerSpec, WorkloadSpec,
+};
+use crate::driver::run_experiment;
+use crate::kimad::{BudgetParams, CompressPolicy};
+use crate::util::json::Value;
+
+/// One named uplink bandwidth pattern in the grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NamedTrace {
+    pub name: String,
+    pub spec: TraceSpec,
+}
+
+/// One named `A^compress` policy in the grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NamedPolicy {
+    pub name: String,
+    pub policy: CompressPolicy,
+}
+
+/// Per-cell constants: the workload and schedule every cell shares.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridBase {
+    /// Quadratic workload dimension (§4.1).
+    pub d: usize,
+    pub n_layers: usize,
+    pub t_comp: f64,
+    /// Per-direction communication-time budget (§4.2 convention).
+    pub t_comm: f64,
+    pub gamma: f64,
+    pub rounds: u64,
+    /// Downlink pattern (shared; the sweep varies the uplink).
+    pub downlink: TraceSpec,
+    pub warm_start: bool,
+    pub seed: u64,
+}
+
+/// The declarative scenario matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioGrid {
+    pub name: String,
+    pub base: GridBase,
+    pub traces: Vec<NamedTrace>,
+    pub policies: Vec<NamedPolicy>,
+    pub worker_counts: Vec<usize>,
+    pub safety_factors: Vec<f64>,
+}
+
+/// One expanded cell: a unique id plus the full experiment config.
+#[derive(Debug, Clone)]
+pub struct ScenarioCell {
+    pub id: String,
+    pub trace: String,
+    pub policy: String,
+    pub m: usize,
+    pub safety: f64,
+    pub cfg: ExperimentConfig,
+}
+
+/// What one executed cell produced.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellSummary {
+    pub id: String,
+    pub trace: String,
+    pub policy: String,
+    pub m: usize,
+    pub safety: f64,
+    pub rounds: usize,
+    /// Final objective f(x) at the server model.
+    pub final_f_x: f64,
+    /// Final mean worker loss.
+    pub final_loss: f64,
+    /// Σ over rounds and workers of uplink bits.
+    pub total_up_bits: u64,
+    /// Σ over rounds of broadcast bits.
+    pub total_down_bits: u64,
+    /// Virtual seconds simulated.
+    pub virtual_time_s: f64,
+    pub mean_step_time_s: f64,
+    /// Wall-clock milliseconds this cell took to execute.
+    pub wall_ms: f64,
+}
+
+impl ScenarioGrid {
+    /// The built-in quick grid: 2 traces × 4 policies × 2 worker counts
+    /// (× 1 safety factor) over the §4.1 quadratic — the smallest sweep
+    /// that exercises every `CompressPolicy` under both a flat and an
+    /// oscillating link.
+    pub fn default_grid() -> Self {
+        let cb = 64.0; // bits per sparse coordinate
+        Self {
+            name: "quick".into(),
+            base: GridBase {
+                d: 30,
+                n_layers: 3,
+                t_comp: 0.1,
+                t_comm: 0.9,
+                gamma: 0.03,
+                rounds: 60,
+                downlink: TraceSpec::Constant { bps: 1e7 },
+                warm_start: true,
+                seed: 21,
+            },
+            traces: vec![
+                NamedTrace {
+                    name: "flat".into(),
+                    spec: TraceSpec::Constant { bps: 16.0 * cb },
+                },
+                NamedTrace {
+                    name: "wave".into(),
+                    spec: TraceSpec::SinSquared {
+                        eta: 24.0 * cb,
+                        theta: 0.1,
+                        delta: 2.0 * cb,
+                        phase: 0.0,
+                    },
+                },
+            ],
+            policies: vec![
+                NamedPolicy {
+                    name: "ef21-fixed25".into(),
+                    policy: CompressPolicy::FixedRatio { ratio: 0.25 },
+                },
+                NamedPolicy {
+                    name: "kimad".into(),
+                    policy: CompressPolicy::KimadUniform,
+                },
+                NamedPolicy {
+                    name: "kimad-plus".into(),
+                    policy: CompressPolicy::KimadPlus { discretization: 400, ratios: vec![] },
+                },
+                NamedPolicy {
+                    name: "whole-topk".into(),
+                    policy: CompressPolicy::WholeModelTopK,
+                },
+            ],
+            worker_counts: vec![1, 4],
+            safety_factors: vec![1.0],
+        }
+    }
+
+    /// Total number of cells in the cross-product.
+    pub fn n_cells(&self) -> usize {
+        self.traces.len() * self.policies.len() * self.worker_counts.len()
+            * self.safety_factors.len()
+    }
+
+    /// Expand the cross-product in deterministic (trace-major) order.
+    pub fn expand(&self) -> Vec<ScenarioCell> {
+        let mut cells = Vec::with_capacity(self.n_cells());
+        for tr in &self.traces {
+            for pol in &self.policies {
+                for &m in &self.worker_counts {
+                    for &safety in &self.safety_factors {
+                        let id = format!("{}_{}_m{m}_s{safety}", tr.name, pol.name);
+                        let cfg = ExperimentConfig {
+                            name: id.clone(),
+                            m,
+                            workload: WorkloadSpec::Quadratic {
+                                d: self.base.d,
+                                n_layers: self.base.n_layers,
+                                t_comp: self.base.t_comp,
+                            },
+                            budget: BudgetParams::PerDirection { t_comm: self.base.t_comm },
+                            up_policy: pol.policy.clone(),
+                            down_policy: pol.policy.clone(),
+                            optimizer: OptimizerSpec {
+                                gamma: self.base.gamma,
+                                layer_weights: vec![],
+                            },
+                            uplink: tr.spec.clone(),
+                            downlink: self.base.downlink.clone(),
+                            alpha: 1.0,
+                            rounds: self.base.rounds,
+                            prior_bps: 0.0,
+                            warm_start: self.base.warm_start,
+                            single_layer: false,
+                            budget_safety: safety,
+                            // The grid level owns the parallelism; one
+                            // thread per cell keeps the pool honest.
+                            threads: 1,
+                            seed: self.base.seed,
+                        };
+                        cells.push(ScenarioCell {
+                            id,
+                            trace: tr.name.clone(),
+                            policy: pol.name.clone(),
+                            m,
+                            safety,
+                            cfg,
+                        });
+                    }
+                }
+            }
+        }
+        cells
+    }
+
+    /// Reject empty axes and duplicate cell ids before running.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.traces.is_empty(), "grid '{}' has no traces", self.name);
+        anyhow::ensure!(!self.policies.is_empty(), "grid '{}' has no policies", self.name);
+        anyhow::ensure!(
+            !self.worker_counts.is_empty(),
+            "grid '{}' has no worker counts",
+            self.name
+        );
+        anyhow::ensure!(
+            !self.safety_factors.is_empty(),
+            "grid '{}' has no safety factors",
+            self.name
+        );
+        anyhow::ensure!(
+            self.worker_counts.iter().all(|&m| m >= 1),
+            "worker counts must be >= 1"
+        );
+        let mut ids: Vec<String> = self.expand().into_iter().map(|c| c.id).collect();
+        let n = ids.len();
+        ids.sort();
+        ids.dedup();
+        anyhow::ensure!(
+            ids.len() == n,
+            "grid '{}' expands to duplicate cell ids (axis names must be unique)",
+            self.name
+        );
+        Ok(())
+    }
+
+    // -- JSON codec (grid files) ---------------------------------------
+
+    pub fn to_json(&self) -> Value {
+        let base = Value::obj(vec![
+            ("d", Value::num(self.base.d as f64)),
+            ("n_layers", Value::num(self.base.n_layers as f64)),
+            ("t_comp", Value::num(self.base.t_comp)),
+            ("t_comm", Value::num(self.base.t_comm)),
+            ("gamma", Value::num(self.base.gamma)),
+            ("rounds", Value::num(self.base.rounds as f64)),
+            ("downlink", self.base.downlink.to_json()),
+            ("warm_start", Value::Bool(self.base.warm_start)),
+            ("seed", Value::num(self.base.seed as f64)),
+        ]);
+        Value::obj(vec![
+            ("name", Value::str(self.name.clone())),
+            ("base", base),
+            (
+                "traces",
+                Value::Arr(
+                    self.traces
+                        .iter()
+                        .map(|t| {
+                            Value::obj(vec![
+                                ("name", Value::str(t.name.clone())),
+                                ("spec", t.spec.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "policies",
+                Value::Arr(
+                    self.policies
+                        .iter()
+                        .map(|p| {
+                            Value::obj(vec![
+                                ("name", Value::str(p.name.clone())),
+                                ("policy", policy_to_json(&p.policy)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "worker_counts",
+                Value::Arr(
+                    self.worker_counts
+                        .iter()
+                        .map(|&m| Value::num(m as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "safety_factors",
+                Value::Arr(
+                    self.safety_factors
+                        .iter()
+                        .map(|&s| Value::num(s))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let b = v.get("base")?;
+        let base = GridBase {
+            d: b.get("d")?.as_usize()?,
+            n_layers: b.get("n_layers")?.as_usize()?,
+            t_comp: b.get("t_comp")?.as_f64()?,
+            t_comm: b.get("t_comm")?.as_f64()?,
+            gamma: b.get("gamma")?.as_f64()?,
+            rounds: b.get("rounds")?.as_u64()?,
+            downlink: TraceSpec::from_json(b.get("downlink")?)?,
+            warm_start: b
+                .opt("warm_start")
+                .and_then(|x| x.as_bool().ok())
+                .unwrap_or(true),
+            seed: b.opt("seed").and_then(|x| x.as_u64().ok()).unwrap_or(21),
+        };
+        let traces = v
+            .get("traces")?
+            .as_arr()?
+            .iter()
+            .map(|t| {
+                Ok(NamedTrace {
+                    name: t.get("name")?.as_str()?.to_string(),
+                    spec: TraceSpec::from_json(t.get("spec")?)?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let policies = v
+            .get("policies")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(NamedPolicy {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    policy: policy_from_json(p.get("policy")?)?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let worker_counts = v
+            .get("worker_counts")?
+            .as_arr()?
+            .iter()
+            .map(|m| m.as_usize())
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let safety_factors = v
+            .get("safety_factors")?
+            .as_arr()?
+            .iter()
+            .map(|s| s.as_f64())
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            base,
+            traces,
+            policies,
+            worker_counts,
+            safety_factors,
+        })
+    }
+
+    pub fn from_json_file(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Self::from_json(&Value::parse(&text)?)
+    }
+}
+
+impl CellSummary {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("id", Value::str(self.id.clone())),
+            ("trace", Value::str(self.trace.clone())),
+            ("policy", Value::str(self.policy.clone())),
+            ("m", Value::num(self.m as f64)),
+            ("safety", Value::num(self.safety)),
+            ("rounds", Value::num(self.rounds as f64)),
+            ("final_f_x", Value::num(self.final_f_x)),
+            ("final_loss", Value::num(self.final_loss)),
+            ("total_up_bits", Value::num(self.total_up_bits as f64)),
+            ("total_down_bits", Value::num(self.total_down_bits as f64)),
+            ("virtual_time_s", Value::num(self.virtual_time_s)),
+            ("mean_step_time_s", Value::num(self.mean_step_time_s)),
+            ("wall_ms", Value::num(self.wall_ms)),
+        ])
+    }
+}
+
+/// Execute one expanded cell to completion.
+fn run_cell(cell: &ScenarioCell) -> anyhow::Result<CellSummary> {
+    let t0 = Instant::now();
+    let res = run_experiment(&cell.cfg, None, 0)
+        .map_err(|e| anyhow::anyhow!("cell '{}': {e}", cell.id))?;
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let last = res
+        .records
+        .last()
+        .ok_or_else(|| anyhow::anyhow!("cell '{}' produced no rounds", cell.id))?;
+    let total_up_bits: u64 = res.records.iter().map(|r| r.total_up_bits()).sum();
+    let total_down_bits: u64 = res.records.iter().map(|r| r.down_bits).sum();
+    Ok(CellSummary {
+        id: cell.id.clone(),
+        trace: cell.trace.clone(),
+        policy: cell.policy.clone(),
+        m: cell.m,
+        safety: cell.safety,
+        rounds: res.records.len(),
+        final_f_x: last.f_x,
+        final_loss: last.loss,
+        total_up_bits,
+        total_down_bits,
+        virtual_time_s: res.total_time,
+        mean_step_time_s: res.mean_step_time(),
+        wall_ms,
+    })
+}
+
+/// Run every cell of the grid on a pool of `threads` workers (0 =
+/// available parallelism), returning summaries in expansion order.
+pub fn run_matrix(grid: &ScenarioGrid, threads: usize) -> anyhow::Result<Vec<CellSummary>> {
+    grid.validate()?;
+    let cells = grid.expand();
+    let auto = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let n_threads = if threads == 0 { auto } else { threads }.clamp(1, cells.len().max(1));
+
+    type CellSlot = Mutex<Option<anyhow::Result<CellSummary>>>;
+    let next = AtomicUsize::new(0);
+    let slots: Vec<CellSlot> = (0..cells.len()).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|s| {
+        for _ in 0..n_threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let out = run_cell(&cells[i]);
+                *slots[i].lock().expect("cell slot poisoned") = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .expect("cell slot poisoned")
+                .expect("work queue covered every cell")
+        })
+        .collect()
+}
+
+/// Write `<id>.json` per cell plus an `index.json` manifest (grid spec
+/// included, so a results directory is self-describing).
+pub fn write_summaries(
+    out_dir: &Path,
+    grid: &ScenarioGrid,
+    summaries: &[CellSummary],
+) -> anyhow::Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    for s in summaries {
+        let path = out_dir.join(format!("{}.json", sanitize(&s.id)));
+        std::fs::write(&path, s.to_json().to_string())?;
+    }
+    let index = Value::obj(vec![
+        ("grid", grid.to_json()),
+        ("n_cells", Value::num(summaries.len() as f64)),
+        (
+            "cells",
+            Value::Arr(
+                summaries
+                    .iter()
+                    .map(|s| Value::str(format!("{}.json", sanitize(&s.id))))
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(out_dir.join("index.json"), index.to_string())?;
+    Ok(())
+}
+
+/// Make a cell id filesystem-safe.
+fn sanitize(id: &str) -> String {
+    id.chars()
+        .map(|c| if c.is_alphanumeric() || c == '-' || c == '_' || c == '.' { c } else { '-' })
+        .collect()
+}
+
+/// Render a compact markdown table over the summaries (CLI output).
+pub fn render_table(summaries: &[CellSummary]) -> String {
+    let mut out = String::from(
+        "| cell | rounds | final f(x) | up Mbit | step s | wall ms |\n|---|---|---|---|---|---|\n",
+    );
+    for s in summaries {
+        out.push_str(&format!(
+            "| {} | {} | {:.3e} | {:.3} | {:.2} | {:.0} |\n",
+            s.id,
+            s.rounds,
+            s.final_f_x,
+            s.total_up_bits as f64 / 1e6,
+            s.mean_step_time_s,
+            s.wall_ms,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_grid() -> ScenarioGrid {
+        let mut g = ScenarioGrid::default_grid();
+        g.base.rounds = 12;
+        g.policies.truncate(2);
+        g.worker_counts = vec![1, 2];
+        g
+    }
+
+    #[test]
+    fn expansion_is_full_cross_product() {
+        let g = ScenarioGrid::default_grid();
+        assert_eq!(g.n_cells(), 2 * 4 * 2);
+        let cells = g.expand();
+        assert_eq!(cells.len(), g.n_cells());
+        let mut ids: Vec<_> = cells.iter().map(|c| c.id.clone()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), cells.len(), "ids must be unique");
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn grid_json_roundtrip() {
+        let g = ScenarioGrid::default_grid();
+        let text = g.to_json().to_string();
+        let back = ScenarioGrid::from_json(&Value::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, g);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_grids() {
+        let mut g = ScenarioGrid::default_grid();
+        g.policies.clear();
+        assert!(g.validate().is_err());
+        let mut g = ScenarioGrid::default_grid();
+        g.worker_counts = vec![0];
+        assert!(g.validate().is_err());
+        let mut g = ScenarioGrid::default_grid();
+        g.traces[1].name = g.traces[0].name.clone();
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn matrix_runs_and_is_deterministic_across_pool_sizes() {
+        let g = tiny_grid();
+        let serial = run_matrix(&g, 1).unwrap();
+        let parallel = run_matrix(&g, 4).unwrap();
+        assert_eq!(serial.len(), g.n_cells());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.id, b.id, "expansion order must be stable");
+            assert_eq!(a.final_f_x, b.final_f_x, "{}", a.id);
+            assert_eq!(a.total_up_bits, b.total_up_bits, "{}", a.id);
+            assert_eq!(a.rounds, b.rounds, "{}", a.id);
+        }
+        // Cells actually trained: the quadratic objective dropped.
+        for s in &serial {
+            assert!(s.final_f_x.is_finite(), "{}", s.id);
+            assert!(s.virtual_time_s > 0.0, "{}", s.id);
+        }
+    }
+
+    #[test]
+    fn summaries_written_one_per_cell() {
+        let dir = std::env::temp_dir().join(format!("kimad-scen-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let g = tiny_grid();
+        let summaries = run_matrix(&g, 0).unwrap();
+        write_summaries(&dir, &g, &summaries).unwrap();
+        for s in &summaries {
+            let p = dir.join(format!("{}.json", sanitize(&s.id)));
+            let v = Value::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+            assert_eq!(v.get("id").unwrap().as_str().unwrap(), s.id);
+            assert!(v.get("final_f_x").unwrap().as_f64().unwrap().is_finite());
+        }
+        let idx =
+            Value::parse(&std::fs::read_to_string(dir.join("index.json")).unwrap()).unwrap();
+        assert_eq!(
+            idx.get("n_cells").unwrap().as_usize().unwrap(),
+            summaries.len()
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sanitize_keeps_ids_safe() {
+        assert_eq!(sanitize("wave_kimad_m4_s0.8"), "wave_kimad_m4_s0.8");
+        assert_eq!(sanitize("a/b c"), "a-b-c");
+    }
+}

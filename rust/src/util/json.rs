@@ -103,13 +103,7 @@ impl Value {
         Value::Num(n)
     }
 
-    // -- serialization ------------------------------------------------
-
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
+    // -- serialization (via Display: `value.to_string()`) --------------
 
     fn write(&self, out: &mut String) {
         match self {
@@ -146,6 +140,14 @@ impl Value {
                 out.push('}');
             }
         }
+    }
+}
+
+impl std::fmt::Display for Value {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 

@@ -109,14 +109,23 @@ impl Rng {
 
     /// `k` distinct indices from 0..n (partial Fisher–Yates), O(n).
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.sample_indices_into(n, k, &mut out);
+        out
+    }
+
+    /// [`sample_indices`](Self::sample_indices) into a reused buffer —
+    /// the single implementation both paths share, so the sampling
+    /// stream can never diverge between them.
+    pub fn sample_indices_into(&mut self, n: usize, k: usize, out: &mut Vec<u32>) {
         let k = k.min(n);
-        let mut all: Vec<u32> = (0..n as u32).collect();
+        out.clear();
+        out.extend(0..n as u32);
         for i in 0..k {
             let j = self.range_usize(i, n);
-            all.swap(i, j);
+            out.swap(i, j);
         }
-        all.truncate(k);
-        all
+        out.truncate(k);
     }
 }
 
@@ -184,6 +193,17 @@ mod tests {
         assert!(s.iter().all(|&i| i < 100));
         // k > n clamps
         assert_eq!(r.sample_indices(3, 10).len(), 3);
+    }
+
+    #[test]
+    fn sample_indices_into_matches_allocating() {
+        let mut a = Rng::seed_from_u64(3);
+        let mut b = Rng::seed_from_u64(3);
+        let mut buf = Vec::new();
+        for &(n, k) in &[(10usize, 3usize), (50, 50), (7, 0), (100, 99)] {
+            b.sample_indices_into(n, k, &mut buf);
+            assert_eq!(a.sample_indices(n, k), buf, "n={n} k={k}");
+        }
     }
 
     #[test]

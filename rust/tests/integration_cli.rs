@@ -11,9 +11,71 @@ fn help_lists_subcommands() {
     let out = kimad().arg("--help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["train", "report", "synthetic", "trace", "presets"] {
+    for cmd in ["train", "report", "scenarios", "synthetic", "trace", "presets"] {
         assert!(text.contains(cmd), "help missing '{cmd}'");
     }
+}
+
+#[test]
+fn scenarios_runs_default_grid_and_writes_cell_summaries() {
+    let dir = std::env::temp_dir().join(format!("kimad-cli-scen-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = kimad()
+        .args([
+            "scenarios",
+            "--rounds",
+            "10",
+            "--threads",
+            "4",
+            "--out-dir",
+            dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    // The default grid is 2 traces x 4 policies x 2 worker counts.
+    assert!(text.contains("16 cells"), "{text}");
+    let index = std::fs::read_to_string(dir.join("index.json")).unwrap();
+    assert!(index.contains("\"n_cells\":16"), "{index}");
+    let n_json = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter(|e| {
+            e.as_ref()
+                .unwrap()
+                .path()
+                .extension()
+                .is_some_and(|x| x == "json")
+        })
+        .count();
+    assert_eq!(n_json, 16 + 1, "one summary per cell + index.json");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn scenarios_print_grid_roundtrips_through_file() {
+    let dir = std::env::temp_dir().join(format!("kimad-cli-grid-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let printed = kimad().args(["scenarios", "--print-grid"]).output().unwrap();
+    assert!(printed.status.success());
+    let grid_path = dir.join("grid.json");
+    std::fs::write(&grid_path, &printed.stdout).unwrap();
+    // A 1-cell run from the printed grid file (shrunk via --rounds).
+    let out = kimad()
+        .args([
+            "scenarios",
+            "--grid",
+            grid_path.to_str().unwrap(),
+            "--rounds",
+            "5",
+            "--out-dir",
+            dir.join("out").to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(dir.join("out/index.json").exists());
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

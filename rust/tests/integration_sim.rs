@@ -23,6 +23,7 @@ fn quad_cfg(m: usize, policy: CompressPolicy, rounds: u64) -> ExperimentConfig {
         warm_start: true,
         single_layer: false,
         budget_safety: 1.0,
+        threads: 0,
         seed: 21,
     }
 }

@@ -1,7 +1,9 @@
 //! Property-based invariants over the core algorithms (util::prop,
 //! seeded + replayable).
 
-use kimad::compress::{compression_error, Compressor, Identity, OneBitSign, QuantizeBits, RandK, TopK};
+use kimad::compress::{
+    compression_error, Compressor, Identity, OneBitSign, QuantizeBits, RandK, TopK,
+};
 use kimad::ef21::theory::{canonical_consts, max_gamma};
 use kimad::ef21::Estimator;
 use kimad::kimad::knapsack::{allocate, topk_options, KnapsackParams, Option_};

@@ -1,0 +1,195 @@
+//! Edge cases of the Kimad budget machinery: zero budget, single-layer
+//! models, budgets exceeding the whole model, and the empty-`ratios`
+//! fallback to the paper's {0.01 + 0.02k} grid.
+
+use kimad::compress::F32_BITS;
+use kimad::kimad::knapsack::{allocate, paper_ratio_grid, topk_options, KnapsackParams};
+use kimad::kimad::{CompressPolicy, ErrorCurve, Selector};
+use kimad::model::ModelLayout;
+use kimad::util::rng::Rng;
+
+const COORD_BITS: u64 = 64; // index + value on the sparse wire
+
+fn rand_vec(seed: u64, d: usize) -> Vec<f32> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..d).map(|_| rng.range_f32(-3.0, 3.0)).collect()
+}
+
+/// Random magnitudes bounded away from zero: every coordinate carries
+/// energy, so "keep everything" is the unique optimum at full budget
+/// (no zero-value ties for the knapsack DP to exploit).
+fn nonzero_vec(seed: u64, d: usize) -> Vec<f32> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..d)
+        .map(|_| {
+            let v = rng.range_f32(0.5, 3.0);
+            if rng.next_f64() < 0.5 {
+                -v
+            } else {
+                v
+            }
+        })
+        .collect()
+}
+
+fn adaptive_policies() -> Vec<CompressPolicy> {
+    vec![
+        CompressPolicy::KimadUniform,
+        CompressPolicy::KimadPlus { discretization: 500, ratios: vec![] },
+        CompressPolicy::WholeModelTopK,
+    ]
+}
+
+#[test]
+fn zero_budget_selects_nothing_everywhere() {
+    let layout = ModelLayout::synthetic(&[16, 48, 16]);
+    let layers = layout.layers();
+    let diff = rand_vec(1, 80);
+    for policy in adaptive_policies() {
+        let sel = Selector::new(policy.clone()).select(&diff, &layers, 0);
+        assert!(
+            sel.k_per_layer.iter().all(|&k| k == 0),
+            "{policy:?} selected coordinates with zero budget: {:?}",
+            sel.k_per_layer
+        );
+        assert_eq!(sel.planned_bits, 0, "{policy:?}");
+    }
+}
+
+#[test]
+fn single_layer_model_spends_whole_budget() {
+    let layout = ModelLayout::synthetic(&[64]);
+    let layers = layout.layers();
+    // Strictly positive, all-distinct magnitudes: the error curve is
+    // strictly decreasing, so every policy's optimum is unique.
+    let diff: Vec<f32> = (1..=64).map(|i| i as f32 / 7.0).collect();
+    for budget_k in [1u64, 7, 33, 64] {
+        let budget = budget_k * COORD_BITS;
+        for policy in adaptive_policies() {
+            let sel = Selector::new(policy.clone()).select(&diff, &layers, budget);
+            assert_eq!(sel.k_per_layer.len(), 1, "{policy:?}");
+            assert!(sel.planned_bits <= budget, "{policy:?} at budget_k={budget_k}");
+            // A single layer leaves no split to optimize: every policy
+            // should spend the full coordinate budget.
+            assert_eq!(
+                sel.k_per_layer[0] as u64, budget_k,
+                "{policy:?} at budget_k={budget_k}"
+            );
+        }
+    }
+}
+
+#[test]
+fn budget_larger_than_model_caps_at_full_rank() {
+    let layout = ModelLayout::synthetic(&[10, 20, 10]);
+    let layers = layout.layers();
+    let d_total = 40usize;
+    let diff = nonzero_vec(3, d_total);
+    let budget = 10 * d_total as u64 * COORD_BITS; // 10x the model
+    let curves: Vec<ErrorCurve> = layers
+        .iter()
+        .map(|l| ErrorCurve::build(&diff[l.offset..l.offset + l.size]))
+        .collect();
+    for policy in adaptive_policies() {
+        let sel = Selector::new(policy.clone()).select(&diff, &layers, budget);
+        let total: usize = sel.k_per_layer.iter().sum();
+        assert_eq!(total, d_total, "{policy:?} must keep every coordinate");
+        for (l, &k) in layers.iter().zip(&sel.k_per_layer) {
+            assert!(k <= l.size, "{policy:?}: k={k} > layer size {}", l.size);
+        }
+        assert_eq!(sel.predicted_error(&curves), 0.0, "{policy:?}");
+    }
+}
+
+#[test]
+fn empty_ratio_grid_falls_back_to_paper_grid() {
+    // Layers above the exact-grid threshold (d > 128) exercise the
+    // ratio grid; with `ratios: vec![]` the selection must match an
+    // explicit paper grid exactly.
+    let layout = ModelLayout::synthetic(&[300, 500]);
+    let layers = layout.layers();
+    let diff = rand_vec(4, 800);
+    let budget = 120 * COORD_BITS;
+    let implicit =
+        Selector::new(CompressPolicy::KimadPlus { discretization: 1000, ratios: vec![] })
+            .select(&diff, &layers, budget);
+    let explicit = Selector::new(CompressPolicy::KimadPlus {
+        discretization: 1000,
+        ratios: paper_ratio_grid(),
+    })
+    .select(&diff, &layers, budget);
+    assert_eq!(implicit, explicit);
+    assert!(implicit.planned_bits <= budget);
+}
+
+#[test]
+fn paper_grid_never_reaches_one_but_exact_grid_does() {
+    // The §4.3 grid tops out at 0.99, so a >128-coord layer keeps at
+    // most ceil(0.99 d) coordinates; small layers use the exact K grid
+    // and can reach full rank. Both must respect the budget.
+    let big = 200usize;
+    let curve_big = ErrorCurve::build(&rand_vec(5, big));
+    let opts = topk_options(&[curve_big], &paper_ratio_grid(), COORD_BITS);
+    let max_k = opts[0].iter().map(|o| o.bits / COORD_BITS).max().unwrap();
+    assert_eq!(max_k as usize, (0.99f64 * big as f64).ceil() as usize);
+
+    let small = 100usize;
+    let curve_small = ErrorCurve::build(&rand_vec(6, small));
+    let opts = topk_options(&[curve_small], &paper_ratio_grid(), COORD_BITS);
+    let max_k = opts[0].iter().map(|o| o.bits / COORD_BITS).max().unwrap();
+    assert_eq!(max_k as usize, small, "exact grid covers full rank");
+}
+
+#[test]
+fn knapsack_zero_budget_and_oversized_budget() {
+    let curves = vec![
+        ErrorCurve::build(&nonzero_vec(7, 60)),
+        ErrorCurve::build(&nonzero_vec(8, 90)),
+    ];
+    let options = topk_options(&curves, &paper_ratio_grid(), COORD_BITS);
+
+    let zero = allocate(&options, KnapsackParams { budget_bits: 0, discretization: 100 });
+    assert_eq!(zero.total_bits, 0);
+    assert!(!zero.degraded);
+    let full_energy: f64 = curves.iter().map(|c| c.total()).sum();
+    assert!((zero.total_error - full_energy).abs() < 1e-9);
+
+    let huge = allocate(
+        &options,
+        KnapsackParams { budget_bits: u64::MAX / 4, discretization: 2000 },
+    );
+    assert!(!huge.degraded);
+    // Exact K grids (d <= 128): the oversized budget keeps everything.
+    assert_eq!(huge.total_bits, (60 + 90) * COORD_BITS);
+    assert!(huge.total_error < 1e-12);
+}
+
+#[test]
+fn knapsack_single_layer_budget_sweep_monotone() {
+    // More budget can never increase the optimal error.
+    let curve = ErrorCurve::build(&rand_vec(9, 120));
+    let options = topk_options(&[curve], &paper_ratio_grid(), COORD_BITS);
+    let mut prev = f64::INFINITY;
+    for budget_k in 0..=120u64 {
+        let a = allocate(
+            &options,
+            KnapsackParams { budget_bits: budget_k * COORD_BITS, discretization: 500 },
+        );
+        assert!(a.total_bits <= budget_k * COORD_BITS);
+        assert!(
+            a.total_error <= prev + 1e-9,
+            "error rose at budget_k={budget_k}: {} > {prev}",
+            a.total_error
+        );
+        prev = a.total_error;
+    }
+    assert!(prev < 1e-12, "full budget reaches zero error");
+}
+
+#[test]
+fn selection_consistent_under_f32_bits_wire_math() {
+    // Guard the 64-bit sparse coordinate assumption the budget math
+    // rests on (index + value), so a wire-format change cannot silently
+    // skew every budget by a constant factor.
+    assert_eq!(COORD_BITS, F32_BITS + kimad::compress::IDX_BITS);
+}

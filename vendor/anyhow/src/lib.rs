@@ -1,0 +1,126 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build runs with no network access, so instead of the registry
+//! crate this vendored shim provides the exact API surface the `kimad`
+//! workspace uses: [`Error`], [`Result`], and the [`anyhow!`],
+//! [`bail!`] and [`ensure!`] macros. Errors carry a formatted message
+//! plus the display of any wrapped source error; `{:#}` renders the
+//! same as `{}` (there is no context chain to expand).
+
+use std::fmt;
+
+/// A message-carrying error type, convertible from any std error.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from a preformatted message.
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut msg = e.to_string();
+        let mut source = e.source();
+        while let Some(s) = source {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            source = s.source();
+        }
+        Self { msg }
+    }
+}
+
+/// `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (or a displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::format!("{}", $err))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_and_conversions() {
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+        assert_eq!(format!("{e:#}"), "x = 3");
+        assert_eq!(fails(true).unwrap(), 7);
+        assert_eq!(fails(false).unwrap_err().to_string(), "flag was false");
+
+        fn bails() -> Result<()> {
+            bail!("boom {}", 1)
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "boom 1");
+
+        fn io() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+        }
+        assert!(io().unwrap_err().to_string().contains("No such file"));
+
+        let parsed: std::result::Result<f64, _> = "abc".parse();
+        let e: Error = parsed.unwrap_err().into();
+        assert!(!e.to_string().is_empty());
+    }
+}
