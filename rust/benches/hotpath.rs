@@ -149,6 +149,8 @@ fn main() {
         round_deadline: Some(1.0),
         budget_safety: 1.0,
         threads: 0,
+        mode: kimad::coordinator::ExecMode::Sync,
+        compute: kimad::coordinator::ComputeModel::Constant,
     };
     let net = NetSim::new(
         (0..4)
@@ -185,6 +187,8 @@ fn main() {
         round_deadline: Some(1.0),
         budget_safety: 1.0,
         threads: 1,
+        mode: kimad::coordinator::ExecMode::Sync,
+        compute: kimad::coordinator::ComputeModel::Constant,
     };
     let net2 = NetSim::new(vec![Link::new(
         Box::new(kimad::bandwidth::ConstantTrace::new(6400.0)),

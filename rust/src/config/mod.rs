@@ -4,8 +4,160 @@
 use std::path::Path;
 
 use crate::bandwidth::TraceSpec;
+use crate::coordinator::{ComputeModel, ExecMode};
 use crate::kimad::{BudgetParams, CompressPolicy};
 use crate::util::json::Value;
+
+/// Declarative execution mode, resolved against the worker count M at
+/// simulation build time (so one spec can drive cells with different
+/// M in a scenario grid).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ExecModeSpec {
+    /// Lockstep rounds (the paper's loop).
+    Sync,
+    /// First-K quorum rounds: the server aggregates after
+    /// `ceil(participation · M)` arrivals (`participation` in (0, 1]).
+    SemiSync { participation: f64 },
+    /// One server step per arrival, γ damped by `damping^staleness`.
+    Async { damping: f64 },
+}
+
+impl ExecModeSpec {
+    /// Resolve the spec for a concrete worker count.
+    pub fn resolve(&self, m: usize) -> ExecMode {
+        match *self {
+            ExecModeSpec::Sync => ExecMode::Sync,
+            ExecModeSpec::SemiSync { participation } => ExecMode::SemiSync {
+                quorum: ((participation * m as f64).ceil() as usize).clamp(1, m.max(1)),
+            },
+            ExecModeSpec::Async { damping } => ExecMode::Async { damping },
+        }
+    }
+
+    /// Short CLI/cell-id name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecModeSpec::Sync => "sync",
+            ExecModeSpec::SemiSync { .. } => "semisync",
+            ExecModeSpec::Async { .. } => "async",
+        }
+    }
+
+    /// Parse a CLI token: `sync`, `semisync`, `async`, optionally with
+    /// a parameter suffix — `semisync:0.75` (participation),
+    /// `async:0.9` (damping). Parameters are range-checked here so a
+    /// bad sweep fails at the CLI instead of panicking mid-grid.
+    pub fn parse(token: &str) -> anyhow::Result<Self> {
+        let (name, param) = match token.split_once(':') {
+            Some((n, p)) => (n, Some(p)),
+            None => (token, None),
+        };
+        let num = |p: Option<&str>, default: f64| -> anyhow::Result<f64> {
+            match p {
+                None => Ok(default),
+                Some(p) => p
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("mode parameter '{p}': {e}")),
+            }
+        };
+        Ok(match name {
+            "sync" => {
+                anyhow::ensure!(param.is_none(), "sync takes no parameter");
+                ExecModeSpec::Sync
+            }
+            "semisync" => {
+                ExecModeSpec::SemiSync { participation: check_participation(num(param, 0.5)?)? }
+            }
+            "async" => ExecModeSpec::Async { damping: check_damping(num(param, 0.5)?)? },
+            other => anyhow::bail!("unknown execution mode '{other}' (sync|semisync|async)"),
+        })
+    }
+
+    pub fn to_json(&self) -> Value {
+        match self {
+            ExecModeSpec::Sync => Value::obj(vec![("kind", Value::str("sync"))]),
+            ExecModeSpec::SemiSync { participation } => Value::obj(vec![
+                ("kind", Value::str("semi_sync")),
+                ("participation", Value::num(*participation)),
+            ]),
+            ExecModeSpec::Async { damping } => Value::obj(vec![
+                ("kind", Value::str("async")),
+                ("damping", Value::num(*damping)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        Ok(match v.get("kind")?.as_str()? {
+            "sync" => ExecModeSpec::Sync,
+            "semi_sync" => ExecModeSpec::SemiSync {
+                participation: check_participation(
+                    v.opt("participation")
+                        .and_then(|x| x.as_f64().ok())
+                        .unwrap_or(0.5),
+                )?,
+            },
+            "async" => ExecModeSpec::Async {
+                damping: check_damping(
+                    v.opt("damping").and_then(|x| x.as_f64().ok()).unwrap_or(0.5),
+                )?,
+            },
+            other => anyhow::bail!("unknown execution mode kind '{other}'"),
+        })
+    }
+}
+
+fn check_participation(p: f64) -> anyhow::Result<f64> {
+    anyhow::ensure!(
+        p > 0.0 && p <= 1.0,
+        "semisync participation must be in (0, 1], got {p}"
+    );
+    Ok(p)
+}
+
+fn check_damping(d: f64) -> anyhow::Result<f64> {
+    anyhow::ensure!(d > 0.0 && d <= 1.0, "async damping must be in (0, 1], got {d}");
+    Ok(d)
+}
+
+/// JSON codec for a [`ComputeModel`] (shared with `scenarios`).
+pub fn compute_to_json(c: &ComputeModel) -> Value {
+    match c {
+        ComputeModel::Constant => Value::obj(vec![("kind", Value::str("constant"))]),
+        ComputeModel::Lognormal { sigma, seed } => Value::obj(vec![
+            ("kind", Value::str("lognormal")),
+            ("sigma", Value::num(*sigma)),
+            ("seed", Value::num(*seed as f64)),
+        ]),
+        ComputeModel::Profile { factors } => Value::obj(vec![
+            ("kind", Value::str("profile")),
+            (
+                "factors",
+                Value::Arr(factors.iter().map(|&f| Value::num(f)).collect()),
+            ),
+        ]),
+    }
+}
+
+/// Inverse of [`compute_to_json`].
+pub fn compute_from_json(v: &Value) -> anyhow::Result<ComputeModel> {
+    Ok(match v.get("kind")?.as_str()? {
+        "constant" => ComputeModel::Constant,
+        "lognormal" => ComputeModel::Lognormal {
+            sigma: v.get("sigma")?.as_f64()?,
+            seed: v.opt("seed").and_then(|x| x.as_u64().ok()).unwrap_or(21),
+        },
+        "profile" => ComputeModel::Profile {
+            factors: v
+                .get("factors")?
+                .as_arr()?
+                .iter()
+                .map(|f| f.as_f64())
+                .collect::<anyhow::Result<Vec<_>>>()?,
+        },
+        other => anyhow::bail!("unknown compute model kind '{other}'"),
+    })
+}
 
 /// Which workload drives gradients.
 #[derive(Debug, Clone, PartialEq)]
@@ -60,6 +212,10 @@ pub struct ExperimentConfig {
     /// Worker-phase thread count (see `SimConfig::threads`): 0 = auto,
     /// 1 = serial. Results are bit-identical for every setting.
     pub threads: usize,
+    /// Round-engine execution mode (sync / semi-sync / async).
+    pub mode: ExecModeSpec,
+    /// Per-worker compute-time model (straggler profiles).
+    pub compute: ComputeModel,
     pub seed: u64,
 }
 
@@ -204,6 +360,8 @@ impl ExperimentConfig {
             ("single_layer", Value::Bool(self.single_layer)),
             ("budget_safety", Value::num(self.budget_safety)),
             ("threads", Value::num(self.threads as f64)),
+            ("mode", self.mode.to_json()),
+            ("compute", compute_to_json(&self.compute)),
             ("seed", Value::num(self.seed as f64)),
         ])
     }
@@ -251,6 +409,14 @@ impl ExperimentConfig {
                 .opt("threads")
                 .and_then(|a| a.as_usize().ok())
                 .unwrap_or(0),
+            mode: match v.opt("mode") {
+                None => ExecModeSpec::Sync,
+                Some(m) => ExecModeSpec::from_json(m)?,
+            },
+            compute: match v.opt("compute") {
+                None => ComputeModel::Constant,
+                Some(c) => compute_from_json(c)?,
+            },
             seed: v.opt("seed").and_then(|a| a.as_u64().ok()).unwrap_or(21),
         })
     }
@@ -292,6 +458,8 @@ mod tests {
             single_layer: false,
             budget_safety: 0.9,
             threads: 0,
+            mode: ExecModeSpec::SemiSync { participation: 0.75 },
+            compute: ComputeModel::Lognormal { sigma: 0.3, seed: 7 },
             seed: 21,
         }
     }
@@ -311,9 +479,63 @@ mod tests {
         cfg.budget = BudgetParams::RoundBudget { t: 1.0, t_comp: 0.2 };
         cfg.up_policy = CompressPolicy::FixedRatio { ratio: 0.2 };
         cfg.down_policy = CompressPolicy::WholeModelTopK;
+        cfg.mode = ExecModeSpec::Async { damping: 0.8 };
+        cfg.compute = ComputeModel::Profile { factors: vec![1.0, 2.0, 4.0] };
         let back =
             ExperimentConfig::from_json(&Value::parse(&cfg.to_json_string()).unwrap()).unwrap();
         assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn mode_spec_resolves_against_m() {
+        assert_eq!(ExecModeSpec::Sync.resolve(4), ExecMode::Sync);
+        assert_eq!(
+            ExecModeSpec::SemiSync { participation: 0.5 }.resolve(4),
+            ExecMode::SemiSync { quorum: 2 }
+        );
+        // ceil + clamp: participation never resolves below one arrival
+        // or above M.
+        assert_eq!(
+            ExecModeSpec::SemiSync { participation: 0.1 }.resolve(4),
+            ExecMode::SemiSync { quorum: 1 }
+        );
+        assert_eq!(
+            ExecModeSpec::SemiSync { participation: 1.0 }.resolve(1),
+            ExecMode::SemiSync { quorum: 1 }
+        );
+        assert_eq!(
+            ExecModeSpec::Async { damping: 0.9 }.resolve(8),
+            ExecMode::Async { damping: 0.9 }
+        );
+    }
+
+    #[test]
+    fn mode_spec_parses_cli_tokens() {
+        assert_eq!(ExecModeSpec::parse("sync").unwrap(), ExecModeSpec::Sync);
+        assert_eq!(
+            ExecModeSpec::parse("semisync").unwrap(),
+            ExecModeSpec::SemiSync { participation: 0.5 }
+        );
+        assert_eq!(
+            ExecModeSpec::parse("semisync:0.75").unwrap(),
+            ExecModeSpec::SemiSync { participation: 0.75 }
+        );
+        assert_eq!(
+            ExecModeSpec::parse("async:0.9").unwrap(),
+            ExecModeSpec::Async { damping: 0.9 }
+        );
+        assert!(ExecModeSpec::parse("sync:1").is_err());
+        assert!(ExecModeSpec::parse("lockstep").is_err());
+        assert!(ExecModeSpec::parse("async:zebra").is_err());
+        // Out-of-range parameters fail at parse time, not mid-sweep.
+        assert!(ExecModeSpec::parse("async:1.5").is_err());
+        assert!(ExecModeSpec::parse("async:0").is_err());
+        assert!(ExecModeSpec::parse("semisync:0").is_err());
+        assert!(ExecModeSpec::parse("semisync:1.1").is_err());
+        let bad = r#"{"kind": "async", "damping": 0.0}"#;
+        assert!(ExecModeSpec::from_json(&Value::parse(bad).unwrap()).is_err());
+        let bad = r#"{"kind": "semi_sync", "participation": 2.0}"#;
+        assert!(ExecModeSpec::from_json(&Value::parse(bad).unwrap()).is_err());
     }
 
     #[test]
@@ -334,6 +556,8 @@ mod tests {
         assert!(!cfg.single_layer);
         assert_eq!(cfg.prior_bps, 0.0);
         assert_eq!(cfg.threads, 0);
+        assert_eq!(cfg.mode, ExecModeSpec::Sync);
+        assert_eq!(cfg.compute, ComputeModel::Constant);
         assert_eq!(cfg.seed, 21);
     }
 
@@ -342,5 +566,7 @@ mod tests {
         let text = r#"{"kind": "nope"}"#;
         assert!(policy_from_json(&Value::parse(text).unwrap()).is_err());
         assert!(workload_from_json(&Value::parse(text).unwrap()).is_err());
+        assert!(ExecModeSpec::from_json(&Value::parse(text).unwrap()).is_err());
+        assert!(compute_from_json(&Value::parse(text).unwrap()).is_err());
     }
 }

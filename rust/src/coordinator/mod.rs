@@ -3,14 +3,16 @@
 //! This is the paper's system contribution wired together: per-endpoint
 //! bandwidth monitors feed Eq. (2) budgets, `A^compress` picks
 //! compressors, bidirectional EF21 estimators advance by compressed
-//! differences, and the virtual clock advances by the max per-worker
-//! round time (synchronous PS).
+//! differences, and the virtual clock advances event by event on the
+//! netsim's deterministic queue — lockstep (`Sync`), first-K quorum
+//! (`SemiSync`) or one step per arrival (`Async`); see
+//! [`sim::ExecMode`].
 //!
 //! Layer map:
 //!   server.rs — server-side state (model x, x̂, û_m mirrors)
-//!   worker.rs — worker-side state + the GradientSource abstraction
+//!   worker.rs — worker-side state, GradientSource, compute models
 //!   round.rs  — per-round records the figures/tables read
-//!   sim.rs    — the round loop itself
+//!   sim.rs    — the event-driven round engine
 
 pub mod round;
 pub mod server;
@@ -19,5 +21,5 @@ pub mod worker;
 
 pub use round::{RoundRecord, WorkerRound};
 pub use server::ServerState;
-pub use sim::{SimConfig, Simulation};
-pub use worker::{GradientSource, QuadraticSource, WorkerState};
+pub use sim::{ExecMode, SimConfig, Simulation};
+pub use worker::{ComputeModel, GradientSource, QuadraticSource, WorkerState};

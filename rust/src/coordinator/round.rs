@@ -1,8 +1,16 @@
 //! Per-round records: everything Figs. 7–9 and Tables 1–2 read.
+//!
+//! One [`RoundRecord`] is one *server* round: all M workers in `Sync`
+//! mode, the first-K quorum of arrivals in `SemiSync` mode, and a
+//! single arrival in `Async` mode — `workers` holds exactly the
+//! arrivals the server aggregated over when closing the round.
 
 /// One worker's view of one communication round.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkerRound {
+    /// Worker index this entry belongs to (semi-sync/async records hold
+    /// a subset of workers, so the position is not the identity).
+    pub worker: usize,
     /// Bits actually sent on the uplink this round.
     pub up_bits: u64,
     /// Uplink transfer seconds.
@@ -17,6 +25,14 @@ pub struct WorkerRound {
     pub est_up_bps: f64,
     /// Ground-truth uplink bandwidth at round start (plots only).
     pub true_up_bps: f64,
+    /// Seconds from the round's start until this worker's upload
+    /// arrived at the server (straggler lag; 0 for arrivals that landed
+    /// while the server idled at a round deadline).
+    pub arrival_lag: f64,
+    /// Server rounds completed between this worker's model snapshot and
+    /// its upload arrival: 0 in `Sync`, > 0 for late semi-sync arrivals
+    /// and asynchronous updates.
+    pub staleness: u64,
 }
 
 /// One full communication round.
@@ -26,12 +42,16 @@ pub struct RoundRecord {
     /// Virtual time at the START of the round.
     pub t_start: f64,
     /// Wall (virtual) duration of the round: max over workers of
-    /// down + compute + up.
+    /// down + compute + up (sync), time to the K-th arrival (semi-sync)
+    /// or to the triggering arrival (async).
     pub duration: f64,
-    /// Bits broadcast on the downlink (same message to every worker).
+    /// Bits broadcast on the downlink during this round (same message
+    /// to every worker in sync/semi-sync; the per-arrival refresh in
+    /// async).
     pub down_bits: u64,
+    /// The arrivals this round aggregated over, in worker-index order.
     pub workers: Vec<WorkerRound>,
-    /// Mean worker loss.
+    /// Mean worker loss (over the arrivals).
     pub loss: f64,
     /// Objective value at the server's model x (when the source can
     /// evaluate it; NaN otherwise).
@@ -49,6 +69,22 @@ impl RoundRecord {
         self.workers.iter().map(|w| w.up_bits).sum()
     }
 
+    /// Number of uploads the server aggregated over this round (M in
+    /// sync, the quorum K in semi-sync, 1 in async).
+    pub fn n_arrivals(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Largest arrival lag this round (the straggler tail).
+    pub fn max_arrival_lag(&self) -> f64 {
+        self.workers.iter().map(|w| w.arrival_lag).fold(0.0f64, f64::max)
+    }
+
+    /// Largest staleness among this round's arrivals.
+    pub fn max_staleness(&self) -> u64 {
+        self.workers.iter().map(|w| w.staleness).max().unwrap_or(0)
+    }
+
     pub fn mean_compression_error(&self) -> f64 {
         if self.workers.is_empty() {
             return 0.0;
@@ -62,8 +98,9 @@ impl RoundRecord {
 mod tests {
     use super::*;
 
-    fn wr(bits: u64, err: f64) -> WorkerRound {
+    fn wr(worker: usize, bits: u64, err: f64, lag: f64, staleness: u64) -> WorkerRound {
         WorkerRound {
+            worker,
             up_bits: bits,
             up_seconds: 1.0,
             down_seconds: 0.5,
@@ -71,6 +108,8 @@ mod tests {
             compression_error: err,
             est_up_bps: 1.0,
             true_up_bps: 1.0,
+            arrival_lag: lag,
+            staleness,
         }
     }
 
@@ -81,13 +120,34 @@ mod tests {
             t_start: 10.0,
             duration: 2.5,
             down_bits: 64,
-            workers: vec![wr(100, 1.0), wr(50, 3.0)],
+            workers: vec![wr(0, 100, 1.0, 1.5, 0), wr(1, 50, 3.0, 2.5, 2)],
             loss: 2.0,
             f_x: f64::NAN,
             agg_norm_sq: 0.0,
         };
         assert_eq!(r.t_end(), 12.5);
         assert_eq!(r.total_up_bits(), 150);
+        assert_eq!(r.n_arrivals(), 2);
+        assert_eq!(r.max_arrival_lag(), 2.5);
+        assert_eq!(r.max_staleness(), 2);
         assert!((r.mean_compression_error() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_round_degenerates_gracefully() {
+        let r = RoundRecord {
+            step: 0,
+            t_start: 0.0,
+            duration: 1.0,
+            down_bits: 0,
+            workers: vec![],
+            loss: 0.0,
+            f_x: 0.0,
+            agg_norm_sq: 0.0,
+        };
+        assert_eq!(r.n_arrivals(), 0);
+        assert_eq!(r.max_arrival_lag(), 0.0);
+        assert_eq!(r.max_staleness(), 0);
+        assert_eq!(r.mean_compression_error(), 0.0);
     }
 }

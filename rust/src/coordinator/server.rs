@@ -70,6 +70,12 @@ impl ServerState {
             .map(|m| m.estimate_or(prior))
             .fold(f64::INFINITY, f64::min)
     }
+
+    /// One worker's downlink estimate — what the async engine budgets a
+    /// per-worker model refresh with (no other link is involved).
+    pub fn down_estimate(&self, worker: usize, prior: f64) -> f64 {
+        self.down_monitors[worker].estimate_or(prior)
+    }
 }
 
 #[cfg(test)]
@@ -98,5 +104,13 @@ mod tests {
     fn cold_start_uses_prior() {
         let s = ServerState::new(vec![0.0; 1], 2);
         assert_eq!(s.broadcast_estimate(42.0), 42.0);
+    }
+
+    #[test]
+    fn down_estimate_is_per_link() {
+        let mut s = ServerState::new(vec![0.0; 1], 2);
+        s.down_monitors[0].observe(100.0, 1.0);
+        assert_eq!(s.down_estimate(0, 7.0), 100.0);
+        assert_eq!(s.down_estimate(1, 7.0), 7.0, "cold link falls back to the prior");
     }
 }

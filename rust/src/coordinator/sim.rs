@@ -1,35 +1,68 @@
-//! The synchronous PS round loop (Algorithm 3) over virtual time.
+//! The Parameter-Server round engine (Algorithm 3) over virtual time,
+//! event-driven.
 //!
-//! Round structure (M workers):
+//! The engine schedules per-worker pipeline milestones — `BroadcastDone`
+//! → `ComputeDone` → `UploadDone` — on the deterministic
+//! [`EventQueue`](crate::netsim::EventQueue) and supports three
+//! execution modes ([`ExecMode`]):
 //!
-//! 1. probe + broadcast selection + x̂ advance — serial (server state);
-//! 2. gradient computation per worker — serial (the [`GradientSource`]
-//!    is one mutable resource; PJRT executables are not re-entrant);
-//! 3. **parallel worker phase** — each worker's downlink timing, uplink
-//!    budget read, `A^compress` selection, EF21 compress-advance and
-//!    uplink transfer run on a scoped thread pool. Every buffer the
-//!    phase touches (monitor, û_m, the server's û_m mirror, diff/msg
-//!    scratch) is owned per worker, so the phase is data-race-free by
-//!    construction and bit-deterministic regardless of thread count;
-//! 4. aggregation + optimizer step — serial, in worker-index order, so
-//!    the f32 reduction order never depends on scheduling.
+//! * **Sync** — the paper's lockstep loop: every round barriers on all
+//!   M uploads. Bit-identical to the pre-refactor loop for
+//!   [`ComputeModel::Constant`] (proven against [`Simulation::round_reference`]
+//!   in `tests/mode_matrix.rs`); with a straggler compute model the
+//!   barrier waits for the slowest worker.
+//! * **SemiSync** — the server closes a round after the first `quorum`
+//!   upload arrivals; stragglers keep flying and their late uploads
+//!   advance the server's EF21 mirrors when they land, carrying into
+//!   the next round's aggregate.
+//! * **Async** — the server steps on every upload arrival with a
+//!   staleness-damped step size and immediately re-broadcasts the fresh
+//!   model estimate to the triggering worker.
+//!
+//! # Determinism
+//!
+//! Every mode is bit-reproducible: the event queue's pop order is a
+//! total order (time, kind, worker index), compute-time models are pure
+//! functions of `(worker, round)`, and all floating-point reductions
+//! run in worker-index order. The `threads` knob parallelizes the
+//! Sync-mode upload batch only (per-worker state is disjoint, so chunk
+//! scheduling cannot change results); semi-sync and async process
+//! events serially, so their results are trivially independent of
+//! `threads` too (asserted by property tests).
 
 use crate::bandwidth::BandwidthMonitor;
-use crate::compress::{Identity, TopK};
+use crate::compress::{Compressed, Identity, TopK};
 use crate::ef21::Estimator;
 use crate::kimad::{compression_budget, BudgetParams, CompressPolicy, Selector};
 use crate::model::Layer;
-use crate::netsim::{Direction, NetSim};
+use crate::netsim::{Direction, Event, EventKind, EventQueue, NetSim};
 use crate::optim::LayerwiseSgd;
 
 use super::round::{RoundRecord, WorkerRound};
 use super::server::ServerState;
-use super::worker::{GradientSource, WorkerState};
+use super::worker::{ComputeModel, GradientSource, WorkerState};
 
 /// Synthetic NIC-counter probe: bits/window observed by the continuous
 /// bandwidth monitor each round (§2.4, §3).
 const PROBE_BITS: f64 = 1.0e4;
 const PROBE_WINDOW: f64 = 0.5;
+
+/// Execution mode of the round engine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ExecMode {
+    /// Lockstep rounds: every round aggregates all M uploads (the
+    /// paper's synchronous loop).
+    Sync,
+    /// Partial participation: the server aggregates after the first
+    /// `quorum` of M upload arrivals per round (clamped to `[1, M]`);
+    /// late uploads advance the EF21 mirrors when they land.
+    SemiSync { quorum: usize },
+    /// Fully asynchronous: one server step per upload arrival, with the
+    /// step size damped by `damping^staleness` (`damping` in `(0, 1]`;
+    /// 1.0 = undamped). Ignores `round_deadline` — rounds are
+    /// arrival-paced.
+    Async { damping: f64 },
+}
 
 /// Full experiment configuration for one simulated training run.
 pub struct SimConfig {
@@ -55,17 +88,21 @@ pub struct SimConfig {
     /// Synchronized round schedule: every round lasts at least this
     /// long (the user's time budget t — rounds are *scheduled* at this
     /// cadence: stragglers overrun it, fast rounds wait for it). None =
-    /// free-running rounds.
+    /// free-running rounds. Async mode ignores it.
     pub round_deadline: Option<f64>,
     /// Safety factor on the Eq. (2) budget (DC2-style conservatism):
     /// the bandwidth estimate is a trailing average, so budgeting at
     /// 100% of it overruns the deadline whenever bandwidth is falling.
     /// 1.0 = trust the estimate fully.
     pub budget_safety: f64,
-    /// Worker-phase thread count: 0 = one thread per worker up to the
-    /// machine's parallelism, 1 = serial, n = at most n threads. The
-    /// simulation is bit-identical for every setting.
+    /// Sync-mode upload-batch thread count: 0 = one thread per worker
+    /// up to the machine's parallelism, 1 = serial, n = at most n
+    /// threads. Results are bit-identical for every setting and mode.
     pub threads: usize,
+    /// Round-engine execution mode.
+    pub mode: ExecMode,
+    /// Per-worker compute-time model (straggler profiles).
+    pub compute: ComputeModel,
 }
 
 impl SimConfig {
@@ -99,6 +136,147 @@ fn effective_threads(requested: usize, m: usize, dim: usize) -> usize {
     auto.min(m)
 }
 
+/// Shared, immutable inputs of a worker upload leg.
+struct UploadCtx<'a> {
+    cfg: &'a SimConfig,
+    net: &'a NetSim,
+    up_selector: &'a Selector,
+}
+
+/// What one upload leg produced (recorded when the upload arrives).
+#[derive(Debug, Clone, Copy, Default)]
+struct UploadLeg {
+    up_bits: u64,
+    up_seconds: f64,
+    est_up_bps: f64,
+    true_up_bps: f64,
+    compression_error: f64,
+}
+
+/// One worker's uplink leg at `up_start` ("when communication is
+/// triggered", §3.1): bandwidth probe, Eq. (2) budget read,
+/// `A^compress` selection, EF21 compress-advance into the worker's
+/// in-flight per-layer message buffers, and the uplink transfer
+/// timing. Touches only per-worker state, so legs run concurrently and
+/// deterministically. The server's û_m mirror is NOT advanced here —
+/// the wire content stays in `w.msgs` until the upload *arrives*
+/// ([`deliver_upload`]), which is what makes async aggregation honest
+/// about in-flight data.
+fn upload_leg(ctx: &UploadCtx<'_>, w: &mut WorkerState, up_start: f64) -> UploadLeg {
+    let b_probe = ctx.net.window_bps(w.id, Direction::Up, up_start, PROBE_WINDOW);
+    w.monitor.observe(PROBE_BITS, PROBE_BITS / b_probe.max(1e-9));
+    let true_up = ctx.net.true_bps(w.id, Direction::Up, up_start);
+    let b_up = w.monitor.estimate_or(ctx.cfg.prior_bps);
+    let c_up = (compression_budget(ctx.cfg.budget, b_up) as f64 * ctx.cfg.budget_safety) as u64;
+    for (d, (&u, &uh)) in w.diff.iter_mut().zip(w.u.iter().zip(&w.u_hat.value)) {
+        *d = u - uh;
+    }
+    let sel_up = ctx.up_selector.select(&w.diff, &ctx.cfg.layers, c_up);
+
+    if w.msgs.len() < ctx.cfg.layers.len() {
+        w.msgs.resize_with(ctx.cfg.layers.len(), Compressed::default);
+    }
+    let mut up_bits = 0u64;
+    for (i, (l, &kk)) in ctx.cfg.layers.iter().zip(&sel_up.k_per_layer).enumerate() {
+        let target = &w.u[l.offset..l.offset + l.size];
+        if kk >= l.size {
+            w.u_hat.compress_advance_into(&Identity, target, l, &mut w.scratch, &mut w.msgs[i]);
+        } else {
+            w.u_hat.compress_advance_into(
+                &TopK::new(kk),
+                target,
+                l,
+                &mut w.scratch,
+                &mut w.msgs[i],
+            );
+        }
+        up_bits += w.msgs[i].wire_bits();
+    }
+
+    let up_tr = ctx.net.transfer(w.id, Direction::Up, up_start, up_bits as f64);
+    w.monitor.observe(up_bits as f64, up_tr.seconds);
+
+    // Compression error ||û_m − u_m||² after the round (Fig. 9).
+    let comp_err: f64 = w
+        .u
+        .iter()
+        .zip(&w.u_hat.value)
+        .map(|(&u, &uh)| ((u - uh) as f64).powi(2))
+        .sum();
+
+    UploadLeg {
+        up_bits,
+        up_seconds: up_tr.seconds,
+        est_up_bps: b_up,
+        true_up_bps: true_up,
+        compression_error: comp_err,
+    }
+}
+
+/// Server side of an upload arrival: advance the û_m mirror by the
+/// worker's in-flight per-layer messages.
+fn deliver_upload(mirror: &mut Estimator, layers: &[Layer], msgs: &[Compressed]) {
+    for (l, msg) in layers.iter().zip(msgs) {
+        mirror.apply(msg, l);
+    }
+}
+
+/// Shared, immutable inputs of one reference round's parallel worker
+/// phase (the frozen pre-refactor loop).
+struct RoundCtx<'a> {
+    up: UploadCtx<'a>,
+    t0: f64,
+    t_comp: f64,
+    down_bits: u64,
+}
+
+/// One worker's communication round in the frozen pre-refactor loop:
+/// downlink timing, uplink leg, immediate mirror delivery (the
+/// synchronous barrier makes delivery time irrelevant).
+fn worker_phase(
+    ctx: &RoundCtx<'_>,
+    loss: f64,
+    w: &mut WorkerState,
+    u_hat_mirror: &mut Estimator,
+    down_monitor: &mut dyn BandwidthMonitor,
+) -> WorkerRound {
+    let down_tr = ctx.up.net.transfer(w.id, Direction::Down, ctx.t0, ctx.down_bits as f64);
+    down_monitor.observe(ctx.down_bits as f64, down_tr.seconds);
+
+    // Uplink budget read at upload time, after download and compute.
+    let up_start = ctx.t0 + down_tr.seconds + ctx.t_comp;
+    let leg = upload_leg(&ctx.up, w, up_start);
+    deliver_upload(u_hat_mirror, &ctx.up.cfg.layers, &w.msgs);
+
+    WorkerRound {
+        worker: w.id,
+        up_bits: leg.up_bits,
+        up_seconds: leg.up_seconds,
+        down_seconds: down_tr.seconds,
+        loss,
+        compression_error: leg.compression_error,
+        est_up_bps: leg.est_up_bps,
+        true_up_bps: leg.true_up_bps,
+        arrival_lag: down_tr.seconds + ctx.t_comp + leg.up_seconds,
+        staleness: 0,
+    }
+}
+
+/// Per-worker in-flight pipeline bookkeeping (event engine).
+#[derive(Debug, Clone, Copy, Default)]
+struct Chain {
+    busy: bool,
+    /// Server rounds completed when the gradient snapshot was taken.
+    snapshot_step: u64,
+    down_seconds: f64,
+    t_comp: f64,
+    /// ComputeDone time: chain start + down + compute (the upload
+    /// trigger).
+    up_start: f64,
+    loss: f64,
+    leg: UploadLeg,
+}
+
 /// A running simulation: server + M workers + network + source.
 pub struct Simulation<S: GradientSource> {
     pub cfg: SimConfig,
@@ -114,102 +292,27 @@ pub struct Simulation<S: GradientSource> {
     /// Reusable broadcast difference buffer (allocation-free rounds).
     diff: Vec<f32>,
     warmed: bool,
-}
-
-/// Shared, immutable inputs of one round's parallel worker phase.
-struct RoundCtx<'a> {
-    cfg: &'a SimConfig,
-    net: &'a NetSim,
-    up_selector: &'a Selector,
-    t0: f64,
-    t_comp: f64,
-    down_bits: u64,
-}
-
-/// One worker's communication round: downlink timing, uplink budget
-/// read "when communication is triggered" (§3.1), `A^compress`
-/// selection, EF21 compress-advance mirrored onto the server, and the
-/// uplink transfer. Touches only per-worker state (plus the read-only
-/// [`RoundCtx`]), so workers run concurrently and deterministically.
-fn worker_phase(
-    ctx: &RoundCtx<'_>,
-    loss: f64,
-    w: &mut WorkerState,
-    u_hat_mirror: &mut Estimator,
-    down_monitor: &mut dyn BandwidthMonitor,
-) -> WorkerRound {
-    let down_tr = ctx
-        .net
-        .transfer(w.id, Direction::Down, ctx.t0, ctx.down_bits as f64);
-    down_monitor.observe(ctx.down_bits as f64, down_tr.seconds);
-
-    // Uplink budget read at upload time, after download and compute.
-    let up_start = ctx.t0 + down_tr.seconds + ctx.t_comp;
-    let b_probe = ctx
-        .net
-        .window_bps(w.id, Direction::Up, up_start, PROBE_WINDOW);
-    w.monitor.observe(PROBE_BITS, PROBE_BITS / b_probe.max(1e-9));
-    let true_up = ctx.net.true_bps(w.id, Direction::Up, up_start);
-    let b_up = w.monitor.estimate_or(ctx.cfg.prior_bps);
-    let c_up =
-        (compression_budget(ctx.cfg.budget, b_up) as f64 * ctx.cfg.budget_safety) as u64;
-    for (d, (&u, &uh)) in w.diff.iter_mut().zip(w.u.iter().zip(&w.u_hat.value)) {
-        *d = u - uh;
-    }
-    let sel_up = ctx.up_selector.select(&w.diff, &ctx.cfg.layers, c_up);
-
-    // Compress-advance û_m layer by layer, mirroring on the server.
-    let mut up_bits = 0u64;
-    for (l, &kk) in ctx.cfg.layers.iter().zip(&sel_up.k_per_layer) {
-        let target = &w.u[l.offset..l.offset + l.size];
-        if kk >= l.size {
-            w.u_hat
-                .compress_advance_into(&Identity, target, l, &mut w.scratch, &mut w.msg);
-        } else {
-            w.u_hat.compress_advance_into(
-                &TopK::new(kk),
-                target,
-                l,
-                &mut w.scratch,
-                &mut w.msg,
-            );
-        }
-        u_hat_mirror.apply(&w.msg, l);
-        up_bits += w.msg.wire_bits();
-    }
-
-    let up_tr = ctx.net.transfer(w.id, Direction::Up, up_start, up_bits as f64);
-    w.monitor.observe(up_bits as f64, up_tr.seconds);
-
-    // Compression error ||û_m − u_m||² after the round (Fig. 9).
-    let comp_err: f64 = w
-        .u
-        .iter()
-        .zip(&w.u_hat.value)
-        .map(|(&u, &uh)| ((u - uh) as f64).powi(2))
-        .sum();
-
-    WorkerRound {
-        up_bits,
-        up_seconds: up_tr.seconds,
-        down_seconds: down_tr.seconds,
-        loss,
-        compression_error: comp_err,
-        est_up_bps: b_up,
-        true_up_bps: true_up,
-    }
+    queue: EventQueue,
+    chains: Vec<Chain>,
 }
 
 impl<S: GradientSource> Simulation<S> {
     pub fn new(cfg: SimConfig, net: NetSim, source: S, x0: Vec<f32>) -> Self {
         assert_eq!(net.n_workers(), cfg.m, "netsim links != M");
         assert_eq!(x0.len(), source.dim(), "x0 dim != source dim");
+        if let ExecMode::Async { damping } = cfg.mode {
+            assert!(
+                damping > 0.0 && damping <= 1.0,
+                "async staleness damping must be in (0, 1], got {damping}"
+            );
+        }
         let dim = x0.len();
         let weights = cfg.weights_or_uniform();
         let up_selector = Selector::new(cfg.up_policy.clone());
         let down_selector = Selector::new(cfg.down_policy.clone());
         let server = ServerState::new(x0, cfg.m);
         let workers = (0..cfg.m).map(|i| WorkerState::new(i, dim)).collect();
+        let chains = vec![Chain::default(); cfg.m];
         Self {
             cfg,
             net,
@@ -223,6 +326,8 @@ impl<S: GradientSource> Simulation<S> {
             down_selector,
             diff: vec![0.0; dim],
             warmed: false,
+            queue: EventQueue::new(),
+            chains,
         }
     }
 
@@ -250,28 +355,21 @@ impl<S: GradientSource> Simulation<S> {
         Ok(())
     }
 
-    /// Execute one full communication round; returns its record.
-    pub fn round(&mut self) -> anyhow::Result<RoundRecord> {
-        if self.cfg.warm_start && !self.warmed {
-            self.warm_start()?;
-            self.warmed = true;
-        }
-        let k = self.step;
-        let t0 = self.clock;
-        let t_comp = self.source.t_comp();
-
-        // ---- Continuous bandwidth monitoring (§2.4, §3): the monitor
-        // samples the link each round (NIC-counter style), independent
-        // of training traffic — without this, a zero-bit round would
-        // starve the estimator at trough level forever. The observation
-        // is the instantaneous rate at round start; the EWMA smooths it.
+    /// Continuous bandwidth monitoring (§2.4, §3): sample every
+    /// downlink each round (NIC-counter style), independent of training
+    /// traffic — without this, a zero-bit round would starve the
+    /// estimator at trough level forever.
+    fn probe_down_monitors(&mut self, t0: f64) {
         for (i, mon) in self.server.down_monitors.iter_mut().enumerate() {
             let bd = self.net.window_bps(i, Direction::Down, t0, PROBE_WINDOW);
             mon.observe(PROBE_BITS, PROBE_BITS / bd.max(1e-9));
         }
+    }
 
-        // ---- Server: select broadcast compressor under Eq. (2) budget.
-        let b_down = self.server.broadcast_estimate(self.cfg.prior_bps);
+    /// Server broadcast phase: Eq. (2) budget at bandwidth estimate
+    /// `b_down`, `A^compress` selection over x − x̂, compress-advance of
+    /// x̂. Returns the wire size of the broadcast message.
+    fn broadcast_phase(&mut self, b_down: f64) -> u64 {
         let c_down =
             (compression_budget(self.cfg.budget, b_down) as f64 * self.cfg.budget_safety) as u64;
         for (d, (&x, &xh)) in self
@@ -282,8 +380,6 @@ impl<S: GradientSource> Simulation<S> {
             *d = x - xh;
         }
         let sel_down = self.down_selector.select(&self.diff, &self.cfg.layers, c_down);
-
-        // ---- Server: compress-advance x̂ and measure the wire size.
         let mut down_bits = 0u64;
         for (l, &kk) in self.cfg.layers.iter().zip(&sel_down.k_per_layer) {
             let target = &self.server.x[l.offset..l.offset + l.size];
@@ -306,6 +402,422 @@ impl<S: GradientSource> Simulation<S> {
             }
             down_bits += self.server.msg.wire_bits();
         }
+        down_bits
+    }
+
+    /// Start one worker's pipeline chain: the broadcast transfer on its
+    /// downlink, ending in a `BroadcastDone` event.
+    fn begin_chain(&mut self, w: usize, t: f64, down_bits: u64, round: u64) {
+        let tr = self.net.transfer(w, Direction::Down, t, down_bits as f64);
+        self.server.down_monitors[w].observe(down_bits as f64, tr.seconds);
+        self.chains[w] = Chain {
+            busy: true,
+            snapshot_step: self.step,
+            down_seconds: tr.seconds,
+            t_comp: 0.0,
+            up_start: 0.0,
+            loss: f64::NAN,
+            leg: UploadLeg::default(),
+        };
+        self.queue.push(Event {
+            time: t + tr.seconds,
+            worker: w,
+            kind: EventKind::BroadcastDone,
+            round,
+        });
+    }
+
+    /// `BroadcastDone`: snapshot the model estimate, compute the
+    /// gradient (the source is one mutable resource — handlers run
+    /// serially in deterministic event order), schedule `ComputeDone`.
+    fn on_broadcast_done(&mut self, ev: &Event) -> anyhow::Result<()> {
+        let w = ev.worker;
+        self.chains[w].snapshot_step = self.step;
+        let loss = self
+            .source
+            .update(w, ev.round, &self.server.x_hat.value, &mut self.workers[w].u)?;
+        let t_comp = self.cfg.compute.sample(self.source.t_comp(), w, ev.round);
+        self.chains[w].loss = loss;
+        self.chains[w].t_comp = t_comp;
+        self.queue.push(Event {
+            time: ev.time + t_comp,
+            worker: w,
+            kind: EventKind::ComputeDone,
+            round: ev.round,
+        });
+        Ok(())
+    }
+
+    /// `ComputeDone`: run the uplink leg and schedule `UploadDone`.
+    fn on_compute_done(&mut self, ev: &Event) {
+        let w = ev.worker;
+        let uctx = UploadCtx { cfg: &self.cfg, net: &self.net, up_selector: &self.up_selector };
+        let leg = upload_leg(&uctx, &mut self.workers[w], ev.time);
+        self.chains[w].up_start = ev.time;
+        self.chains[w].leg = leg;
+        self.queue.push(Event {
+            time: ev.time + leg.up_seconds,
+            worker: w,
+            kind: EventKind::UploadDone,
+            round: ev.round,
+        });
+    }
+
+    /// `UploadDone`: deliver the in-flight messages to the server's
+    /// û_m mirror and produce the arrival's record entry. `t0` is the
+    /// current round's start (for the arrival-lag column).
+    fn on_upload_arrival(&mut self, ev: &Event, t0: f64) -> WorkerRound {
+        let w = ev.worker;
+        deliver_upload(&mut self.server.u_hats[w], &self.cfg.layers, &self.workers[w].msgs);
+        let c = &mut self.chains[w];
+        c.busy = false;
+        WorkerRound {
+            worker: w,
+            up_bits: c.leg.up_bits,
+            up_seconds: c.leg.up_seconds,
+            down_seconds: c.down_seconds,
+            loss: c.loss,
+            compression_error: c.leg.compression_error,
+            est_up_bps: c.leg.est_up_bps,
+            true_up_bps: c.leg.true_up_bps,
+            arrival_lag: (ev.time - t0).max(0.0),
+            staleness: self.step - c.snapshot_step,
+        }
+    }
+
+    /// Route one event to its handler; returns the arrival record when
+    /// the event was an upload landing at the server.
+    fn dispatch_pipeline_event(
+        &mut self,
+        ev: &Event,
+        t0: f64,
+    ) -> anyhow::Result<Option<WorkerRound>> {
+        match ev.kind {
+            EventKind::BroadcastDone => {
+                self.on_broadcast_done(ev)?;
+                Ok(None)
+            }
+            EventKind::ComputeDone => {
+                self.on_compute_done(ev);
+                Ok(None)
+            }
+            EventKind::UploadDone => Ok(Some(self.on_upload_arrival(ev, t0))),
+        }
+    }
+
+    /// Aggregate Σ w_m û_m and step the optimizer, honoring the
+    /// zero-information guard: stepping again on unchanged, stale
+    /// estimators is outside the EF21 regime — Theorem 1 requires
+    /// contraction alpha_i > 0 — and measurably destabilizes the
+    /// quadratic workload during bandwidth troughs.
+    fn aggregate_and_step(&mut self, k: u64, total_up: u64, gamma_scale: f64) -> f64 {
+        if total_up > 0 || k == 0 {
+            let n = self.server.aggregate(&self.weights);
+            self.cfg.optimizer.step_scaled(
+                k as usize,
+                gamma_scale,
+                &mut self.server.x,
+                &self.server.agg,
+                &self.cfg.layers,
+            );
+            n
+        } else {
+            0.0
+        }
+    }
+
+    /// Execute one full communication round; returns its record.
+    pub fn round(&mut self) -> anyhow::Result<RoundRecord> {
+        if self.cfg.warm_start && !self.warmed {
+            self.warm_start()?;
+            self.warmed = true;
+        }
+        match self.cfg.mode {
+            ExecMode::Sync => self.round_sync(),
+            ExecMode::SemiSync { quorum } => self.round_semisync(quorum),
+            ExecMode::Async { damping } => self.round_async(damping),
+        }
+    }
+
+    /// Sync mode on the event engine: schedule all M chains, drain the
+    /// gradient milestones in event order, run the M independent upload
+    /// legs on the scoped-thread pool (exactly the pre-refactor
+    /// parallel worker phase), then barrier on the M arrivals.
+    fn round_sync(&mut self) -> anyhow::Result<RoundRecord> {
+        let k = self.step;
+        let t0 = self.clock;
+        let m = self.cfg.m;
+        debug_assert!(self.queue.is_empty(), "sync rounds drain the queue fully");
+
+        self.probe_down_monitors(t0);
+        let b_down = self.server.broadcast_estimate(self.cfg.prior_bps);
+        let down_bits = self.broadcast_phase(b_down);
+        for w in 0..m {
+            self.begin_chain(w, t0, down_bits, k);
+        }
+
+        // Drain the gradient and compute milestones in event order.
+        // With heterogeneous downlinks a fast worker's ComputeDone can
+        // precede a slow worker's BroadcastDone, so the kinds interleave
+        // — dispatch explicitly until every worker has computed.
+        // Gradients stay serial (the source is one mutable resource);
+        // the M upload legs are deferred so they can batch onto the
+        // thread pool below (bit-deterministic for any chunking).
+        let mut computed = 0;
+        while computed < m {
+            let ev = self.queue.pop().expect("sync chains schedule 2M milestones");
+            match ev.kind {
+                EventKind::BroadcastDone => self.on_broadcast_done(&ev)?,
+                EventKind::ComputeDone => {
+                    self.chains[ev.worker].up_start = ev.time;
+                    computed += 1;
+                }
+                EventKind::UploadDone => {
+                    unreachable!("sync uploads are scheduled only after the compute batch")
+                }
+            }
+        }
+        debug_assert!(self.queue.is_empty());
+        let n_threads = effective_threads(self.cfg.threads, m, self.server.dim());
+        let uctx = UploadCtx { cfg: &self.cfg, net: &self.net, up_selector: &self.up_selector };
+        if n_threads <= 1 {
+            for (w, c) in self.workers.iter_mut().zip(self.chains.iter_mut()) {
+                c.leg = upload_leg(&uctx, w, c.up_start);
+            }
+        } else {
+            let chunk = m.div_ceil(n_threads);
+            let workers = &mut self.workers;
+            let chains = &mut self.chains;
+            let uctx = &uctx;
+            std::thread::scope(|s| {
+                let handles: Vec<_> = workers
+                    .chunks_mut(chunk)
+                    .zip(chains.chunks_mut(chunk))
+                    .map(|(ws, cs)| {
+                        s.spawn(move || {
+                            for (w, c) in ws.iter_mut().zip(cs.iter_mut()) {
+                                c.leg = upload_leg(uctx, w, c.up_start);
+                            }
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().expect("upload leg thread panicked");
+                }
+            });
+        }
+        for (w, c) in self.chains.iter().enumerate() {
+            self.queue.push(Event {
+                time: c.up_start + c.leg.up_seconds,
+                worker: w,
+                kind: EventKind::UploadDone,
+                round: k,
+            });
+        }
+
+        // The barrier: all M arrivals land before aggregation.
+        for _ in 0..m {
+            let ev = self.queue.pop().expect("one UploadDone per worker");
+            debug_assert_eq!(ev.kind, EventKind::UploadDone);
+            let w = ev.worker;
+            deliver_upload(&mut self.server.u_hats[w], &self.cfg.layers, &self.workers[w].msgs);
+            self.chains[w].busy = false;
+        }
+        debug_assert!(self.queue.is_empty());
+
+        // Records, reductions and the step, all in worker-index order.
+        let worker_rounds: Vec<WorkerRound> = self
+            .chains
+            .iter()
+            .enumerate()
+            .map(|(w, c)| WorkerRound {
+                worker: w,
+                up_bits: c.leg.up_bits,
+                up_seconds: c.leg.up_seconds,
+                down_seconds: c.down_seconds,
+                loss: c.loss,
+                compression_error: c.leg.compression_error,
+                est_up_bps: c.leg.est_up_bps,
+                true_up_bps: c.leg.true_up_bps,
+                arrival_lag: c.down_seconds + c.t_comp + c.leg.up_seconds,
+                staleness: 0,
+            })
+            .collect();
+        let loss_sum: f64 = self.chains.iter().map(|c| c.loss).sum();
+        let mut duration =
+            worker_rounds.iter().map(|w| w.arrival_lag).fold(0.0f64, f64::max);
+        let total_up: u64 = worker_rounds.iter().map(|w| w.up_bits).sum();
+        let agg_norm_sq = self.aggregate_and_step(k, total_up, 1.0);
+
+        // Synchronized schedule: fast rounds wait for the deadline.
+        if let Some(deadline) = self.cfg.round_deadline {
+            duration = duration.max(deadline);
+        }
+
+        let f_x = self.source.objective(&self.server.x).unwrap_or(f64::NAN);
+        self.clock = t0 + duration;
+        self.step += 1;
+        Ok(RoundRecord {
+            step: k,
+            t_start: t0,
+            duration,
+            down_bits,
+            workers: worker_rounds,
+            loss: loss_sum / m as f64,
+            f_x,
+            agg_norm_sq,
+        })
+    }
+
+    /// Semi-sync mode: broadcast to every idle worker, pump the event
+    /// queue until `quorum` uploads have arrived, aggregate, step.
+    /// Stragglers' chains span rounds; their arrivals count toward
+    /// whatever round is open when they land.
+    fn round_semisync(&mut self, quorum: usize) -> anyhow::Result<RoundRecord> {
+        let k = self.step;
+        let t0 = self.clock;
+        let quorum = quorum.clamp(1, self.cfg.m);
+
+        // Arrivals that landed while the server idled at the previous
+        // round's deadline join this round immediately (lag 0).
+        let mut arrivals: Vec<WorkerRound> = Vec::new();
+        while let Some(&ev) = self.queue.peek() {
+            if ev.time > t0 {
+                break;
+            }
+            let ev = self.queue.pop().expect("peeked");
+            if let Some(wr) = self.dispatch_pipeline_event(&ev, t0)? {
+                arrivals.push(wr);
+            }
+        }
+
+        // Broadcast to every idle worker (stragglers keep flying).
+        self.probe_down_monitors(t0);
+        let b_down = self.server.broadcast_estimate(self.cfg.prior_bps);
+        let down_bits = self.broadcast_phase(b_down);
+        for w in 0..self.cfg.m {
+            if !self.chains[w].busy {
+                self.begin_chain(w, t0, down_bits, k);
+            }
+        }
+
+        // Pump events until the quorum is met. Every worker is busy at
+        // this point, so the queue cannot starve before the quorum.
+        let mut t_last = t0;
+        while arrivals.len() < quorum {
+            let ev = self.queue.pop().expect("semisync: busy workers imply pending events");
+            if let Some(wr) = self.dispatch_pipeline_event(&ev, t0)? {
+                arrivals.push(wr);
+                t_last = ev.time;
+            }
+        }
+
+        arrivals.sort_by_key(|w| w.worker);
+        let total_up: u64 = arrivals.iter().map(|w| w.up_bits).sum();
+        let agg_norm_sq = self.aggregate_and_step(k, total_up, 1.0);
+        let mut duration = t_last - t0;
+        if let Some(deadline) = self.cfg.round_deadline {
+            duration = duration.max(deadline);
+        }
+        let loss = arrivals.iter().map(|w| w.loss).sum::<f64>() / arrivals.len() as f64;
+        let f_x = self.source.objective(&self.server.x).unwrap_or(f64::NAN);
+        self.clock = t0 + duration;
+        self.step += 1;
+        Ok(RoundRecord {
+            step: k,
+            t_start: t0,
+            duration,
+            down_bits,
+            workers: arrivals,
+            loss,
+            f_x,
+            agg_norm_sq,
+        })
+    }
+
+    /// Async mode: one server round per upload arrival. The aggregate
+    /// still spans all û_m mirrors (EF21 memory: absent workers
+    /// contribute their last delivered estimate), the step size is
+    /// damped by `damping^staleness`, and the triggering worker is
+    /// immediately re-broadcast the fresh estimate. The broadcast
+    /// channel is modeled as continuously received: x̂ is one shared
+    /// estimator, and each refresh's transfer time is charged to the
+    /// triggering worker's downlink.
+    fn round_async(&mut self, damping: f64) -> anyhow::Result<RoundRecord> {
+        let k = self.step;
+        let t0 = self.clock;
+        let mut down_bits = 0u64;
+
+        // Bootstrap (first round, or every worker idle): the sync-style
+        // group broadcast starts all M chains.
+        if self.chains.iter().all(|c| !c.busy) {
+            self.probe_down_monitors(t0);
+            let b_down = self.server.broadcast_estimate(self.cfg.prior_bps);
+            down_bits = self.broadcast_phase(b_down);
+            for w in 0..self.cfg.m {
+                self.begin_chain(w, t0, down_bits, k);
+            }
+        }
+
+        loop {
+            let ev = self.queue.pop().expect("async: busy workers imply pending events");
+            let Some(wr) = self.dispatch_pipeline_event(&ev, t0)? else {
+                continue;
+            };
+            let w = ev.worker;
+            let scale = damping.powi(wr.staleness as i32);
+            let agg_norm_sq = self.aggregate_and_step(k, wr.up_bits, scale);
+
+            // Refresh the triggering worker: probe its downlink, budget
+            // from its own monitor, compress-advance the shared x̂.
+            let bd = self.net.window_bps(w, Direction::Down, ev.time, PROBE_WINDOW);
+            self.server.down_monitors[w].observe(PROBE_BITS, PROBE_BITS / bd.max(1e-9));
+            let b_down = self.server.down_estimate(w, self.cfg.prior_bps);
+            let refresh_bits = self.broadcast_phase(b_down);
+            self.step += 1;
+            self.begin_chain(w, ev.time, refresh_bits, self.step);
+            down_bits += refresh_bits;
+
+            let loss = wr.loss;
+            let f_x = self.source.objective(&self.server.x).unwrap_or(f64::NAN);
+            self.clock = ev.time;
+            return Ok(RoundRecord {
+                step: k,
+                t_start: t0,
+                duration: ev.time - t0,
+                down_bits,
+                workers: vec![wr],
+                loss,
+                f_x,
+                agg_norm_sq,
+            });
+        }
+    }
+
+    /// The pre-refactor synchronous loop, frozen as the bit-identity
+    /// oracle for `ExecMode::Sync` on the event engine (asserted by the
+    /// golden test in `tests/mode_matrix.rs`). Only meaningful for
+    /// `Sync` mode with homogeneous compute.
+    pub fn round_reference(&mut self) -> anyhow::Result<RoundRecord> {
+        anyhow::ensure!(
+            matches!(self.cfg.mode, ExecMode::Sync),
+            "round_reference is the Sync-mode oracle"
+        );
+        anyhow::ensure!(
+            matches!(self.cfg.compute, ComputeModel::Constant),
+            "round_reference models homogeneous compute only"
+        );
+        if self.cfg.warm_start && !self.warmed {
+            self.warm_start()?;
+            self.warmed = true;
+        }
+        let k = self.step;
+        let t0 = self.clock;
+        let t_comp = self.source.t_comp();
+
+        self.probe_down_monitors(t0);
+        let b_down = self.server.broadcast_estimate(self.cfg.prior_bps);
+        let down_bits = self.broadcast_phase(b_down);
 
         // ---- Gradient phase (serial: the source is one mutable
         // resource). Every worker computes at the same broadcast x̂.
@@ -320,9 +832,7 @@ impl<S: GradientSource> Simulation<S> {
         // ---- Parallel worker phase: timing, budgets, selection, EF21.
         let n_threads = effective_threads(self.cfg.threads, self.cfg.m, self.server.dim());
         let ctx = RoundCtx {
-            cfg: &self.cfg,
-            net: &self.net,
-            up_selector: &self.up_selector,
+            up: UploadCtx { cfg: &self.cfg, net: &self.net, up_selector: &self.up_selector },
             t0,
             t_comp,
             down_bits,
@@ -370,30 +880,12 @@ impl<S: GradientSource> Simulation<S> {
             })
         };
         let loss_sum: f64 = losses.iter().sum();
-        let mut duration = worker_rounds
-            .iter()
-            .map(|w| w.down_seconds + t_comp + w.up_seconds)
-            .fold(0.0f64, f64::max);
+        let mut duration =
+            worker_rounds.iter().map(|w| w.arrival_lag).fold(0.0f64, f64::max);
 
         // ---- Server: aggregate and step (Algorithm 3 line 15).
-        // Zero-information rounds (every worker's budget rounded to no
-        // coordinates) are deadline-preserving no-ops: stepping again on
-        // the unchanged, stale estimators is outside the EF21 regime —
-        // Theorem 1 requires contraction alpha_i > 0 — and measurably
-        // destabilizes the quadratic workload during bandwidth troughs.
         let total_up: u64 = worker_rounds.iter().map(|w| w.up_bits).sum();
-        let agg_norm_sq = if total_up > 0 || k == 0 {
-            let n = self.server.aggregate(&self.weights);
-            self.cfg.optimizer.step(
-                k as usize,
-                &mut self.server.x,
-                &self.server.agg,
-                &self.cfg.layers,
-            );
-            n
-        } else {
-            0.0
-        };
+        let agg_norm_sq = self.aggregate_and_step(k, total_up, 1.0);
 
         // Synchronized schedule: fast rounds wait for the deadline.
         if let Some(deadline) = self.cfg.round_deadline {
@@ -480,6 +972,8 @@ mod tests {
             round_deadline: Some(1.0),
             budget_safety: 1.0,
             threads: 1,
+            mode: ExecMode::Sync,
+            compute: ComputeModel::Constant,
         };
         Simulation::new(cfg, constant_net(m, bps), src, vec![1.0f32; 30])
     }
@@ -525,6 +1019,10 @@ mod tests {
         // Deadline-scheduled: duration = max(phases, deadline).
         assert!((r.duration - phases.max(1.0)).abs() < 1e-12);
         assert!(r.t_start == 0.0 && s.clock == r.duration);
+        // Sync rounds: lag = down + compute + up, staleness 0.
+        assert!((w.arrival_lag - phases).abs() < 1e-12);
+        assert_eq!(w.staleness, 0);
+        assert_eq!(w.worker, 0);
     }
 
     #[test]
@@ -565,7 +1063,7 @@ mod tests {
 
     #[test]
     fn parallel_rounds_bit_match_serial() {
-        // The tentpole guarantee: thread count never changes results.
+        // The engine guarantee: thread count never changes results.
         for policy in [
             CompressPolicy::KimadUniform,
             CompressPolicy::KimadPlus { discretization: 200, ratios: vec![] },
@@ -618,11 +1116,88 @@ mod tests {
             round_deadline: Some(1.0),
             budget_safety: 1.0,
             threads: 1,
+            mode: ExecMode::Sync,
+            compute: ComputeModel::Constant,
         };
         let mut s = Simulation::new(cfg, constant_net(1, 128.0), src, vec![1.0f32; 30]);
         let recs = s.run(30).unwrap();
         let first = recs[2].workers[0].compression_error;
         let last = recs.last().unwrap().workers[0].compression_error;
         assert!(last < first, "first={first} last={last}");
+    }
+
+    #[test]
+    fn semisync_aggregates_first_quorum() {
+        // Worker 1 is a 10x compute straggler: every round closes on
+        // worker 0's arrival alone, and the straggler's late uploads
+        // land in later rounds with positive staleness.
+        let mut s = sim(2, 2000.0, CompressPolicy::FixedRatio { ratio: 0.5 }, 0.02);
+        s.cfg.mode = ExecMode::SemiSync { quorum: 1 };
+        s.cfg.compute = ComputeModel::Profile { factors: vec![1.0, 10.0] };
+        let recs = s.run(30).unwrap();
+        for r in &recs {
+            assert!(!r.workers.is_empty() && r.workers.len() <= 2);
+        }
+        // The straggler did land eventually, stale.
+        let late: Vec<_> = recs
+            .iter()
+            .flat_map(|r| &r.workers)
+            .filter(|w| w.worker == 1)
+            .collect();
+        assert!(!late.is_empty(), "straggler uploads must still arrive");
+        assert!(late.iter().any(|w| w.staleness > 0));
+        assert!(recs.last().unwrap().f_x.is_finite());
+    }
+
+    #[test]
+    fn semisync_full_quorum_waits_for_everyone() {
+        let mut s = sim(3, 2000.0, CompressPolicy::FixedRatio { ratio: 0.5 }, 0.02);
+        s.cfg.mode = ExecMode::SemiSync { quorum: 3 };
+        let recs = s.run(10).unwrap();
+        for r in &recs {
+            assert_eq!(r.n_arrivals(), 3, "full quorum = every worker, every round");
+            assert_eq!(r.max_staleness(), 0);
+        }
+    }
+
+    #[test]
+    fn async_steps_on_every_arrival_and_converges() {
+        let mut s = sim(2, 64.0 * 8.0, CompressPolicy::KimadUniform, 0.02);
+        s.cfg.mode = ExecMode::Async { damping: 0.7 };
+        s.cfg.round_deadline = None;
+        let recs = s.run(400).unwrap();
+        for r in &recs {
+            assert_eq!(r.n_arrivals(), 1, "async rounds are single arrivals");
+        }
+        // Virtual time is monotone and the model trains.
+        for pair in recs.windows(2) {
+            assert!(pair[1].t_start >= pair[0].t_start);
+        }
+        assert!(recs.last().unwrap().f_x < recs[0].f_x * 0.2);
+    }
+
+    #[test]
+    #[should_panic(expected = "damping")]
+    fn async_rejects_bad_damping() {
+        let q = Quadratic::paper_instance(30);
+        let layers = q.layout(3).layers();
+        let src = crate::coordinator::QuadraticSource::new(q, 0.01);
+        let cfg = SimConfig {
+            m: 1,
+            weights: vec![],
+            budget: BudgetParams::PerDirection { t_comm: 1.0 },
+            up_policy: CompressPolicy::KimadUniform,
+            down_policy: CompressPolicy::KimadUniform,
+            optimizer: LayerwiseSgd::new(Schedule::Constant(0.02)),
+            layers,
+            warm_start: true,
+            prior_bps: 100.0,
+            round_deadline: None,
+            budget_safety: 1.0,
+            threads: 1,
+            mode: ExecMode::Async { damping: 0.0 },
+            compute: ComputeModel::Constant,
+        };
+        let _ = Simulation::new(cfg, constant_net(1, 100.0), src, vec![1.0f32; 30]);
     }
 }

@@ -1,8 +1,51 @@
-//! Worker-side state and the gradient computation abstraction.
+//! Worker-side state, the gradient computation abstraction, and the
+//! per-worker compute-time models (straggler profiles).
 
 use crate::bandwidth::{BandwidthMonitor, EwmaMonitor};
 use crate::compress::Compressed;
 use crate::ef21::Estimator;
+use crate::util::rng::Rng;
+
+/// How long one gradient computation takes on a given worker, as a
+/// transformation of the workload's base `T_comp` (§3.1). Sampling is a
+/// pure function of `(worker, round)`, so simulations stay
+/// bit-reproducible regardless of event or thread order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ComputeModel {
+    /// Every worker takes the base `T_comp` every round (the paper's
+    /// homogeneous setting).
+    Constant,
+    /// Multiplicative lognormal jitter per `(worker, round)`:
+    /// `T_comp · exp(σ z − σ²/2)` with `z ~ N(0,1)` — mean-preserving,
+    /// so the average compute time stays the workload's `T_comp`.
+    Lognormal { sigma: f64, seed: u64 },
+    /// Trace-driven straggler profile: worker `m` always takes
+    /// `T_comp · factors[m % len]`. An empty profile means no slowdown.
+    Profile { factors: Vec<f64> },
+}
+
+impl ComputeModel {
+    /// Virtual seconds worker `worker`'s computation takes in `round`.
+    pub fn sample(&self, base: f64, worker: usize, round: u64) -> f64 {
+        match self {
+            ComputeModel::Constant => base,
+            ComputeModel::Lognormal { sigma, seed } => {
+                let mut rng = Rng::seed_from_u64(*seed)
+                    .derive(worker as u64)
+                    .derive(round.wrapping_add(1));
+                let z = rng.normal();
+                base * (sigma * z - 0.5 * sigma * sigma).exp()
+            }
+            ComputeModel::Profile { factors } => {
+                if factors.is_empty() {
+                    base
+                } else {
+                    base * factors[worker % factors.len()]
+                }
+            }
+        }
+    }
+}
 
 /// Where update vectors come from. The quadratic workload implements
 /// this in pure rust; the deep model implements it over the PJRT
@@ -88,8 +131,11 @@ pub struct WorkerState {
     /// Scratch: full-dimension EF21 difference `u − û` — one per worker
     /// so the parallel round phase never shares mutable buffers.
     pub diff: Vec<f32>,
-    /// Reusable compressed-message buffer (allocation-free rounds).
-    pub msg: Compressed,
+    /// Reusable per-layer compressed-message buffers (allocation-free
+    /// rounds). A worker has one upload in flight at a time, so these
+    /// hold the wire content from compression (`ComputeDone`) until the
+    /// server applies it on arrival (`UploadDone`).
+    pub msgs: Vec<Compressed>,
 }
 
 impl WorkerState {
@@ -101,7 +147,7 @@ impl WorkerState {
             u: vec![0.0; dim],
             scratch: Vec::with_capacity(dim),
             diff: vec![0.0; dim],
-            msg: Compressed::default(),
+            msgs: Vec::new(),
         }
     }
 
@@ -133,5 +179,42 @@ mod tests {
         assert_eq!(w.u_hat.dim(), 10);
         assert_eq!(w.u.len(), 10);
         assert_eq!(w.id, 3);
+    }
+
+    #[test]
+    fn constant_model_is_identity() {
+        let m = ComputeModel::Constant;
+        assert_eq!(m.sample(0.25, 0, 0), 0.25);
+        assert_eq!(m.sample(0.25, 7, 99), 0.25);
+    }
+
+    #[test]
+    fn lognormal_model_is_deterministic_and_positive() {
+        let m = ComputeModel::Lognormal { sigma: 0.4, seed: 11 };
+        for w in 0..4 {
+            for k in 0..8u64 {
+                let a = m.sample(0.5, w, k);
+                assert_eq!(a, m.sample(0.5, w, k), "pure in (worker, round)");
+                assert!(a > 0.0);
+            }
+        }
+        // Different (worker, round) pairs draw different jitter.
+        assert_ne!(m.sample(0.5, 0, 0), m.sample(0.5, 1, 0));
+        assert_ne!(m.sample(0.5, 0, 0), m.sample(0.5, 0, 1));
+        // Mean-preserving within a loose sampling tolerance.
+        let n = 2000;
+        let mean: f64 =
+            (0..n).map(|k| m.sample(1.0, 0, k as u64)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn profile_model_cycles_factors() {
+        let m = ComputeModel::Profile { factors: vec![1.0, 4.0] };
+        assert_eq!(m.sample(0.1, 0, 5), 0.1);
+        assert!((m.sample(0.1, 1, 5) - 0.4).abs() < 1e-12);
+        assert_eq!(m.sample(0.1, 2, 5), 0.1);
+        let empty = ComputeModel::Profile { factors: vec![] };
+        assert_eq!(empty.sample(0.1, 3, 0), 0.1);
     }
 }

@@ -80,6 +80,8 @@ fn sim_config(cfg: &ExperimentConfig, layers: Vec<Layer>, t_comp: f64) -> SimCon
         round_deadline: Some(round_deadline(&cfg.budget, t_comp)),
         budget_safety: cfg.budget_safety,
         threads: cfg.threads,
+        mode: cfg.mode.resolve(cfg.m),
+        compute: cfg.compute.clone(),
     }
 }
 
@@ -172,7 +174,8 @@ pub fn per_direction(t_comm: f64) -> BudgetParams {
 mod tests {
     use super::*;
     use crate::bandwidth::TraceSpec;
-    use crate::config::OptimizerSpec;
+    use crate::config::{ExecModeSpec, OptimizerSpec};
+    use crate::coordinator::ComputeModel;
     use crate::kimad::CompressPolicy;
 
     fn quad_cfg() -> ExperimentConfig {
@@ -193,6 +196,8 @@ mod tests {
             single_layer: false,
             budget_safety: 1.0,
             threads: 0,
+            mode: ExecModeSpec::Sync,
+            compute: ComputeModel::Constant,
             seed: 21,
         }
     }
@@ -224,5 +229,26 @@ mod tests {
         cfg.single_layer = true;
         let res = run_experiment(&cfg, None, 0).unwrap();
         assert_eq!(res.layers.len(), 1);
+    }
+
+    #[test]
+    fn mode_and_compute_reach_the_engine() {
+        let mut cfg = quad_cfg();
+        cfg.mode = ExecModeSpec::SemiSync { participation: 0.5 };
+        cfg.compute = ComputeModel::Profile { factors: vec![1.0, 6.0] };
+        let res = run_experiment(&cfg, None, 0).unwrap();
+        // M=2, participation 0.5 -> quorum 1: rounds close on the fast
+        // worker while the straggler's uploads land late.
+        assert!(res.records.iter().all(|r| r.n_arrivals() >= 1));
+        assert!(res
+            .records
+            .iter()
+            .flat_map(|r| &r.workers)
+            .any(|w| w.staleness > 0));
+
+        cfg.mode = ExecModeSpec::Async { damping: 0.6 };
+        let res = run_experiment(&cfg, None, 0).unwrap();
+        assert!(res.records.iter().all(|r| r.n_arrivals() == 1));
+        assert!(res.total_time > 0.0);
     }
 }

@@ -4,8 +4,8 @@
 //!   train     run an experiment from a JSON config, write CSVs
 //!   report    regenerate a paper figure/table (fig1, fig3..fig9,
 //!             table1, table2, or `all`)
-//!   scenarios run a scenario matrix (traces × policies × workers ×
-//!             safety) in parallel, one JSON summary per cell
+//!   scenarios run a scenario matrix (traces × policies × modes ×
+//!             workers × safety) in parallel, one JSON summary per cell
 //!   synthetic quick §4.1 quadratic comparison for one scenario
 //!   trace     sample a bandwidth trace spec (JSON) to stdout
 //!   presets   list AOT model presets available in artifacts/
@@ -27,7 +27,7 @@ USAGE:
   kimad report <fig1|fig3..fig9|fig3to6|table1|table2|all> [--artifacts DIR] \\
                [--out-dir DIR] [--fast]
   kimad scenarios [--grid <grid.json>] [--out-dir DIR] [--threads N] \\
-               [--rounds N] [--print-grid]
+               [--rounds N] [--modes sync,semisync,async] [--print-grid]
   kimad synthetic [--scenario xsmall|small|oscillation|high] [--fast] [--out-dir DIR]
   kimad trace --spec '<json TraceSpec>' [--seconds S] [--step S]
   kimad presets [--artifacts DIR]
@@ -70,6 +70,18 @@ fn scenarios(args: &Args) -> anyhow::Result<()> {
             .parse()
             .map_err(|e| anyhow::anyhow!("--rounds={rounds}: {e}"))?;
     }
+    if let Some(modes) = args.opt("modes") {
+        // Override the grid's execution-mode axis: comma-separated
+        // sync|semisync[:participation]|async[:damping] tokens.
+        grid.modes = modes
+            .split(',')
+            .map(|tok| {
+                Ok(kimad::scenarios::NamedMode {
+                    spec: kimad::config::ExecModeSpec::parse(tok.trim())?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+    }
     if args.flag("print-grid") {
         println!("{}", grid.to_json());
         return Ok(());
@@ -77,11 +89,13 @@ fn scenarios(args: &Args) -> anyhow::Result<()> {
     let threads = args.opt_usize("threads", 0)?;
     let out_dir = PathBuf::from(args.opt_or("out-dir", "reports/scenarios"));
     eprintln!(
-        "running grid '{}': {} cells ({} traces x {} policies x {} worker counts x {} safety)...",
+        "running grid '{}': {} cells ({} traces x {} policies x {} modes x {} worker counts \
+         x {} safety)...",
         grid.name,
         grid.n_cells(),
         grid.traces.len(),
         grid.policies.len(),
+        grid.modes.len(),
         grid.worker_counts.len(),
         grid.safety_factors.len()
     );

@@ -1,0 +1,204 @@
+//! Deterministic event queue over virtual time.
+//!
+//! The event-driven engine schedules per-worker pipeline milestones —
+//! [`EventKind::BroadcastDone`], [`EventKind::ComputeDone`],
+//! [`EventKind::UploadDone`] — on a binary heap keyed by virtual
+//! timestamp. This is what lets the coordinator express semi-sync and
+//! fully asynchronous rounds (stragglers, partial participation) with
+//! the same vocabulary as the lockstep loop.
+//!
+//! # Determinism guarantees
+//!
+//! Simulations must be bit-reproducible, so the pop order is a *total*
+//! order, independent of insertion order:
+//!
+//! 1. earlier `time` first (`f64::total_cmp`, so the order is total
+//!    even though times are floats; the engine never schedules NaN);
+//! 2. ties by event kind, in pipeline order (`BroadcastDone` <
+//!    `ComputeDone` < `UploadDone`);
+//! 3. remaining ties by **worker index** (lowest first);
+//! 4. finally by originating round (lowest first).
+//!
+//! Two identical runs therefore drain identical event sequences, and a
+//! run's results never depend on how the heap happened to be filled.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// A per-worker pipeline milestone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// The server's broadcast finished arriving at the worker.
+    BroadcastDone,
+    /// The worker's gradient computation finished.
+    ComputeDone,
+    /// The worker's compressed upload finished arriving at the server.
+    UploadDone,
+}
+
+impl EventKind {
+    /// Pipeline rank used for tie-breaking (see module docs).
+    fn rank(self) -> u8 {
+        match self {
+            EventKind::BroadcastDone => 0,
+            EventKind::ComputeDone => 1,
+            EventKind::UploadDone => 2,
+        }
+    }
+}
+
+/// One scheduled milestone on the virtual timeline.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// Absolute virtual time the milestone completes.
+    pub time: f64,
+    /// Worker the milestone belongs to.
+    pub worker: usize,
+    pub kind: EventKind,
+    /// Server round whose broadcast started this worker's chain (late
+    /// uploads keep the round they were computed for).
+    pub round: u64,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time
+            .total_cmp(&other.time)
+            .then_with(|| self.kind.rank().cmp(&other.kind.rank()))
+            .then_with(|| self.worker.cmp(&other.worker))
+            .then_with(|| self.round.cmp(&other.round))
+    }
+}
+
+/// Min-heap of [`Event`]s over virtual time with the module-level
+/// deterministic total order.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Event>>,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, ev: Event) {
+        debug_assert!(ev.time.is_finite(), "event time must be finite");
+        self.heap.push(Reverse(ev));
+    }
+
+    /// Pop the earliest event (ties per the documented total order).
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop().map(|Reverse(ev)| ev)
+    }
+
+    /// The earliest event without removing it.
+    pub fn peek(&self) -> Option<&Event> {
+        self.heap.peek().map(|Reverse(ev)| ev)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(time: f64, worker: usize, kind: EventKind) -> Event {
+        Event { time, worker, kind, round: 0 }
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(ev(3.0, 0, EventKind::UploadDone));
+        q.push(ev(1.0, 1, EventKind::BroadcastDone));
+        q.push(ev(2.0, 2, EventKind::ComputeDone));
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.pop().unwrap().time, 1.0);
+        assert_eq!(q.pop().unwrap().time, 2.0);
+        assert_eq!(q.pop().unwrap().time, 3.0);
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn ties_break_by_kind_then_worker() {
+        let mut q = EventQueue::new();
+        q.push(ev(1.0, 2, EventKind::BroadcastDone));
+        q.push(ev(1.0, 0, EventKind::UploadDone));
+        q.push(ev(1.0, 1, EventKind::BroadcastDone));
+        q.push(ev(1.0, 0, EventKind::ComputeDone));
+        let order: Vec<_> = std::iter::from_fn(|| q.pop())
+            .map(|e| (e.kind, e.worker))
+            .collect();
+        assert_eq!(
+            order,
+            vec![
+                (EventKind::BroadcastDone, 1),
+                (EventKind::BroadcastDone, 2),
+                (EventKind::ComputeDone, 0),
+                (EventKind::UploadDone, 0),
+            ]
+        );
+    }
+
+    #[test]
+    fn order_is_insertion_independent() {
+        let mut events = vec![
+            ev(2.0, 1, EventKind::ComputeDone),
+            ev(1.0, 3, EventKind::UploadDone),
+            ev(1.0, 0, EventKind::UploadDone),
+            ev(0.5, 2, EventKind::BroadcastDone),
+            ev(2.0, 1, EventKind::UploadDone),
+        ];
+        let mut a = EventQueue::new();
+        for &e in &events {
+            a.push(e);
+        }
+        events.reverse();
+        let mut b = EventQueue::new();
+        for &e in &events {
+            b.push(e);
+        }
+        while let Some(x) = a.pop() {
+            assert_eq!(x, b.pop().unwrap());
+        }
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn peek_matches_pop() {
+        let mut q = EventQueue::new();
+        q.push(ev(5.0, 0, EventKind::ComputeDone));
+        q.push(ev(4.0, 1, EventKind::BroadcastDone));
+        assert_eq!(q.peek().unwrap().time, 4.0);
+        assert_eq!(q.pop().unwrap().worker, 1);
+        q.clear();
+        assert!(q.peek().is_none());
+    }
+}

@@ -10,6 +10,15 @@
 //! A synchronous PS round is:
 //!   server broadcast (downlink, per worker) -> worker compute
 //!   -> worker upload (uplink) -> round time = max over workers.
+//!
+//! [`events`] adds the deterministic virtual-time event queue the
+//! coordinator's semi-sync and asynchronous execution modes schedule
+//! per-worker `BroadcastDone` / `ComputeDone` / `UploadDone` milestones
+//! on.
+
+pub mod events;
+
+pub use events::{Event, EventKind, EventQueue};
 
 use crate::bandwidth::BandwidthTrace;
 
@@ -41,6 +50,9 @@ pub struct Transfer {
     pub bits: f64,
     pub start: f64,
     pub seconds: f64,
+    /// The link's instantaneous (nominal) rate at `start` — the rate a
+    /// zero-duration transfer is attributed to.
+    pub nominal_bps: f64,
 }
 
 impl Transfer {
@@ -48,11 +60,15 @@ impl Transfer {
         self.start + self.seconds
     }
 
+    /// Rate this transfer achieved. Zero-duration transfers (e.g. a
+    /// zero-bit message) report the link's nominal rate instead of
+    /// `inf`/`NaN`, which would otherwise poison any EWMA bandwidth
+    /// monitor fed from observed transfers.
     pub fn observed_bps(&self) -> f64 {
         if self.seconds > 0.0 {
             self.bits / self.seconds
         } else {
-            f64::INFINITY
+            self.nominal_bps
         }
     }
 }
@@ -111,7 +127,7 @@ impl NetSim {
             // alpha scales *time*, equivalent to dividing bandwidth.
             Direction::Down => self.alpha * link.down.transfer_time(start, bits),
         };
-        Transfer { bits, start, seconds }
+        Transfer { bits, start, seconds, nominal_bps: self.true_bps(worker, dir, start) }
     }
 }
 
@@ -158,6 +174,27 @@ mod tests {
         let up = sim.transfer(0, Direction::Up, 0.0, 1000.0);
         assert!((up.seconds - 10.0).abs() < 1e-9); // unchanged
         assert!((sim.true_bps(0, Direction::Down, 0.0) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_duration_transfer_reports_nominal_rate() {
+        // Regression: a zero-bit (zero-duration) transfer used to
+        // report observed_bps = inf, which poisoned EWMA monitors fed
+        // from observed transfers.
+        let sim = sim2();
+        let tr = sim.transfer(0, Direction::Up, 0.0, 0.0);
+        assert_eq!(tr.seconds, 0.0);
+        assert!(tr.observed_bps().is_finite());
+        assert!((tr.observed_bps() - 100.0).abs() < 1e-9);
+        // The downlink nominal rate folds in the congestion alpha.
+        let sim = sim2().with_alpha(2.0);
+        let tr = sim.transfer(0, Direction::Down, 0.0, 0.0);
+        assert!((tr.observed_bps() - 100.0).abs() < 1e-9);
+        // Feeding the clamped observation into a monitor keeps it sane.
+        use crate::bandwidth::{BandwidthMonitor, EwmaMonitor};
+        let mut m = EwmaMonitor::new(0.5);
+        m.observe(1.0, 1.0 / tr.observed_bps());
+        assert!(m.estimate_bps().unwrap().is_finite());
     }
 
     #[test]

@@ -52,8 +52,16 @@ impl LayerwiseSgd {
 
     /// x ← x − γ_i^k · dir on each layer span.
     pub fn step(&self, k: usize, x: &mut [f32], dir: &[f32], layers: &[Layer]) {
+        self.step_scaled(k, 1.0, x, dir, layers);
+    }
+
+    /// [`step`](Self::step) with the schedule's γ^k multiplied by
+    /// `scale` — the asynchronous engine's staleness damping
+    /// (γ_eff = γ^k · damping^staleness). `scale = 1.0` is bit-identical
+    /// to the plain step.
+    pub fn step_scaled(&self, k: usize, scale: f64, x: &mut [f32], dir: &[f32], layers: &[Layer]) {
         debug_assert_eq!(x.len(), dir.len());
-        let gamma = self.schedule.at(k);
+        let gamma = self.schedule.at(k) * scale;
         for l in layers {
             let g = (gamma * self.weight(l.id)) as f32;
             let (xs, ds) = (
@@ -101,6 +109,22 @@ mod tests {
         let mut x = vec![1.0f32; 4];
         sgd.step(0, &mut x, &[1.0, 1.0, 1.0, 1.0], &layers);
         assert_eq!(x, vec![0.0, 0.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn step_scaled_damps_and_unit_scale_matches() {
+        let layout = ModelLayout::synthetic(&[2, 2]);
+        let layers = layout.layers();
+        let sgd = LayerwiseSgd::new(Schedule::Constant(0.5));
+        let dir = [2.0f32, 2.0, 2.0, 2.0];
+        let mut a = vec![1.0f32; 4];
+        let mut b = vec![1.0f32; 4];
+        sgd.step(3, &mut a, &dir, &layers);
+        sgd.step_scaled(3, 1.0, &mut b, &dir, &layers);
+        assert_eq!(a, b, "scale=1.0 must be bit-identical to step");
+        let mut c = vec![1.0f32; 4];
+        sgd.step_scaled(3, 0.5, &mut c, &dir, &layers);
+        assert_eq!(c, vec![0.5; 4]);
     }
 
     #[test]

@@ -49,6 +49,8 @@ fn sim_with(budget_safety: f64, monitor_alpha: f64) -> Simulation<QuadraticSourc
         round_deadline: Some(2.0),
         budget_safety,
         threads: 1,
+        mode: crate::coordinator::ExecMode::Sync,
+        compute: crate::coordinator::ComputeModel::Constant,
     };
     let mut sim = Simulation::new(cfg, net, src, vec![1.0f32; 200]);
     // Swap the monitors for the requested EWMA weight.

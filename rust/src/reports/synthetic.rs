@@ -137,6 +137,8 @@ pub fn run_at(scn: Scenario, method: Method, gamma: f64, t_sys: f64, horizon: f6
         prior_bps: delta + 0.5 * eta,
         budget_safety: 1.0,
         threads: 1,
+        mode: crate::coordinator::ExecMode::Sync,
+        compute: crate::coordinator::ComputeModel::Constant,
     };
     let mut sim = Simulation::new(cfg, net, src, vec![1.0f32; D]);
     let mut series = Series::new(method.name());

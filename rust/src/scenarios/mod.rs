@@ -1,6 +1,6 @@
 //! Scenario-matrix engine: sweep {bandwidth trace × compression policy
-//! × worker count × budget safety factor} and execute the cross-product
-//! in parallel, one JSON summary per cell.
+//! × execution mode × worker count × budget safety factor} and execute
+//! the cross-product in parallel, one JSON summary per cell.
 //!
 //! This is how the repo evaluates "as many scenarios as you can
 //! imagine" (ROADMAP) the way Accordion and the gradient-compression
@@ -22,8 +22,10 @@ use std::time::Instant;
 
 use crate::bandwidth::TraceSpec;
 use crate::config::{
-    policy_from_json, policy_to_json, ExperimentConfig, OptimizerSpec, WorkloadSpec,
+    compute_from_json, compute_to_json, policy_from_json, policy_to_json, ExecModeSpec,
+    ExperimentConfig, OptimizerSpec, WorkloadSpec,
 };
+use crate::coordinator::ComputeModel;
 use crate::driver::run_experiment;
 use crate::kimad::{BudgetParams, CompressPolicy};
 use crate::util::json::Value;
@@ -42,6 +44,24 @@ pub struct NamedPolicy {
     pub policy: CompressPolicy,
 }
 
+/// One execution mode in the grid. Parameterized modes embed their
+/// parameter in the name (`semisync0.75`, `async0.9`) so sweeps over
+/// several participations/dampings expand to distinct cell ids.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NamedMode {
+    pub spec: ExecModeSpec,
+}
+
+impl NamedMode {
+    pub fn name(&self) -> String {
+        match self.spec {
+            ExecModeSpec::Sync => "sync".into(),
+            ExecModeSpec::SemiSync { participation } => format!("semisync{participation}"),
+            ExecModeSpec::Async { damping } => format!("async{damping}"),
+        }
+    }
+}
+
 /// Per-cell constants: the workload and schedule every cell shares.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GridBase {
@@ -56,6 +76,10 @@ pub struct GridBase {
     /// Downlink pattern (shared; the sweep varies the uplink).
     pub downlink: TraceSpec,
     pub warm_start: bool,
+    /// Per-worker compute-time model shared by every cell (the
+    /// straggler axis: profile/lognormal models make semi-sync and
+    /// async cells diverge from lockstep).
+    pub compute: ComputeModel,
     pub seed: u64,
 }
 
@@ -66,6 +90,7 @@ pub struct ScenarioGrid {
     pub base: GridBase,
     pub traces: Vec<NamedTrace>,
     pub policies: Vec<NamedPolicy>,
+    pub modes: Vec<NamedMode>,
     pub worker_counts: Vec<usize>,
     pub safety_factors: Vec<f64>,
 }
@@ -76,6 +101,7 @@ pub struct ScenarioCell {
     pub id: String,
     pub trace: String,
     pub policy: String,
+    pub mode: String,
     pub m: usize,
     pub safety: f64,
     pub cfg: ExperimentConfig,
@@ -87,6 +113,7 @@ pub struct CellSummary {
     pub id: String,
     pub trace: String,
     pub policy: String,
+    pub mode: String,
     pub m: usize,
     pub safety: f64,
     pub rounds: usize,
@@ -101,15 +128,23 @@ pub struct CellSummary {
     /// Virtual seconds simulated.
     pub virtual_time_s: f64,
     pub mean_step_time_s: f64,
+    /// Mean seconds from round start to upload arrival, over every
+    /// (round, arrival) pair — the straggler-lag column.
+    pub mean_arrival_lag_s: f64,
+    /// Largest staleness any aggregated upload carried (0 in sync).
+    pub max_staleness: u64,
     /// Wall-clock milliseconds this cell took to execute.
     pub wall_ms: f64,
 }
 
 impl ScenarioGrid {
-    /// The built-in quick grid: 2 traces × 4 policies × 2 worker counts
-    /// (× 1 safety factor) over the §4.1 quadratic — the smallest sweep
-    /// that exercises every `CompressPolicy` under both a flat and an
-    /// oscillating link.
+    /// The built-in quick grid: 2 traces × 4 policies × 3 execution
+    /// modes × 2 worker counts (× 1 safety factor) over the §4.1
+    /// quadratic — the smallest sweep that exercises every
+    /// `CompressPolicy` and every `ExecMode` under both a flat and an
+    /// oscillating link. The compute profile makes the last of four
+    /// workers a 4× straggler, so the semi-sync and async cells
+    /// actually diverge from lockstep.
     pub fn default_grid() -> Self {
         let cb = 64.0; // bits per sparse coordinate
         Self {
@@ -123,6 +158,7 @@ impl ScenarioGrid {
                 rounds: 60,
                 downlink: TraceSpec::Constant { bps: 1e7 },
                 warm_start: true,
+                compute: ComputeModel::Profile { factors: vec![1.0, 1.0, 1.0, 4.0] },
                 seed: 21,
             },
             traces: vec![
@@ -158,6 +194,11 @@ impl ScenarioGrid {
                     policy: CompressPolicy::WholeModelTopK,
                 },
             ],
+            modes: vec![
+                NamedMode { spec: ExecModeSpec::Sync },
+                NamedMode { spec: ExecModeSpec::SemiSync { participation: 0.5 } },
+                NamedMode { spec: ExecModeSpec::Async { damping: 0.5 } },
+            ],
             worker_counts: vec![1, 4],
             safety_factors: vec![1.0],
         }
@@ -165,8 +206,8 @@ impl ScenarioGrid {
 
     /// Total number of cells in the cross-product.
     pub fn n_cells(&self) -> usize {
-        self.traces.len() * self.policies.len() * self.worker_counts.len()
-            * self.safety_factors.len()
+        self.traces.len() * self.policies.len() * self.modes.len()
+            * self.worker_counts.len() * self.safety_factors.len()
     }
 
     /// Expand the cross-product in deterministic (trace-major) order.
@@ -174,45 +215,58 @@ impl ScenarioGrid {
         let mut cells = Vec::with_capacity(self.n_cells());
         for tr in &self.traces {
             for pol in &self.policies {
-                for &m in &self.worker_counts {
-                    for &safety in &self.safety_factors {
-                        let id = format!("{}_{}_m{m}_s{safety}", tr.name, pol.name);
-                        let cfg = ExperimentConfig {
-                            name: id.clone(),
-                            m,
-                            workload: WorkloadSpec::Quadratic {
-                                d: self.base.d,
-                                n_layers: self.base.n_layers,
-                                t_comp: self.base.t_comp,
-                            },
-                            budget: BudgetParams::PerDirection { t_comm: self.base.t_comm },
-                            up_policy: pol.policy.clone(),
-                            down_policy: pol.policy.clone(),
-                            optimizer: OptimizerSpec {
-                                gamma: self.base.gamma,
-                                layer_weights: vec![],
-                            },
-                            uplink: tr.spec.clone(),
-                            downlink: self.base.downlink.clone(),
-                            alpha: 1.0,
-                            rounds: self.base.rounds,
-                            prior_bps: 0.0,
-                            warm_start: self.base.warm_start,
-                            single_layer: false,
-                            budget_safety: safety,
-                            // The grid level owns the parallelism; one
-                            // thread per cell keeps the pool honest.
-                            threads: 1,
-                            seed: self.base.seed,
-                        };
-                        cells.push(ScenarioCell {
-                            id,
-                            trace: tr.name.clone(),
-                            policy: pol.name.clone(),
-                            m,
-                            safety,
-                            cfg,
-                        });
+                for mode in &self.modes {
+                    for &m in &self.worker_counts {
+                        for &safety in &self.safety_factors {
+                            let id = format!(
+                                "{}_{}_{}_m{m}_s{safety}",
+                                tr.name,
+                                pol.name,
+                                mode.name()
+                            );
+                            let cfg = ExperimentConfig {
+                                name: id.clone(),
+                                m,
+                                workload: WorkloadSpec::Quadratic {
+                                    d: self.base.d,
+                                    n_layers: self.base.n_layers,
+                                    t_comp: self.base.t_comp,
+                                },
+                                budget: BudgetParams::PerDirection {
+                                    t_comm: self.base.t_comm,
+                                },
+                                up_policy: pol.policy.clone(),
+                                down_policy: pol.policy.clone(),
+                                optimizer: OptimizerSpec {
+                                    gamma: self.base.gamma,
+                                    layer_weights: vec![],
+                                },
+                                uplink: tr.spec.clone(),
+                                downlink: self.base.downlink.clone(),
+                                alpha: 1.0,
+                                rounds: self.base.rounds,
+                                prior_bps: 0.0,
+                                warm_start: self.base.warm_start,
+                                single_layer: false,
+                                budget_safety: safety,
+                                // The grid level owns the parallelism;
+                                // one thread per cell keeps the pool
+                                // honest.
+                                threads: 1,
+                                mode: mode.spec,
+                                compute: self.base.compute.clone(),
+                                seed: self.base.seed,
+                            };
+                            cells.push(ScenarioCell {
+                                id,
+                                trace: tr.name.clone(),
+                                policy: pol.name.clone(),
+                                mode: mode.name(),
+                                m,
+                                safety,
+                                cfg,
+                            });
+                        }
                     }
                 }
             }
@@ -224,6 +278,7 @@ impl ScenarioGrid {
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(!self.traces.is_empty(), "grid '{}' has no traces", self.name);
         anyhow::ensure!(!self.policies.is_empty(), "grid '{}' has no policies", self.name);
+        anyhow::ensure!(!self.modes.is_empty(), "grid '{}' has no execution modes", self.name);
         anyhow::ensure!(
             !self.worker_counts.is_empty(),
             "grid '{}' has no worker counts",
@@ -262,11 +317,16 @@ impl ScenarioGrid {
             ("rounds", Value::num(self.base.rounds as f64)),
             ("downlink", self.base.downlink.to_json()),
             ("warm_start", Value::Bool(self.base.warm_start)),
+            ("compute", compute_to_json(&self.base.compute)),
             ("seed", Value::num(self.base.seed as f64)),
         ]);
         Value::obj(vec![
             ("name", Value::str(self.name.clone())),
             ("base", base),
+            (
+                "modes",
+                Value::Arr(self.modes.iter().map(|m| m.spec.to_json()).collect()),
+            ),
             (
                 "traces",
                 Value::Arr(
@@ -330,7 +390,20 @@ impl ScenarioGrid {
                 .opt("warm_start")
                 .and_then(|x| x.as_bool().ok())
                 .unwrap_or(true),
+            compute: match b.opt("compute") {
+                None => ComputeModel::Constant,
+                Some(c) => compute_from_json(c)?,
+            },
             seed: b.opt("seed").and_then(|x| x.as_u64().ok()).unwrap_or(21),
+        };
+        // Grids predating the mode axis run lockstep.
+        let modes = match v.opt("modes") {
+            None => vec![NamedMode { spec: ExecModeSpec::Sync }],
+            Some(arr) => arr
+                .as_arr()?
+                .iter()
+                .map(|m| Ok(NamedMode { spec: ExecModeSpec::from_json(m)? }))
+                .collect::<anyhow::Result<Vec<_>>>()?,
         };
         let traces = v
             .get("traces")?
@@ -371,6 +444,7 @@ impl ScenarioGrid {
             base,
             traces,
             policies,
+            modes,
             worker_counts,
             safety_factors,
         })
@@ -389,6 +463,7 @@ impl CellSummary {
             ("id", Value::str(self.id.clone())),
             ("trace", Value::str(self.trace.clone())),
             ("policy", Value::str(self.policy.clone())),
+            ("mode", Value::str(self.mode.clone())),
             ("m", Value::num(self.m as f64)),
             ("safety", Value::num(self.safety)),
             ("rounds", Value::num(self.rounds as f64)),
@@ -398,6 +473,8 @@ impl CellSummary {
             ("total_down_bits", Value::num(self.total_down_bits as f64)),
             ("virtual_time_s", Value::num(self.virtual_time_s)),
             ("mean_step_time_s", Value::num(self.mean_step_time_s)),
+            ("mean_arrival_lag_s", Value::num(self.mean_arrival_lag_s)),
+            ("max_staleness", Value::num(self.max_staleness as f64)),
             ("wall_ms", Value::num(self.wall_ms)),
         ])
     }
@@ -415,10 +492,23 @@ fn run_cell(cell: &ScenarioCell) -> anyhow::Result<CellSummary> {
         .ok_or_else(|| anyhow::anyhow!("cell '{}' produced no rounds", cell.id))?;
     let total_up_bits: u64 = res.records.iter().map(|r| r.total_up_bits()).sum();
     let total_down_bits: u64 = res.records.iter().map(|r| r.down_bits).sum();
+    let n_arrivals: usize = res.records.iter().map(|r| r.n_arrivals()).sum();
+    let mean_arrival_lag_s = if n_arrivals == 0 {
+        0.0
+    } else {
+        res.records
+            .iter()
+            .flat_map(|r| &r.workers)
+            .map(|w| w.arrival_lag)
+            .sum::<f64>()
+            / n_arrivals as f64
+    };
+    let max_staleness = res.records.iter().map(|r| r.max_staleness()).max().unwrap_or(0);
     Ok(CellSummary {
         id: cell.id.clone(),
         trace: cell.trace.clone(),
         policy: cell.policy.clone(),
+        mode: cell.mode.clone(),
         m: cell.m,
         safety: cell.safety,
         rounds: res.records.len(),
@@ -428,6 +518,8 @@ fn run_cell(cell: &ScenarioCell) -> anyhow::Result<CellSummary> {
         total_down_bits,
         virtual_time_s: res.total_time,
         mean_step_time_s: res.mean_step_time(),
+        mean_arrival_lag_s,
+        max_staleness,
         wall_ms,
     })
 }
@@ -506,16 +598,19 @@ fn sanitize(id: &str) -> String {
 /// Render a compact markdown table over the summaries (CLI output).
 pub fn render_table(summaries: &[CellSummary]) -> String {
     let mut out = String::from(
-        "| cell | rounds | final f(x) | up Mbit | step s | wall ms |\n|---|---|---|---|---|---|\n",
+        "| cell | rounds | final f(x) | up Mbit | step s | lag s | stale | wall ms |\n\
+         |---|---|---|---|---|---|---|---|\n",
     );
     for s in summaries {
         out.push_str(&format!(
-            "| {} | {} | {:.3e} | {:.3} | {:.2} | {:.0} |\n",
+            "| {} | {} | {:.3e} | {:.3} | {:.2} | {:.2} | {} | {:.0} |\n",
             s.id,
             s.rounds,
             s.final_f_x,
             s.total_up_bits as f64 / 1e6,
             s.mean_step_time_s,
+            s.mean_arrival_lag_s,
+            s.max_staleness,
             s.wall_ms,
         ));
     }
@@ -537,7 +632,7 @@ mod tests {
     #[test]
     fn expansion_is_full_cross_product() {
         let g = ScenarioGrid::default_grid();
-        assert_eq!(g.n_cells(), 2 * 4 * 2);
+        assert_eq!(g.n_cells(), 2 * 4 * 3 * 2);
         let cells = g.expand();
         assert_eq!(cells.len(), g.n_cells());
         let mut ids: Vec<_> = cells.iter().map(|c| c.id.clone()).collect();
@@ -545,6 +640,14 @@ mod tests {
         ids.dedup();
         assert_eq!(ids.len(), cells.len(), "ids must be unique");
         g.validate().unwrap();
+        // Every execution mode appears in the expansion (parameterized
+        // modes carry their parameter in the name: semisync0.5).
+        for mode in ["sync", "semisync", "async"] {
+            assert!(
+                cells.iter().any(|c| c.mode.starts_with(mode)),
+                "missing {mode} cells"
+            );
+        }
     }
 
     #[test]
@@ -566,6 +669,48 @@ mod tests {
         let mut g = ScenarioGrid::default_grid();
         g.traces[1].name = g.traces[0].name.clone();
         assert!(g.validate().is_err());
+        let mut g = ScenarioGrid::default_grid();
+        g.modes.clear();
+        assert!(g.validate().is_err());
+        // Two modes with the same name collide on cell ids.
+        let mut g = ScenarioGrid::default_grid();
+        g.modes = vec![
+            NamedMode { spec: ExecModeSpec::Async { damping: 0.5 } },
+            NamedMode { spec: ExecModeSpec::Async { damping: 0.5 } },
+        ];
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn parameterized_mode_variants_coexist() {
+        // The point of the parameterized tokens: sweeping several
+        // participations/dampings in one grid expands to distinct ids.
+        let mut g = ScenarioGrid::default_grid();
+        g.modes = vec![
+            NamedMode { spec: ExecModeSpec::SemiSync { participation: 0.25 } },
+            NamedMode { spec: ExecModeSpec::SemiSync { participation: 0.75 } },
+            NamedMode { spec: ExecModeSpec::Async { damping: 0.5 } },
+            NamedMode { spec: ExecModeSpec::Async { damping: 0.9 } },
+        ];
+        g.validate().unwrap();
+        let names: Vec<_> = g.modes.iter().map(|m| m.name()).collect();
+        assert_eq!(names, ["semisync0.25", "semisync0.75", "async0.5", "async0.9"]);
+    }
+
+    #[test]
+    fn grids_without_mode_axis_default_to_sync() {
+        // Backward compatibility: grid files written before the mode
+        // axis still parse (and run lockstep with uniform compute).
+        let mut v = ScenarioGrid::default_grid().to_json();
+        if let Value::Obj(fields) = &mut v {
+            fields.remove("modes");
+            if let Some(Value::Obj(bf)) = fields.get_mut("base") {
+                bf.remove("compute");
+            }
+        }
+        let g = ScenarioGrid::from_json(&v).unwrap();
+        assert_eq!(g.modes, vec![NamedMode { spec: ExecModeSpec::Sync }]);
+        assert_eq!(g.base.compute, ComputeModel::Constant);
     }
 
     #[test]

@@ -34,10 +34,10 @@ fn scenarios_runs_default_grid_and_writes_cell_summaries() {
         .unwrap();
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     let text = String::from_utf8_lossy(&out.stdout);
-    // The default grid is 2 traces x 4 policies x 2 worker counts.
-    assert!(text.contains("16 cells"), "{text}");
+    // The default grid is 2 traces x 4 policies x 3 modes x 2 workers.
+    assert!(text.contains("48 cells"), "{text}");
     let index = std::fs::read_to_string(dir.join("index.json")).unwrap();
-    assert!(index.contains("\"n_cells\":16"), "{index}");
+    assert!(index.contains("\"n_cells\":48"), "{index}");
     let n_json = std::fs::read_dir(&dir)
         .unwrap()
         .filter(|e| {
@@ -48,8 +48,43 @@ fn scenarios_runs_default_grid_and_writes_cell_summaries() {
                 .is_some_and(|x| x == "json")
         })
         .count();
-    assert_eq!(n_json, 16 + 1, "one summary per cell + index.json");
+    assert_eq!(n_json, 48 + 1, "one summary per cell + index.json");
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn scenarios_modes_flag_overrides_the_mode_axis() {
+    let dir = std::env::temp_dir().join(format!("kimad-cli-modes-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = kimad()
+        .args([
+            "scenarios",
+            "--rounds",
+            "6",
+            "--threads",
+            "2",
+            "--modes",
+            "semisync:0.5,async:0.8",
+            "--out-dir",
+            dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    // 2 traces x 4 policies x 2 modes x 2 workers = 32 cells.
+    let index = std::fs::read_to_string(dir.join("index.json")).unwrap();
+    assert!(index.contains("\"n_cells\":32"), "{index}");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("semisync"), "{text}");
+    assert!(text.contains("async"), "{text}");
+    assert!(!text.contains("_sync_"), "sync cells must be absent:\n{text}");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let bad = kimad()
+        .args(["scenarios", "--modes", "lockstep", "--print-grid"])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
 }
 
 #[test]

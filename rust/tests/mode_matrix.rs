@@ -1,0 +1,306 @@
+//! Execution-mode matrix: the event engine's contract.
+//!
+//! * `Sync` on the event engine is **bit-identical** to the frozen
+//!   pre-refactor loop (`Simulation::round_reference`) — the golden
+//!   test of the event-driven rewrite.
+//! * Semi-sync and async runs are deterministic across thread counts
+//!   and across repeated runs.
+//! * With homogeneous workers, async staleness is bounded by M.
+
+use kimad::bandwidth::{ConstantTrace, SinSquaredTrace};
+use kimad::coordinator::{
+    ComputeModel, ExecMode, QuadraticSource, RoundRecord, SimConfig, Simulation,
+};
+use kimad::kimad::{BudgetParams, CompressPolicy};
+use kimad::netsim::{Link, NetSim};
+use kimad::optim::{LayerwiseSgd, Schedule};
+use kimad::quadratic::Quadratic;
+
+const D: usize = 40;
+
+/// Per-worker phase-shifted sin² uplinks over a fat downlink.
+fn wave_net(m: usize) -> NetSim {
+    NetSim::new(
+        (0..m)
+            .map(|i| {
+                Link::new(
+                    Box::new(
+                        SinSquaredTrace::new(1500.0, 0.13, 200.0).with_phase(0.2 * i as f64),
+                    ),
+                    Box::new(ConstantTrace::new(1e6)),
+                )
+            })
+            .collect(),
+    )
+}
+
+/// Identical constant links — the homogeneous setting for staleness
+/// bounds.
+fn flat_net(m: usize, bps: f64) -> NetSim {
+    NetSim::new(
+        (0..m)
+            .map(|_| {
+                Link::new(
+                    Box::new(ConstantTrace::new(bps)),
+                    Box::new(ConstantTrace::new(bps)),
+                )
+            })
+            .collect(),
+    )
+}
+
+fn build(
+    m: usize,
+    net: NetSim,
+    policy: CompressPolicy,
+    mode: ExecMode,
+    compute: ComputeModel,
+    threads: usize,
+) -> Simulation<QuadraticSource> {
+    let q = Quadratic::paper_instance(D);
+    let layers = q.layout(4).layers();
+    let src = QuadraticSource::new(q, 0.1);
+    let cfg = SimConfig {
+        m,
+        weights: vec![],
+        budget: BudgetParams::PerDirection { t_comm: 0.9 },
+        up_policy: policy.clone(),
+        down_policy: policy,
+        optimizer: LayerwiseSgd::new(Schedule::Constant(0.02)),
+        layers,
+        warm_start: true,
+        prior_bps: 800.0,
+        round_deadline: Some(1.9),
+        budget_safety: 1.0,
+        threads,
+        mode,
+        compute,
+    };
+    Simulation::new(cfg, net, src, vec![1.0f32; D])
+}
+
+fn run_reference(sim: &mut Simulation<QuadraticSource>, n: u64) -> Vec<RoundRecord> {
+    (0..n).map(|_| sim.round_reference().unwrap()).collect()
+}
+
+#[test]
+fn sync_event_engine_bit_matches_reference_loop() {
+    // The golden test: for every policy and worker count, the
+    // event-driven Sync engine reproduces the pre-refactor loop's
+    // records exactly — same bits, same timings, same floats.
+    for policy in [
+        CompressPolicy::KimadUniform,
+        CompressPolicy::KimadPlus { discretization: 300, ratios: vec![] },
+        CompressPolicy::WholeModelTopK,
+        CompressPolicy::FixedRatio { ratio: 0.3 },
+    ] {
+        for m in [1usize, 3] {
+            let mut engine = build(
+                m,
+                wave_net(m),
+                policy.clone(),
+                ExecMode::Sync,
+                ComputeModel::Constant,
+                1,
+            );
+            let mut oracle = build(
+                m,
+                wave_net(m),
+                policy.clone(),
+                ExecMode::Sync,
+                ComputeModel::Constant,
+                1,
+            );
+            let got = engine.run(40).unwrap();
+            let want = run_reference(&mut oracle, 40);
+            assert_eq!(got, want, "{policy:?} m={m}: event engine diverged");
+        }
+    }
+}
+
+#[test]
+fn sync_bit_identity_with_heterogeneous_downlinks() {
+    // Regression: worker 0's ComputeDone fires before worker 1's
+    // BroadcastDone when downlink speeds differ by orders of magnitude
+    // — the sync drain must dispatch interleaved milestone kinds.
+    let net = NetSim::new(vec![
+        Link::new(
+            Box::new(ConstantTrace::new(1500.0)),
+            Box::new(ConstantTrace::new(1e6)), // fast downlink
+        ),
+        Link::new(
+            Box::new(ConstantTrace::new(1500.0)),
+            Box::new(ConstantTrace::new(300.0)), // slow downlink
+        ),
+    ]);
+    let oracle_net = NetSim::new(vec![
+        Link::new(Box::new(ConstantTrace::new(1500.0)), Box::new(ConstantTrace::new(1e6))),
+        Link::new(Box::new(ConstantTrace::new(1500.0)), Box::new(ConstantTrace::new(300.0))),
+    ]);
+    let mut engine = build(
+        2,
+        net,
+        CompressPolicy::KimadUniform,
+        ExecMode::Sync,
+        ComputeModel::Constant,
+        1,
+    );
+    let mut oracle = build(
+        2,
+        oracle_net,
+        CompressPolicy::KimadUniform,
+        ExecMode::Sync,
+        ComputeModel::Constant,
+        1,
+    );
+    let got = engine.run(25).unwrap();
+    let want = run_reference(&mut oracle, 25);
+    assert_eq!(got, want, "interleaved milestones diverged from the reference");
+}
+
+#[test]
+fn sync_bit_identity_holds_across_thread_counts() {
+    // Engine with 2 threads vs reference with 3: chunking must never
+    // leak into results on either side.
+    let policy = CompressPolicy::KimadUniform;
+    let mut engine = build(
+        4,
+        wave_net(4),
+        policy.clone(),
+        ExecMode::Sync,
+        ComputeModel::Constant,
+        2,
+    );
+    let mut oracle = build(
+        4,
+        wave_net(4),
+        policy,
+        ExecMode::Sync,
+        ComputeModel::Constant,
+        3,
+    );
+    let got = engine.run(30).unwrap();
+    let want = run_reference(&mut oracle, 30);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn semisync_deterministic_across_thread_counts_and_runs() {
+    let straggler = ComputeModel::Profile { factors: vec![1.0, 1.0, 1.0, 8.0] };
+    let runs: Vec<Vec<RoundRecord>> = [1usize, 2, 0]
+        .iter()
+        .map(|&threads| {
+            let mut s = build(
+                4,
+                wave_net(4),
+                CompressPolicy::KimadUniform,
+                ExecMode::SemiSync { quorum: 2 },
+                straggler.clone(),
+                threads,
+            );
+            s.run(50).unwrap()
+        })
+        .collect();
+    assert_eq!(runs[0], runs[1], "threads=2 changed semisync results");
+    assert_eq!(runs[0], runs[2], "threads=auto changed semisync results");
+    // Quorum respected: every round closes with >= 2 arrivals counted
+    // (pre-deadline stragglers can push it above the quorum).
+    for r in &runs[0] {
+        assert!(r.n_arrivals() >= 2, "round {} closed early", r.step);
+    }
+    // The 8x straggler shows up as positive staleness somewhere.
+    assert!(runs[0]
+        .iter()
+        .flat_map(|r| &r.workers)
+        .any(|w| w.worker == 3 && w.staleness > 0));
+}
+
+#[test]
+fn async_deterministic_across_thread_counts_and_runs() {
+    let runs: Vec<Vec<RoundRecord>> = [1usize, 4, 0]
+        .iter()
+        .map(|&threads| {
+            let mut s = build(
+                3,
+                wave_net(3),
+                CompressPolicy::KimadUniform,
+                ExecMode::Async { damping: 0.7 },
+                ComputeModel::Lognormal { sigma: 0.3, seed: 5 },
+                threads,
+            );
+            s.run(80).unwrap()
+        })
+        .collect();
+    assert_eq!(runs[0], runs[1], "threads=4 changed async results");
+    assert_eq!(runs[0], runs[2], "threads=auto changed async results");
+}
+
+#[test]
+fn async_staleness_bounded_by_m_for_homogeneous_workers() {
+    // Identical links + constant compute + fixed-ratio compression:
+    // every chain has the same duration, so between one worker's model
+    // snapshot and its arrival each other worker lands at most once —
+    // staleness <= M.
+    let m = 4;
+    let mut s = build(
+        m,
+        flat_net(m, 2000.0),
+        CompressPolicy::FixedRatio { ratio: 0.5 },
+        ExecMode::Async { damping: 1.0 },
+        ComputeModel::Constant,
+        1,
+    );
+    let recs = s.run(120).unwrap();
+    let mut saw_positive = false;
+    for r in &recs {
+        assert_eq!(r.n_arrivals(), 1);
+        for w in &r.workers {
+            assert!(
+                w.staleness <= m as u64,
+                "round {}: worker {} staleness {} > M",
+                r.step,
+                w.worker,
+                w.staleness
+            );
+            saw_positive |= w.staleness > 0;
+        }
+    }
+    assert!(saw_positive, "M>1 async runs must observe staleness");
+    // Virtual time is monotone non-decreasing across arrival-paced
+    // rounds.
+    for pair in recs.windows(2) {
+        assert!(pair[1].t_start >= pair[0].t_start);
+    }
+}
+
+#[test]
+fn semisync_outpaces_sync_under_heavy_stragglers() {
+    // One worker computes 30x slower than the deadline allows: sync
+    // rounds stall on it, semi-sync rounds close at the quorum/deadline
+    // and keep the virtual clock moving.
+    let straggler = ComputeModel::Profile { factors: vec![1.0, 1.0, 1.0, 30.0] };
+    let mut sync = build(
+        4,
+        wave_net(4),
+        CompressPolicy::KimadUniform,
+        ExecMode::Sync,
+        straggler.clone(),
+        1,
+    );
+    let mut semi = build(
+        4,
+        wave_net(4),
+        CompressPolicy::KimadUniform,
+        ExecMode::SemiSync { quorum: 2 },
+        straggler,
+        1,
+    );
+    sync.run(20).unwrap();
+    semi.run(20).unwrap();
+    assert!(
+        semi.clock < sync.clock,
+        "semi-sync {:.1}s should beat sync {:.1}s over 20 straggler rounds",
+        semi.clock,
+        sync.clock
+    );
+}
