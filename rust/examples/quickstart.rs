@@ -31,6 +31,7 @@ fn main() -> anyhow::Result<()> {
         single_layer: false,
         budget_safety: 1.0,
         threads: 0,
+        shards: 0,
         mode: kimad::config::ExecModeSpec::Sync,
         compute: kimad::coordinator::ComputeModel::Constant,
         seed: 21,

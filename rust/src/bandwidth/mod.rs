@@ -7,6 +7,11 @@
 //! process (the EC2-like trace used for our Fig. 1 reproduction), CSV
 //! replay, and composition — all behind one [`BandwidthTrace`] trait so
 //! the netsim and the monitor never care which one is running.
+//!
+//! [`monitor`] implements the continuous bandwidth monitoring of §2.4
+//! and §3: NIC-counter-style observations feed an estimator (EWMA or
+//! sliding window) whose read at "the time communication is triggered"
+//! (§3.1) is what the Eq. (2) budget multiplies.
 
 pub mod monitor;
 pub mod trace;

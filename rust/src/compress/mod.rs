@@ -12,6 +12,21 @@
 //!   low-rank: rank * (rows + cols) * 32
 //! Header/framing overhead is a constant per message and configurable
 //! at the netsim layer; compressors report payload bits.
+//!
+//! # Example: a TopK round trip
+//!
+//! The default compressor (§4): keep the k largest-|u| coordinates,
+//! pay `k · (index + value)` bits on the wire, decompress by adding
+//! into a zeroed vector:
+//!
+//! ```
+//! use kimad::compress::{Compressor, TopK};
+//!
+//! let u = [5.0f32, -0.1, 4.0, 0.2, -3.0];
+//! let msg = TopK::new(2).compress(&u);
+//! assert_eq!(msg.wire_bits(), 2 * (32 + 32));
+//! assert_eq!(msg.to_dense(u.len()), vec![5.0, 0.0, 4.0, 0.0, 0.0]);
+//! ```
 
 pub mod identity;
 pub mod lowrank;

@@ -212,6 +212,10 @@ pub struct ExperimentConfig {
     /// Worker-phase thread count (see `SimConfig::threads`): 0 = auto,
     /// 1 = serial. Results are bit-identical for every setting.
     pub threads: usize,
+    /// Server-shard count for the aggregation path (see
+    /// `Simulation::shards`): 0 = auto, 1 = serialized, n = at most n
+    /// layer shards. Results are bit-identical for every setting.
+    pub shards: usize,
     /// Round-engine execution mode (sync / semi-sync / async).
     pub mode: ExecModeSpec,
     /// Per-worker compute-time model (straggler profiles).
@@ -360,6 +364,7 @@ impl ExperimentConfig {
             ("single_layer", Value::Bool(self.single_layer)),
             ("budget_safety", Value::num(self.budget_safety)),
             ("threads", Value::num(self.threads as f64)),
+            ("shards", Value::num(self.shards as f64)),
             ("mode", self.mode.to_json()),
             ("compute", compute_to_json(&self.compute)),
             ("seed", Value::num(self.seed as f64)),
@@ -407,6 +412,10 @@ impl ExperimentConfig {
                 .unwrap_or(1.0),
             threads: v
                 .opt("threads")
+                .and_then(|a| a.as_usize().ok())
+                .unwrap_or(0),
+            shards: v
+                .opt("shards")
                 .and_then(|a| a.as_usize().ok())
                 .unwrap_or(0),
             mode: match v.opt("mode") {
@@ -458,6 +467,7 @@ mod tests {
             single_layer: false,
             budget_safety: 0.9,
             threads: 0,
+            shards: 2,
             mode: ExecModeSpec::SemiSync { participation: 0.75 },
             compute: ComputeModel::Lognormal { sigma: 0.3, seed: 7 },
             seed: 21,
@@ -556,6 +566,7 @@ mod tests {
         assert!(!cfg.single_layer);
         assert_eq!(cfg.prior_bps, 0.0);
         assert_eq!(cfg.threads, 0);
+        assert_eq!(cfg.shards, 0, "shards defaults to auto");
         assert_eq!(cfg.mode, ExecModeSpec::Sync);
         assert_eq!(cfg.compute, ComputeModel::Constant);
         assert_eq!(cfg.seed, 21);

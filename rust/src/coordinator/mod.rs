@@ -9,17 +9,24 @@
 //! [`sim::ExecMode`].
 //!
 //! Layer map:
-//!   server.rs — server-side state (model x, x̂, û_m mirrors)
+//!   server.rs — server-side state (model x, x̂ / per-worker x̂_m
+//!               mirrors, û_m mirrors)
 //!   worker.rs — worker-side state, GradientSource, compute models
+//!   shard.rs  — layer-sharded server aggregation (ShardPlan + the
+//!               deliver/aggregate/step kernels)
 //!   round.rs  — per-round records the figures/tables read
 //!   sim.rs    — the event-driven round engine
+//!
+//! See `docs/ARCHITECTURE.md` for the full data-flow walkthrough.
 
 pub mod round;
 pub mod server;
+pub mod shard;
 pub mod sim;
 pub mod worker;
 
 pub use round::{RoundRecord, WorkerRound};
 pub use server::ServerState;
+pub use shard::{ShardPlan, ShardSpan};
 pub use sim::{ExecMode, SimConfig, Simulation};
 pub use worker::{ComputeModel, GradientSource, QuadraticSource, WorkerState};

@@ -46,8 +46,9 @@ pub struct RoundRecord {
     /// or to the triggering arrival (async).
     pub duration: f64,
     /// Bits broadcast on the downlink during this round (same message
-    /// to every worker in sync/semi-sync; the per-arrival refresh in
-    /// async).
+    /// to every worker in sync/semi-sync; in async, the triggering
+    /// worker's per-channel refresh — plus every worker's bootstrap
+    /// message on the first round, summed).
     pub down_bits: u64,
     /// The arrivals this round aggregated over, in worker-index order.
     pub workers: Vec<WorkerRound>,

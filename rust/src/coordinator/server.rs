@@ -12,6 +12,11 @@ pub struct ServerState {
     /// advances only by the broadcast compressed message, so one copy
     /// stands for both sides; the sync is asserted in tests).
     pub x_hat: Estimator,
+    /// Per-worker broadcast mirrors x̂_m — populated only when the
+    /// engine runs true per-worker broadcast channels (async mode, via
+    /// [`with_per_worker_mirrors`](Self::with_per_worker_mirrors)).
+    /// Empty = every worker shares `x_hat` (sync / semi-sync).
+    pub x_hats: Vec<Estimator>,
     /// Server-side mirrors of the worker update estimators û_m.
     pub u_hats: Vec<Estimator>,
     /// Downlink bandwidth monitors, one per worker link.
@@ -30,6 +35,7 @@ impl ServerState {
         Self {
             x: x0,
             x_hat: Estimator::zeros(dim),
+            x_hats: Vec::new(),
             u_hats: (0..m).map(|_| Estimator::zeros(dim)).collect(),
             down_monitors: (0..m)
                 .map(|_| Box::new(EwmaMonitor::new(0.7)) as Box<dyn BandwidthMonitor>)
@@ -37,6 +43,27 @@ impl ServerState {
             agg: vec![0.0; dim],
             scratch: Vec::with_capacity(dim),
             msg: Compressed::default(),
+        }
+    }
+
+    /// Give every worker its own broadcast mirror x̂_m (the async
+    /// engine's honest per-worker channel: each worker only ever sees
+    /// what was actually compressed onto *its* downlink, instead of the
+    /// shared-broadcast-channel abstraction where one x̂ stood for all).
+    pub fn with_per_worker_mirrors(mut self) -> Self {
+        let dim = self.dim();
+        self.x_hats = (0..self.u_hats.len()).map(|_| Estimator::zeros(dim)).collect();
+        self
+    }
+
+    /// The model estimate worker `worker` computes gradients at: its
+    /// own mirror when per-worker channels are on, the shared broadcast
+    /// estimator otherwise.
+    pub fn model_estimate(&self, worker: usize) -> &[f32] {
+        if self.x_hats.is_empty() {
+            &self.x_hat.value
+        } else {
+            &self.x_hats[worker].value
         }
     }
 
@@ -104,6 +131,18 @@ mod tests {
     fn cold_start_uses_prior() {
         let s = ServerState::new(vec![0.0; 1], 2);
         assert_eq!(s.broadcast_estimate(42.0), 42.0);
+    }
+
+    #[test]
+    fn model_estimate_prefers_per_worker_mirrors() {
+        let shared = ServerState::new(vec![0.0; 2], 2);
+        assert!(shared.x_hats.is_empty());
+        assert_eq!(shared.model_estimate(1), shared.x_hat.value.as_slice());
+        let mut per = ServerState::new(vec![0.0; 2], 2).with_per_worker_mirrors();
+        assert_eq!(per.x_hats.len(), 2);
+        per.x_hats[1].value = vec![3.0, 4.0];
+        assert_eq!(per.model_estimate(0), &[0.0, 0.0]);
+        assert_eq!(per.model_estimate(1), &[3.0, 4.0]);
     }
 
     #[test]

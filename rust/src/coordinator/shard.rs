@@ -1,0 +1,452 @@
+//! Layer-sharded server aggregation.
+//!
+//! The server's per-round work — applying arrived uploads to the û_m
+//! mirrors, reducing Σ w_m û_m, and stepping the model — is a
+//! per-coordinate pipeline over the flat parameter vector. A
+//! [`ShardPlan`] partitions the model's compression layers into
+//! contiguous *shards* (disjoint coordinate spans), so that work fans
+//! out across scoped threads: each shard is owned by exactly one thread
+//! for the duration of a batch, and no two shards overlap.
+//!
+//! Shards are **views, not owners**: the flat vectors (`x`, `agg`, each
+//! `Estimator::value`) stay contiguous — the gradient source and the
+//! compressors need whole-model slices — and the plan hands out
+//! disjoint `&mut [f32]` spans via `split_at_mut`.
+//!
+//! # Determinism
+//!
+//! Sharding never changes results, bit for bit, for any shard count:
+//!
+//! * every coordinate belongs to exactly one shard, and within a shard
+//!   the per-coordinate operation order (zero, then worker 0's add,
+//!   worker 1's add, …) is identical to the serialized loop;
+//! * the reduction Σ w_m û_m runs in worker-index order inside every
+//!   shard, so no floating-point sum is ever re-associated;
+//! * scalar reductions that span shards (the aggregate's squared norm)
+//!   are computed in a single ordered pass over the full vector *after*
+//!   the parallel fill, never as per-shard partials — re-associating a
+//!   non-associative f64 sum across a shard boundary would leak the
+//!   shard count into the last bits.
+//!
+//! The serialized path (`parallel == false`, or one shard) performs the
+//! exact same operations with zero heap allocations — the hot-path
+//! bench guards this with a counting allocator. The parallel fan-out
+//! allocates only its thread scope and per-shard slice lists, the same
+//! class of cost the Sync upload batch already pays.
+
+use crate::compress::Compressed;
+use crate::ef21::Estimator;
+use crate::model::Layer;
+use crate::netsim::Event;
+use crate::optim::LayerwiseSgd;
+
+use super::worker::WorkerState;
+
+/// One shard: a contiguous run of layers and the coordinate span they
+/// cover.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpan {
+    /// First layer index (into the simulation's layer list).
+    pub layer_lo: usize,
+    /// One past the last layer index.
+    pub layer_hi: usize,
+    /// First flat-vector coordinate.
+    pub coord_lo: usize,
+    /// One past the last flat-vector coordinate.
+    pub coord_hi: usize,
+}
+
+/// A partition of the model's layers into contiguous, size-balanced
+/// shards (see the module docs for the determinism contract).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    spans: Vec<ShardSpan>,
+    dim: usize,
+}
+
+impl ShardPlan {
+    /// Partition `layers` into at most `n_shards` contiguous shards,
+    /// greedily balanced by coordinate count (a shard never splits a
+    /// layer — layers are the unit the compressed messages address).
+    ///
+    /// Layers must tile `[0, dim)` contiguously in order, which is what
+    /// [`crate::model::ModelLayout`] produces.
+    pub fn build(layers: &[Layer], n_shards: usize) -> Self {
+        if layers.is_empty() {
+            return Self { spans: Vec::new(), dim: 0 };
+        }
+        let mut off = 0usize;
+        for l in layers {
+            assert_eq!(l.offset, off, "layer '{}' breaks the contiguous tiling", l.name);
+            off += l.size;
+        }
+        let dim = off;
+        let n = n_shards.clamp(1, layers.len());
+        let mut spans = Vec::with_capacity(n);
+        let mut layer_lo = 0usize;
+        let mut coord_lo = 0usize;
+        for s in 0..n {
+            // Remaining work split evenly over the remaining shards;
+            // close this shard at the first layer boundary that reaches
+            // its share (always at least one layer per shard).
+            let remaining_shards = n - s;
+            let target = (dim - coord_lo).div_ceil(remaining_shards);
+            let mut layer_hi = layer_lo + 1;
+            let mut coord_hi = layers[layer_lo].offset + layers[layer_lo].size;
+            while layer_hi < layers.len()
+                && layers.len() - layer_hi >= remaining_shards
+                && coord_hi - coord_lo < target
+            {
+                coord_hi += layers[layer_hi].size;
+                layer_hi += 1;
+            }
+            spans.push(ShardSpan { layer_lo, layer_hi, coord_lo, coord_hi });
+            layer_lo = layer_hi;
+            coord_lo = coord_hi;
+        }
+        debug_assert_eq!(spans.last().map(|s| s.coord_hi), Some(dim));
+        debug_assert_eq!(spans.last().map(|s| s.layer_hi), Some(layers.len()));
+        Self { spans, dim }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn spans(&self) -> &[ShardSpan] {
+        &self.spans
+    }
+}
+
+/// Apply one worker's in-flight per-layer messages for the layers of
+/// one shard to the matching span of its mirror. `mirror_span` is the
+/// shard's slice of the estimator (starting at `span.coord_lo`).
+fn apply_span(span: &ShardSpan, layers: &[Layer], msgs: &[Compressed], mirror_span: &mut [f32]) {
+    let hi = span.layer_hi.min(msgs.len());
+    if hi <= span.layer_lo {
+        return;
+    }
+    for (l, msg) in layers[span.layer_lo..hi].iter().zip(&msgs[span.layer_lo..hi]) {
+        let lo = l.offset - span.coord_lo;
+        msg.add_into(&mut mirror_span[lo..lo + l.size]);
+    }
+}
+
+/// Deliver a batch of upload arrivals (one [`Event`] per arriving
+/// worker, worker-ascending) to the server's û_m mirrors, fanning the
+/// per-layer applies across shards.
+///
+/// Mirrors of different workers are disjoint and each coordinate is
+/// touched by at most one message, so serialized and sharded delivery
+/// are bit-identical in any order; the batch exists so one scope
+/// covers every apply of a timestamp.
+pub fn deliver_batch(
+    plan: &ShardPlan,
+    layers: &[Layer],
+    u_hats: &mut [Estimator],
+    workers: &[WorkerState],
+    batch: &[Event],
+    parallel: bool,
+) {
+    debug_assert!(batch.windows(2).all(|w| w[0].worker < w[1].worker));
+    if !parallel || plan.n_shards() <= 1 || batch.is_empty() {
+        // Serialized path: allocation-free (hot-path bench guard).
+        for ev in batch {
+            let msgs = &workers[ev.worker].msgs;
+            let mirror = &mut u_hats[ev.worker].value;
+            for span in plan.spans() {
+                apply_span(span, layers, msgs, &mut mirror[span.coord_lo..span.coord_hi]);
+            }
+        }
+        return;
+    }
+
+    // Parallel fan-out: per shard, the list of (msgs, mirror span)
+    // pairs of every batch worker; shards own disjoint spans, so the
+    // scoped threads never alias.
+    type ShardItems<'a> = Vec<(&'a [Compressed], &'a mut [f32])>;
+    let n = plan.n_shards();
+    let mut per_shard: Vec<ShardItems<'_>> =
+        (0..n).map(|_| Vec::with_capacity(batch.len())).collect();
+    let mut bi = 0usize;
+    for (w, est) in u_hats.iter_mut().enumerate() {
+        if bi >= batch.len() {
+            break;
+        }
+        if batch[bi].worker != w {
+            continue;
+        }
+        bi += 1;
+        let msgs: &[Compressed] = &workers[w].msgs;
+        let mut rest: &mut [f32] = &mut est.value;
+        let mut prev = 0usize;
+        for (si, span) in plan.spans().iter().enumerate() {
+            let (head, tail) = rest.split_at_mut(span.coord_hi - prev);
+            rest = tail;
+            prev = span.coord_hi;
+            per_shard[si].push((msgs, head));
+        }
+    }
+    debug_assert_eq!(bi, batch.len(), "batch workers must exist in u_hats");
+    std::thread::scope(|s| {
+        let handles: Vec<_> = per_shard
+            .into_iter()
+            .enumerate()
+            .map(|(si, items)| {
+                let span = plan.spans()[si];
+                s.spawn(move || {
+                    for (msgs, mirror_span) in items {
+                        apply_span(&span, layers, msgs, mirror_span);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("shard delivery thread panicked");
+        }
+    });
+}
+
+/// Fill `agg` with Σ w_m û_m shard by shard and return ‖agg‖²
+/// (Algorithm 3 line 15's direction and the descent-tracking norm).
+///
+/// Within every shard the worker loop runs in index order — the same
+/// per-coordinate operation sequence as the serialized reduction — and
+/// the squared norm is a single ordered pass over the filled vector,
+/// so the result is bit-identical for every shard count and for both
+/// the serialized and parallel paths.
+pub fn aggregate(
+    plan: &ShardPlan,
+    weights: &[f64],
+    u_hats: &[Estimator],
+    agg: &mut [f32],
+    parallel: bool,
+) -> f64 {
+    debug_assert_eq!(weights.len(), u_hats.len());
+    debug_assert_eq!(agg.len(), plan.dim());
+    let fill_span = |span: &ShardSpan, agg_span: &mut [f32]| {
+        agg_span.iter_mut().for_each(|v| *v = 0.0);
+        for (w, u_hat) in weights.iter().zip(u_hats) {
+            let w = *w as f32;
+            let src = &u_hat.value[span.coord_lo..span.coord_hi];
+            for (a, &u) in agg_span.iter_mut().zip(src) {
+                *a += w * u;
+            }
+        }
+    };
+    if !parallel || plan.n_shards() <= 1 {
+        for span in plan.spans() {
+            fill_span(span, &mut agg[span.coord_lo..span.coord_hi]);
+        }
+    } else {
+        std::thread::scope(|s| {
+            let mut rest: &mut [f32] = &mut *agg;
+            let mut prev = 0usize;
+            let mut handles = Vec::with_capacity(plan.n_shards());
+            for span in plan.spans() {
+                let (head, tail) = rest.split_at_mut(span.coord_hi - prev);
+                rest = tail;
+                prev = span.coord_hi;
+                let fill = &fill_span;
+                handles.push(s.spawn(move || fill(span, head)));
+            }
+            for h in handles {
+                h.join().expect("shard aggregate thread panicked");
+            }
+        });
+    }
+    agg.iter().map(|&v| (v as f64) * (v as f64)).sum()
+}
+
+/// Step the model `x ← x − γ_i^k·scale · agg` layer by layer, fanned
+/// across shards. Per-coordinate updates are independent, so sharding
+/// is bit-identical to [`LayerwiseSgd::step_scaled`].
+#[allow(clippy::too_many_arguments)] // mirrors step_scaled + (plan, parallel)
+pub fn step(
+    plan: &ShardPlan,
+    opt: &LayerwiseSgd,
+    k: usize,
+    scale: f64,
+    x: &mut [f32],
+    agg: &[f32],
+    layers: &[Layer],
+    parallel: bool,
+) {
+    debug_assert_eq!(x.len(), agg.len());
+    let step_span = |span: &ShardSpan, x_span: &mut [f32]| {
+        for l in &layers[span.layer_lo..span.layer_hi] {
+            let lo = l.offset - span.coord_lo;
+            opt.step_layer(
+                k,
+                scale,
+                l.id,
+                &mut x_span[lo..lo + l.size],
+                &agg[l.offset..l.offset + l.size],
+            );
+        }
+    };
+    if !parallel || plan.n_shards() <= 1 {
+        for span in plan.spans() {
+            step_span(span, &mut x[span.coord_lo..span.coord_hi]);
+        }
+    } else {
+        std::thread::scope(|s| {
+            let mut rest: &mut [f32] = &mut *x;
+            let mut prev = 0usize;
+            let mut handles = Vec::with_capacity(plan.n_shards());
+            for span in plan.spans() {
+                let (head, tail) = rest.split_at_mut(span.coord_hi - prev);
+                rest = tail;
+                prev = span.coord_hi;
+                let st = &step_span;
+                handles.push(s.spawn(move || st(span, head)));
+            }
+            for h in handles {
+                h.join().expect("shard step thread panicked");
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelLayout;
+    use crate::netsim::EventKind;
+    use crate::optim::Schedule;
+
+    fn layers(sizes: &[usize]) -> Vec<Layer> {
+        ModelLayout::synthetic(sizes).layers()
+    }
+
+    #[test]
+    fn plan_tiles_the_model() {
+        let ls = layers(&[10, 30, 20, 40]);
+        for n in 1..=6 {
+            let plan = ShardPlan::build(&ls, n);
+            assert_eq!(plan.dim(), 100);
+            assert_eq!(plan.n_shards(), n.min(4));
+            let spans = plan.spans();
+            assert_eq!(spans[0].coord_lo, 0);
+            assert_eq!(spans.last().unwrap().coord_hi, 100);
+            for pair in spans.windows(2) {
+                assert_eq!(pair[0].coord_hi, pair[1].coord_lo);
+                assert_eq!(pair[0].layer_hi, pair[1].layer_lo);
+            }
+            for s in spans {
+                assert!(s.layer_hi > s.layer_lo, "every shard owns >= 1 layer");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_balances_by_coordinates() {
+        // 4 equal layers over 2 shards: 2 + 2 layers.
+        let plan = ShardPlan::build(&layers(&[25, 25, 25, 25]), 2);
+        assert_eq!(plan.n_shards(), 2);
+        assert_eq!(plan.spans()[0].coord_hi, 50);
+        // One huge head layer: it fills shard 0 alone.
+        let plan = ShardPlan::build(&layers(&[90, 5, 5]), 2);
+        assert_eq!(plan.spans()[0].layer_hi, 1);
+        assert_eq!(plan.spans()[1].layer_lo, 1);
+    }
+
+    #[test]
+    fn plan_clamps_and_handles_empty() {
+        assert_eq!(ShardPlan::build(&layers(&[4, 4]), 99).n_shards(), 2);
+        assert_eq!(ShardPlan::build(&layers(&[4, 4]), 0).n_shards(), 1);
+        let empty = ShardPlan::build(&[], 4);
+        assert_eq!(empty.n_shards(), 0);
+        assert_eq!(empty.dim(), 0);
+    }
+
+    #[test]
+    fn aggregate_matches_server_state_bitwise() {
+        let ls = layers(&[7, 13, 9]);
+        let dim = 29;
+        let mut u_hats: Vec<Estimator> = (0..3).map(|_| Estimator::zeros(dim)).collect();
+        for (wi, uh) in u_hats.iter_mut().enumerate() {
+            for (i, v) in uh.value.iter_mut().enumerate() {
+                *v = ((i * 31 + wi * 7) % 17) as f32 / 3.0 - 2.0;
+            }
+        }
+        let weights = [0.5, 0.3, 0.2];
+        let mut server = crate::coordinator::ServerState::new(vec![0.0; dim], 3);
+        server.u_hats = u_hats.clone();
+        let want_norm = server.aggregate(&weights);
+        for n in [1usize, 2, 3] {
+            for par in [false, true] {
+                let plan = ShardPlan::build(&ls, n);
+                let mut agg = vec![f32::NAN; dim];
+                let norm = aggregate(&plan, &weights, &u_hats, &mut agg, par);
+                assert_eq!(agg, server.agg, "shards={n} par={par}");
+                assert_eq!(norm.to_bits(), want_norm.to_bits(), "shards={n} par={par}");
+            }
+        }
+    }
+
+    #[test]
+    fn step_matches_layerwise_sgd_bitwise() {
+        let ls = layers(&[8, 8, 8]);
+        let opt = LayerwiseSgd::new(Schedule::Constant(0.05)).with_layer_weights(vec![1.0, 0.5]);
+        let agg: Vec<f32> = (0..24).map(|i| (i as f32 - 12.0) / 5.0).collect();
+        let mut want: Vec<f32> = vec![1.0; 24];
+        opt.step_scaled(3, 0.7, &mut want, &agg, &ls);
+        for n in [1usize, 2, 3] {
+            for par in [false, true] {
+                let plan = ShardPlan::build(&ls, n);
+                let mut x = vec![1.0f32; 24];
+                step(&plan, &opt, 3, 0.7, &mut x, &agg, &ls, par);
+                assert_eq!(x, want, "shards={n} par={par}");
+            }
+        }
+    }
+
+    #[test]
+    fn deliver_batch_matches_serial_apply() {
+        let ls = layers(&[4, 6, 5]);
+        let dim = 15;
+        let mk_workers = || -> Vec<WorkerState> {
+            (0..3)
+                .map(|w| {
+                    let mut ws = WorkerState::new(w, dim);
+                    ws.msgs = ls
+                        .iter()
+                        .map(|l| Compressed::Sparse {
+                            dim: l.size,
+                            idx: vec![0, (l.size - 1) as u32],
+                            val: vec![w as f32 + 1.0, -(w as f32) - 0.5],
+                        })
+                        .collect();
+                    ws
+                })
+                .collect()
+        };
+        let workers = mk_workers();
+        let batch: Vec<Event> = [0usize, 2]
+            .iter()
+            .map(|&w| Event { time: 1.0, worker: w, kind: EventKind::UploadDone, round: 0 })
+            .collect();
+        // Serialized reference via Estimator::apply.
+        let mut want: Vec<Estimator> = (0..3).map(|_| Estimator::zeros(dim)).collect();
+        for ev in &batch {
+            for (l, msg) in ls.iter().zip(&workers[ev.worker].msgs) {
+                want[ev.worker].apply(msg, l);
+            }
+        }
+        for n in [1usize, 2, 3] {
+            for par in [false, true] {
+                let plan = ShardPlan::build(&ls, n);
+                let mut u_hats: Vec<Estimator> = (0..3).map(|_| Estimator::zeros(dim)).collect();
+                deliver_batch(&plan, &ls, &mut u_hats, &workers, &batch, par);
+                for (got, want) in u_hats.iter().zip(&want) {
+                    assert_eq!(got.value, want.value, "shards={n} par={par}");
+                }
+            }
+        }
+    }
+}

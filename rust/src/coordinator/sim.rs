@@ -25,10 +25,20 @@
 //! total order (time, kind, worker index), compute-time models are pure
 //! functions of `(worker, round)`, and all floating-point reductions
 //! run in worker-index order. The `threads` knob parallelizes the
-//! Sync-mode upload batch only (per-worker state is disjoint, so chunk
-//! scheduling cannot change results); semi-sync and async process
-//! events serially, so their results are trivially independent of
-//! `threads` too (asserted by property tests).
+//! Sync-mode upload batch (per-worker state is disjoint, so chunk
+//! scheduling cannot change results).
+//!
+//! # Sharded server path
+//!
+//! Semi-sync and async rounds drain the event queue in **batches of
+//! same-timestamp arrivals** ([`EventQueue::pop_batch_into`]) and fan
+//! the server-side work — mirror delivery, the Σ w_m û_m reduction and
+//! the optimizer step — across layer shards
+//! ([`shard::ShardPlan`](super::shard)), so the aggregation path scales
+//! with cores the way the Sync upload batch already does. The `shards`
+//! knob on [`Simulation`] (0 = auto) picks the shard count; results
+//! are bit-identical for every shard count and thread count (see the
+//! shard module's determinism contract and `tests/shard_matrix.rs`).
 
 use crate::bandwidth::BandwidthMonitor;
 use crate::compress::{Compressed, Identity, TopK};
@@ -40,6 +50,7 @@ use crate::optim::LayerwiseSgd;
 
 use super::round::{RoundRecord, WorkerRound};
 use super::server::ServerState;
+use super::shard::{self, ShardPlan};
 use super::worker::{ComputeModel, GradientSource, WorkerState};
 
 /// Synthetic NIC-counter probe: bits/window observed by the continuous
@@ -136,6 +147,26 @@ fn effective_threads(requested: usize, m: usize, dim: usize) -> usize {
     auto.min(m)
 }
 
+/// Auto shard count (`shards == 0`): one shard below the work floor
+/// (per-round scoped-thread spawns only amortize on big models), else
+/// up to one shard per core, never more than one per layer. An
+/// explicit `shards = n` always wins (clamped to the layer count) —
+/// results are bit-identical either way, so forcing small-model runs
+/// parallel is purely a testing device.
+fn effective_shards(requested: usize, n_layers: usize, dim: usize) -> usize {
+    let cap = n_layers.max(1);
+    if requested != 0 {
+        return requested.min(cap);
+    }
+    if n_layers < 2 || dim < PARALLEL_MIN_WORK {
+        return 1;
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(cap)
+}
+
 /// Shared, immutable inputs of a worker upload leg.
 struct UploadCtx<'a> {
     cfg: &'a SimConfig,
@@ -221,6 +252,40 @@ fn deliver_upload(mirror: &mut Estimator, layers: &[Layer], msgs: &[Compressed])
     }
 }
 
+/// Shared core of the broadcast phases: fill `diff = x − x̂`, run the
+/// `A^compress` selection under `c_down`, compress-advance the target
+/// estimator layer by layer into the reusable message buffer. Returns
+/// the wire size. Both the shared-channel phase and the async
+/// per-worker phase delegate here, so the broadcast path can never
+/// diverge between modes.
+#[allow(clippy::too_many_arguments)] // the flattened borrow set of one broadcast
+fn broadcast_into(
+    x: &[f32],
+    x_hat: &mut Estimator,
+    diff: &mut [f32],
+    down_selector: &Selector,
+    layers: &[Layer],
+    c_down: u64,
+    scratch: &mut Vec<f32>,
+    msg: &mut Compressed,
+) -> u64 {
+    for (d, (&xv, &xh)) in diff.iter_mut().zip(x.iter().zip(&x_hat.value)) {
+        *d = xv - xh;
+    }
+    let sel_down = down_selector.select(diff, layers, c_down);
+    let mut down_bits = 0u64;
+    for (l, &kk) in layers.iter().zip(&sel_down.k_per_layer) {
+        let target = &x[l.offset..l.offset + l.size];
+        if kk >= l.size {
+            x_hat.compress_advance_into(&Identity, target, l, scratch, msg);
+        } else {
+            x_hat.compress_advance_into(&TopK::new(kk), target, l, scratch, msg);
+        }
+        down_bits += msg.wire_bits();
+    }
+    down_bits
+}
+
 /// Shared, immutable inputs of one reference round's parallel worker
 /// phase (the frozen pre-refactor loop).
 struct RoundCtx<'a> {
@@ -286,6 +351,12 @@ pub struct Simulation<S: GradientSource> {
     pub workers: Vec<WorkerState>,
     pub clock: f64,
     pub step: u64,
+    /// Server-shard count for the aggregation path: 0 = auto (one shard
+    /// per core on big models, serial otherwise), n = at most n shards
+    /// (clamped to the layer count). Results are bit-identical for
+    /// every setting — the knob only trades spawn overhead for
+    /// parallelism (see [`super::shard`]).
+    pub shards: usize,
     weights: Vec<f64>,
     up_selector: Selector,
     down_selector: Selector,
@@ -294,6 +365,11 @@ pub struct Simulation<S: GradientSource> {
     warmed: bool,
     queue: EventQueue,
     chains: Vec<Chain>,
+    /// Layer-shard partition of the server path, rebuilt only when the
+    /// `shards` knob changes (allocation-free steady state).
+    plan: ShardPlan,
+    /// Reusable same-timestamp event batch buffer.
+    batch: Vec<Event>,
 }
 
 impl<S: GradientSource> Simulation<S> {
@@ -310,9 +386,15 @@ impl<S: GradientSource> Simulation<S> {
         let weights = cfg.weights_or_uniform();
         let up_selector = Selector::new(cfg.up_policy.clone());
         let down_selector = Selector::new(cfg.down_policy.clone());
-        let server = ServerState::new(x0, cfg.m);
+        let server = if matches!(cfg.mode, ExecMode::Async { .. }) {
+            // Async gets honest per-worker broadcast channels.
+            ServerState::new(x0, cfg.m).with_per_worker_mirrors()
+        } else {
+            ServerState::new(x0, cfg.m)
+        };
         let workers = (0..cfg.m).map(|i| WorkerState::new(i, dim)).collect();
         let chains = vec![Chain::default(); cfg.m];
+        let plan = ShardPlan::build(&cfg.layers, effective_shards(0, cfg.layers.len(), dim));
         Self {
             cfg,
             net,
@@ -321,6 +403,7 @@ impl<S: GradientSource> Simulation<S> {
             workers,
             clock: 0.0,
             step: 0,
+            shards: 0,
             weights,
             up_selector,
             down_selector,
@@ -328,6 +411,17 @@ impl<S: GradientSource> Simulation<S> {
             warmed: false,
             queue: EventQueue::new(),
             chains,
+            plan,
+            batch: Vec::new(),
+        }
+    }
+
+    /// Rebuild the shard plan iff the `shards` knob changed since the
+    /// last round (steady-state rounds never allocate here).
+    fn ensure_plan(&mut self) {
+        let n = effective_shards(self.shards, self.cfg.layers.len(), self.server.dim());
+        if self.plan.n_shards() != n && !self.cfg.layers.is_empty() {
+            self.plan = ShardPlan::build(&self.cfg.layers, n);
         }
     }
 
@@ -352,6 +446,15 @@ impl<S: GradientSource> Simulation<S> {
                 self.server.u_hats[w.id].apply(&msg, l);
             }
         }
+        // Per-worker broadcast mirrors (async channels) warm to the
+        // same x⁰ as the shared estimator.
+        let ServerState { x, x_hats, scratch, .. } = &mut self.server;
+        for xh in x_hats.iter_mut() {
+            for l in &layers {
+                let target = &x[l.offset..l.offset + l.size];
+                xh.compress_advance(&id, target, l, scratch);
+            }
+        }
         Ok(())
     }
 
@@ -368,41 +471,40 @@ impl<S: GradientSource> Simulation<S> {
 
     /// Server broadcast phase: Eq. (2) budget at bandwidth estimate
     /// `b_down`, `A^compress` selection over x − x̂, compress-advance of
-    /// x̂. Returns the wire size of the broadcast message.
+    /// the shared x̂. Returns the wire size of the broadcast message.
     fn broadcast_phase(&mut self, b_down: f64) -> u64 {
         let c_down =
             (compression_budget(self.cfg.budget, b_down) as f64 * self.cfg.budget_safety) as u64;
-        for (d, (&x, &xh)) in self
-            .diff
-            .iter_mut()
-            .zip(self.server.x.iter().zip(&self.server.x_hat.value))
-        {
-            *d = x - xh;
-        }
-        let sel_down = self.down_selector.select(&self.diff, &self.cfg.layers, c_down);
-        let mut down_bits = 0u64;
-        for (l, &kk) in self.cfg.layers.iter().zip(&sel_down.k_per_layer) {
-            let target = &self.server.x[l.offset..l.offset + l.size];
-            if kk >= l.size {
-                self.server.x_hat.compress_advance_into(
-                    &Identity,
-                    target,
-                    l,
-                    &mut self.server.scratch,
-                    &mut self.server.msg,
-                );
-            } else {
-                self.server.x_hat.compress_advance_into(
-                    &TopK::new(kk),
-                    target,
-                    l,
-                    &mut self.server.scratch,
-                    &mut self.server.msg,
-                );
-            }
-            down_bits += self.server.msg.wire_bits();
-        }
-        down_bits
+        let ServerState { x, x_hat, scratch, msg, .. } = &mut self.server;
+        broadcast_into(
+            x,
+            x_hat,
+            &mut self.diff,
+            &self.down_selector,
+            &self.cfg.layers,
+            c_down,
+            scratch,
+            msg,
+        )
+    }
+
+    /// [`broadcast_phase`](Self::broadcast_phase) for one worker's own
+    /// channel: diff and compress-advance against that worker's x̂_m
+    /// mirror under that link's budget (async per-worker channels).
+    fn broadcast_phase_for(&mut self, worker: usize, b_down: f64) -> u64 {
+        let c_down =
+            (compression_budget(self.cfg.budget, b_down) as f64 * self.cfg.budget_safety) as u64;
+        let ServerState { x, x_hats, scratch, msg, .. } = &mut self.server;
+        broadcast_into(
+            x,
+            &mut x_hats[worker],
+            &mut self.diff,
+            &self.down_selector,
+            &self.cfg.layers,
+            c_down,
+            scratch,
+            msg,
+        )
     }
 
     /// Start one worker's pipeline chain: the broadcast transfer on its
@@ -427,15 +529,17 @@ impl<S: GradientSource> Simulation<S> {
         });
     }
 
-    /// `BroadcastDone`: snapshot the model estimate, compute the
-    /// gradient (the source is one mutable resource — handlers run
-    /// serially in deterministic event order), schedule `ComputeDone`.
+    /// `BroadcastDone`: snapshot the model estimate (the worker's own
+    /// mirror under async per-worker channels, the shared x̂ otherwise),
+    /// compute the gradient (the source is one mutable resource —
+    /// handlers run serially in deterministic event order), schedule
+    /// `ComputeDone`.
     fn on_broadcast_done(&mut self, ev: &Event) -> anyhow::Result<()> {
         let w = ev.worker;
         self.chains[w].snapshot_step = self.step;
         let loss = self
             .source
-            .update(w, ev.round, &self.server.x_hat.value, &mut self.workers[w].u)?;
+            .update(w, ev.round, self.server.model_estimate(w), &mut self.workers[w].u)?;
         let t_comp = self.cfg.compute.sample(self.source.t_comp(), w, ev.round);
         self.chains[w].loss = loss;
         self.chains[w].t_comp = t_comp;
@@ -463,16 +567,15 @@ impl<S: GradientSource> Simulation<S> {
         });
     }
 
-    /// `UploadDone`: deliver the in-flight messages to the server's
-    /// û_m mirror and produce the arrival's record entry. `t0` is the
-    /// current round's start (for the arrival-lag column).
-    fn on_upload_arrival(&mut self, ev: &Event, t0: f64) -> WorkerRound {
-        let w = ev.worker;
-        deliver_upload(&mut self.server.u_hats[w], &self.cfg.layers, &self.workers[w].msgs);
-        let c = &mut self.chains[w];
+    /// Close the chain of an upload that just landed and produce its
+    /// record entry (mirror delivery happens separately, batched and
+    /// sharded — [`Self::deliver_arrivals`]). `t0` is the current
+    /// round's start (for the arrival-lag column).
+    fn record_arrival(&mut self, ev: &Event, t0: f64) -> WorkerRound {
+        let c = &mut self.chains[ev.worker];
         c.busy = false;
         WorkerRound {
-            worker: w,
+            worker: ev.worker,
             up_bits: c.leg.up_bits,
             up_seconds: c.leg.up_seconds,
             down_seconds: c.down_seconds,
@@ -485,40 +588,82 @@ impl<S: GradientSource> Simulation<S> {
         }
     }
 
-    /// Route one event to its handler; returns the arrival record when
-    /// the event was an upload landing at the server.
-    fn dispatch_pipeline_event(
-        &mut self,
-        ev: &Event,
-        t0: f64,
-    ) -> anyhow::Result<Option<WorkerRound>> {
-        match ev.kind {
-            EventKind::BroadcastDone => {
-                self.on_broadcast_done(ev)?;
-                Ok(None)
-            }
-            EventKind::ComputeDone => {
-                self.on_compute_done(ev);
-                Ok(None)
-            }
-            EventKind::UploadDone => Ok(Some(self.on_upload_arrival(ev, t0))),
-        }
+    /// Deliver a batch of same-timestamp upload arrivals to the û_m
+    /// mirrors, fanned across the layer shards.
+    fn deliver_arrivals(&mut self, batch: &[Event]) {
+        shard::deliver_batch(
+            &self.plan,
+            &self.cfg.layers,
+            &mut self.server.u_hats,
+            &self.workers,
+            batch,
+            self.plan.n_shards() > 1,
+        );
     }
 
-    /// Aggregate Σ w_m û_m and step the optimizer, honoring the
-    /// zero-information guard: stepping again on unchanged, stale
-    /// estimators is outside the EF21 regime — Theorem 1 requires
-    /// contraction alpha_i > 0 — and measurably destabilizes the
-    /// quadratic workload during bandwidth troughs.
+    /// Pop the earliest same-`(time, kind)` event batch and handle it:
+    /// gradient and compute milestones run serially in event order (the
+    /// source is one mutable resource), upload batches fan their
+    /// per-layer mirror deliveries across shards and append their
+    /// arrival records (worker-ascending) to `arrivals`.
+    fn drain_batch(
+        &mut self,
+        t0: f64,
+        arrivals: &mut Vec<WorkerRound>,
+        t_last: &mut f64,
+    ) -> anyhow::Result<()> {
+        let mut batch = std::mem::take(&mut self.batch);
+        self.queue.pop_batch_into(&mut batch);
+        let kind = batch.first().map(|ev| ev.kind);
+        match kind {
+            None => unreachable!("drain_batch requires a non-empty queue"),
+            Some(EventKind::BroadcastDone) => {
+                for ev in &batch {
+                    self.on_broadcast_done(ev)?;
+                }
+            }
+            Some(EventKind::ComputeDone) => {
+                for ev in &batch {
+                    self.on_compute_done(ev);
+                }
+            }
+            Some(EventKind::UploadDone) => {
+                self.deliver_arrivals(&batch);
+                for ev in &batch {
+                    arrivals.push(self.record_arrival(ev, t0));
+                    *t_last = t_last.max(ev.time);
+                }
+            }
+        }
+        self.batch = batch;
+        Ok(())
+    }
+
+    /// Aggregate Σ w_m û_m and step the optimizer — both fanned across
+    /// the layer shards (bit-identical to the serialized path for any
+    /// shard count) — honoring the zero-information guard: stepping
+    /// again on unchanged, stale estimators is outside the EF21 regime
+    /// — Theorem 1 requires contraction alpha_i > 0 — and measurably
+    /// destabilizes the quadratic workload during bandwidth troughs.
     fn aggregate_and_step(&mut self, k: u64, total_up: u64, gamma_scale: f64) -> f64 {
         if total_up > 0 || k == 0 {
-            let n = self.server.aggregate(&self.weights);
-            self.cfg.optimizer.step_scaled(
+            let par = self.plan.n_shards() > 1;
+            let n = shard::aggregate(
+                &self.plan,
+                &self.weights,
+                &self.server.u_hats,
+                &mut self.server.agg,
+                par,
+            );
+            shard::step(
+                &self.plan,
+                &self.cfg.optimizer,
                 k as usize,
                 gamma_scale,
                 &mut self.server.x,
                 &self.server.agg,
                 &self.cfg.layers,
+                par,
             );
             n
         } else {
@@ -528,6 +673,7 @@ impl<S: GradientSource> Simulation<S> {
 
     /// Execute one full communication round; returns its record.
     pub fn round(&mut self) -> anyhow::Result<RoundRecord> {
+        self.ensure_plan();
         if self.cfg.warm_start && !self.warmed {
             self.warm_start()?;
             self.warmed = true;
@@ -670,9 +816,12 @@ impl<S: GradientSource> Simulation<S> {
     }
 
     /// Semi-sync mode: broadcast to every idle worker, pump the event
-    /// queue until `quorum` uploads have arrived, aggregate, step.
-    /// Stragglers' chains span rounds; their arrivals count toward
-    /// whatever round is open when they land.
+    /// queue — batch by same-timestamp batch — until `quorum` uploads
+    /// have arrived, aggregate, step. Stragglers' chains span rounds;
+    /// their arrivals count toward whatever round is open when they
+    /// land, and arrivals sharing the quorum-closing timestamp join the
+    /// closing round (the server cannot distinguish simultaneous
+    /// landings, so it aggregates everything on the floor).
     fn round_semisync(&mut self, quorum: usize) -> anyhow::Result<RoundRecord> {
         let k = self.step;
         let t0 = self.clock;
@@ -681,14 +830,11 @@ impl<S: GradientSource> Simulation<S> {
         // Arrivals that landed while the server idled at the previous
         // round's deadline join this round immediately (lag 0).
         let mut arrivals: Vec<WorkerRound> = Vec::new();
-        while let Some(&ev) = self.queue.peek() {
-            if ev.time > t0 {
-                break;
-            }
-            let ev = self.queue.pop().expect("peeked");
-            if let Some(wr) = self.dispatch_pipeline_event(&ev, t0)? {
-                arrivals.push(wr);
-            }
+        let mut t_last = t0;
+        while self.queue.peek().is_some_and(|ev| ev.time <= t0) {
+            // Pre-deadline landings never stretch the round: their
+            // times are <= t0, so the t_last max is a no-op here.
+            self.drain_batch(t0, &mut arrivals, &mut t_last)?;
         }
 
         // Broadcast to every idle worker (stragglers keep flying).
@@ -701,15 +847,12 @@ impl<S: GradientSource> Simulation<S> {
             }
         }
 
-        // Pump events until the quorum is met. Every worker is busy at
-        // this point, so the queue cannot starve before the quorum.
-        let mut t_last = t0;
+        // Pump event batches until the quorum is met. Every worker is
+        // busy at this point, so the queue cannot starve before the
+        // quorum.
         while arrivals.len() < quorum {
-            let ev = self.queue.pop().expect("semisync: busy workers imply pending events");
-            if let Some(wr) = self.dispatch_pipeline_event(&ev, t0)? {
-                arrivals.push(wr);
-                t_last = ev.time;
-            }
+            debug_assert!(!self.queue.is_empty(), "semisync: busy workers imply pending events");
+            self.drain_batch(t0, &mut arrivals, &mut t_last)?;
         }
 
         arrivals.sort_by_key(|w| w.worker);
@@ -739,41 +882,65 @@ impl<S: GradientSource> Simulation<S> {
     /// still spans all û_m mirrors (EF21 memory: absent workers
     /// contribute their last delivered estimate), the step size is
     /// damped by `damping^staleness`, and the triggering worker is
-    /// immediately re-broadcast the fresh estimate. The broadcast
-    /// channel is modeled as continuously received: x̂ is one shared
-    /// estimator, and each refresh's transfer time is charged to the
-    /// triggering worker's downlink.
+    /// immediately re-broadcast a fresh model estimate **on its own
+    /// channel**: every worker owns a true x̂_m mirror that advances
+    /// only by messages actually compressed for its downlink (budgeted
+    /// from that link's own monitor) — the honest replacement for the
+    /// earlier shared-broadcast-channel abstraction, where one x̂ stood
+    /// for all workers and silently leaked other workers' refreshes.
+    /// Mirror delivery, the aggregate and the step fan across the
+    /// layer shards.
     fn round_async(&mut self, damping: f64) -> anyhow::Result<RoundRecord> {
         let k = self.step;
         let t0 = self.clock;
         let mut down_bits = 0u64;
 
-        // Bootstrap (first round, or every worker idle): the sync-style
-        // group broadcast starts all M chains.
+        // `cfg.mode` is public, so a simulation built for another mode
+        // can be switched to Async mid-run: create the per-worker
+        // mirrors lazily, seeded from the shared estimator every worker
+        // was tracking until now.
+        if self.server.x_hats.is_empty() {
+            self.server.x_hats = vec![self.server.x_hat.clone(); self.cfg.m];
+        }
+
+        // Bootstrap (first round, or every worker idle): broadcast to
+        // every worker on its own channel, each message budgeted and
+        // compressed against that worker's mirror.
         if self.chains.iter().all(|c| !c.busy) {
             self.probe_down_monitors(t0);
-            let b_down = self.server.broadcast_estimate(self.cfg.prior_bps);
-            down_bits = self.broadcast_phase(b_down);
             for w in 0..self.cfg.m {
-                self.begin_chain(w, t0, down_bits, k);
+                let b_down = self.server.down_estimate(w, self.cfg.prior_bps);
+                let bits = self.broadcast_phase_for(w, b_down);
+                self.begin_chain(w, t0, bits, k);
+                down_bits += bits;
             }
         }
 
         loop {
             let ev = self.queue.pop().expect("async: busy workers imply pending events");
-            let Some(wr) = self.dispatch_pipeline_event(&ev, t0)? else {
-                continue;
-            };
+            match ev.kind {
+                EventKind::BroadcastDone => {
+                    self.on_broadcast_done(&ev)?;
+                    continue;
+                }
+                EventKind::ComputeDone => {
+                    self.on_compute_done(&ev);
+                    continue;
+                }
+                EventKind::UploadDone => {}
+            }
             let w = ev.worker;
+            self.deliver_arrivals(std::slice::from_ref(&ev));
+            let wr = self.record_arrival(&ev, t0);
             let scale = damping.powi(wr.staleness as i32);
             let agg_norm_sq = self.aggregate_and_step(k, wr.up_bits, scale);
 
             // Refresh the triggering worker: probe its downlink, budget
-            // from its own monitor, compress-advance the shared x̂.
+            // from its own monitor, compress-advance its x̂_m mirror.
             let bd = self.net.window_bps(w, Direction::Down, ev.time, PROBE_WINDOW);
             self.server.down_monitors[w].observe(PROBE_BITS, PROBE_BITS / bd.max(1e-9));
             let b_down = self.server.down_estimate(w, self.cfg.prior_bps);
-            let refresh_bits = self.broadcast_phase(b_down);
+            let refresh_bits = self.broadcast_phase_for(w, b_down);
             self.step += 1;
             self.begin_chain(w, ev.time, refresh_bits, self.step);
             down_bits += refresh_bits;
@@ -807,6 +974,7 @@ impl<S: GradientSource> Simulation<S> {
             matches!(self.cfg.compute, ComputeModel::Constant),
             "round_reference models homogeneous compute only"
         );
+        self.ensure_plan();
         if self.cfg.warm_start && !self.warmed {
             self.warm_start()?;
             self.warmed = true;
@@ -1093,6 +1261,66 @@ mod tests {
         assert_eq!(effective_threads(0, 1, 10_000_000), 1);
         let big = effective_threads(0, 64, 1_000_000);
         assert!((1..=64).contains(&big));
+    }
+
+    #[test]
+    fn shard_count_clamps() {
+        // Explicit shard counts clamp to the layer count.
+        assert_eq!(effective_shards(2, 8, 30), 2);
+        assert_eq!(effective_shards(16, 3, 30), 3);
+        // Auto mode: small models stay serialized, big ones shard.
+        assert_eq!(effective_shards(0, 10, 30), 1);
+        assert_eq!(effective_shards(0, 1, 10_000_000), 1);
+        let big = effective_shards(0, 64, 10_000_000);
+        assert!((1..=64).contains(&big));
+    }
+
+    #[test]
+    fn forced_shards_do_not_change_sync_results() {
+        // The shard-count analogue of parallel_rounds_bit_match_serial:
+        // the engine guarantee is that sharding never changes bits.
+        let mut base = sim(3, 640.0, CompressPolicy::KimadUniform, 0.02);
+        let a = base.run(20).unwrap();
+        for shards in [2usize, 3] {
+            let mut s = sim(3, 640.0, CompressPolicy::KimadUniform, 0.02);
+            s.shards = shards;
+            let b = s.run(20).unwrap();
+            assert_eq!(a, b, "shards={shards} diverged");
+        }
+    }
+
+    #[test]
+    fn async_workers_get_private_broadcast_mirrors() {
+        let mut proto = sim(2, 64.0 * 8.0, CompressPolicy::KimadUniform, 0.02);
+        proto.cfg.mode = ExecMode::Async { damping: 0.7 };
+        proto.cfg.round_deadline = None;
+        // Rebuild: the constructor decides mirrors from the mode.
+        let cfg = proto.cfg;
+        let mut s = Simulation::new(
+            cfg,
+            constant_net(2, 64.0 * 8.0),
+            crate::coordinator::QuadraticSource::new(Quadratic::paper_instance(30), 0.01),
+            vec![1.0f32; 30],
+        );
+        assert_eq!(s.server.x_hats.len(), 2, "async mode owns per-worker mirrors");
+        s.run(40).unwrap();
+        // Each worker's channel tracks the model independently; both
+        // mirrors converge toward x without being identical objects.
+        for xh in &s.server.x_hats {
+            assert!(xh.value.iter().all(|v| v.is_finite()));
+        }
+        // Sync mode keeps the shared channel only.
+        let sync = sim(2, 640.0, CompressPolicy::KimadUniform, 0.02);
+        assert!(sync.server.x_hats.is_empty());
+
+        // Switching a constructed simulation to Async mid-run creates
+        // the mirrors lazily (cfg.mode is public) instead of indexing
+        // out of bounds.
+        let mut switched = sim(2, 640.0, CompressPolicy::KimadUniform, 0.02);
+        switched.cfg.mode = ExecMode::Async { damping: 0.7 };
+        switched.cfg.round_deadline = None;
+        switched.run(3).unwrap();
+        assert_eq!(switched.server.x_hats.len(), 2, "lazy per-worker mirrors");
     }
 
     #[test]

@@ -107,6 +107,7 @@ pub fn run_experiment(
             let x0 = vec![1.0f32; *d];
             let sim_cfg = sim_config(cfg, layers.clone(), *t_comp);
             let mut sim = Simulation::new(sim_cfg, build_netsim(cfg), src, x0);
+            sim.shards = cfg.shards;
             let records = sim.run(cfg.rounds)?;
             let total_time = sim.clock;
             Ok(ExperimentResult { records, layers, n_params: *d, eval: None, total_time })
@@ -135,6 +136,7 @@ pub fn run_experiment(
             let n_params = layout.n_params;
             let sim_cfg = sim_config(cfg, layers.clone(), t_comp);
             let mut sim = Simulation::new(sim_cfg, build_netsim(cfg), src, x0);
+            sim.shards = cfg.shards;
             let records = sim.run(cfg.rounds)?;
             let total_time = sim.clock;
             let eval = if eval_batches > 0 {
@@ -196,6 +198,7 @@ mod tests {
             single_layer: false,
             budget_safety: 1.0,
             threads: 0,
+            shards: 0,
             mode: ExecModeSpec::Sync,
             compute: ComputeModel::Constant,
             seed: 21,
@@ -250,5 +253,18 @@ mod tests {
         let res = run_experiment(&cfg, None, 0).unwrap();
         assert!(res.records.iter().all(|r| r.n_arrivals() == 1));
         assert!(res.total_time > 0.0);
+    }
+
+    #[test]
+    fn shards_reach_the_engine_without_changing_results() {
+        let base = run_experiment(&quad_cfg(), None, 0).unwrap();
+        for shards in [1usize, 2, 3] {
+            let mut cfg = quad_cfg();
+            cfg.shards = shards;
+            let res = run_experiment(&cfg, None, 0).unwrap();
+            for (a, b) in base.records.iter().zip(&res.records) {
+                assert_eq!(a, b, "shards={shards} changed the records");
+            }
+        }
     }
 }

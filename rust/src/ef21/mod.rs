@@ -8,6 +8,30 @@
 //!
 //! `theory` implements Theorem 1's constants (θ_i, β_i, the Eq. 9 step
 //! size bound) used by tests and the synthetic experiments' tuning.
+//!
+//! # Example: sender and receiver advance in lockstep
+//!
+//! Only the compressed message crosses the wire, yet both mirrors stay
+//! bit-identical — and the estimator converges to a fixed target in
+//! `ceil(d / k)` rounds:
+//!
+//! ```
+//! use kimad::compress::TopK;
+//! use kimad::ef21::Estimator;
+//! use kimad::model::Layer;
+//!
+//! let layer = Layer { id: 0, name: "l".into(), offset: 0, size: 4 };
+//! let target = [4.0f32, 3.0, 2.0, 1.0];
+//! let mut sender = Estimator::zeros(4);
+//! let mut receiver = Estimator::zeros(4);
+//! let mut scratch = Vec::new();
+//! for _ in 0..2 {
+//!     let msg = sender.compress_advance(&TopK::new(2), &target, &layer, &mut scratch);
+//!     receiver.apply(&msg, &layer);
+//! }
+//! assert_eq!(sender.value, receiver.value);
+//! assert_eq!(sender.value, target); // TopK(2) over 4 dims: 2 rounds
+//! ```
 
 pub mod theory;
 

@@ -11,7 +11,7 @@
 /// Precomputed ε(K) for K = 0..=d over one layer's update vector.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ErrorCurve {
-    /// err[k] = squared L2 error of keeping the k largest-|u| coords.
+    /// `err[k]` = squared L2 error of keeping the k largest-|u| coords.
     pub err: Vec<f64>,
 }
 

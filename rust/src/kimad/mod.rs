@@ -1,6 +1,34 @@
 //! The paper's contribution: bandwidth-adaptive compression (Kimad,
 //! §3.1), layer-adaptive budget allocation (Kimad+, §3.2), and the
 //! compressor-selection algorithm `A^compress` of Algorithm 3.
+//!
+//! * [`budget`] — Eq. (2): a time budget times a bandwidth estimate is
+//!   a bit budget, `c = t_comm · b̂`.
+//! * [`select`] — `A^compress` (Algorithm 3 lines 4/11): bit budget →
+//!   per-layer TopK sizes, under four policies.
+//! * [`error_curve`] — ε_i(k), the squared error of keeping the k
+//!   largest-|u| coordinates of layer i (the knapsack's value table).
+//! * [`knapsack`] — Algorithm 4's DP: minimize Σ ε_i(k_i) subject to
+//!   Σ k_i·bits ≤ c.
+//!
+//! # Example: budget-aware selection
+//!
+//! With a steep first layer and a flat second one, the Kimad+ knapsack
+//! pours the whole budget into the layer where the error curve falls
+//! fastest:
+//!
+//! ```
+//! use kimad::kimad::{CompressPolicy, Selector};
+//! use kimad::model::ModelLayout;
+//!
+//! let layers = ModelLayout::synthetic(&[4, 4]).layers();
+//! let diff = [8.0f32, 7.0, 6.0, 5.0, 0.4, 0.3, 0.2, 0.1];
+//! let budget_bits = 4 * 64; // room for 4 sparse coordinates
+//! let policy = CompressPolicy::KimadPlus { discretization: 1000, ratios: vec![] };
+//! let sel = Selector::new(policy).select(&diff, &layers, budget_bits);
+//! assert_eq!(sel.k_per_layer, vec![4, 0]); // all 4 coords to layer 0
+//! assert!(sel.planned_bits <= budget_bits);
+//! ```
 
 pub mod budget;
 pub mod error_curve;

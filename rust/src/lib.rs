@@ -5,10 +5,13 @@
 //!
 //! * **L3 (this crate)** — the coordination contribution: a virtual-time
 //!   Parameter-Server simulator ([`netsim`]), bandwidth monitoring
-//!   ([`bandwidth`]), the Eq. (2) compression budget, `A^compress`
-//!   selection, the Kimad+ knapsack DP ([`kimad`]), bidirectional EF21
-//!   ([`ef21`]), the round loop ([`coordinator`]) and the parallel
-//!   scenario-matrix engine ([`scenarios`]).
+//!   ([`bandwidth`], §2.4/§3), the Eq. (2) compression budget,
+//!   `A^compress` selection, the Kimad+ knapsack DP ([`kimad`],
+//!   §3.1–§3.2), bidirectional EF21 ([`ef21`], §2.3/§3.3), the
+//!   event-driven round engine with its layer-sharded server
+//!   aggregation path ([`coordinator`], Algorithm 3) and the parallel
+//!   scenario-matrix engine ([`scenarios`]). `docs/ARCHITECTURE.md`
+//!   walks the whole engine end to end.
 //! * **L2/L1 (build-time Python)** — the deep-model workload
 //!   (transformer fwd/bwd in JAX, FFN/error-curve hot spots as Pallas
 //!   kernels) AOT-lowered to HLO text and executed via [`runtime`]

@@ -5,7 +5,8 @@
 //!   report    regenerate a paper figure/table (fig1, fig3..fig9,
 //!             table1, table2, or `all`)
 //!   scenarios run a scenario matrix (traces × policies × modes ×
-//!             workers × safety) in parallel, one JSON summary per cell
+//!             workers × safety × shards) in parallel, one JSON
+//!             summary per cell
 //!   synthetic quick §4.1 quadratic comparison for one scenario
 //!   trace     sample a bandwidth trace spec (JSON) to stdout
 //!   presets   list AOT model presets available in artifacts/
@@ -27,7 +28,8 @@ USAGE:
   kimad report <fig1|fig3..fig9|fig3to6|table1|table2|all> [--artifacts DIR] \\
                [--out-dir DIR] [--fast]
   kimad scenarios [--grid <grid.json>] [--out-dir DIR] [--threads N] \\
-               [--rounds N] [--modes sync,semisync,async] [--print-grid]
+               [--rounds N] [--modes sync,semisync,async] [--shards 1,2,4] \\
+               [--print-grid]
   kimad synthetic [--scenario xsmall|small|oscillation|high] [--fast] [--out-dir DIR]
   kimad trace --spec '<json TraceSpec>' [--seconds S] [--step S]
   kimad presets [--artifacts DIR]
@@ -82,6 +84,19 @@ fn scenarios(args: &Args) -> anyhow::Result<()> {
             })
             .collect::<anyhow::Result<Vec<_>>>()?;
     }
+    if let Some(shards) = args.opt("shards") {
+        // Override the server-shard axis: comma-separated counts
+        // (0 = auto). Sharding never changes results, so this axis
+        // sweeps wall-clock scaling.
+        grid.shard_counts = shards
+            .split(',')
+            .map(|tok| {
+                tok.trim()
+                    .parse::<usize>()
+                    .map_err(|e| anyhow::anyhow!("--shards token '{tok}': {e}"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+    }
     if args.flag("print-grid") {
         println!("{}", grid.to_json());
         return Ok(());
@@ -90,14 +105,15 @@ fn scenarios(args: &Args) -> anyhow::Result<()> {
     let out_dir = PathBuf::from(args.opt_or("out-dir", "reports/scenarios"));
     eprintln!(
         "running grid '{}': {} cells ({} traces x {} policies x {} modes x {} worker counts \
-         x {} safety)...",
+         x {} safety x {} shard counts)...",
         grid.name,
         grid.n_cells(),
         grid.traces.len(),
         grid.policies.len(),
         grid.modes.len(),
         grid.worker_counts.len(),
-        grid.safety_factors.len()
+        grid.safety_factors.len(),
+        grid.shard_counts.len()
     );
     let t0 = std::time::Instant::now();
     let summaries = kimad::scenarios::run_matrix(&grid, threads)?;

@@ -111,6 +111,31 @@ impl EventQueue {
         self.heap.peek().map(|Reverse(ev)| ev)
     }
 
+    /// Pop the earliest event **plus every queued event sharing its
+    /// timestamp and kind** into `out` (cleared first), returning the
+    /// batch size (0 when the queue is empty).
+    ///
+    /// Because the pop order is total, the batch comes out in ascending
+    /// worker order — the same sequence `pop` would produce — so batch
+    /// handling is a pure regrouping of the serialized drain. This is
+    /// what lets the coordinator hand a whole timestamp's upload
+    /// arrivals to the sharded server path in one fan-out.
+    pub fn pop_batch_into(&mut self, out: &mut Vec<Event>) -> usize {
+        out.clear();
+        let Some(first) = self.pop() else {
+            return 0;
+        };
+        out.push(first);
+        while let Some(next) = self.peek() {
+            if next.time.total_cmp(&first.time) != Ordering::Equal || next.kind != first.kind {
+                break;
+            }
+            let ev = self.pop().expect("peeked event must pop");
+            out.push(ev);
+        }
+        out.len()
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -189,6 +214,33 @@ mod tests {
             assert_eq!(x, b.pop().unwrap());
         }
         assert!(b.is_empty());
+    }
+
+    #[test]
+    fn pop_batch_groups_same_time_and_kind() {
+        let mut q = EventQueue::new();
+        q.push(ev(1.0, 2, EventKind::UploadDone));
+        q.push(ev(1.0, 0, EventKind::UploadDone));
+        q.push(ev(1.0, 1, EventKind::ComputeDone));
+        q.push(ev(2.0, 0, EventKind::UploadDone));
+        let mut batch = Vec::new();
+        // Same time, earlier kind first: the ComputeDone is its own
+        // batch of one.
+        assert_eq!(q.pop_batch_into(&mut batch), 1);
+        assert_eq!(batch[0].kind, EventKind::ComputeDone);
+        // Then both t=1 uploads, worker-ascending.
+        assert_eq!(q.pop_batch_into(&mut batch), 2);
+        assert_eq!(
+            batch.iter().map(|e| e.worker).collect::<Vec<_>>(),
+            vec![0, 2],
+            "batches come out in worker order"
+        );
+        assert!(batch.iter().all(|e| e.kind == EventKind::UploadDone && e.time == 1.0));
+        // The t=2 upload is not merged across timestamps.
+        assert_eq!(q.pop_batch_into(&mut batch), 1);
+        assert_eq!(batch[0].time, 2.0);
+        assert_eq!(q.pop_batch_into(&mut batch), 0);
+        assert!(batch.is_empty());
     }
 
     #[test]

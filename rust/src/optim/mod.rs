@@ -61,16 +61,27 @@ impl LayerwiseSgd {
     /// to the plain step.
     pub fn step_scaled(&self, k: usize, scale: f64, x: &mut [f32], dir: &[f32], layers: &[Layer]) {
         debug_assert_eq!(x.len(), dir.len());
-        let gamma = self.schedule.at(k) * scale;
         for l in layers {
-            let g = (gamma * self.weight(l.id)) as f32;
-            let (xs, ds) = (
+            self.step_layer(
+                k,
+                scale,
+                l.id,
                 &mut x[l.offset..l.offset + l.size],
                 &dir[l.offset..l.offset + l.size],
             );
-            for (xi, &di) in xs.iter_mut().zip(ds) {
-                *xi -= g * di;
-            }
+        }
+    }
+
+    /// One layer's slice of [`step_scaled`](Self::step_scaled): update
+    /// the layer-local span `x ← x − γ^k·scale·w_i · dir`. This is the
+    /// unit the sharded server path fans across threads
+    /// ([`crate::coordinator::shard`]); calling it per layer in order
+    /// is bit-identical to the whole-model step.
+    pub fn step_layer(&self, k: usize, scale: f64, layer_id: usize, x: &mut [f32], dir: &[f32]) {
+        debug_assert_eq!(x.len(), dir.len());
+        let g = (self.schedule.at(k) * scale * self.weight(layer_id)) as f32;
+        for (xi, &di) in x.iter_mut().zip(dir) {
+            *xi -= g * di;
         }
     }
 }
@@ -125,6 +136,28 @@ mod tests {
         let mut c = vec![1.0f32; 4];
         sgd.step_scaled(3, 0.5, &mut c, &dir, &layers);
         assert_eq!(c, vec![0.5; 4]);
+    }
+
+    #[test]
+    fn step_layer_composes_to_step_scaled() {
+        let layout = ModelLayout::synthetic(&[3, 5]);
+        let layers = layout.layers();
+        let sgd = LayerwiseSgd::new(Schedule::InverseTime { gamma0: 0.4, decay: 0.1 })
+            .with_layer_weights(vec![1.0, 0.25]);
+        let dir: Vec<f32> = (0..8).map(|i| i as f32 - 3.5).collect();
+        let mut whole = vec![2.0f32; 8];
+        sgd.step_scaled(5, 0.9, &mut whole, &dir, &layers);
+        let mut by_layer = vec![2.0f32; 8];
+        for l in &layers {
+            sgd.step_layer(
+                5,
+                0.9,
+                l.id,
+                &mut by_layer[l.offset..l.offset + l.size],
+                &dir[l.offset..l.offset + l.size],
+            );
+        }
+        assert_eq!(whole, by_layer, "per-layer steps must compose bit-identically");
     }
 
     #[test]

