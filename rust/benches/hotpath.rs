@@ -203,6 +203,102 @@ fn main() {
     println!("    -> sharded server kernels: {delta} heap allocations over {reps} rounds");
     assert_eq!(delta, 0, "sharded aggregation path must not allocate per round");
 
+    // --- Sharded vs serialized broadcast compression phase (diff,
+    // A^compress selection, EF21 compress-advance) at deep-model scale:
+    // the PR-4 hot path. KimadUniform under a 1% budget keeps every
+    // layer on the sparse TopK path, so the serialized kernel is
+    // allocation-free once warm.
+    let bsel = kimad::kimad::Selector::new(CompressPolicy::KimadUniform);
+    let c_down = (dim as u64 / 100) * kimad::kimad::select::SPARSE_COORD_BITS;
+    let xb = grad(dim, 11);
+    let mut diff_b = vec![0.0f32; dim];
+    let mut hat_serial = Estimator::zeros(dim);
+    let mut hat_sharded = Estimator::zeros(dim);
+    let mut scr_serial = shard::BroadcastScratch::default();
+    let mut scr_sharded = shard::BroadcastScratch::default();
+    // Lockstep identity check over a few rounds before benching.
+    for round in 0..3 {
+        let ba = shard::broadcast(
+            &serial_plan,
+            &bsel,
+            &layers_sh,
+            c_down,
+            &xb,
+            &mut hat_serial,
+            &mut diff_b,
+            &mut scr_serial,
+            false,
+        );
+        let bb = shard::broadcast(
+            &sharded_plan,
+            &bsel,
+            &layers_sh,
+            c_down,
+            &xb,
+            &mut hat_sharded,
+            &mut diff_b,
+            &mut scr_sharded,
+            true,
+        );
+        assert_eq!(ba, bb, "round {round}: sharded broadcast wire bits diverged");
+        assert_eq!(
+            hat_serial.value, hat_sharded.value,
+            "round {round}: sharded broadcast x̂ diverged"
+        );
+    }
+    let r_bser = bench("broadcast phase d=1M 16 layers (serialized)", 10, || {
+        black_box(shard::broadcast(
+            &serial_plan,
+            &bsel,
+            &layers_sh,
+            c_down,
+            &xb,
+            &mut hat_serial,
+            &mut diff_b,
+            &mut scr_serial,
+            false,
+        ));
+    });
+    let blabel = format!("broadcast phase d=1M 16 layers ({shards_n} shards)");
+    let r_bsh = bench(&blabel, 10, || {
+        black_box(shard::broadcast(
+            &sharded_plan,
+            &bsel,
+            &layers_sh,
+            c_down,
+            &xb,
+            &mut hat_sharded,
+            &mut diff_b,
+            &mut scr_sharded,
+            true,
+        ));
+    });
+    println!(
+        "    -> {:.2}x speedup from sharding the broadcast phase",
+        r_bser.median_ns() / r_bsh.median_ns()
+    );
+    // Alloc guard, extended to the sharded broadcast path: the
+    // serialized fan-out through the shard kernel stays allocation-free
+    // once warm (the parallel fan-out pays its thread scope per round,
+    // the same cost class as the other shard kernels).
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..reps {
+        shard::broadcast(
+            &serial_plan,
+            &bsel,
+            &layers_sh,
+            c_down,
+            &xb,
+            &mut hat_serial,
+            &mut diff_b,
+            &mut scr_serial,
+            false,
+        );
+    }
+    let delta = ALLOCS.load(Ordering::Relaxed) - before;
+    println!("    -> serialized broadcast kernel: {delta} heap allocations over {reps} rounds");
+    assert_eq!(delta, 0, "serialized broadcast path must not allocate per round");
+
     // --- Kimad+ machinery at transformer scale.
     let u = grad(131_072, 3);
     bench("error curve build d=128k", 10, || {

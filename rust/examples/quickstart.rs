@@ -32,6 +32,7 @@ fn main() -> anyhow::Result<()> {
         budget_safety: 1.0,
         threads: 0,
         shards: 0,
+        thread_cap: 0,
         mode: kimad::config::ExecModeSpec::Sync,
         compute: kimad::coordinator::ComputeModel::Constant,
         seed: 21,

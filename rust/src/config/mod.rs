@@ -212,10 +212,16 @@ pub struct ExperimentConfig {
     /// Worker-phase thread count (see `SimConfig::threads`): 0 = auto,
     /// 1 = serial. Results are bit-identical for every setting.
     pub threads: usize,
-    /// Server-shard count for the aggregation path (see
+    /// Server-shard count for the aggregation and broadcast paths (see
     /// `Simulation::shards`): 0 = auto, 1 = serialized, n = at most n
     /// layer shards. Results are bit-identical for every setting.
     pub shards: usize,
+    /// Cooperative thread budget (see `Simulation::thread_cap`): an
+    /// upper bound on what the auto knobs (`threads = 0`,
+    /// `shards = 0`) may resolve to; 0 = the machine. The scenario
+    /// matrix sets this per cell so matrix workers × per-cell threads
+    /// never oversubscribes the box. Never changes results.
+    pub thread_cap: usize,
     /// Round-engine execution mode (sync / semi-sync / async).
     pub mode: ExecModeSpec,
     /// Per-worker compute-time model (straggler profiles).
@@ -365,6 +371,7 @@ impl ExperimentConfig {
             ("budget_safety", Value::num(self.budget_safety)),
             ("threads", Value::num(self.threads as f64)),
             ("shards", Value::num(self.shards as f64)),
+            ("thread_cap", Value::num(self.thread_cap as f64)),
             ("mode", self.mode.to_json()),
             ("compute", compute_to_json(&self.compute)),
             ("seed", Value::num(self.seed as f64)),
@@ -418,6 +425,10 @@ impl ExperimentConfig {
                 .opt("shards")
                 .and_then(|a| a.as_usize().ok())
                 .unwrap_or(0),
+            thread_cap: v
+                .opt("thread_cap")
+                .and_then(|a| a.as_usize().ok())
+                .unwrap_or(0),
             mode: match v.opt("mode") {
                 None => ExecModeSpec::Sync,
                 Some(m) => ExecModeSpec::from_json(m)?,
@@ -438,6 +449,26 @@ impl ExperimentConfig {
 
     pub fn to_json_string(&self) -> String {
         self.to_json().to_string()
+    }
+
+    /// Cap this experiment's intra-simulation parallelism to `budget`
+    /// concurrent threads — the cooperative thread-budget rule: a
+    /// scenario matrix running W cell workers hands each cell at most
+    /// `available_parallelism / W` threads, so W × budget never
+    /// oversubscribes the box (the pre-PR-4 bug spawned up to N×N
+    /// threads on an N-core machine). Auto knobs (0) keep their
+    /// small-work serial floor via `thread_cap`; explicit knobs are
+    /// clamped down, never up. Results are unaffected — thread and
+    /// shard counts are bit-invariant by the engine contract.
+    pub fn clamp_parallelism(&mut self, budget: usize) {
+        let b = budget.max(1);
+        self.thread_cap = if self.thread_cap == 0 { b } else { self.thread_cap.min(b) };
+        if self.threads != 0 {
+            self.threads = self.threads.min(b);
+        }
+        if self.shards != 0 {
+            self.shards = self.shards.min(b);
+        }
     }
 }
 
@@ -468,6 +499,7 @@ mod tests {
             budget_safety: 0.9,
             threads: 0,
             shards: 2,
+            thread_cap: 0,
             mode: ExecModeSpec::SemiSync { participation: 0.75 },
             compute: ComputeModel::Lognormal { sigma: 0.3, seed: 7 },
             seed: 21,
@@ -567,9 +599,40 @@ mod tests {
         assert_eq!(cfg.prior_bps, 0.0);
         assert_eq!(cfg.threads, 0);
         assert_eq!(cfg.shards, 0, "shards defaults to auto");
+        assert_eq!(cfg.thread_cap, 0, "thread cap defaults to uncapped");
         assert_eq!(cfg.mode, ExecModeSpec::Sync);
         assert_eq!(cfg.compute, ComputeModel::Constant);
         assert_eq!(cfg.seed, 21);
+    }
+
+    #[test]
+    fn clamp_parallelism_caps_explicit_and_auto_knobs() {
+        // Explicit knobs clamp down to the budget, never up.
+        let mut cfg = sample();
+        cfg.threads = 8;
+        cfg.shards = 8;
+        cfg.clamp_parallelism(3);
+        assert_eq!(cfg.threads, 3);
+        assert_eq!(cfg.shards, 3);
+        assert_eq!(cfg.thread_cap, 3);
+        // Auto knobs stay auto (the small-work serial floor survives),
+        // bounded by the cap the simulation resolves them against.
+        let mut cfg = sample();
+        cfg.threads = 0;
+        cfg.shards = 0;
+        cfg.clamp_parallelism(2);
+        assert_eq!(cfg.threads, 0);
+        assert_eq!(cfg.shards, 0);
+        assert_eq!(cfg.thread_cap, 2);
+        // A smaller pre-existing cap is never raised.
+        cfg.clamp_parallelism(16);
+        assert_eq!(cfg.thread_cap, 2);
+        // Sub-budget explicit knobs are untouched; budget 0 means 1.
+        let mut cfg = sample();
+        cfg.threads = 1;
+        cfg.shards = 2;
+        cfg.clamp_parallelism(0);
+        assert_eq!((cfg.threads, cfg.shards, cfg.thread_cap), (1, 1, 1));
     }
 
     #[test]

@@ -12,8 +12,8 @@
 //!   server.rs — server-side state (model x, x̂ / per-worker x̂_m
 //!               mirrors, û_m mirrors)
 //!   worker.rs — worker-side state, GradientSource, compute models
-//!   shard.rs  — layer-sharded server aggregation (ShardPlan + the
-//!               deliver/aggregate/step kernels)
+//!   shard.rs  — layer-sharded server kernels (ShardPlan + the
+//!               deliver/aggregate/step/broadcast kernels)
 //!   round.rs  — per-round records the figures/tables read
 //!   sim.rs    — the event-driven round engine
 //!
@@ -27,6 +27,6 @@ pub mod worker;
 
 pub use round::{RoundRecord, WorkerRound};
 pub use server::ServerState;
-pub use shard::{ShardPlan, ShardSpan};
+pub use shard::{BroadcastScratch, ShardPlan, ShardSpan};
 pub use sim::{ExecMode, SimConfig, Simulation};
 pub use worker::{ComputeModel, GradientSource, QuadraticSource, WorkerState};

@@ -2,7 +2,6 @@
 //! server's mirrors of every worker's û_m (Algorithm 3 line 14).
 
 use crate::bandwidth::{BandwidthMonitor, EwmaMonitor};
-use crate::compress::Compressed;
 use crate::ef21::Estimator;
 
 pub struct ServerState {
@@ -23,10 +22,9 @@ pub struct ServerState {
     pub down_monitors: Vec<Box<dyn BandwidthMonitor>>,
     /// Scratch: aggregated direction Σ w_m û_m.
     pub agg: Vec<f32>,
-    /// Scratch: compression difference buffer.
+    /// Scratch: compression difference buffer (warm-start exchanges;
+    /// steady-state broadcasts use the shard kernel's per-shard lanes).
     pub scratch: Vec<f32>,
-    /// Reusable broadcast-message buffer (allocation-free rounds).
-    pub msg: Compressed,
 }
 
 impl ServerState {
@@ -42,7 +40,6 @@ impl ServerState {
                 .collect(),
             agg: vec![0.0; dim],
             scratch: Vec::with_capacity(dim),
-            msg: Compressed::default(),
         }
     }
 

@@ -1,12 +1,14 @@
-//! Layer-sharded server aggregation.
+//! Layer-sharded server kernels: aggregation and broadcast.
 //!
 //! The server's per-round work — applying arrived uploads to the û_m
-//! mirrors, reducing Σ w_m û_m, and stepping the model — is a
-//! per-coordinate pipeline over the flat parameter vector. A
-//! [`ShardPlan`] partitions the model's compression layers into
-//! contiguous *shards* (disjoint coordinate spans), so that work fans
-//! out across scoped threads: each shard is owned by exactly one thread
-//! for the duration of a batch, and no two shards overlap.
+//! mirrors, reducing Σ w_m û_m, stepping the model, and the broadcast
+//! compression phase (diff x − x̂, `A^compress` selection,
+//! EF21 compress-advance) — is a per-coordinate pipeline over the flat
+//! parameter vector. A [`ShardPlan`] partitions the model's
+//! compression layers into contiguous *shards* (disjoint coordinate
+//! spans), so that work fans out across scoped threads: each shard is
+//! owned by exactly one thread for the duration of a batch, and no two
+//! shards overlap.
 //!
 //! Shards are **views, not owners**: the flat vectors (`x`, `agg`, each
 //! `Estimator::value`) stay contiguous — the gradient source and the
@@ -26,7 +28,14 @@
 //!   are computed in a single ordered pass over the full vector *after*
 //!   the parallel fill, never as per-shard partials — re-associating a
 //!   non-associative f64 sum across a shard boundary would leak the
-//!   shard count into the last bits.
+//!   shard count into the last bits;
+//! * cross-layer *selection* passes in the broadcast kernel (the
+//!   Kimad+ knapsack over per-layer error curves, the whole-model TopK
+//!   quickselect) run as one ordered pass over the full difference
+//!   vector / the full per-layer option table — only the per-layer
+//!   work feeding them (curve builds) and following them
+//!   (compress-advance) fans out, and the wire-bit total is an exact
+//!   integer sum, associative under any regrouping.
 //!
 //! The serialized path (`parallel == false`, or one shard) performs the
 //! exact same operations with zero heap allocations — the hot-path
@@ -34,8 +43,9 @@
 //! allocates only its thread scope and per-shard slice lists, the same
 //! class of cost the Sync upload batch already pays.
 
-use crate::compress::Compressed;
-use crate::ef21::Estimator;
+use crate::compress::{Compressed, Identity, TopK};
+use crate::ef21::{compress_advance_span, Estimator};
+use crate::kimad::{ErrorCurve, SelectScratch, Selection, Selector};
 use crate::model::Layer;
 use crate::netsim::Event;
 use crate::optim::LayerwiseSgd;
@@ -312,6 +322,200 @@ pub fn step(
     }
 }
 
+/// One reusable broadcast lane: the per-shard buffers the EF21
+/// compress-advance needs (layer difference scratch + wire message).
+/// One lane per shard, so the parallel fan-out never shares a mutable
+/// buffer between threads.
+#[derive(Debug, Clone, Default)]
+struct BroadcastLane {
+    scratch: Vec<f32>,
+    msg: Compressed,
+}
+
+/// Reusable state of the sharded [`broadcast`] kernel: one lane per
+/// shard plus the selection scratch. Owned by the simulation so
+/// steady-state rounds are allocation-free on the serialized path (the
+/// hot-path bench guards this; the parallel fan-out pays its thread
+/// scopes, the same cost class as the other shard kernels).
+#[derive(Debug, Clone, Default)]
+pub struct BroadcastScratch {
+    lanes: Vec<BroadcastLane>,
+    select: SelectScratch,
+    sel: Selection,
+}
+
+impl BroadcastScratch {
+    /// Grow the lane set to cover `n_shards` (never shrinks — a plan
+    /// oscillating between shard counts should not churn buffers).
+    fn ensure(&mut self, n_shards: usize) {
+        let want = n_shards.max(1);
+        if self.lanes.len() < want {
+            self.lanes.resize_with(want, BroadcastLane::default);
+        }
+    }
+}
+
+/// The server broadcast compression phase, fanned across layer shards:
+/// fill `diff = x − x̂`, run the `A^compress` selection over `diff`
+/// under the bit budget `c_down`, compress-advance the estimator layer
+/// by layer, and return the total wire bits.
+///
+/// Both the shared-x̂ broadcast and the async per-worker x̂_m refresh
+/// delegate here (with the worker's own mirror as `x_hat`), so the
+/// broadcast path can never diverge between modes.
+///
+/// Sharding is bit-invariant, exactly like [`deliver_batch`] /
+/// [`aggregate`] / [`step`]:
+///
+/// * the diff fill and the per-layer compress-advance touch each
+///   coordinate with the same operation sequence as the serialized
+///   loop (shards own disjoint spans and layers);
+/// * the per-layer error curves (`KimadPlus`) are pure functions of
+///   shard-local diff spans, so they ride the same fan-out, while the
+///   cross-layer knapsack itself — like the whole-model TopK
+///   quickselect — stays one ordered serial pass;
+/// * the wire-bit total is a u64 sum over per-shard partials joined in
+///   shard order — integer addition, exact under any grouping.
+#[allow(clippy::too_many_arguments)] // the flattened borrow set of one broadcast
+pub fn broadcast(
+    plan: &ShardPlan,
+    selector: &Selector,
+    layers: &[Layer],
+    c_down: u64,
+    x: &[f32],
+    x_hat: &mut Estimator,
+    diff: &mut [f32],
+    scratch: &mut BroadcastScratch,
+    parallel: bool,
+) -> u64 {
+    scratch.ensure(plan.n_shards());
+    let BroadcastScratch { lanes, select, sel } = scratch;
+    let par = parallel && plan.n_shards() > 1 && plan.dim() == diff.len();
+
+    // ---- Phase 1: diff = x − x̂ (and, for curve-driven policies, the
+    // per-layer error curves — shard-local work, same fan-out).
+    if !par {
+        for (d, (&xv, &xh)) in diff.iter_mut().zip(x.iter().zip(&x_hat.value)) {
+            *d = xv - xh;
+        }
+        // Curves (if any) build inside select_into, serially.
+    } else {
+        let mut curve_rest: Option<&mut [ErrorCurve]> = if selector.needs_curves() {
+            Some(select.curves_mut(layers.len()))
+        } else {
+            None
+        };
+        std::thread::scope(|s| {
+            let mut diff_rest: &mut [f32] = diff;
+            let mut prev = 0usize;
+            for span in plan.spans() {
+                let (dhead, dtail) = diff_rest.split_at_mut(span.coord_hi - prev);
+                diff_rest = dtail;
+                prev = span.coord_hi;
+                let chead = match curve_rest.take() {
+                    None => None,
+                    Some(c) => {
+                        let (h, t) = c.split_at_mut(span.layer_hi - span.layer_lo);
+                        curve_rest = Some(t);
+                        Some(h)
+                    }
+                };
+                let xs = &x[span.coord_lo..span.coord_hi];
+                let xhs = &x_hat.value[span.coord_lo..span.coord_hi];
+                let ls = &layers[span.layer_lo..span.layer_hi];
+                let coord_lo = span.coord_lo;
+                s.spawn(move || {
+                    for ((d, &xv), &xh) in dhead.iter_mut().zip(xs).zip(xhs) {
+                        *d = xv - xh;
+                    }
+                    if let Some(curves) = chead {
+                        for (l, slot) in ls.iter().zip(curves.iter_mut()) {
+                            let lo = l.offset - coord_lo;
+                            *slot = ErrorCurve::build(&dhead[lo..lo + l.size]);
+                        }
+                    }
+                });
+            }
+        });
+        if selector.needs_curves() {
+            select.set_curves_ready();
+        }
+    }
+
+    // ---- Phase 2: A^compress selection — cross-layer, one ordered
+    // pass (see the module determinism contract).
+    selector.select_into(diff, layers, c_down, select, sel);
+
+    // ---- Phase 3: per-layer EF21 compress-advance, fanned across
+    // shards; wire bits summed in shard order.
+    let mut down_bits = 0u64;
+    if !par {
+        let lane = &mut lanes[0];
+        for (l, &kk) in layers.iter().zip(&sel.k_per_layer) {
+            let target = &x[l.offset..l.offset + l.size];
+            let est = &mut x_hat.value[l.offset..l.offset + l.size];
+            if kk >= l.size {
+                compress_advance_span(&Identity, target, est, &mut lane.scratch, &mut lane.msg);
+            } else {
+                compress_advance_span(
+                    &TopK::new(kk),
+                    target,
+                    est,
+                    &mut lane.scratch,
+                    &mut lane.msg,
+                );
+            }
+            down_bits += lane.msg.wire_bits();
+        }
+    } else {
+        std::thread::scope(|s| {
+            let sel = &*sel;
+            let mut est_rest: &mut [f32] = &mut x_hat.value;
+            let mut prev = 0usize;
+            let mut handles = Vec::with_capacity(plan.n_shards());
+            for (span, lane) in plan.spans().iter().zip(lanes.iter_mut()) {
+                let (head, tail) = est_rest.split_at_mut(span.coord_hi - prev);
+                est_rest = tail;
+                prev = span.coord_hi;
+                let ls = &layers[span.layer_lo..span.layer_hi];
+                let ks = &sel.k_per_layer[span.layer_lo..span.layer_hi];
+                let span = *span;
+                handles.push(s.spawn(move || {
+                    let mut bits = 0u64;
+                    for (l, &kk) in ls.iter().zip(ks) {
+                        let target = &x[l.offset..l.offset + l.size];
+                        let lo = l.offset - span.coord_lo;
+                        let est = &mut head[lo..lo + l.size];
+                        if kk >= l.size {
+                            compress_advance_span(
+                                &Identity,
+                                target,
+                                est,
+                                &mut lane.scratch,
+                                &mut lane.msg,
+                            );
+                        } else {
+                            compress_advance_span(
+                                &TopK::new(kk),
+                                target,
+                                est,
+                                &mut lane.scratch,
+                                &mut lane.msg,
+                            );
+                        }
+                        bits += lane.msg.wire_bits();
+                    }
+                    bits
+                }));
+            }
+            for h in handles {
+                down_bits += h.join().expect("shard broadcast thread panicked");
+            }
+        });
+    }
+    down_bits
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -402,6 +606,75 @@ mod tests {
                 let mut x = vec![1.0f32; 24];
                 step(&plan, &opt, 3, 0.7, &mut x, &agg, &ls, par);
                 assert_eq!(x, want, "shards={n} par={par}");
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_matches_serialized_for_every_policy_and_shard_count() {
+        use crate::kimad::CompressPolicy;
+        let ls = layers(&[7, 13, 9, 11]);
+        let dim = 40usize;
+        let x: Vec<f32> = (0..dim).map(|i| ((i * 13 % 23) as f32) / 4.0 - 2.0).collect();
+        for policy in [
+            CompressPolicy::FixedRatio { ratio: 0.4 },
+            CompressPolicy::KimadUniform,
+            CompressPolicy::KimadPlus { discretization: 400, ratios: vec![] },
+            CompressPolicy::WholeModelTopK,
+        ] {
+            let selector = Selector::new(policy.clone());
+            for budget_k in [0u64, 5, 17, 100] {
+                let c_down = budget_k * crate::kimad::select::SPARSE_COORD_BITS;
+                // Serialized reference (1 shard, parallel off). Run two
+                // rounds so the estimator state itself round-trips.
+                let ref_plan = ShardPlan::build(&ls, 1);
+                let mut want_hat = Estimator::zeros(dim);
+                let mut diff = vec![0.0f32; dim];
+                let mut scr = BroadcastScratch::default();
+                let mut want_bits = Vec::new();
+                for _ in 0..2 {
+                    want_bits.push(broadcast(
+                        &ref_plan,
+                        &selector,
+                        &ls,
+                        c_down,
+                        &x,
+                        &mut want_hat,
+                        &mut diff,
+                        &mut scr,
+                        false,
+                    ));
+                }
+                for n in [2usize, 3, 4] {
+                    for par in [false, true] {
+                        let plan = ShardPlan::build(&ls, n);
+                        let mut hat = Estimator::zeros(dim);
+                        let mut diff = vec![0.0f32; dim];
+                        let mut scr = BroadcastScratch::default();
+                        let mut bits = Vec::new();
+                        for _ in 0..2 {
+                            bits.push(broadcast(
+                                &plan,
+                                &selector,
+                                &ls,
+                                c_down,
+                                &x,
+                                &mut hat,
+                                &mut diff,
+                                &mut scr,
+                                par,
+                            ));
+                        }
+                        assert_eq!(
+                            bits, want_bits,
+                            "{policy:?} budget_k={budget_k} shards={n} par={par}: bits"
+                        );
+                        assert_eq!(
+                            hat.value, want_hat.value,
+                            "{policy:?} budget_k={budget_k} shards={n} par={par}: x̂"
+                        );
+                    }
+                }
             }
         }
     }

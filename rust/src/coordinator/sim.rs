@@ -35,15 +35,24 @@
 //! the server-side work — mirror delivery, the Σ w_m û_m reduction and
 //! the optimizer step — across layer shards
 //! ([`shard::ShardPlan`](super::shard)), so the aggregation path scales
-//! with cores the way the Sync upload batch already does. The `shards`
-//! knob on [`Simulation`] (0 = auto) picks the shard count; results
-//! are bit-identical for every shard count and thread count (see the
-//! shard module's determinism contract and `tests/shard_matrix.rs`).
+//! with cores the way the Sync upload batch already does. The
+//! **broadcast compression phase** (diff x − x̂, layer-wise budgeted
+//! selection, EF21 compress-advance) rides the same shards
+//! ([`shard::broadcast`](super::shard::broadcast)) in every mode,
+//! including the async per-worker x̂_m refreshes. The `shards` knob on
+//! [`Simulation`] (0 = auto) picks the shard count; results are
+//! bit-identical for every shard count and thread count (see the shard
+//! module's determinism contract and `tests/shard_matrix.rs`).
+//!
+//! Auto thread and shard resolution respects the cooperative
+//! [`Simulation::thread_cap`] budget, so an outer pool (the scenario
+//! matrix) can hand each simulation a slice of the machine instead of
+//! every auto knob grabbing all cores at once.
 
 use crate::bandwidth::BandwidthMonitor;
 use crate::compress::{Compressed, Identity, TopK};
 use crate::ef21::Estimator;
-use crate::kimad::{compression_budget, BudgetParams, CompressPolicy, Selector};
+use crate::kimad::{effective_budget, BudgetParams, CompressPolicy, Selector};
 use crate::model::Layer;
 use crate::netsim::{Direction, Event, EventKind, EventQueue, NetSim};
 use crate::optim::LayerwiseSgd;
@@ -133,7 +142,23 @@ impl SimConfig {
 /// per-thread TopK scratch warm. An explicit `threads = n` always wins.
 const PARALLEL_MIN_WORK: usize = 1 << 16;
 
-fn effective_threads(requested: usize, m: usize, dim: usize) -> usize {
+/// What "available parallelism" means under a cooperative thread
+/// budget: the machine, bounded by `cap` when one is set (`cap == 0` =
+/// uncapped). The scenario matrix hands every cell a cap so
+/// matrix workers × per-cell auto threads never oversubscribes the box
+/// (the pre-PR-4 bug: nested auto pools spawned up to N×N threads).
+fn avail_within(cap: usize) -> usize {
+    let machine = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    if cap == 0 {
+        machine
+    } else {
+        cap.min(machine)
+    }
+}
+
+fn effective_threads(requested: usize, m: usize, dim: usize, cap: usize) -> usize {
     let m = m.max(1);
     if requested != 0 {
         return requested.min(m);
@@ -141,30 +166,24 @@ fn effective_threads(requested: usize, m: usize, dim: usize) -> usize {
     if m < 2 || dim.saturating_mul(m) < PARALLEL_MIN_WORK {
         return 1;
     }
-    let auto = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1);
-    auto.min(m)
+    avail_within(cap).min(m)
 }
 
 /// Auto shard count (`shards == 0`): one shard below the work floor
 /// (per-round scoped-thread spawns only amortize on big models), else
-/// up to one shard per core, never more than one per layer. An
-/// explicit `shards = n` always wins (clamped to the layer count) —
-/// results are bit-identical either way, so forcing small-model runs
-/// parallel is purely a testing device.
-fn effective_shards(requested: usize, n_layers: usize, dim: usize) -> usize {
-    let cap = n_layers.max(1);
+/// up to one shard per core — bounded by the thread cap, never more
+/// than one per layer. An explicit `shards = n` always wins (clamped
+/// to the layer count) — results are bit-identical either way, so
+/// forcing small-model runs parallel is purely a testing device.
+fn effective_shards(requested: usize, n_layers: usize, dim: usize, cap: usize) -> usize {
+    let layer_cap = n_layers.max(1);
     if requested != 0 {
-        return requested.min(cap);
+        return requested.min(layer_cap);
     }
     if n_layers < 2 || dim < PARALLEL_MIN_WORK {
         return 1;
     }
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(cap)
+    avail_within(cap).min(layer_cap)
 }
 
 /// Shared, immutable inputs of a worker upload leg.
@@ -198,7 +217,7 @@ fn upload_leg(ctx: &UploadCtx<'_>, w: &mut WorkerState, up_start: f64) -> Upload
     w.monitor.observe(PROBE_BITS, PROBE_BITS / b_probe.max(1e-9));
     let true_up = ctx.net.true_bps(w.id, Direction::Up, up_start);
     let b_up = w.monitor.estimate_or(ctx.cfg.prior_bps);
-    let c_up = (compression_budget(ctx.cfg.budget, b_up) as f64 * ctx.cfg.budget_safety) as u64;
+    let c_up = effective_budget(ctx.cfg.budget, b_up, ctx.cfg.budget_safety);
     for (d, (&u, &uh)) in w.diff.iter_mut().zip(w.u.iter().zip(&w.u_hat.value)) {
         *d = u - uh;
     }
@@ -250,40 +269,6 @@ fn deliver_upload(mirror: &mut Estimator, layers: &[Layer], msgs: &[Compressed])
     for (l, msg) in layers.iter().zip(msgs) {
         mirror.apply(msg, l);
     }
-}
-
-/// Shared core of the broadcast phases: fill `diff = x − x̂`, run the
-/// `A^compress` selection under `c_down`, compress-advance the target
-/// estimator layer by layer into the reusable message buffer. Returns
-/// the wire size. Both the shared-channel phase and the async
-/// per-worker phase delegate here, so the broadcast path can never
-/// diverge between modes.
-#[allow(clippy::too_many_arguments)] // the flattened borrow set of one broadcast
-fn broadcast_into(
-    x: &[f32],
-    x_hat: &mut Estimator,
-    diff: &mut [f32],
-    down_selector: &Selector,
-    layers: &[Layer],
-    c_down: u64,
-    scratch: &mut Vec<f32>,
-    msg: &mut Compressed,
-) -> u64 {
-    for (d, (&xv, &xh)) in diff.iter_mut().zip(x.iter().zip(&x_hat.value)) {
-        *d = xv - xh;
-    }
-    let sel_down = down_selector.select(diff, layers, c_down);
-    let mut down_bits = 0u64;
-    for (l, &kk) in layers.iter().zip(&sel_down.k_per_layer) {
-        let target = &x[l.offset..l.offset + l.size];
-        if kk >= l.size {
-            x_hat.compress_advance_into(&Identity, target, l, scratch, msg);
-        } else {
-            x_hat.compress_advance_into(&TopK::new(kk), target, l, scratch, msg);
-        }
-        down_bits += msg.wire_bits();
-    }
-    down_bits
 }
 
 /// Shared, immutable inputs of one reference round's parallel worker
@@ -351,12 +336,19 @@ pub struct Simulation<S: GradientSource> {
     pub workers: Vec<WorkerState>,
     pub clock: f64,
     pub step: u64,
-    /// Server-shard count for the aggregation path: 0 = auto (one shard
-    /// per core on big models, serial otherwise), n = at most n shards
-    /// (clamped to the layer count). Results are bit-identical for
-    /// every setting — the knob only trades spawn overhead for
-    /// parallelism (see [`super::shard`]).
+    /// Server-shard count for the aggregation and broadcast paths: 0 =
+    /// auto (one shard per core on big models, serial otherwise), n =
+    /// at most n shards (clamped to the layer count). Results are
+    /// bit-identical for every setting — the knob only trades spawn
+    /// overhead for parallelism (see [`super::shard`]).
     pub shards: usize,
+    /// Cooperative thread budget: an upper bound on what the *auto*
+    /// knobs (`threads == 0`, `shards == 0`) may resolve to (0 = the
+    /// machine's parallelism). Set per cell by the scenario matrix so
+    /// matrix workers × per-cell threads never exceeds the box;
+    /// results are unaffected (thread and shard counts are
+    /// bit-invariant).
+    pub thread_cap: usize,
     weights: Vec<f64>,
     up_selector: Selector,
     down_selector: Selector,
@@ -368,6 +360,9 @@ pub struct Simulation<S: GradientSource> {
     /// Layer-shard partition of the server path, rebuilt only when the
     /// `shards` knob changes (allocation-free steady state).
     plan: ShardPlan,
+    /// Reusable sharded-broadcast scratch (per-shard lanes + selection
+    /// buffers — allocation-free steady state on the serialized path).
+    bcast: shard::BroadcastScratch,
     /// Reusable same-timestamp event batch buffer.
     batch: Vec<Event>,
 }
@@ -394,7 +389,7 @@ impl<S: GradientSource> Simulation<S> {
         };
         let workers = (0..cfg.m).map(|i| WorkerState::new(i, dim)).collect();
         let chains = vec![Chain::default(); cfg.m];
-        let plan = ShardPlan::build(&cfg.layers, effective_shards(0, cfg.layers.len(), dim));
+        let plan = ShardPlan::build(&cfg.layers, effective_shards(0, cfg.layers.len(), dim, 0));
         Self {
             cfg,
             net,
@@ -404,6 +399,7 @@ impl<S: GradientSource> Simulation<S> {
             clock: 0.0,
             step: 0,
             shards: 0,
+            thread_cap: 0,
             weights,
             up_selector,
             down_selector,
@@ -412,6 +408,7 @@ impl<S: GradientSource> Simulation<S> {
             queue: EventQueue::new(),
             chains,
             plan,
+            bcast: shard::BroadcastScratch::default(),
             batch: Vec::new(),
         }
     }
@@ -419,7 +416,12 @@ impl<S: GradientSource> Simulation<S> {
     /// Rebuild the shard plan iff the `shards` knob changed since the
     /// last round (steady-state rounds never allocate here).
     fn ensure_plan(&mut self) {
-        let n = effective_shards(self.shards, self.cfg.layers.len(), self.server.dim());
+        let n = effective_shards(
+            self.shards,
+            self.cfg.layers.len(),
+            self.server.dim(),
+            self.thread_cap,
+        );
         if self.plan.n_shards() != n && !self.cfg.layers.is_empty() {
             self.plan = ShardPlan::build(&self.cfg.layers, n);
         }
@@ -471,39 +473,43 @@ impl<S: GradientSource> Simulation<S> {
 
     /// Server broadcast phase: Eq. (2) budget at bandwidth estimate
     /// `b_down`, `A^compress` selection over x − x̂, compress-advance of
-    /// the shared x̂. Returns the wire size of the broadcast message.
+    /// the shared x̂ — fanned across the layer shards
+    /// ([`shard::broadcast`], bit-identical to the serialized pass for
+    /// any shard count). Returns the wire size of the broadcast
+    /// message.
     fn broadcast_phase(&mut self, b_down: f64) -> u64 {
-        let c_down =
-            (compression_budget(self.cfg.budget, b_down) as f64 * self.cfg.budget_safety) as u64;
-        let ServerState { x, x_hat, scratch, msg, .. } = &mut self.server;
-        broadcast_into(
-            x,
-            x_hat,
-            &mut self.diff,
+        let c_down = effective_budget(self.cfg.budget, b_down, self.cfg.budget_safety);
+        let ServerState { x, x_hat, .. } = &mut self.server;
+        shard::broadcast(
+            &self.plan,
             &self.down_selector,
             &self.cfg.layers,
             c_down,
-            scratch,
-            msg,
+            x,
+            x_hat,
+            &mut self.diff,
+            &mut self.bcast,
+            self.plan.n_shards() > 1,
         )
     }
 
     /// [`broadcast_phase`](Self::broadcast_phase) for one worker's own
     /// channel: diff and compress-advance against that worker's x̂_m
-    /// mirror under that link's budget (async per-worker channels).
+    /// mirror under that link's budget (async per-worker channels) —
+    /// through the same sharded kernel.
     fn broadcast_phase_for(&mut self, worker: usize, b_down: f64) -> u64 {
-        let c_down =
-            (compression_budget(self.cfg.budget, b_down) as f64 * self.cfg.budget_safety) as u64;
-        let ServerState { x, x_hats, scratch, msg, .. } = &mut self.server;
-        broadcast_into(
-            x,
-            &mut x_hats[worker],
-            &mut self.diff,
+        let c_down = effective_budget(self.cfg.budget, b_down, self.cfg.budget_safety);
+        let ServerState { x, x_hats, .. } = &mut self.server;
+        shard::broadcast(
+            &self.plan,
             &self.down_selector,
             &self.cfg.layers,
             c_down,
-            scratch,
-            msg,
+            x,
+            &mut x_hats[worker],
+            &mut self.diff,
+            &mut self.bcast,
+            self.plan.n_shards() > 1,
         )
     }
 
@@ -724,7 +730,7 @@ impl<S: GradientSource> Simulation<S> {
             }
         }
         debug_assert!(self.queue.is_empty());
-        let n_threads = effective_threads(self.cfg.threads, m, self.server.dim());
+        let n_threads = effective_threads(self.cfg.threads, m, self.server.dim(), self.thread_cap);
         let uctx = UploadCtx { cfg: &self.cfg, net: &self.net, up_selector: &self.up_selector };
         if n_threads <= 1 {
             for (w, c) in self.workers.iter_mut().zip(self.chains.iter_mut()) {
@@ -998,7 +1004,8 @@ impl<S: GradientSource> Simulation<S> {
         }
 
         // ---- Parallel worker phase: timing, budgets, selection, EF21.
-        let n_threads = effective_threads(self.cfg.threads, self.cfg.m, self.server.dim());
+        let n_threads =
+            effective_threads(self.cfg.threads, self.cfg.m, self.server.dim(), self.thread_cap);
         let ctx = RoundCtx {
             up: UploadCtx { cfg: &self.cfg, net: &self.net, up_selector: &self.up_selector },
             t0,
@@ -1254,25 +1261,41 @@ mod tests {
     #[test]
     fn thread_count_clamps() {
         // Explicit thread counts win regardless of work size.
-        assert_eq!(effective_threads(1, 8, 30), 1);
-        assert_eq!(effective_threads(16, 3, 30), 3);
+        assert_eq!(effective_threads(1, 8, 30, 0), 1);
+        assert_eq!(effective_threads(16, 3, 30, 0), 3);
         // Auto mode: small rounds stay serial, big ones parallelize.
-        assert_eq!(effective_threads(0, 4, 30), 1);
-        assert_eq!(effective_threads(0, 1, 10_000_000), 1);
-        let big = effective_threads(0, 64, 1_000_000);
+        assert_eq!(effective_threads(0, 4, 30, 0), 1);
+        assert_eq!(effective_threads(0, 1, 10_000_000, 0), 1);
+        let big = effective_threads(0, 64, 1_000_000, 0);
         assert!((1..=64).contains(&big));
     }
 
     #[test]
     fn shard_count_clamps() {
         // Explicit shard counts clamp to the layer count.
-        assert_eq!(effective_shards(2, 8, 30), 2);
-        assert_eq!(effective_shards(16, 3, 30), 3);
+        assert_eq!(effective_shards(2, 8, 30, 0), 2);
+        assert_eq!(effective_shards(16, 3, 30, 0), 3);
         // Auto mode: small models stay serialized, big ones shard.
-        assert_eq!(effective_shards(0, 10, 30), 1);
-        assert_eq!(effective_shards(0, 1, 10_000_000), 1);
-        let big = effective_shards(0, 64, 10_000_000);
+        assert_eq!(effective_shards(0, 10, 30, 0), 1);
+        assert_eq!(effective_shards(0, 1, 10_000_000, 0), 1);
+        let big = effective_shards(0, 64, 10_000_000, 0);
         assert!((1..=64).contains(&big));
+    }
+
+    #[test]
+    fn thread_cap_bounds_auto_but_not_explicit() {
+        // The cooperative budget: auto resolution never exceeds the
+        // cap, while explicit knobs remain the caller's business (the
+        // scenario layer clamps those before they get here).
+        assert_eq!(effective_threads(0, 64, 10_000_000, 1), 1);
+        assert!(effective_threads(0, 64, 10_000_000, 2) <= 2);
+        assert_eq!(effective_threads(5, 64, 10_000_000, 1), 5);
+        assert_eq!(effective_shards(0, 64, 10_000_000, 1), 1);
+        assert!(effective_shards(0, 64, 10_000_000, 3) <= 3);
+        assert_eq!(effective_shards(4, 64, 10_000_000, 1), 4);
+        // Cap 0 = uncapped (the machine).
+        assert_eq!(avail_within(0), avail_within(usize::MAX));
+        assert_eq!(avail_within(1), 1);
     }
 
     #[test]

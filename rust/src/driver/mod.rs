@@ -65,7 +65,12 @@ fn round_deadline(budget: &crate::kimad::BudgetParams, t_comp: f64) -> f64 {
     }
 }
 
-fn sim_config(cfg: &ExperimentConfig, layers: Vec<Layer>, t_comp: f64) -> SimConfig {
+fn sim_config(
+    cfg: &ExperimentConfig,
+    layers: Vec<Layer>,
+    t_comp: f64,
+    prior_bps: f64,
+) -> SimConfig {
     SimConfig {
         m: cfg.m,
         weights: vec![],
@@ -76,12 +81,91 @@ fn sim_config(cfg: &ExperimentConfig, layers: Vec<Layer>, t_comp: f64) -> SimCon
             .with_layer_weights(cfg.optimizer.layer_weights.clone()),
         layers,
         warm_start: cfg.warm_start,
-        prior_bps: prior_bps(cfg),
+        prior_bps,
         round_deadline: Some(round_deadline(&cfg.budget, t_comp)),
         budget_safety: cfg.budget_safety,
         threads: cfg.threads,
         mode: cfg.mode.resolve(cfg.m),
         compute: cfg.compute.clone(),
+    }
+}
+
+/// Pre-built state one *cell family* of quadratic experiments shares
+/// (same uplink trace × workload × M): the `Quadratic` instance, the
+/// layer layout and the cold-start bandwidth prior (a numerical trace
+/// integration). The scenario matrix prepares one of these per family
+/// and runs every member cell against it, instead of re-deriving all
+/// three per cell.
+///
+/// `run` is the *same* code path [`run_experiment`] takes for the
+/// quadratic workload — `run_experiment` delegates here with a
+/// just-prepared instance — so warm (reused) and cold (fresh) runs are
+/// bit-identical by construction.
+pub struct WarmQuadratic {
+    workload: WorkloadSpec,
+    uplink: crate::bandwidth::TraceSpec,
+    m: usize,
+    cfg_prior: f64,
+    q: Quadratic,
+    layout: crate::model::ModelLayout,
+    t_comp: f64,
+    prior_bps: f64,
+}
+
+impl WarmQuadratic {
+    /// Build the family state from one member's config.
+    pub fn prepare(cfg: &ExperimentConfig) -> anyhow::Result<Self> {
+        let WorkloadSpec::Quadratic { d, n_layers, t_comp } = &cfg.workload else {
+            anyhow::bail!(
+                "warm-cell reuse covers the quadratic workload (deep models load artifacts)"
+            );
+        };
+        let q = Quadratic::paper_instance(*d);
+        let layout = q.layout(*n_layers);
+        Ok(Self {
+            workload: cfg.workload.clone(),
+            uplink: cfg.uplink.clone(),
+            m: cfg.m,
+            cfg_prior: cfg.prior_bps,
+            q,
+            layout,
+            t_comp: *t_comp,
+            prior_bps: prior_bps(cfg),
+        })
+    }
+
+    /// Is `cfg` a member of this family? (Everything the warm state
+    /// was derived from must match; policy, mode, safety, shards and
+    /// the downlink are free axes.)
+    pub fn compatible(&self, cfg: &ExperimentConfig) -> bool {
+        cfg.workload == self.workload
+            && cfg.uplink == self.uplink
+            && cfg.m == self.m
+            && cfg.prior_bps == self.cfg_prior
+    }
+
+    /// Run one member cell to completion from the warm state.
+    pub fn run(&self, cfg: &ExperimentConfig) -> anyhow::Result<ExperimentResult> {
+        anyhow::ensure!(
+            self.compatible(cfg),
+            "experiment '{}' is not a member of this cell family",
+            cfg.name
+        );
+        let layers = if cfg.single_layer {
+            self.layout.single_layer()
+        } else {
+            self.layout.layers()
+        };
+        let d = self.q.dim();
+        let src = QuadraticSource::new(self.q.clone(), self.t_comp);
+        let x0 = vec![1.0f32; d];
+        let sim_cfg = sim_config(cfg, layers.clone(), self.t_comp, self.prior_bps);
+        let mut sim = Simulation::new(sim_cfg, build_netsim(cfg), src, x0);
+        sim.shards = cfg.shards;
+        sim.thread_cap = cfg.thread_cap;
+        let records = sim.run(cfg.rounds)?;
+        let total_time = sim.clock;
+        Ok(ExperimentResult { records, layers, n_params: d, eval: None, total_time })
     }
 }
 
@@ -95,23 +179,7 @@ pub fn run_experiment(
     eval_batches: usize,
 ) -> anyhow::Result<ExperimentResult> {
     match &cfg.workload {
-        WorkloadSpec::Quadratic { d, n_layers, t_comp } => {
-            let q = Quadratic::paper_instance(*d);
-            let layout = q.layout(*n_layers);
-            let layers = if cfg.single_layer {
-                layout.single_layer()
-            } else {
-                layout.layers()
-            };
-            let src = QuadraticSource::new(q, *t_comp);
-            let x0 = vec![1.0f32; *d];
-            let sim_cfg = sim_config(cfg, layers.clone(), *t_comp);
-            let mut sim = Simulation::new(sim_cfg, build_netsim(cfg), src, x0);
-            sim.shards = cfg.shards;
-            let records = sim.run(cfg.rounds)?;
-            let total_time = sim.clock;
-            Ok(ExperimentResult { records, layers, n_params: *d, eval: None, total_time })
-        }
+        WorkloadSpec::Quadratic { .. } => WarmQuadratic::prepare(cfg)?.run(cfg),
         WorkloadSpec::DeepModel { preset, sigma, t_comp } => {
             let store = match artifacts {
                 Some(dir) => ArtifactStore::open(dir)?,
@@ -134,9 +202,10 @@ pub fn run_experiment(
             };
             let x0 = store.initial_params(preset)?;
             let n_params = layout.n_params;
-            let sim_cfg = sim_config(cfg, layers.clone(), t_comp);
+            let sim_cfg = sim_config(cfg, layers.clone(), t_comp, prior_bps(cfg));
             let mut sim = Simulation::new(sim_cfg, build_netsim(cfg), src, x0);
             sim.shards = cfg.shards;
+            sim.thread_cap = cfg.thread_cap;
             let records = sim.run(cfg.rounds)?;
             let total_time = sim.clock;
             let eval = if eval_batches > 0 {
@@ -199,6 +268,7 @@ mod tests {
             budget_safety: 1.0,
             threads: 0,
             shards: 0,
+            thread_cap: 0,
             mode: ExecModeSpec::Sync,
             compute: ComputeModel::Constant,
             seed: 21,
@@ -253,6 +323,42 @@ mod tests {
         let res = run_experiment(&cfg, None, 0).unwrap();
         assert!(res.records.iter().all(|r| r.n_arrivals() == 1));
         assert!(res.total_time > 0.0);
+    }
+
+    #[test]
+    fn warm_family_runs_match_cold_runs_bitwise() {
+        // One WarmQuadratic serving several cells (different policies,
+        // modes, safeties) must reproduce the cold path bit for bit —
+        // it IS the cold path, minus the rebuilds.
+        let warm = WarmQuadratic::prepare(&quad_cfg()).unwrap();
+        for (policy, mode, safety) in [
+            (CompressPolicy::KimadUniform, ExecModeSpec::Sync, 1.0),
+            (
+                CompressPolicy::KimadPlus { discretization: 300, ratios: vec![] },
+                ExecModeSpec::SemiSync { participation: 0.5 },
+                0.8,
+            ),
+            (CompressPolicy::WholeModelTopK, ExecModeSpec::Async { damping: 0.7 }, 1.0),
+        ] {
+            let mut cfg = quad_cfg();
+            cfg.up_policy = policy.clone();
+            cfg.down_policy = policy;
+            cfg.mode = mode;
+            cfg.budget_safety = safety;
+            assert!(warm.compatible(&cfg));
+            let a = warm.run(&cfg).unwrap();
+            let b = run_experiment(&cfg, None, 0).unwrap();
+            assert_eq!(a.records, b.records, "warm diverged from cold");
+            assert_eq!(a.total_time, b.total_time);
+        }
+        // A different trace or M is a different family.
+        let mut other = quad_cfg();
+        other.m = 3;
+        assert!(!warm.compatible(&other));
+        let mut other = quad_cfg();
+        other.uplink = TraceSpec::Constant { bps: 999.0 };
+        assert!(!warm.compatible(&other));
+        assert!(warm.run(&other).is_err());
     }
 
     #[test]

@@ -87,10 +87,7 @@ impl Estimator {
         msg: &mut Compressed,
     ) {
         let span = &mut self.value[layer.offset..layer.offset + layer.size];
-        scratch.clear();
-        scratch.extend(target_layer.iter().zip(span.iter()).map(|(&t, &e)| t - e));
-        compressor.compress_into(scratch, msg);
-        msg.add_into(span);
+        compress_advance_span(compressor, target_layer, span, scratch, msg);
     }
 
     /// Receiver side: advance by an already-received message.
@@ -108,6 +105,29 @@ impl Estimator {
             .map(|(&e, &t)| ((e - t) as f64).powi(2))
             .sum()
     }
+}
+
+/// The span form of [`Estimator::compress_advance_into`]: advance an
+/// explicit estimator span — the slice of `value` belonging to one
+/// layer — instead of indexing into the whole estimator. This is what
+/// the sharded broadcast kernel calls when the estimator's flat vector
+/// is split across shard threads via `split_at_mut` (each thread owns
+/// its shard's span, so `&mut self` on the whole estimator is
+/// unavailable by design). `est_span` must be exactly
+/// `value[layer.offset .. layer.offset + layer.size]`;
+/// `compress_advance_into` delegates here, so the two forms can never
+/// diverge.
+pub fn compress_advance_span(
+    compressor: &dyn Compressor,
+    target_layer: &[f32],
+    est_span: &mut [f32],
+    scratch: &mut Vec<f32>,
+    msg: &mut Compressed,
+) {
+    scratch.clear();
+    scratch.extend(target_layer.iter().zip(est_span.iter()).map(|(&t, &e)| t - e));
+    compressor.compress_into(scratch, msg);
+    msg.add_into(est_span);
 }
 
 #[cfg(test)]
@@ -135,6 +155,31 @@ mod tests {
             assert_eq!(msg, want);
         }
         assert_eq!(a.value, b.value);
+    }
+
+    #[test]
+    fn compress_advance_span_matches_whole_estimator_form() {
+        // The sharded broadcast runs the span form on split_at_mut
+        // slices; it must be bit-identical to the &mut Estimator form.
+        let layout = ModelLayout::synthetic(&[3, 5]);
+        let layers = layout.layers();
+        let target = [4.0f32, -3.0, 2.0, -1.0, 0.5, 6.0, -2.5, 1.5];
+        let c = TopK::new(2);
+        let mut whole = Estimator::zeros(8);
+        let mut split = Estimator::zeros(8);
+        let mut scratch = Vec::new();
+        let (mut msg_a, mut msg_b) = (Compressed::default(), Compressed::default());
+        for _ in 0..3 {
+            for l in &layers {
+                let t = &target[l.offset..l.offset + l.size];
+                whole.compress_advance_into(&c, t, l, &mut scratch, &mut msg_a);
+                let (head, tail) = split.value.split_at_mut(layers[0].size);
+                let span = if l.offset == 0 { head } else { tail };
+                compress_advance_span(&c, t, span, &mut scratch, &mut msg_b);
+                assert_eq!(msg_a, msg_b);
+            }
+        }
+        assert_eq!(whole.value, split.value);
     }
 
     #[test]

@@ -44,6 +44,27 @@ pub fn compression_budget(params: BudgetParams, b_bps: f64) -> u64 {
     (b_bps * secs).floor() as u64
 }
 
+/// [`compression_budget`] scaled by the DC2-style safety factor (see
+/// `SimConfig::budget_safety`): the one shared form of the
+/// `budget × safety` rounding, hoisted here so the uplink leg, the
+/// shared broadcast and the per-worker broadcast can never drift apart.
+///
+/// The product is computed in f64 (safety is a ratio, not bits) and
+/// cast back with explicit saturation: `safety > 1` can push the
+/// product past `u64::MAX`, and a NaN or non-positive product clamps
+/// to 0 — the same values the `as u64` float cast produces, spelled
+/// out so the edge cases are visible and unit-tested.
+pub fn effective_budget(params: BudgetParams, b_bps: f64, safety: f64) -> u64 {
+    let scaled = compression_budget(params, b_bps) as f64 * safety;
+    if scaled.is_nan() || scaled <= 0.0 {
+        0
+    } else if scaled >= u64::MAX as f64 {
+        u64::MAX
+    } else {
+        scaled as u64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -78,5 +99,36 @@ mod tests {
             compression_budget(p, 200.0),
             2 * compression_budget(p, 100.0)
         );
+    }
+
+    #[test]
+    fn effective_budget_applies_safety() {
+        let p = BudgetParams::PerDirection { t_comm: 1.0 };
+        // safety = 1 is the identity on the raw budget.
+        assert_eq!(effective_budget(p, 1000.0, 1.0), 1000);
+        // Conservative factors truncate downward, never round up.
+        assert_eq!(effective_budget(p, 1000.0, 0.8), 800);
+        assert_eq!(effective_budget(p, 999.0, 0.5), 499);
+        // safety > 1 scales up (an aggressive operator choice).
+        assert_eq!(effective_budget(p, 1000.0, 1.5), 1500);
+    }
+
+    #[test]
+    fn effective_budget_zero_safety_is_zero() {
+        let p = BudgetParams::PerDirection { t_comm: 1.0 };
+        assert_eq!(effective_budget(p, 1e9, 0.0), 0);
+        assert_eq!(effective_budget(p, 1e9, -0.5), 0);
+        assert_eq!(effective_budget(p, 1e9, f64::NAN), 0);
+    }
+
+    #[test]
+    fn effective_budget_saturates_near_u64_max() {
+        // A budget near u64::MAX times safety > 1 must clamp instead of
+        // wrapping. b_bps = 2^63 over one second floors to 2^63 bits.
+        let p = BudgetParams::PerDirection { t_comm: 1.0 };
+        let huge = (1u64 << 63) as f64;
+        assert_eq!(effective_budget(p, huge, 4.0), u64::MAX);
+        // And at safety = 1 the huge budget survives unscaled.
+        assert_eq!(effective_budget(p, huge, 1.0), 1u64 << 63);
     }
 }

@@ -35,7 +35,7 @@ pub mod error_curve;
 pub mod knapsack;
 pub mod select;
 
-pub use budget::{compression_budget, BudgetParams};
+pub use budget::{compression_budget, effective_budget, BudgetParams};
 pub use error_curve::ErrorCurve;
 pub use knapsack::{allocate, Allocation, KnapsackParams};
-pub use select::{CompressPolicy, Selection, Selector};
+pub use select::{CompressPolicy, SelectScratch, Selection, Selector};

@@ -39,7 +39,7 @@ pub enum CompressPolicy {
 }
 
 /// The outcome of one `A^compress` call: per-layer TopK sizes.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Selection {
     pub k_per_layer: Vec<usize>,
     pub planned_bits: u64,
@@ -61,6 +61,44 @@ impl Selection {
     }
 }
 
+/// Reusable state for [`Selector::select_into`] — the allocation-free
+/// form the broadcast hot path runs every round. One scratch per
+/// selection site; the buffers warm up on the first call.
+#[derive(Debug, Clone, Default)]
+pub struct SelectScratch {
+    /// Layer indices sorted by size descending (the `KimadUniform`
+    /// remainder-distribution order; ties broken by index, matching a
+    /// stable sort over the original order).
+    order: Vec<usize>,
+    /// Whole-model TopK index buffer.
+    idx: Vec<u32>,
+    /// Per-layer error curves (`KimadPlus`). Only consumed by the next
+    /// `select_into` when [`set_curves_ready`](Self::set_curves_ready)
+    /// was called after an external fill — see [`curves_mut`](Self::curves_mut).
+    curves: Vec<ErrorCurve>,
+    curves_ready: bool,
+}
+
+impl SelectScratch {
+    /// Size the curve slots to `n_layers` and hand them out for an
+    /// external — possibly sharded — fill. The caller must store layer
+    /// `i`'s curve (built over exactly `diff[layers[i]]`) in slot `i`
+    /// and then call [`set_curves_ready`](Self::set_curves_ready); the
+    /// next [`Selector::select_into`] then skips its own serial build.
+    /// Curves are pure per-layer functions of `diff`, so an external
+    /// fill is bit-identical to the internal one.
+    pub fn curves_mut(&mut self, n_layers: usize) -> &mut [ErrorCurve] {
+        self.curves.resize_with(n_layers, || ErrorCurve { err: Vec::new() });
+        &mut self.curves
+    }
+
+    /// Mark the curve slots as freshly built for the next
+    /// `select_into` call (consumed — one call, one selection).
+    pub fn set_curves_ready(&mut self) {
+        self.curves_ready = true;
+    }
+}
+
 /// Stateless selector (the per-endpoint instance exists so policies
 /// with internal state — none today — stay possible).
 #[derive(Debug, Clone)]
@@ -73,19 +111,43 @@ impl Selector {
         Self { policy }
     }
 
+    /// Does this policy consume per-layer [`ErrorCurve`]s? Callers that
+    /// already fan per-layer work across threads can prebuild the
+    /// curves ([`SelectScratch::curves_mut`] +
+    /// [`SelectScratch::set_curves_ready`]) before
+    /// [`select_into`](Self::select_into) instead of paying the serial
+    /// build inside the selection.
+    pub fn needs_curves(&self) -> bool {
+        matches!(self.policy, CompressPolicy::KimadPlus { .. })
+    }
+
     /// Select compressors for `diff` (the EF21 difference vector)
     /// partitioned by `layers`, under `budget_bits` for this direction.
     /// `FixedRatio` ignores the budget (that is the point of the
     /// baseline); all other policies respect it exactly.
     pub fn select(&self, diff: &[f32], layers: &[Layer], budget_bits: u64) -> Selection {
+        let mut scratch = SelectScratch::default();
+        let mut out = Selection::default();
+        self.select_into(diff, layers, budget_bits, &mut scratch, &mut out);
+        out
+    }
+
+    /// [`select`](Self::select) into caller-owned buffers — the
+    /// allocation-free form (for the budget-driven sparsification
+    /// policies; `KimadPlus` still allocates inside the knapsack DP).
+    /// Bit-identical to `select` for every policy.
+    pub fn select_into(
+        &self,
+        diff: &[f32],
+        layers: &[Layer],
+        budget_bits: u64,
+        scratch: &mut SelectScratch,
+        out: &mut Selection,
+    ) {
+        out.k_per_layer.clear();
         match &self.policy {
             CompressPolicy::FixedRatio { ratio } => {
-                let k_per_layer: Vec<usize> = layers
-                    .iter()
-                    .map(|l| ratio_to_k(*ratio, l.size))
-                    .collect();
-                let planned = planned_bits(&k_per_layer);
-                Selection { k_per_layer, planned_bits: planned }
+                out.k_per_layer.extend(layers.iter().map(|l| ratio_to_k(*ratio, l.size)));
             }
             CompressPolicy::KimadUniform => {
                 let d_total: usize = layers.iter().map(|l| l.size).sum();
@@ -96,27 +158,28 @@ impl Selector {
                     (k_budget as f64 / d_total as f64).min(1.0)
                 };
                 // Floor per layer so the total never exceeds budget.
-                let mut k_per_layer: Vec<usize> = layers
-                    .iter()
-                    .map(|l| ((ratio * l.size as f64).floor() as usize).min(l.size))
-                    .collect();
-                // Distribute the remainder greedily by layer size.
-                let mut used: usize = k_per_layer.iter().sum();
+                out.k_per_layer.extend(
+                    layers.iter().map(|l| ((ratio * l.size as f64).floor() as usize).min(l.size)),
+                );
+                // Distribute the remainder greedily by layer size. The
+                // (Reverse(size), index) key on an unstable sort equals
+                // the stable sort by Reverse(size) — indices are unique
+                // — without the stable sort's temp allocation.
+                let mut used: usize = out.k_per_layer.iter().sum();
                 if ratio < 1.0 {
-                    let mut order: Vec<usize> = (0..layers.len()).collect();
-                    order.sort_by_key(|&i| std::cmp::Reverse(layers[i].size));
-                    for &i in order.iter().cycle().take(layers.len() * 2) {
+                    scratch.order.clear();
+                    scratch.order.extend(0..layers.len());
+                    scratch.order.sort_unstable_by_key(|&i| (std::cmp::Reverse(layers[i].size), i));
+                    for &i in scratch.order.iter().cycle().take(layers.len() * 2) {
                         if used >= k_budget.min(d_total) {
                             break;
                         }
-                        if k_per_layer[i] < layers[i].size {
-                            k_per_layer[i] += 1;
+                        if out.k_per_layer[i] < layers[i].size {
+                            out.k_per_layer[i] += 1;
                             used += 1;
                         }
                     }
                 }
-                let planned = planned_bits(&k_per_layer);
-                Selection { k_per_layer, planned_bits: planned }
             }
             CompressPolicy::KimadPlus { discretization, ratios } => {
                 let grid = if ratios.is_empty() {
@@ -124,42 +187,40 @@ impl Selector {
                 } else {
                     ratios.clone()
                 };
-                let curves: Vec<ErrorCurve> = layers
-                    .iter()
-                    .map(|l| ErrorCurve::build(&diff[l.offset..l.offset + l.size]))
-                    .collect();
-                let options = topk_options(&curves, &grid, SPARSE_COORD_BITS);
+                if !(scratch.curves_ready && scratch.curves.len() == layers.len()) {
+                    let curves = scratch.curves_mut(layers.len());
+                    for (l, slot) in layers.iter().zip(curves.iter_mut()) {
+                        *slot = ErrorCurve::build(&diff[l.offset..l.offset + l.size]);
+                    }
+                }
+                let options = topk_options(&scratch.curves, &grid, SPARSE_COORD_BITS);
                 let alloc = allocate(
                     &options,
                     KnapsackParams { budget_bits, discretization: *discretization },
                 );
                 // Map chosen option back to K (option bits / coord bits).
-                let k_per_layer: Vec<usize> = alloc
-                    .choice
-                    .iter()
-                    .zip(&options)
-                    .map(|(&j, o)| (o[j].bits / SPARSE_COORD_BITS) as usize)
-                    .collect();
-                let planned = planned_bits(&k_per_layer);
-                Selection { k_per_layer, planned_bits: planned }
+                for (&j, o) in alloc.choice.iter().zip(&options) {
+                    out.k_per_layer.push((o[j].bits / SPARSE_COORD_BITS) as usize);
+                }
             }
             CompressPolicy::WholeModelTopK => {
                 let d_total: usize = layers.iter().map(|l| l.size).sum();
                 let k_global = ((budget_bits / SPARSE_COORD_BITS) as usize).min(d_total);
-                let idx = TopK::select_indices(diff, k_global);
-                let mut k_per_layer = vec![0usize; layers.len()];
-                for &i in &idx {
+                TopK::select_indices_into(diff, k_global, &mut scratch.idx);
+                out.k_per_layer.resize(layers.len(), 0);
+                for &i in &scratch.idx {
                     let i = i as usize;
                     // Layers are contiguous and sorted by offset.
                     let li = layers
                         .partition_point(|l| l.offset + l.size <= i)
                         .min(layers.len() - 1);
-                    k_per_layer[li] += 1;
+                    out.k_per_layer[li] += 1;
                 }
-                let planned = planned_bits(&k_per_layer);
-                Selection { k_per_layer, planned_bits: planned }
             }
         }
+        // Prebuilt curves are good for exactly one selection.
+        scratch.curves_ready = false;
+        out.planned_bits = planned_bits(&out.k_per_layer);
     }
 }
 
@@ -266,5 +327,67 @@ mod tests {
         let sel = s.select(&[], &[], 100);
         assert!(sel.k_per_layer.is_empty());
         assert_eq!(sel.planned_bits, 0);
+    }
+
+    #[test]
+    fn select_into_matches_select_for_every_policy() {
+        // The buffer-reuse form must be bit-identical to the allocating
+        // one, including across repeated calls on one warm scratch.
+        let layers = layers3();
+        let diff = diff40();
+        for policy in [
+            CompressPolicy::FixedRatio { ratio: 0.3 },
+            CompressPolicy::KimadUniform,
+            CompressPolicy::KimadPlus { discretization: 500, ratios: vec![] },
+            CompressPolicy::WholeModelTopK,
+        ] {
+            let s = Selector::new(policy.clone());
+            let mut scratch = SelectScratch::default();
+            let mut out = Selection::default();
+            for budget_k in [0u64, 3, 11, 40, 100] {
+                let want = s.select(&diff, &layers, budget_k * SPARSE_COORD_BITS);
+                s.select_into(
+                    &diff,
+                    &layers,
+                    budget_k * SPARSE_COORD_BITS,
+                    &mut scratch,
+                    &mut out,
+                );
+                assert_eq!(out, want, "{policy:?} budget_k={budget_k}");
+            }
+        }
+    }
+
+    #[test]
+    fn prebuilt_curves_match_internal_build() {
+        // The sharded broadcast prebuilds the per-layer error curves in
+        // parallel; consuming them must give the same selection as the
+        // internal serial build — and the ready flag is one-shot.
+        let layers = layers3();
+        let mut diff = vec![0.1f32; 40];
+        for (i, d) in diff.iter_mut().enumerate().take(10) {
+            *d = 10.0 - i as f32;
+        }
+        let s = Selector::new(CompressPolicy::KimadPlus { discretization: 800, ratios: vec![] });
+        assert!(s.needs_curves());
+        assert!(!Selector::new(CompressPolicy::KimadUniform).needs_curves());
+        let budget = 9 * SPARSE_COORD_BITS;
+        let want = s.select(&diff, &layers, budget);
+
+        let mut scratch = SelectScratch::default();
+        let curves = scratch.curves_mut(layers.len());
+        for (l, slot) in layers.iter().zip(curves.iter_mut()) {
+            *slot = ErrorCurve::build(&diff[l.offset..l.offset + l.size]);
+        }
+        scratch.set_curves_ready();
+        let mut out = Selection::default();
+        s.select_into(&diff, &layers, budget, &mut scratch, &mut out);
+        assert_eq!(out, want, "prebuilt curves diverged from internal build");
+        assert!(!scratch.curves_ready, "ready flag must be consumed");
+
+        // Without re-arming, the next call rebuilds internally (same
+        // result — the flag only skips work, never changes it).
+        s.select_into(&diff, &layers, budget, &mut scratch, &mut out);
+        assert_eq!(out, want);
     }
 }

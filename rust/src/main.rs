@@ -28,8 +28,8 @@ USAGE:
   kimad report <fig1|fig3..fig9|fig3to6|table1|table2|all> [--artifacts DIR] \\
                [--out-dir DIR] [--fast]
   kimad scenarios [--grid <grid.json>] [--out-dir DIR] [--threads N] \\
-               [--rounds N] [--modes sync,semisync,async] [--shards 1,2,4] \\
-               [--print-grid]
+               [--cell-threads N] [--rounds N] [--modes sync,semisync,async] \\
+               [--shards 1,2,4] [--print-grid]
   kimad synthetic [--scenario xsmall|small|oscillation|high] [--fast] [--out-dir DIR]
   kimad trace --spec '<json TraceSpec>' [--seconds S] [--step S]
   kimad presets [--artifacts DIR]
@@ -102,6 +102,10 @@ fn scenarios(args: &Args) -> anyhow::Result<()> {
         return Ok(());
     }
     let threads = args.opt_usize("threads", 0)?;
+    // Per-cell simulation-thread budget: 0 = the cooperative default
+    // (available parallelism / matrix workers); an explicit value lets
+    // a shard-axis sweep oversubscribe deliberately.
+    let cell_threads = args.opt_usize("cell-threads", 0)?;
     let out_dir = PathBuf::from(args.opt_or("out-dir", "reports/scenarios"));
     eprintln!(
         "running grid '{}': {} cells ({} traces x {} policies x {} modes x {} worker counts \
@@ -115,8 +119,23 @@ fn scenarios(args: &Args) -> anyhow::Result<()> {
         grid.safety_factors.len(),
         grid.shard_counts.len()
     );
+    // Surface silent neutering of a shard-axis sweep: under the
+    // cooperative budget a requested shard count above the per-cell
+    // thread budget runs clamped, so _sh2/_sh4 twins would compare
+    // identical serialized runs without this note.
+    let (_, budget) = kimad::scenarios::thread_budget(grid.n_cells(), threads);
+    let per_cell = if cell_threads == 0 { budget } else { cell_threads };
+    if let Some(&max_sh) = grid.shard_counts.iter().max() {
+        if max_sh > per_cell {
+            eprintln!(
+                "note: shard counts up to {max_sh} will be clamped to the per-cell thread \
+                 budget of {per_cell}; pass --cell-threads {max_sh} (or fewer --threads) to \
+                 let the shard axis measure real parallelism"
+            );
+        }
+    }
     let t0 = std::time::Instant::now();
-    let summaries = kimad::scenarios::run_matrix(&grid, threads)?;
+    let summaries = kimad::scenarios::run_matrix_with(&grid, threads, cell_threads)?;
     let wall = t0.elapsed().as_secs_f64();
     kimad::scenarios::write_summaries(&out_dir, &grid, &summaries)?;
     print!("{}", kimad::scenarios::render_table(&summaries));

@@ -74,6 +74,19 @@ impl Transfer {
 }
 
 /// The simulated network: M asymmetric links + broadcast congestion.
+///
+/// # The α asymmetry
+///
+/// `alpha` scales the **downlink only** — deliberately, and in every
+/// bandwidth view this module exposes ([`true_bps`](Self::true_bps),
+/// [`window_bps`](Self::window_bps), [`transfer`](Self::transfer)
+/// agree, so a monitor fed from any of them sees one consistent
+/// world). §3.1 defines α as the *broadcast congestion* coefficient:
+/// the server fans one model message out to all M workers at once, so
+/// each downlink sees a 1/α share of its nominal rate. Uploads are
+/// independent unicast flows from M distinct endpoints — there is no
+/// shared broadcast bottleneck on the way up, so `Direction::Up` is
+/// never divided by α.
 pub struct NetSim {
     links: Vec<Link>,
     /// Broadcast congestion coefficient `alpha` (§3.1): downlink time is
@@ -107,7 +120,10 @@ impl NetSim {
     }
 
     /// Trailing-window average bandwidth ending at `t` — what a
-    /// NIC-counter monitor actually reports (feeds the monitors).
+    /// NIC-counter monitor actually reports (feeds the monitors). Like
+    /// [`true_bps`](Self::true_bps) and [`transfer`](Self::transfer),
+    /// the broadcast congestion α divides the downlink only (see the
+    /// type docs for why the asymmetry is correct).
     pub fn window_bps(&self, worker: usize, dir: Direction, t: f64, window: f64) -> f64 {
         let t0 = (t - window).max(0.0);
         let span = (t - t0).max(1e-9);
@@ -174,6 +190,25 @@ mod tests {
         let up = sim.transfer(0, Direction::Up, 0.0, 1000.0);
         assert!((up.seconds - 10.0).abs() < 1e-9); // unchanged
         assert!((sim.true_bps(0, Direction::Down, 0.0) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_bps_divides_downlink_by_alpha_only() {
+        // α is broadcast congestion (§3.1): the shared fan-out divides
+        // every downlink's share, while uploads are independent unicast
+        // flows — so the windowed monitor view must scale Down and
+        // leave Up untouched, consistently with true_bps and transfer.
+        let sim = sim2().with_alpha(2.0);
+        // Constant 100 bps uplink: trailing mean unaffected by α.
+        assert!((sim.window_bps(0, Direction::Up, 10.0, 5.0) - 100.0).abs() < 1e-9);
+        assert!((sim.true_bps(0, Direction::Up, 10.0) - 100.0).abs() < 1e-9);
+        // Constant 200 bps downlink: both views report 200 / α = 100.
+        assert!((sim.window_bps(0, Direction::Down, 10.0, 5.0) - 100.0).abs() < 1e-9);
+        assert!((sim.true_bps(0, Direction::Down, 10.0) - 100.0).abs() < 1e-9);
+        // α = 1 (the paper's §4.2 setting) is the identity on both.
+        let plain = sim2();
+        assert!((plain.window_bps(0, Direction::Up, 10.0, 5.0) - 100.0).abs() < 1e-9);
+        assert!((plain.window_bps(0, Direction::Down, 10.0, 5.0) - 200.0).abs() < 1e-9);
     }
 
     #[test]

@@ -73,6 +73,7 @@ pub fn base_config(
         budget_safety: 0.8,
         threads: 0,
         shards: 0,
+        thread_cap: 0,
         mode: crate::config::ExecModeSpec::Sync,
         compute: crate::coordinator::ComputeModel::Constant,
         seed: 21,

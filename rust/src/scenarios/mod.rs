@@ -7,11 +7,24 @@
 //! imagine" (ROADMAP) the way Accordion and the gradient-compression
 //! utility study sweep regimes: a grid is declared (in code or as a
 //! JSON file), expanded deterministically, and each cell runs a full
-//! [`crate::driver::run_experiment`] on a work-stealing thread pool.
-//! Cells pin their inner simulation to one thread
-//! (`ExperimentConfig::threads = 1`) so the grid level owns all the
-//! parallelism; per-cell results are bit-reproducible regardless of
-//! pool size.
+//! experiment on a work-stealing thread pool. Per-cell results are
+//! bit-reproducible regardless of pool size.
+//!
+//! Two scaling mechanisms keep big grids honest (PR 4):
+//!
+//! * **Cell families** — cells sharing {uplink trace × workload × M}
+//!   reuse one [`WarmQuadratic`]: the trace statistics, the
+//!   `Quadratic` instance and the layer layout are built once per
+//!   family, not once per cell. Warm and cold runs are bit-identical
+//!   (the warm path *is* the cold path minus the rebuilds — asserted
+//!   in tests).
+//! * **Cooperative thread budget** — [`thread_budget`] splits the
+//!   machine between the matrix pool and the cells
+//!   (`workers × per-cell ≤ available_parallelism`), and every cell
+//!   config is clamped to its slice
+//!   (`ExperimentConfig::clamp_parallelism`) before it runs —
+//!   replacing the old nested auto pools that could spawn N×N threads
+//!   on an N-core box.
 //!
 //! Outputs land under an output directory as `<cell-id>.json` plus an
 //! `index.json` manifest — the shape `reports/` consumes.
@@ -27,7 +40,7 @@ use crate::config::{
     ExperimentConfig, OptimizerSpec, WorkloadSpec,
 };
 use crate::coordinator::ComputeModel;
-use crate::driver::run_experiment;
+use crate::driver::{ExperimentResult, WarmQuadratic};
 use crate::kimad::{BudgetParams, CompressPolicy};
 use crate::util::json::Value;
 
@@ -263,9 +276,12 @@ impl ScenarioGrid {
                                     // parallelism; one thread per cell
                                     // keeps the pool honest. The shard
                                     // axis is the deliberate exception
-                                    // (results are shard-invariant).
+                                    // (results are shard-invariant);
+                                    // run_matrix clamps it to the
+                                    // cooperative per-cell budget.
                                     threads: 1,
                                     shards,
+                                    thread_cap: 0,
                                     mode: mode.spec,
                                     compute: self.base.compute.clone(),
                                     seed: self.base.seed,
@@ -520,12 +536,12 @@ impl CellSummary {
     }
 }
 
-/// Execute one expanded cell to completion.
-fn run_cell(cell: &ScenarioCell) -> anyhow::Result<CellSummary> {
-    let t0 = Instant::now();
-    let res = run_experiment(&cell.cfg, None, 0)
-        .map_err(|e| anyhow::anyhow!("cell '{}': {e}", cell.id))?;
-    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+/// Roll one executed cell's records up into its summary row.
+fn summarize(
+    cell: &ScenarioCell,
+    res: &ExperimentResult,
+    wall_ms: f64,
+) -> anyhow::Result<CellSummary> {
     let last = res
         .records
         .last()
@@ -565,19 +581,91 @@ fn run_cell(cell: &ScenarioCell) -> anyhow::Result<CellSummary> {
     })
 }
 
-/// Run every cell of the grid on a pool of `threads` workers (0 =
-/// available parallelism), returning summaries in expansion order.
-pub fn run_matrix(grid: &ScenarioGrid, threads: usize) -> anyhow::Result<Vec<CellSummary>> {
-    grid.validate()?;
-    let cells = grid.expand();
-    let auto = std::thread::available_parallelism()
+/// Execute one expanded cell to completion from its family's warm
+/// state, under the cooperative per-cell thread budget.
+fn run_cell(
+    cell: &ScenarioCell,
+    warm: &WarmQuadratic,
+    cell_threads: usize,
+) -> anyhow::Result<CellSummary> {
+    let t0 = Instant::now();
+    let mut cfg = cell.cfg.clone();
+    cfg.clamp_parallelism(cell_threads);
+    let res = warm
+        .run(&cfg)
+        .map_err(|e| anyhow::anyhow!("cell '{}': {e}", cell.id))?;
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    summarize(cell, &res, wall_ms)
+}
+
+/// The cooperative thread budget: how many matrix workers to run and
+/// how many simulation threads each cell may use, so that
+/// `workers × per-cell ≤ available_parallelism` (the pre-PR-4 runner
+/// let every cell's auto knobs grab all cores under a full worker
+/// pool — up to N×N threads on an N-core box). A caller explicitly
+/// oversubscribing the pool (`threads > cores`) gets serial cells.
+pub fn thread_budget(n_cells: usize, threads: usize) -> (usize, usize) {
+    let avail = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
-    let n_threads = if threads == 0 { auto } else { threads }.clamp(1, cells.len().max(1));
+    let workers = if threads == 0 { avail } else { threads }.clamp(1, n_cells.max(1));
+    (workers, (avail / workers).max(1))
+}
+
+/// Run every cell of the grid on a pool of `threads` workers (0 =
+/// available parallelism), returning summaries in expansion order.
+/// Cells run with the cooperative per-cell budget from
+/// [`thread_budget`]; use [`run_matrix_with`] to override it.
+pub fn run_matrix(grid: &ScenarioGrid, threads: usize) -> anyhow::Result<Vec<CellSummary>> {
+    run_matrix_with(grid, threads, 0)
+}
+
+/// [`run_matrix`] with an explicit per-cell thread budget
+/// (`cell_threads`; 0 = the cooperative default
+/// `available_parallelism / workers`). Raising it deliberately
+/// oversubscribes — useful when sweeping the shard axis for wall-clock
+/// scaling on an otherwise idle box.
+///
+/// Cells are grouped into *families* (same uplink trace × workload ×
+/// M): the bandwidth trace statistics, the `Quadratic` instance and
+/// the layer layout are built once per family
+/// ([`WarmQuadratic`]) and every member cell starts from that warm
+/// state — bit-identical to a cold build, since the warm path is the
+/// cold path minus the rebuilds.
+pub fn run_matrix_with(
+    grid: &ScenarioGrid,
+    threads: usize,
+    cell_threads: usize,
+) -> anyhow::Result<Vec<CellSummary>> {
+    grid.validate()?;
+    let cells = grid.expand();
+    let (n_threads, budget) = thread_budget(cells.len(), threads);
+    let per_cell = if cell_threads == 0 { budget } else { cell_threads };
+
+    // Family prep, serial in expansion order (deterministic and cheap
+    // relative to the sweep: one trace integration + one workload
+    // build per family instead of per cell).
+    let mut family_keys: Vec<(&str, usize)> = Vec::new();
+    let mut families: Vec<WarmQuadratic> = Vec::new();
+    let mut cell_family = Vec::with_capacity(cells.len());
+    for cell in &cells {
+        let key = (cell.trace.as_str(), cell.m);
+        let fi = match family_keys.iter().position(|k| *k == key) {
+            Some(i) => i,
+            None => {
+                family_keys.push(key);
+                families.push(WarmQuadratic::prepare(&cell.cfg)?);
+                family_keys.len() - 1
+            }
+        };
+        cell_family.push(fi);
+    }
 
     type CellSlot = Mutex<Option<anyhow::Result<CellSummary>>>;
     let next = AtomicUsize::new(0);
     let slots: Vec<CellSlot> = (0..cells.len()).map(|_| Mutex::new(None)).collect();
+    let families = &families;
+    let cell_family = &cell_family;
     std::thread::scope(|s| {
         for _ in 0..n_threads {
             s.spawn(|| loop {
@@ -585,7 +673,7 @@ pub fn run_matrix(grid: &ScenarioGrid, threads: usize) -> anyhow::Result<Vec<Cel
                 if i >= cells.len() {
                     break;
                 }
-                let out = run_cell(&cells[i]);
+                let out = run_cell(&cells[i], &families[cell_family[i]], per_cell);
                 *slots[i].lock().expect("cell slot poisoned") = Some(out);
             });
         }
@@ -788,6 +876,100 @@ mod tests {
             assert_eq!(s1.total_up_bits, s3.total_up_bits, "{base_id}");
             assert_eq!(s1.virtual_time_s, s3.virtual_time_s, "{base_id}");
         }
+    }
+
+    #[test]
+    fn warm_reuse_matches_cold_build_byte_identical() {
+        // The family path must be indistinguishable from running every
+        // cell cold through run_experiment — including the bytes of
+        // index.json (wall_ms lives only in per-cell files, which is
+        // why the summaries are compared field-wise instead).
+        let g = tiny_grid();
+        let warm = run_matrix(&g, 2).unwrap();
+        let cold: Vec<CellSummary> = g
+            .expand()
+            .iter()
+            .map(|cell| {
+                // The pre-family cold path: a fresh build per cell.
+                let res = crate::driver::run_experiment(&cell.cfg, None, 0).unwrap();
+                summarize(cell, &res, 0.0).unwrap()
+            })
+            .collect();
+        assert_eq!(warm.len(), cold.len());
+        for (w, c) in warm.iter().zip(&cold) {
+            // Every field except the wall-clock timing column must be
+            // bit-identical (CellSummary is PartialEq, so zeroing the
+            // one timing field compares the whole struct at once).
+            let mut w_cmp = w.clone();
+            w_cmp.wall_ms = 0.0;
+            assert_eq!(w_cmp, *c, "warm summary diverged from cold for {}", w.id);
+        }
+        let dir_w = std::env::temp_dir().join(format!("kimad-warm-{}", std::process::id()));
+        let dir_c = std::env::temp_dir().join(format!("kimad-cold-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir_w);
+        let _ = std::fs::remove_dir_all(&dir_c);
+        write_summaries(&dir_w, &g, &warm).unwrap();
+        write_summaries(&dir_c, &g, &cold).unwrap();
+        let a = std::fs::read(dir_w.join("index.json")).unwrap();
+        let b = std::fs::read(dir_c.join("index.json")).unwrap();
+        assert_eq!(a, b, "warm index.json must be byte-identical to cold");
+        let _ = std::fs::remove_dir_all(&dir_w);
+        let _ = std::fs::remove_dir_all(&dir_c);
+    }
+
+    #[test]
+    fn thread_budget_never_oversubscribes() {
+        let avail = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        for threads in [0usize, 1, 2, avail, avail + 3] {
+            for n_cells in [1usize, 5, 100] {
+                let (workers, per_cell) = thread_budget(n_cells, threads);
+                assert!(workers >= 1 && per_cell >= 1);
+                assert!(workers <= n_cells.max(1));
+                // The rule: never more than the machine — unless the
+                // caller explicitly oversubscribed the pool itself, in
+                // which case cells run serial (per_cell == 1).
+                if workers <= avail {
+                    assert!(
+                        workers * per_cell <= avail,
+                        "threads={threads} n_cells={n_cells}: {workers}x{per_cell} > {avail}"
+                    );
+                } else {
+                    assert_eq!(per_cell, 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cell_configs_are_clamped_to_the_budget() {
+        // Regression (PR-4 headline bugfix): a grid sweeping auto or
+        // huge shard counts must not hand cells unbounded parallelism —
+        // every cfg entering the simulation is clamped to the per-cell
+        // budget.
+        let mut g = tiny_grid();
+        g.shard_counts = vec![0, 64];
+        g.validate().unwrap();
+        let (workers, per_cell) = thread_budget(g.n_cells(), 0);
+        for cell in g.expand() {
+            let mut cfg = cell.cfg.clone();
+            cfg.clamp_parallelism(per_cell);
+            assert!(cfg.threads <= per_cell, "{}", cell.id);
+            assert!(cfg.shards <= per_cell, "{}: explicit shards clamped", cell.id);
+            assert_eq!(cfg.thread_cap, per_cell, "{}: auto knobs capped", cell.id);
+        }
+        // And the grid still runs correctly under the clamp (the shard
+        // axis stays bit-invariant).
+        g.base.rounds = 6;
+        g.policies.truncate(1);
+        g.modes.truncate(1);
+        g.worker_counts = vec![2];
+        let summaries = run_matrix(&g, workers).unwrap();
+        let s0 = summaries.iter().find(|s| s.shards == 0).unwrap();
+        let s64 = summaries.iter().find(|s| s.shards == 64).unwrap();
+        assert_eq!(s0.final_f_x, s64.final_f_x);
+        assert_eq!(s0.total_up_bits, s64.total_up_bits);
     }
 
     #[test]

@@ -25,6 +25,7 @@ fn quad_cfg(m: usize, policy: CompressPolicy, rounds: u64) -> ExperimentConfig {
         budget_safety: 1.0,
         threads: 0,
         shards: 0,
+        thread_cap: 0,
         mode: kimad::config::ExecModeSpec::Sync,
         compute: kimad::coordinator::ComputeModel::Constant,
         seed: 21,

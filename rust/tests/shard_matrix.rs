@@ -1,12 +1,14 @@
 //! Shard-count matrix: the sharded server path's contract.
 //!
 //! Sharding the server's aggregation path (mirror delivery, Σ w_m û_m,
-//! the optimizer step) is a pure parallelization — for every execution
-//! mode, every shard count and every thread count the records must be
-//! **bit-identical**. Sync additionally stays bit-identical to the
-//! frozen pre-refactor loop (`Simulation::round_reference`), which is
-//! asserted against forced shard counts here (the unforced golden
-//! lives in `mode_matrix.rs`, untouched).
+//! the optimizer step) and — since PR 4 — the broadcast compression
+//! phase (diff x − x̂, `A^compress` selection, EF21 compress-advance)
+//! is a pure parallelization: for every execution mode, every shard
+//! count and every thread count the records must be **bit-identical**.
+//! Sync additionally stays bit-identical to the frozen pre-refactor
+//! loop (`Simulation::round_reference`), which is asserted against
+//! forced shard counts here (the unforced golden lives in
+//! `mode_matrix.rs`, untouched).
 
 use kimad::bandwidth::{ConstantTrace, SinSquaredTrace};
 use kimad::coordinator::{
@@ -226,6 +228,51 @@ fn async_per_worker_channels_converge() {
             .map(|(&a, &b)| ((a - b) as f64).powi(2))
             .sum();
         assert!(dist.is_finite());
+    }
+}
+
+#[test]
+fn broadcast_shard_matrix_bit_identical_across_modes_and_policies() {
+    // The PR-4 broadcast contract: with forced shard counts the
+    // broadcast phase itself runs the parallel fan-out (diff fill,
+    // curve builds, compress-advance) in every execution mode — the
+    // records must stay bit-identical to the fully serialized run for
+    // every down-policy, including the curve-driven Kimad+ knapsack
+    // and the whole-model TopK global pass.
+    let straggler = ComputeModel::Profile { factors: vec![1.0, 1.0, 2.0, 5.0] };
+    for policy in [
+        CompressPolicy::FixedRatio { ratio: 0.4 },
+        CompressPolicy::KimadUniform,
+        CompressPolicy::KimadPlus { discretization: 200, ratios: vec![] },
+        CompressPolicy::WholeModelTopK,
+    ] {
+        for mode in [
+            ExecMode::Sync,
+            ExecMode::SemiSync { quorum: 2 },
+            ExecMode::Async { damping: 0.8 },
+        ] {
+            let mut base = build(4, wave_net(4), policy.clone(), mode, straggler.clone(), 1, 1);
+            let want = base.run(30).unwrap();
+            for shards in [2usize, 4] {
+                for threads in [1usize, 3] {
+                    let mut s = build(
+                        4,
+                        wave_net(4),
+                        policy.clone(),
+                        mode,
+                        straggler.clone(),
+                        threads,
+                        shards,
+                    );
+                    let got = s.run(30).unwrap();
+                    assert_eq!(
+                        got, want,
+                        "{policy:?} {mode:?} shards={shards} threads={threads}: \
+                         sharded broadcast diverged"
+                    );
+                }
+            }
+        }
     }
 }
 
