@@ -6,6 +6,7 @@
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use kimad::compress::{Compressed, Compressor, TopK};
 use kimad::coordinator::{shard, QuadraticSource, ShardPlan, SimConfig, Simulation, WorkerState};
@@ -328,8 +329,8 @@ fn main() {
         (0..4)
             .map(|_| {
                 Link::new(
-                    Box::new(kimad::bandwidth::SinSquaredTrace::new(6400.0, 0.1, 640.0)),
-                    Box::new(kimad::bandwidth::ConstantTrace::new(1e8)),
+                    Arc::new(kimad::bandwidth::SinSquaredTrace::new(6400.0, 0.1, 640.0)),
+                    Arc::new(kimad::bandwidth::ConstantTrace::new(1e8)),
                 )
             })
             .collect(),
@@ -363,8 +364,8 @@ fn main() {
         compute: kimad::coordinator::ComputeModel::Constant,
     };
     let net2 = NetSim::new(vec![Link::new(
-        Box::new(kimad::bandwidth::ConstantTrace::new(6400.0)),
-        Box::new(kimad::bandwidth::ConstantTrace::new(1e8)),
+        Arc::new(kimad::bandwidth::ConstantTrace::new(6400.0)),
+        Arc::new(kimad::bandwidth::ConstantTrace::new(1e8)),
     )]);
     let mut sim2 = Simulation::new(cfg2, net2, QuadraticSource::new(q2, 0.1), vec![1.0; 1000]);
     bench("simulator round (Kimad+ DP, d=1000)", 10, || {

@@ -1,13 +1,14 @@
 //! End-to-end deep-model training — the full three-layer stack.
 //!
 //! Loads the AOT-compiled JAX transformer (L2, with Pallas FFN kernels
-//! at L1) through PJRT, then trains it for a few hundred rounds with
-//! M=4 workers under the paper's §4.2 bandwidth regime, with Kimad's
-//! bandwidth-adaptive compression on both directions. Logs the loss
-//! curve and held-out accuracy — the run recorded in EXPERIMENTS.md
-//! §End-to-end.
+//! at L1) through PJRT — or, when the PJRT backend is stubbed, runs
+//! the native rust transformer (`model::native`) — then trains it for
+//! a few hundred rounds with M=4 workers under the paper's §4.2
+//! bandwidth regime, with Kimad's bandwidth-adaptive compression on
+//! both directions. Logs the loss curve and held-out accuracy — the
+//! run recorded in EXPERIMENTS.md §End-to-end.
 //!
-//!     make artifacts   # once
+//!     make artifacts   # once (or: kimad gen-artifacts --presets e2e)
 //!     cargo run --release --example deep_train [--preset e2e] [--rounds 300]
 
 use kimad::driver::run_experiment;

@@ -95,6 +95,23 @@ impl<T: BandwidthTrace + ?Sized> BandwidthTrace for Box<T> {
     }
 }
 
+/// Shared-handle form: traces are immutable, so an `Arc` clone is
+/// indistinguishable from the original (what lets a scenario cell
+/// family build each trace once — see `driver::WarmFamily`).
+///
+/// Deliberately forwards **only `at`**, exactly like the `Box` impl
+/// above: a handle held in a [`netsim::Link`](crate::netsim::Link) must
+/// keep running the generic `integrate`/`transfer_time` defaults, as
+/// the former `Box`-typed links did, so swapping `Box` for `Arc` is
+/// bit-identical by construction (a forwarded `integrate` would switch
+/// e.g. [`SinSquaredTrace`] links from the trapezoid to its closed
+/// form — a numeric, if tiny, behavior change).
+impl<T: BandwidthTrace + ?Sized> BandwidthTrace for std::sync::Arc<T> {
+    fn at(&self, t: f64) -> f64 {
+        (**self).at(t)
+    }
+}
+
 /// Convert megabits/s to bits/s (the paper quotes Mbps).
 pub const fn mbps(v: f64) -> f64 {
     v * 1_000_000.0

@@ -1,4 +1,13 @@
 //! Synthetic bandwidth traces (deterministic, seeded).
+//!
+//! Built traces are immutable (`at`/`integrate` take `&self`), so
+//! [`TraceSpec::build`] hands out `Arc<dyn BandwidthTrace>` handles: a
+//! scenario-matrix *cell family* builds each trace once and every
+//! member cell's [`Link`](crate::netsim::Link) clones the handle —
+//! bit-identical to rebuilding from the spec, since construction is a
+//! deterministic function of the spec alone.
+
+use std::sync::Arc;
 
 use crate::util::json::Value;
 use crate::util::rng::Rng;
@@ -266,17 +275,20 @@ pub enum TraceSpec {
 }
 
 impl TraceSpec {
-    pub fn build(&self) -> Box<dyn BandwidthTrace> {
+    /// Build the trace behind a shared, immutable handle. Cloning the
+    /// `Arc` is how a cell family shares one built trace across member
+    /// cells; a fresh `build` of the same spec is bit-identical.
+    pub fn build(&self) -> Arc<dyn BandwidthTrace> {
         match self.clone() {
-            TraceSpec::Constant { bps } => Box::new(ConstantTrace::new(bps)),
+            TraceSpec::Constant { bps } => Arc::new(ConstantTrace::new(bps)),
             TraceSpec::SinSquared { eta, theta, delta, phase } => {
-                Box::new(SinSquaredTrace::new(eta, theta, delta).with_phase(phase))
+                Arc::new(SinSquaredTrace::new(eta, theta, delta).with_phase(phase))
             }
             TraceSpec::SquareWave { low, high, period } => {
-                Box::new(SquareWaveTrace::new(low, high, period))
+                Arc::new(SquareWaveTrace::new(low, high, period))
             }
             TraceSpec::OuNoise { mu, kappa, sigma, seed, horizon } => {
-                Box::new(OuNoiseTrace::new(mu, kappa, sigma, seed, horizon))
+                Arc::new(OuNoiseTrace::new(mu, kappa, sigma, seed, horizon))
             }
             TraceSpec::NoisySinSquared {
                 eta,
@@ -286,15 +298,17 @@ impl TraceSpec {
                 noise_sigma,
                 seed,
                 horizon,
-            } => Box::new(CompositeTrace::new(
+            } => Arc::new(CompositeTrace::new(
                 Box::new(SinSquaredTrace::new(eta, theta, delta).with_phase(phase)),
                 Box::new(OuNoiseTrace::new(1.0, 2.0, noise_sigma, seed, horizon)),
             )),
         }
     }
 
-    /// Per-worker variants: same pattern, different seed/phase (§4.2).
-    pub fn per_worker(&self, m: usize) -> Box<dyn BandwidthTrace> {
+    /// The spec worker `m` runs: same pattern, different seed/phase
+    /// (§4.2). Exposed separately from [`per_worker`](Self::per_worker)
+    /// so the seed-derivation rule itself is unit-testable.
+    pub fn per_worker_spec(&self, m: usize) -> TraceSpec {
         let mut spec = self.clone();
         match &mut spec {
             TraceSpec::OuNoise { seed, .. } => *seed = seed.wrapping_add(m as u64 * 7919),
@@ -304,7 +318,12 @@ impl TraceSpec {
             TraceSpec::SinSquared { phase, .. } => *phase += 0.13 * m as f64,
             _ => {}
         }
-        spec.build()
+        spec
+    }
+
+    /// Per-worker variants: same pattern, different seed/phase (§4.2).
+    pub fn per_worker(&self, m: usize) -> Arc<dyn BandwidthTrace> {
+        self.per_worker_spec(m).build()
     }
 
     // -- JSON codec (config files) --------------------------------------
@@ -392,6 +411,9 @@ impl TraceSpec {
 }
 
 /// Convenience: build the M per-worker (uplink, downlink) trace pairs.
+///
+/// The handles are `Arc`-shared: a cell family builds them once and
+/// every member cell's netsim clones them (see `driver::WarmFamily`).
 pub struct PerWorkerTraces;
 
 impl PerWorkerTraces {
@@ -399,7 +421,7 @@ impl PerWorkerTraces {
         up: &TraceSpec,
         down: &TraceSpec,
         m: usize,
-    ) -> Vec<(Box<dyn BandwidthTrace>, Box<dyn BandwidthTrace>)> {
+    ) -> Vec<(Arc<dyn BandwidthTrace>, Arc<dyn BandwidthTrace>)> {
         (0..m)
             .map(|i| (up.per_worker(i), down.per_worker(i + 104_729)))
             .collect()
@@ -505,5 +527,62 @@ mod tests {
         let w0 = spec.per_worker(0);
         let w1 = spec.per_worker(1);
         assert!((0..50).any(|i| w0.at(i as f64 * 0.3) != w1.at(i as f64 * 0.3)));
+    }
+
+    #[test]
+    fn per_worker_seed_derivation_deterministic_and_distinct() {
+        // The §4.2 "same pattern, different noise" rule must be a pure
+        // function of (spec, worker): building worker m twice gives the
+        // same spec (and therefore a bit-identical trace), while
+        // distinct workers get distinct seeds/phases.
+        let specs = [
+            TraceSpec::OuNoise { mu: 50.0, kappa: 0.5, sigma: 10.0, seed: 9, horizon: 20.0 },
+            TraceSpec::NoisySinSquared {
+                eta: 300e6,
+                theta: 0.7,
+                delta: 30e6,
+                phase: 0.0,
+                noise_sigma: 0.1,
+                seed: 1,
+                horizon: 100.0,
+            },
+            TraceSpec::SinSquared { eta: 10.0, theta: 0.3, delta: 5.0, phase: 0.2 },
+        ];
+        for spec in specs {
+            for m in [0usize, 1, 7, 104_729] {
+                assert_eq!(spec.per_worker_spec(m), spec.per_worker_spec(m));
+                let a = spec.per_worker(m);
+                let b = spec.per_worker(m);
+                for i in 0..40 {
+                    let t = i as f64 * 0.25;
+                    assert_eq!(a.at(t), b.at(t), "worker {m} not deterministic");
+                }
+            }
+            let mut variants: Vec<TraceSpec> =
+                (0..4).map(|m| spec.per_worker_spec(m)).collect();
+            let n = variants.len();
+            variants.dedup();
+            assert_eq!(variants.len(), n, "worker variants must be distinct");
+        }
+        // Constant traces have no per-worker noise: all workers equal.
+        let c = TraceSpec::Constant { bps: 100.0 };
+        assert_eq!(c.per_worker_spec(0), c.per_worker_spec(3));
+    }
+
+    #[test]
+    fn shared_arc_handle_is_bit_identical_to_fresh_build() {
+        // The Arc-sharing contract: one built trace queried through two
+        // clones of the handle agrees with an independent rebuild from
+        // the same spec, sample for sample.
+        let spec = TraceSpec::OuNoise { mu: 80.0, kappa: 1.0, sigma: 8.0, seed: 4, horizon: 30.0 };
+        let shared = spec.build();
+        let clone = Arc::clone(&shared);
+        let fresh = spec.build();
+        assert!(Arc::ptr_eq(&shared, &clone));
+        for i in 0..100 {
+            let t = i as f64 * 0.21;
+            assert_eq!(shared.at(t), fresh.at(t));
+            assert_eq!(clone.integrate(0.0, t), fresh.integrate(0.0, t));
+        }
     }
 }

@@ -175,6 +175,122 @@ pub enum WorkloadSpec {
     },
 }
 
+impl WorkloadSpec {
+    /// Parse a CLI token:
+    ///
+    /// * `quad` or `quad:d=30,layers=3,tcomp=0.1` — the §4.1 quadratic
+    ///   (missing keys take the defaults shown);
+    /// * `deep:<preset>` or `deep:tiny,sigma=0.3,tcomp=0` — a deep
+    ///   model from artifacts/ (`tcomp<=0` = the §4.2 convention
+    ///   ModelSize / AverageBandwidth).
+    ///
+    /// Like `ExecModeSpec::parse`, bad tokens fail at the CLI instead
+    /// of mid-grid.
+    pub fn parse(token: &str) -> anyhow::Result<Self> {
+        let (name, rest) = match token.split_once(':') {
+            Some((n, r)) => (n, r),
+            None => (token, ""),
+        };
+        let mut pairs: Vec<(&str, &str)> = Vec::new();
+        let mut head = "";
+        for (i, part) in rest.split(',').enumerate() {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            match part.split_once('=') {
+                Some((k, v)) => pairs.push((k.trim(), v.trim())),
+                None if i == 0 => head = part,
+                None => anyhow::bail!("workload parameter '{part}' is not key=value"),
+            }
+        }
+        let lookup = |key: &str| pairs.iter().find(|(k, _)| *k == key).map(|(_, v)| *v);
+        let num = |key: &str, default: f64| -> anyhow::Result<f64> {
+            match lookup(key) {
+                None => Ok(default),
+                Some(v) => {
+                    let n: f64 =
+                        v.parse().map_err(|e| anyhow::anyhow!("workload {key}='{v}': {e}"))?;
+                    anyhow::ensure!(
+                        n.is_finite() && n >= 0.0,
+                        "workload {key} must be finite and >= 0, got {v}"
+                    );
+                    Ok(n)
+                }
+            }
+        };
+        for (k, _) in &pairs {
+            anyhow::ensure!(
+                ["d", "layers", "tcomp", "sigma"].contains(k),
+                "unknown workload parameter '{k}' (d|layers|tcomp|sigma)"
+            );
+        }
+        let int = |key: &str, default: usize| -> anyhow::Result<usize> {
+            match lookup(key) {
+                None => Ok(default),
+                Some(v) => {
+                    let n: usize = v
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("workload {key}='{v}': {e}"))?;
+                    anyhow::ensure!(n >= 1, "workload {key} must be >= 1, got {v}");
+                    Ok(n)
+                }
+            }
+        };
+        Ok(match name {
+            "quad" => {
+                anyhow::ensure!(head.is_empty(), "quad takes key=value parameters, not '{head}'");
+                anyhow::ensure!(lookup("sigma").is_none(), "sigma is a deep-model parameter");
+                WorkloadSpec::Quadratic {
+                    d: int("d", 30)?,
+                    n_layers: int("layers", 3)?,
+                    t_comp: num("tcomp", 0.1)?,
+                }
+            }
+            "deep" => {
+                anyhow::ensure!(
+                    !head.is_empty(),
+                    "deep needs a preset: deep:<tiny|small|e2e|big>"
+                );
+                anyhow::ensure!(lookup("d").is_none(), "d is a quadratic parameter");
+                anyhow::ensure!(lookup("layers").is_none(), "layers is a quadratic parameter");
+                WorkloadSpec::DeepModel {
+                    preset: head.to_string(),
+                    sigma: num("sigma", 0.3)? as f32,
+                    t_comp: num("tcomp", 0.0)?,
+                }
+            }
+            other => anyhow::bail!("unknown workload '{other}' (quad|deep)"),
+        })
+    }
+
+    /// Short cell-id/table token: `quad30l3`, `deep-tiny`. Non-default
+    /// `tcomp`/`sigma` values are embedded (`quad30l3-tc0.5`,
+    /// `deep-tiny-sg0.5`) so one grid can sweep them — mirroring how
+    /// parameterized modes name themselves (`semisync0.75`).
+    pub fn short_name(&self) -> String {
+        match self {
+            WorkloadSpec::Quadratic { d, n_layers, t_comp } => {
+                let mut s = format!("quad{d}l{n_layers}");
+                if *t_comp != 0.1 {
+                    s.push_str(&format!("-tc{t_comp}"));
+                }
+                s
+            }
+            WorkloadSpec::DeepModel { preset, sigma, t_comp } => {
+                let mut s = format!("deep-{preset}");
+                if *sigma != 0.3 {
+                    s.push_str(&format!("-sg{sigma}"));
+                }
+                if *t_comp > 0.0 {
+                    s.push_str(&format!("-tc{t_comp}"));
+                }
+                s
+            }
+        }
+    }
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct OptimizerSpec {
     pub gamma: f64,
@@ -303,7 +419,8 @@ pub fn policy_from_json(v: &Value) -> anyhow::Result<CompressPolicy> {
     })
 }
 
-fn workload_to_json(w: &WorkloadSpec) -> Value {
+/// JSON codec for a [`WorkloadSpec`] (shared with `scenarios`).
+pub fn workload_to_json(w: &WorkloadSpec) -> Value {
     match w {
         WorkloadSpec::Quadratic { d, n_layers, t_comp } => Value::obj(vec![
             ("kind", Value::str("quadratic")),
@@ -320,7 +437,8 @@ fn workload_to_json(w: &WorkloadSpec) -> Value {
     }
 }
 
-fn workload_from_json(v: &Value) -> anyhow::Result<WorkloadSpec> {
+/// Inverse of [`workload_to_json`].
+pub fn workload_from_json(v: &Value) -> anyhow::Result<WorkloadSpec> {
     Ok(match v.get("kind")?.as_str()? {
         "quadratic" => WorkloadSpec::Quadratic {
             d: v.get("d")?.as_usize()?,
@@ -633,6 +751,63 @@ mod tests {
         cfg.shards = 2;
         cfg.clamp_parallelism(0);
         assert_eq!((cfg.threads, cfg.shards, cfg.thread_cap), (1, 1, 1));
+    }
+
+    #[test]
+    fn workload_spec_parses_cli_tokens() {
+        assert_eq!(
+            WorkloadSpec::parse("quad").unwrap(),
+            WorkloadSpec::Quadratic { d: 30, n_layers: 3, t_comp: 0.1 }
+        );
+        assert_eq!(
+            WorkloadSpec::parse("quad:d=64,layers=6,tcomp=0.5").unwrap(),
+            WorkloadSpec::Quadratic { d: 64, n_layers: 6, t_comp: 0.5 }
+        );
+        assert_eq!(
+            WorkloadSpec::parse("deep:tiny").unwrap(),
+            WorkloadSpec::DeepModel { preset: "tiny".into(), sigma: 0.3, t_comp: 0.0 }
+        );
+        assert_eq!(
+            WorkloadSpec::parse("deep:e2e,sigma=0.5,tcomp=2").unwrap(),
+            WorkloadSpec::DeepModel { preset: "e2e".into(), sigma: 0.5, t_comp: 2.0 }
+        );
+        // Bad tokens fail at parse time, not mid-grid.
+        assert!(WorkloadSpec::parse("resnet").is_err());
+        assert!(WorkloadSpec::parse("deep").is_err());
+        assert!(WorkloadSpec::parse("quad:tiny").is_err());
+        assert!(WorkloadSpec::parse("quad:d=0").is_err());
+        assert!(WorkloadSpec::parse("quad:sigma=0.3").is_err());
+        assert!(WorkloadSpec::parse("deep:tiny,d=30").is_err());
+        assert!(WorkloadSpec::parse("deep:tiny,oops").is_err());
+        assert!(WorkloadSpec::parse("quad:d=zebra").is_err());
+        // Fractional dimensions are rejected, never silently truncated,
+        // and non-finite/negative parameters fail at the CLI too.
+        assert!(WorkloadSpec::parse("quad:d=2.7").is_err());
+        assert!(WorkloadSpec::parse("quad:layers=1.9").is_err());
+        assert!(WorkloadSpec::parse("quad:d=1e30").is_err());
+        assert!(WorkloadSpec::parse("quad:tcomp=nan").is_err());
+        assert!(WorkloadSpec::parse("quad:tcomp=-5").is_err());
+        assert!(WorkloadSpec::parse("deep:tiny,sigma=inf").is_err());
+    }
+
+    #[test]
+    fn workload_short_names() {
+        assert_eq!(WorkloadSpec::parse("quad").unwrap().short_name(), "quad30l3");
+        assert_eq!(WorkloadSpec::parse("deep:tiny").unwrap().short_name(), "deep-tiny");
+        // Non-default parameters are embedded, so sweeping them in one
+        // grid expands to distinct cell ids.
+        assert_eq!(
+            WorkloadSpec::parse("quad:tcomp=0.5").unwrap().short_name(),
+            "quad30l3-tc0.5"
+        );
+        assert_eq!(
+            WorkloadSpec::parse("deep:tiny,sigma=0.5,tcomp=2").unwrap().short_name(),
+            "deep-tiny-sg0.5-tc2"
+        );
+        assert_ne!(
+            WorkloadSpec::parse("deep:tiny,sigma=0.1").unwrap().short_name(),
+            WorkloadSpec::parse("deep:tiny,sigma=0.5").unwrap().short_name()
+        );
     }
 
     #[test]

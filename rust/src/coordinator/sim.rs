@@ -1104,6 +1104,8 @@ impl<S: GradientSource> Simulation<S> {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::Arc;
+
     use super::*;
     use crate::bandwidth::ConstantTrace;
     use crate::kimad::BudgetParams;
@@ -1116,8 +1118,8 @@ mod tests {
             (0..m)
                 .map(|_| {
                     Link::new(
-                        Box::new(ConstantTrace::new(bps)),
-                        Box::new(ConstantTrace::new(bps)),
+                        Arc::new(ConstantTrace::new(bps)),
+                        Arc::new(ConstantTrace::new(bps)),
                     )
                 })
                 .collect(),

@@ -1,15 +1,28 @@
 //! Experiment driver: turn an [`ExperimentConfig`] into a running
 //! simulation — shared by the CLI, the examples and every bench.
+//!
+//! The unit of reuse is the [`WarmFamily`]: everything immutable that a
+//! *cell family* of experiments shares (same workload × uplink trace ×
+//! downlink trace × M × prior) is built once — the per-worker bandwidth
+//! traces behind `Arc` handles, the workload instance (the `Quadratic`,
+//! or the opened `ArtifactStore` + layout + initial params for the deep
+//! model) and the trace-derived `prior_bps`/`T_comp` — and every member
+//! cell runs from that warm state. [`run_experiment`] itself just
+//! prepares a single-use family and runs it, so warm (reused) and cold
+//! (fresh) runs are bit-identical **by construction**: the warm path is
+//! the cold path minus the rebuilds.
 
-use crate::bandwidth::{BandwidthTrace, PerWorkerTraces};
+use std::sync::Arc;
+
+use crate::bandwidth::{BandwidthTrace, PerWorkerTraces, TraceSpec};
 use crate::config::{ExperimentConfig, WorkloadSpec};
-use crate::coordinator::{QuadraticSource, RoundRecord, SimConfig, Simulation};
+use crate::coordinator::{GradientSource, QuadraticSource, RoundRecord, SimConfig, Simulation};
 use crate::kimad::BudgetParams;
-use crate::model::Layer;
+use crate::model::{Layer, ModelLayout, NativeModelSource};
 use crate::netsim::{Link, NetSim};
 use crate::optim::{LayerwiseSgd, Schedule};
 use crate::quadratic::Quadratic;
-use crate::runtime::{ArtifactStore, EvalMetrics, PjrtModelSource, Runtime};
+use crate::runtime::{ArtifactStore, EvalMetrics, Executable, PjrtModelSource, Runtime};
 
 /// Everything an experiment produced.
 pub struct ExperimentResult {
@@ -36,7 +49,12 @@ pub fn trace_mean_bps(trace: &dyn BandwidthTrace, horizon: f64) -> f64 {
     trace.integrate(0.0, horizon) / horizon
 }
 
-/// Build the M-link netsim from the config's trace specs.
+/// The per-worker (uplink, downlink) trace handles one family shares.
+pub type SharedLinks = Vec<(Arc<dyn BandwidthTrace>, Arc<dyn BandwidthTrace>)>;
+
+/// Build the M-link netsim from the config's trace specs — the cold
+/// twin of [`WarmFamily::netsim`] (fresh builds instead of `Arc`
+/// clones; bit-identical, since trace construction is deterministic).
 pub fn build_netsim(cfg: &ExperimentConfig) -> NetSim {
     let pairs = PerWorkerTraces::build(&cfg.uplink, &cfg.downlink, cfg.m);
     NetSim::new(
@@ -46,14 +64,6 @@ pub fn build_netsim(cfg: &ExperimentConfig) -> NetSim {
             .collect(),
     )
     .with_alpha(cfg.alpha)
-}
-
-fn prior_bps(cfg: &ExperimentConfig) -> f64 {
-    if cfg.prior_bps > 0.0 {
-        cfg.prior_bps
-    } else {
-        trace_mean_bps(cfg.uplink.build().as_ref(), 120.0)
-    }
 }
 
 /// The synchronized round schedule implied by the budget: the paper's
@@ -90,82 +100,359 @@ fn sim_config(
     }
 }
 
-/// Pre-built state one *cell family* of quadratic experiments shares
-/// (same uplink trace × workload × M): the `Quadratic` instance, the
-/// layer layout and the cold-start bandwidth prior (a numerical trace
-/// integration). The scenario matrix prepares one of these per family
-/// and runs every member cell against it, instead of re-deriving all
-/// three per cell.
-///
-/// `run` is the *same* code path [`run_experiment`] takes for the
-/// quadratic workload — `run_experiment` delegates here with a
-/// just-prepared instance — so warm (reused) and cold (fresh) runs are
-/// bit-identical by construction.
-pub struct WarmQuadratic {
+/// The deep arm's gradient source: PJRT when this build carries the
+/// real backend, the native transformer otherwise. Either way the
+/// source is a pure function of (layout, params, batch), so a run is
+/// reproducible within its backend.
+pub enum DeepSource {
+    Pjrt(PjrtModelSource),
+    Native(NativeModelSource),
+}
+
+impl DeepSource {
+    /// Evaluate `params` on `n_batches` held-out batches.
+    pub fn evaluate(&mut self, params: &[f32], n_batches: usize) -> anyhow::Result<EvalMetrics> {
+        match self {
+            DeepSource::Pjrt(s) => s.evaluate(params, n_batches),
+            DeepSource::Native(s) => s.evaluate(params, n_batches),
+        }
+    }
+}
+
+impl GradientSource for DeepSource {
+    fn dim(&self) -> usize {
+        match self {
+            DeepSource::Pjrt(s) => s.dim(),
+            DeepSource::Native(s) => s.dim(),
+        }
+    }
+
+    fn update(
+        &mut self,
+        worker: usize,
+        step: u64,
+        x_hat: &[f32],
+        out: &mut [f32],
+    ) -> anyhow::Result<f64> {
+        match self {
+            DeepSource::Pjrt(s) => s.update(worker, step, x_hat, out),
+            DeepSource::Native(s) => s.update(worker, step, x_hat, out),
+        }
+    }
+
+    fn t_comp(&self) -> f64 {
+        match self {
+            DeepSource::Pjrt(s) => GradientSource::t_comp(s),
+            DeepSource::Native(s) => GradientSource::t_comp(s),
+        }
+    }
+}
+
+/// State every warm family shares regardless of workload: the identity
+/// fields the family was derived from, the `Arc`-built per-worker
+/// traces, and the cold-start bandwidth prior.
+struct FamilyBase {
     workload: WorkloadSpec,
-    uplink: crate::bandwidth::TraceSpec,
+    uplink: TraceSpec,
+    downlink: TraceSpec,
     m: usize,
+    /// The member configs' `prior_bps` field (<= 0 means derived).
     cfg_prior: f64,
-    q: Quadratic,
-    layout: crate::model::ModelLayout,
-    t_comp: f64,
+    links: SharedLinks,
     prior_bps: f64,
 }
 
-impl WarmQuadratic {
-    /// Build the family state from one member's config.
-    pub fn prepare(cfg: &ExperimentConfig) -> anyhow::Result<Self> {
-        let WorkloadSpec::Quadratic { d, n_layers, t_comp } = &cfg.workload else {
-            anyhow::bail!(
-                "warm-cell reuse covers the quadratic workload (deep models load artifacts)"
-            );
-        };
-        let q = Quadratic::paper_instance(*d);
-        let layout = q.layout(*n_layers);
-        Ok(Self {
-            workload: cfg.workload.clone(),
-            uplink: cfg.uplink.clone(),
-            m: cfg.m,
-            cfg_prior: cfg.prior_bps,
-            q,
-            layout,
-            t_comp: *t_comp,
-            prior_bps: prior_bps(cfg),
+/// Open the artifact directory a deep family loads from (`None` =
+/// `./artifacts` or `$KIMAD_ARTIFACTS`).
+pub fn open_artifact_store(artifacts: Option<&str>) -> anyhow::Result<ArtifactStore> {
+    match artifacts {
+        Some(dir) => ArtifactStore::open(dir),
+        None => ArtifactStore::open_default(),
+    }
+}
+
+/// Quadratic-workload family state: the §4.1 instance + layer layout.
+pub struct WarmQuadratic {
+    base: FamilyBase,
+    q: Quadratic,
+    layout: ModelLayout,
+    t_comp: f64,
+}
+
+/// Deep-model family state: the opened [`ArtifactStore`] (shareable
+/// across families — the scenario matrix opens each artifacts dir
+/// once), the CPU [`Runtime`] with its two **pre-compiled** HLO
+/// executables (when the PJRT backend is real and the set carries
+/// real HLO), the parsed layout, the shared initial parameters and
+/// the trace-derived `T_comp` — everything that made the pre-family
+/// deep arm expensive to run per cell.
+///
+/// # Thread-safety contract for real PJRT bindings
+///
+/// The scenario matrix shares families across scoped threads, so
+/// `WarmDeep` must be `Sync` — which in a vendored-`xla` build
+/// requires the binding's client/executable types to be `Send + Sync`
+/// **and** concurrent `Executable::run` on one compiled module to be
+/// safe. If the vendored bindings are `!Sync`, this fails to compile
+/// (loudly, at the `thread::scope` spawn) — do NOT paper over it with
+/// an `unsafe impl`; wrap executions in a mutex or fall back to
+/// per-cell compilation instead.
+pub struct WarmDeep {
+    base: FamilyBase,
+    store: Arc<ArtifactStore>,
+    /// Keep-alive for the PJRT client the compiled executables came
+    /// from; never read after `prepare` (underscore-named so the
+    /// stub build, whose executables carry no real client handle,
+    /// doesn't flag it as dead).
+    _rt: Option<Runtime>,
+    /// Compiled (train, eval) modules, shared by every member cell's
+    /// source — HLO compilation is the most expensive setup step.
+    exes: Option<(Arc<Executable>, Arc<Executable>)>,
+    layout: ModelLayout,
+    x0: Arc<Vec<f32>>,
+    sigma: f32,
+    t_comp: f64,
+}
+
+impl WarmDeep {
+    /// A fresh gradient source for one member cell. Sources are
+    /// consumed mutably by the simulation, so each cell gets its own;
+    /// the expensive shared parts — store open, layout parse, params
+    /// read, HLO compiles, trace builds — live in the family.
+    fn source(&self) -> anyhow::Result<DeepSource> {
+        Ok(match &self.exes {
+            Some((train, eval)) => DeepSource::Pjrt(PjrtModelSource::from_parts(
+                self.layout.clone(),
+                train.clone(),
+                eval.clone(),
+                self.sigma,
+                self.store.seed(),
+                self.t_comp,
+            )),
+            None => DeepSource::Native(NativeModelSource::new(
+                &self.layout,
+                self.sigma,
+                self.store.seed(),
+                self.t_comp,
+            )?),
         })
     }
+}
 
-    /// Is `cfg` a member of this family? (Everything the warm state
-    /// was derived from must match; policy, mode, safety, shards and
-    /// the downlink are free axes.)
+/// Pre-built state one *cell family* of experiments shares (same
+/// workload × uplink trace × downlink trace × M × prior): the workload
+/// instance, the layer layout, the `Arc`-shared per-worker bandwidth
+/// traces and the cold-start prior. The scenario matrix prepares one
+/// per family and runs every member cell against it instead of
+/// re-deriving everything per cell.
+///
+/// `run` is the *same* code path [`run_experiment`] takes —
+/// `run_experiment` delegates here with a just-prepared family — so
+/// warm (reused) and cold (fresh) runs are bit-identical by
+/// construction, for both workloads.
+pub enum WarmFamily {
+    Quadratic(WarmQuadratic),
+    Deep(WarmDeep),
+}
+
+impl WarmFamily {
+    /// Build the family state from one member's config. `artifacts` is
+    /// the deep-model artifact directory (`None` = `./artifacts` or
+    /// `$KIMAD_ARTIFACTS`; ignored for the quadratic).
+    pub fn prepare(cfg: &ExperimentConfig, artifacts: Option<&str>) -> anyhow::Result<Self> {
+        Self::prepare_with(cfg, artifacts, None)
+    }
+
+    /// [`Self::prepare`] with an optional pre-opened artifact store to
+    /// share across families: the scenario matrix opens each artifacts
+    /// directory once and hands every deep family the same handle
+    /// (whose internal params cache then reads each preset from disk
+    /// once). `None` opens from `artifacts` as `prepare` does.
+    pub fn prepare_with(
+        cfg: &ExperimentConfig,
+        artifacts: Option<&str>,
+        store: Option<Arc<ArtifactStore>>,
+    ) -> anyhow::Result<Self> {
+        // Build every trace once: the M per-worker link pairs, plus —
+        // only when something derives from it — one base uplink that
+        // both the cold-start prior and the §4.2 T_comp derivation
+        // read (the pre-family deep arm built it twice, once per
+        // derivation; configs with an explicit prior and T_comp skip
+        // the 120 s integration entirely).
+        let links = PerWorkerTraces::build(&cfg.uplink, &cfg.downlink, cfg.m);
+        let needs_mean = cfg.prior_bps <= 0.0
+            || matches!(&cfg.workload, WorkloadSpec::DeepModel { t_comp, .. } if *t_comp <= 0.0);
+        let mean_up = if needs_mean {
+            trace_mean_bps(cfg.uplink.build().as_ref(), 120.0)
+        } else {
+            f64::NAN // never read: both consumers take their explicit value
+        };
+        let prior_bps = if cfg.prior_bps > 0.0 { cfg.prior_bps } else { mean_up };
+        let base = FamilyBase {
+            workload: cfg.workload.clone(),
+            uplink: cfg.uplink.clone(),
+            downlink: cfg.downlink.clone(),
+            m: cfg.m,
+            cfg_prior: cfg.prior_bps,
+            links,
+            prior_bps,
+        };
+        match &cfg.workload {
+            WorkloadSpec::Quadratic { d, n_layers, t_comp } => {
+                let q = Quadratic::paper_instance(*d);
+                let layout = q.layout(*n_layers);
+                Ok(WarmFamily::Quadratic(WarmQuadratic { base, q, layout, t_comp: *t_comp }))
+            }
+            WorkloadSpec::DeepModel { preset, sigma, t_comp } => {
+                let store = match store {
+                    Some(s) => s,
+                    None => Arc::new(open_artifact_store(artifacts)?),
+                };
+                // PJRT needs both a real backend AND real lowered HLO;
+                // a `gen-artifacts` set (placeholder HLO) runs on the
+                // native transformer even in a PJRT-enabled build.
+                // Compilation happens here, once per family.
+                let rt = if Runtime::available() && store.has_real_hlo(preset)? {
+                    Some(Runtime::cpu()?)
+                } else {
+                    None
+                };
+                let exes = match &rt {
+                    Some(rt) => Some(PjrtModelSource::compile(rt, &store, preset)?),
+                    None => None,
+                };
+                let layout = store.layout(preset)?;
+                // §4.2: T_comp = ModelSize / AverageBandwidth when not
+                // given explicitly.
+                let t_comp = if *t_comp > 0.0 {
+                    *t_comp
+                } else {
+                    layout.wire_bits() as f64 / mean_up
+                };
+                let x0 = store.initial_params_shared(preset)?;
+                Ok(WarmFamily::Deep(WarmDeep {
+                    base,
+                    store,
+                    _rt: rt,
+                    exes,
+                    layout,
+                    x0,
+                    sigma: *sigma,
+                    t_comp,
+                }))
+            }
+        }
+    }
+
+    fn base(&self) -> &FamilyBase {
+        match self {
+            WarmFamily::Quadratic(f) => &f.base,
+            WarmFamily::Deep(f) => &f.base,
+        }
+    }
+
+    /// Is `cfg` a member of this family? Everything the warm state was
+    /// derived from must match — workload, both trace specs, M and the
+    /// prior field; policy, mode, safety, shards and alpha stay free
+    /// axes. (The downlink joined the key when families started sharing
+    /// the built downlink traces; a scenario grid's downlink is
+    /// base-constant, so grid grouping is unaffected.)
     pub fn compatible(&self, cfg: &ExperimentConfig) -> bool {
-        cfg.workload == self.workload
-            && cfg.uplink == self.uplink
-            && cfg.m == self.m
-            && cfg.prior_bps == self.cfg_prior
+        let b = self.base();
+        cfg.workload == b.workload
+            && cfg.uplink == b.uplink
+            && cfg.downlink == b.downlink
+            && cfg.m == b.m
+            && cfg.prior_bps == b.cfg_prior
+    }
+
+    /// The family's shared per-worker trace handles (test hook: member
+    /// netsims hold `Arc::ptr_eq` clones of exactly these).
+    pub fn links(&self) -> &SharedLinks {
+        &self.base().links
+    }
+
+    /// The deep family's shared artifact store (`None` for the
+    /// quadratic) — test hook for the one-open-per-directory contract.
+    pub fn artifact_store(&self) -> Option<&Arc<ArtifactStore>> {
+        match self {
+            WarmFamily::Deep(f) => Some(&f.store),
+            WarmFamily::Quadratic(_) => None,
+        }
+    }
+
+    /// Assemble a member cell's netsim from the family's shared trace
+    /// handles — [`build_netsim`]'s warm twin (`Arc` clones instead of
+    /// fresh builds; bit-identical by construction).
+    pub fn netsim(&self, cfg: &ExperimentConfig) -> NetSim {
+        let links = self
+            .base()
+            .links
+            .iter()
+            .map(|(up, down)| Link::new(up.clone(), down.clone()))
+            .collect();
+        NetSim::new(links).with_alpha(cfg.alpha)
     }
 
     /// Run one member cell to completion from the warm state.
     pub fn run(&self, cfg: &ExperimentConfig) -> anyhow::Result<ExperimentResult> {
+        self.run_with_eval(cfg, 0)
+    }
+
+    /// [`Self::run`] plus a final-model evaluation on `eval_batches`
+    /// held-out batches (deep model only; the quadratic has no eval
+    /// notion and ignores it).
+    pub fn run_with_eval(
+        &self,
+        cfg: &ExperimentConfig,
+        eval_batches: usize,
+    ) -> anyhow::Result<ExperimentResult> {
         anyhow::ensure!(
             self.compatible(cfg),
             "experiment '{}' is not a member of this cell family",
             cfg.name
         );
-        let layers = if cfg.single_layer {
-            self.layout.single_layer()
-        } else {
-            self.layout.layers()
-        };
-        let d = self.q.dim();
-        let src = QuadraticSource::new(self.q.clone(), self.t_comp);
-        let x0 = vec![1.0f32; d];
-        let sim_cfg = sim_config(cfg, layers.clone(), self.t_comp, self.prior_bps);
-        let mut sim = Simulation::new(sim_cfg, build_netsim(cfg), src, x0);
-        sim.shards = cfg.shards;
-        sim.thread_cap = cfg.thread_cap;
-        let records = sim.run(cfg.rounds)?;
-        let total_time = sim.clock;
-        Ok(ExperimentResult { records, layers, n_params: d, eval: None, total_time })
+        match self {
+            WarmFamily::Quadratic(f) => {
+                let layers = if cfg.single_layer {
+                    f.layout.single_layer()
+                } else {
+                    f.layout.layers()
+                };
+                let d = f.q.dim();
+                let src = QuadraticSource::new(f.q.clone(), f.t_comp);
+                let x0 = vec![1.0f32; d];
+                let sim_cfg = sim_config(cfg, layers.clone(), f.t_comp, f.base.prior_bps);
+                let mut sim = Simulation::new(sim_cfg, self.netsim(cfg), src, x0);
+                sim.shards = cfg.shards;
+                sim.thread_cap = cfg.thread_cap;
+                let records = sim.run(cfg.rounds)?;
+                let total_time = sim.clock;
+                Ok(ExperimentResult { records, layers, n_params: d, eval: None, total_time })
+            }
+            WarmFamily::Deep(f) => {
+                let layers = if cfg.single_layer {
+                    f.layout.single_layer()
+                } else {
+                    f.layout.layers()
+                };
+                let src = f.source()?;
+                let sim_cfg = sim_config(cfg, layers.clone(), f.t_comp, f.base.prior_bps);
+                let x0 = f.x0.as_ref().clone();
+                let mut sim = Simulation::new(sim_cfg, self.netsim(cfg), src, x0);
+                sim.shards = cfg.shards;
+                sim.thread_cap = cfg.thread_cap;
+                let records = sim.run(cfg.rounds)?;
+                let total_time = sim.clock;
+                let eval = if eval_batches > 0 {
+                    Some(sim.source.evaluate(&sim.server.x, eval_batches)?)
+                } else {
+                    None
+                };
+                let n_params = f.layout.n_params;
+                Ok(ExperimentResult { records, layers, n_params, eval, total_time })
+            }
+        }
     }
 }
 
@@ -173,49 +460,16 @@ impl WarmQuadratic {
 ///
 /// `artifacts`: directory for deep-model workloads (ignored for the
 /// quadratic). Evaluation batches for the deep model: `eval_batches`.
+///
+/// Delegates to a single-use [`WarmFamily`] — the same code path the
+/// scenario matrix reuses across cells — so warm and cold runs are
+/// bit-identical by construction.
 pub fn run_experiment(
     cfg: &ExperimentConfig,
     artifacts: Option<&str>,
     eval_batches: usize,
 ) -> anyhow::Result<ExperimentResult> {
-    match &cfg.workload {
-        WorkloadSpec::Quadratic { .. } => WarmQuadratic::prepare(cfg)?.run(cfg),
-        WorkloadSpec::DeepModel { preset, sigma, t_comp } => {
-            let store = match artifacts {
-                Some(dir) => ArtifactStore::open(dir)?,
-                None => ArtifactStore::open_default()?,
-            };
-            let rt = Runtime::cpu()?;
-            let layout = store.layout(preset)?;
-            // §4.2: T_comp = ModelSize / AverageBandwidth when not given.
-            let t_comp = if *t_comp > 0.0 {
-                *t_comp
-            } else {
-                let avg = trace_mean_bps(cfg.uplink.build().as_ref(), 120.0);
-                layout.wire_bits() as f64 / avg
-            };
-            let src = PjrtModelSource::load(&rt, &store, preset, *sigma, t_comp)?;
-            let layers = if cfg.single_layer {
-                layout.single_layer()
-            } else {
-                layout.layers()
-            };
-            let x0 = store.initial_params(preset)?;
-            let n_params = layout.n_params;
-            let sim_cfg = sim_config(cfg, layers.clone(), t_comp, prior_bps(cfg));
-            let mut sim = Simulation::new(sim_cfg, build_netsim(cfg), src, x0);
-            sim.shards = cfg.shards;
-            sim.thread_cap = cfg.thread_cap;
-            let records = sim.run(cfg.rounds)?;
-            let total_time = sim.clock;
-            let eval = if eval_batches > 0 {
-                Some(sim.source.evaluate(&sim.server.x, eval_batches)?)
-            } else {
-                None
-            };
-            Ok(ExperimentResult { records, layers, n_params, eval, total_time })
-        }
-    }
+    WarmFamily::prepare(cfg, artifacts)?.run_with_eval(cfg, eval_batches)
 }
 
 /// The §4.2 bandwidth pattern (30–330 Mbps sin², per-worker noise) used
@@ -248,6 +502,7 @@ mod tests {
     use crate::config::{ExecModeSpec, OptimizerSpec};
     use crate::coordinator::ComputeModel;
     use crate::kimad::CompressPolicy;
+    use crate::runtime::write_native_artifacts;
 
     fn quad_cfg() -> ExperimentConfig {
         ExperimentConfig {
@@ -273,6 +528,18 @@ mod tests {
             compute: ComputeModel::Constant,
             seed: 21,
         }
+    }
+
+    fn policy_mode_safety_variants() -> [(CompressPolicy, ExecModeSpec, f64); 3] {
+        [
+            (CompressPolicy::KimadUniform, ExecModeSpec::Sync, 1.0),
+            (
+                CompressPolicy::KimadPlus { discretization: 300, ratios: vec![] },
+                ExecModeSpec::SemiSync { participation: 0.5 },
+                0.8,
+            ),
+            (CompressPolicy::WholeModelTopK, ExecModeSpec::Async { damping: 0.7 }, 1.0),
+        ]
     }
 
     #[test]
@@ -327,19 +594,11 @@ mod tests {
 
     #[test]
     fn warm_family_runs_match_cold_runs_bitwise() {
-        // One WarmQuadratic serving several cells (different policies,
+        // One WarmFamily serving several cells (different policies,
         // modes, safeties) must reproduce the cold path bit for bit —
         // it IS the cold path, minus the rebuilds.
-        let warm = WarmQuadratic::prepare(&quad_cfg()).unwrap();
-        for (policy, mode, safety) in [
-            (CompressPolicy::KimadUniform, ExecModeSpec::Sync, 1.0),
-            (
-                CompressPolicy::KimadPlus { discretization: 300, ratios: vec![] },
-                ExecModeSpec::SemiSync { participation: 0.5 },
-                0.8,
-            ),
-            (CompressPolicy::WholeModelTopK, ExecModeSpec::Async { damping: 0.7 }, 1.0),
-        ] {
+        let warm = WarmFamily::prepare(&quad_cfg(), None).unwrap();
+        for (policy, mode, safety) in policy_mode_safety_variants() {
             let mut cfg = quad_cfg();
             cfg.up_policy = policy.clone();
             cfg.down_policy = policy;
@@ -351,7 +610,7 @@ mod tests {
             assert_eq!(a.records, b.records, "warm diverged from cold");
             assert_eq!(a.total_time, b.total_time);
         }
-        // A different trace or M is a different family.
+        // A different trace, downlink or M is a different family.
         let mut other = quad_cfg();
         other.m = 3;
         assert!(!warm.compatible(&other));
@@ -359,6 +618,86 @@ mod tests {
         other.uplink = TraceSpec::Constant { bps: 999.0 };
         assert!(!warm.compatible(&other));
         assert!(warm.run(&other).is_err());
+        let mut other = quad_cfg();
+        other.downlink = TraceSpec::Constant { bps: 999.0 };
+        assert!(!warm.compatible(&other));
+    }
+
+    #[test]
+    fn deep_warm_family_matches_cold_runs_bitwise() {
+        // The deep arm of the same invariant, on the native backend
+        // against a generated tiny-preset artifact set: one
+        // WarmFamily::Deep serving several cells reproduces
+        // run_experiment record for record, eval included.
+        let dir =
+            std::env::temp_dir().join(format!("kimad-deep-warm-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        write_native_artifacts(&dir, &["tiny".to_string()], 21).unwrap();
+        let art = dir.to_str().unwrap().to_string();
+
+        let mut base = quad_cfg();
+        base.workload =
+            WorkloadSpec::DeepModel { preset: "tiny".into(), sigma: 0.3, t_comp: 0.5 };
+        base.rounds = 4;
+        let warm = WarmFamily::prepare(&base, Some(&art)).unwrap();
+        assert!(matches!(warm, WarmFamily::Deep(_)));
+        for (policy, mode, safety) in policy_mode_safety_variants() {
+            let mut cfg = base.clone();
+            cfg.up_policy = policy.clone();
+            cfg.down_policy = policy;
+            cfg.mode = mode;
+            cfg.budget_safety = safety;
+            assert!(warm.compatible(&cfg));
+            let a = warm.run_with_eval(&cfg, 1).unwrap();
+            let b = run_experiment(&cfg, Some(&art), 1).unwrap();
+            assert_eq!(a.records, b.records, "deep warm diverged from cold");
+            assert_eq!(a.total_time, b.total_time);
+            assert_eq!(a.eval, b.eval, "eval must flow through the warm path too");
+            assert!(a.eval.unwrap().loss.is_finite());
+        }
+        // A different preset is a different family (workload mismatch).
+        let mut other = base.clone();
+        other.workload =
+            WorkloadSpec::DeepModel { preset: "small".into(), sigma: 0.3, t_comp: 0.5 };
+        assert!(!warm.compatible(&other));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn family_netsim_shares_trace_handles_with_fresh_build_semantics() {
+        // (a) The warm netsim holds Arc::ptr_eq clones of the family's
+        // built traces — each trace is built once per family. (b) Its
+        // transfers are bit-identical to a cold build_netsim's, even
+        // for seeded (OU-noise) traces.
+        let mut cfg = quad_cfg();
+        cfg.uplink = TraceSpec::NoisySinSquared {
+            eta: 3000.0,
+            theta: 0.3,
+            delta: 500.0,
+            phase: 0.0,
+            noise_sigma: 0.2,
+            seed: 7,
+            horizon: 500.0,
+        };
+        let warm = WarmFamily::prepare(&cfg, None).unwrap();
+        let shared = warm.netsim(&cfg);
+        let fresh = build_netsim(&cfg);
+        for w in 0..cfg.m {
+            assert!(Arc::ptr_eq(&shared.link(w).up, &warm.links()[w].0));
+            assert!(Arc::ptr_eq(&shared.link(w).down, &warm.links()[w].1));
+            // Two netsims assembled from the same family share handles.
+            assert!(Arc::ptr_eq(&warm.netsim(&cfg).link(w).up, &shared.link(w).up));
+            for (t0, bits) in [(0.0, 1e3), (3.7, 5e4), (41.2, 1.0)] {
+                use crate::netsim::Direction;
+                for dir in [Direction::Up, Direction::Down] {
+                    assert_eq!(
+                        shared.transfer(w, dir, t0, bits),
+                        fresh.transfer(w, dir, t0, bits),
+                        "worker {w} t0={t0} bits={bits}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

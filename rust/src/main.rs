@@ -4,12 +4,14 @@
 //!   train     run an experiment from a JSON config, write CSVs
 //!   report    regenerate a paper figure/table (fig1, fig3..fig9,
 //!             table1, table2, or `all`)
-//!   scenarios run a scenario matrix (traces × policies × modes ×
-//!             workers × safety × shards) in parallel, one JSON
-//!             summary per cell
+//!   scenarios run a scenario matrix (workloads × traces × policies ×
+//!             modes × workers × safety × shards) in parallel, one
+//!             JSON summary per cell
 //!   synthetic quick §4.1 quadratic comparison for one scenario
 //!   trace     sample a bandwidth trace spec (JSON) to stdout
 //!   presets   list AOT model presets available in artifacts/
+//!   gen-artifacts  write a native (JAX-free) artifact set — layout +
+//!             seeded params + manifest — for deep-model presets
 
 use std::path::PathBuf;
 
@@ -29,10 +31,12 @@ USAGE:
                [--out-dir DIR] [--fast]
   kimad scenarios [--grid <grid.json>] [--out-dir DIR] [--threads N] \\
                [--cell-threads N] [--rounds N] [--modes sync,semisync,async] \\
-               [--shards 1,2,4] [--print-grid]
+               [--shards 1,2,4] [--workload 'quad:d=30,layers=3|deep:tiny'] \\
+               [--artifacts DIR] [--print-grid]
   kimad synthetic [--scenario xsmall|small|oscillation|high] [--fast] [--out-dir DIR]
   kimad trace --spec '<json TraceSpec>' [--seconds S] [--step S]
   kimad presets [--artifacts DIR]
+  kimad gen-artifacts [--presets tiny,small] [--out-dir DIR] [--seed N]
 ";
 
 fn main() {
@@ -56,6 +60,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "synthetic" => synthetic(&args),
         "trace" => trace(&args),
         "presets" => presets(&args),
+        "gen-artifacts" => gen_artifacts(&args),
         other => anyhow::bail!("unknown subcommand '{other}'\n{USAGE}"),
     }
 }
@@ -97,6 +102,23 @@ fn scenarios(args: &Args) -> anyhow::Result<()> {
             })
             .collect::<anyhow::Result<Vec<_>>>()?;
     }
+    if let Some(workloads) = args.opt("workload") {
+        // Override the workload axis: |-separated tokens, each
+        // quad[:d=..,layers=..,tcomp=..] or deep:<preset>[,sigma=..].
+        // Cell ids use WorkloadSpec::short_name (quad30l3, deep-tiny).
+        grid.workloads = workloads
+            .split('|')
+            .map(|tok| {
+                Ok(kimad::scenarios::NamedWorkload::from_spec(
+                    kimad::config::WorkloadSpec::parse(tok.trim())?,
+                ))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+    }
+    if let Some(dir) = args.opt("artifacts") {
+        // Deep-model cells load from this artifact directory.
+        grid.base.artifacts = Some(dir.to_string());
+    }
     if args.flag("print-grid") {
         println!("{}", grid.to_json());
         return Ok(());
@@ -108,10 +130,11 @@ fn scenarios(args: &Args) -> anyhow::Result<()> {
     let cell_threads = args.opt_usize("cell-threads", 0)?;
     let out_dir = PathBuf::from(args.opt_or("out-dir", "reports/scenarios"));
     eprintln!(
-        "running grid '{}': {} cells ({} traces x {} policies x {} modes x {} worker counts \
-         x {} safety x {} shard counts)...",
+        "running grid '{}': {} cells ({} workloads x {} traces x {} policies x {} modes \
+         x {} worker counts x {} safety x {} shard counts)...",
         grid.name,
         grid.n_cells(),
+        grid.workloads.len(),
         grid.traces.len(),
         grid.policies.len(),
         grid.modes.len(),
@@ -255,6 +278,27 @@ fn presets(args: &Args) -> anyhow::Result<()> {
     for p in store.model_presets() {
         let m = store.model(p)?;
         println!("{p}: {} params ({})", m.n_params, m.train_hlo);
+    }
+    Ok(())
+}
+
+/// `kimad gen-artifacts` — write a native (JAX-free) artifact set:
+/// layout + seeded initial params + manifest per preset. Enough for
+/// the native deep-model backend (and CI); `make artifacts` still
+/// produces the full HLO set for PJRT builds.
+fn gen_artifacts(args: &Args) -> anyhow::Result<()> {
+    let presets: Vec<String> = args
+        .opt_or("presets", "tiny")
+        .split(',')
+        .map(|p| p.trim().to_string())
+        .filter(|p| !p.is_empty())
+        .collect();
+    let out_dir = PathBuf::from(args.opt_or("out-dir", "artifacts"));
+    let seed = args.opt_usize("seed", 21)? as u64;
+    let store = kimad::runtime::write_native_artifacts(&out_dir, &presets, seed)?;
+    for p in store.model_presets() {
+        let m = store.model(p)?;
+        println!("{p}: {} params -> {}", m.n_params, out_dir.display());
     }
     Ok(())
 }

@@ -3,12 +3,16 @@
 //! The coordinator treats a model as one flat `f32` vector partitioned
 //! into *layers* (Kimad+ allocates its budget across these). For the
 //! deep model the layout is loaded from `artifacts/layout-<preset>.json`
-//! written by `python/compile/aot.py`; synthetic workloads build layouts
-//! programmatically.
+//! written by `python/compile/aot.py` (or by `kimad gen-artifacts` via
+//! [`native`]); synthetic workloads build layouts programmatically.
 
 use std::path::Path;
 
 use crate::util::json::Value;
+
+pub mod native;
+
+pub use native::{NativeConfig, NativeModelSource};
 
 /// One parameter tensor slot (mirrors python ParamMeta).
 #[derive(Debug, Clone, PartialEq)]
@@ -178,6 +182,47 @@ impl ModelLayout {
     pub fn wire_bits(&self) -> u64 {
         self.n_params as u64 * 32
     }
+
+    /// Serialize in the `layout-<preset>.json` shape [`Self::from_json`]
+    /// reads (and `python/compile/aot.py` writes) — what lets
+    /// `kimad gen-artifacts` emit an artifact set without JAX.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("preset", Value::str(self.preset.clone())),
+            ("batch", Value::num(self.batch as f64)),
+            ("seq", Value::num(self.seq as f64)),
+            ("d_in", Value::num(self.d_in as f64)),
+            ("d_model", Value::num(self.d_model as f64)),
+            ("n_heads", Value::num(self.n_heads as f64)),
+            ("n_blocks", Value::num(self.n_blocks as f64)),
+            ("d_ff", Value::num(self.d_ff as f64)),
+            ("n_classes", Value::num(self.n_classes as f64)),
+            ("n_params", Value::num(self.n_params as f64)),
+            ("n_groups", Value::num(self.n_groups as f64)),
+            (
+                "params",
+                Value::Arr(
+                    self.params
+                        .iter()
+                        .map(|p| {
+                            Value::obj(vec![
+                                ("name", Value::str(p.name.clone())),
+                                (
+                                    "shape",
+                                    Value::Arr(
+                                        p.shape.iter().map(|&s| Value::num(s as f64)).collect(),
+                                    ),
+                                ),
+                                ("group", Value::num(p.group as f64)),
+                                ("offset", Value::num(p.offset as f64)),
+                                ("size", Value::num(p.size as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
 }
 
 fn group_name(param_name: &str) -> String {
@@ -235,6 +280,25 @@ mod tests {
         assert_eq!(s.len(), 1);
         assert_eq!(s[0].size, 9);
         assert_eq!(l.wire_bits(), 9 * 32);
+    }
+
+    #[test]
+    fn layout_json_roundtrip() {
+        let l = NativeConfig::preset("tiny").unwrap().layout_named("tiny");
+        let v = Value::parse(&l.to_json().to_string()).unwrap();
+        let back = ModelLayout::from_json(&v).unwrap();
+        back.validate().unwrap();
+        assert_eq!(back.preset, l.preset);
+        assert_eq!(back.n_params, l.n_params);
+        assert_eq!(back.params, l.params);
+        assert_eq!(
+            (back.batch, back.seq, back.d_in, back.d_model),
+            (l.batch, l.seq, l.d_in, l.d_model)
+        );
+        assert_eq!(
+            (back.n_heads, back.n_blocks, back.d_ff, back.n_classes, back.n_groups),
+            (l.n_heads, l.n_blocks, l.d_ff, l.n_classes, l.n_groups)
+        );
     }
 
     #[test]

@@ -1,0 +1,982 @@
+//! Native (pure-rust) execution of the deep-model workload.
+//!
+//! The PJRT runtime executes the AOT-lowered JAX transformer when the
+//! `xla` bindings are vendored in; offline builds ship only the stub
+//! (`runtime::backend`), which used to leave every deep-model code path
+//! dead. This module is the fallback that lights them up: the **same
+//! transformer** (`python/compile/model.py` — pre-norm encoder over
+//! patch tokens, mean-pool + linear head) implemented forward *and*
+//! backward in plain rust, driven by the same [`ModelLayout`] /
+//! [`SyntheticDataset`] pair the PJRT source uses.
+//!
+//! Two deliberate properties:
+//!
+//! * **Determinism** — all math runs in `f64` with serial, fixed-order
+//!   reductions, so a run is bit-reproducible across machines, thread
+//!   counts and scenario-matrix pool sizes (the engine contract).
+//! * **Backend-local numerics** — the native source is *not* expected
+//!   to match PJRT bit for bit (different backends round differently);
+//!   what matters is that warm and cold runs on the *same* backend are
+//!   identical, which they are because execution is a pure function of
+//!   (layout, params, batch).
+//!
+//! [`NativeConfig`] mirrors `ModelConfig`/`PRESETS` from
+//! `python/compile/model.py`, so `kimad gen-artifacts` can emit a
+//! layout + initial-params artifact set without JAX (see
+//! `runtime::artifact::write_native_artifacts`).
+//!
+//! [`SyntheticDataset`]: crate::data::SyntheticDataset
+
+use crate::coordinator::GradientSource;
+use crate::data::SyntheticDataset;
+use crate::model::{ModelLayout, ParamSlot};
+use crate::runtime::EvalMetrics;
+use crate::util::rng::Rng;
+
+/// `sqrt(2/π)` — the tanh-GELU constant (the JAX default approximate
+/// GELU the python model lowers).
+const GELU_C: f64 = 0.797_884_560_802_865_4;
+const LN_EPS: f64 = 1e-5;
+
+/// Transformer preset shapes — the rust mirror of
+/// `python/compile/model.py::PRESETS` (kept in lockstep by the layout
+/// tests below).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NativeConfig {
+    pub batch: usize,
+    pub seq: usize,
+    pub d_in: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_blocks: usize,
+    pub d_ff: usize,
+    pub n_classes: usize,
+}
+
+/// Preset names accepted by [`NativeConfig::preset`], smallest first.
+pub const PRESETS: [&str; 4] = ["tiny", "small", "e2e", "big"];
+
+impl NativeConfig {
+    /// The named preset (`tiny | small | e2e | big`), matching the
+    /// python `PRESETS` table shape for shape.
+    pub fn preset(name: &str) -> anyhow::Result<Self> {
+        let c = |batch, seq, d_in, d_model, n_heads, n_blocks, d_ff| Self {
+            batch,
+            seq,
+            d_in,
+            d_model,
+            n_heads,
+            n_blocks,
+            d_ff,
+            n_classes: 10,
+        };
+        Ok(match name {
+            "tiny" => c(8, 4, 8, 16, 2, 1, 32),
+            "small" => c(32, 8, 16, 32, 4, 2, 64),
+            "e2e" => c(64, 16, 32, 128, 4, 4, 512),
+            "big" => c(8, 32, 64, 1024, 16, 8, 4096),
+            other => anyhow::bail!("unknown preset '{other}' (tiny|small|e2e|big)"),
+        })
+    }
+
+    /// Recover the config from a layout (artifact-loaded layouts carry
+    /// every shape field). Validates that the layout's slot table is
+    /// exactly the canonical one, so a stale or hand-edited
+    /// `layout-<preset>.json` fails loudly instead of mis-indexing.
+    pub fn from_layout(layout: &ModelLayout) -> anyhow::Result<Self> {
+        let cfg = Self {
+            batch: layout.batch,
+            seq: layout.seq,
+            d_in: layout.d_in,
+            d_model: layout.d_model,
+            n_heads: layout.n_heads,
+            n_blocks: layout.n_blocks,
+            d_ff: layout.d_ff,
+            n_classes: layout.n_classes,
+        };
+        anyhow::ensure!(
+            cfg.d_model > 0 && cfg.n_heads > 0 && cfg.d_model % cfg.n_heads == 0,
+            "layout '{}' is not a transformer layout (d_model {} / n_heads {})",
+            layout.preset,
+            cfg.d_model,
+            cfg.n_heads
+        );
+        let canon = cfg.layout_named(&layout.preset);
+        anyhow::ensure!(
+            canon.params == layout.params && canon.n_params == layout.n_params,
+            "layout '{}' does not match the canonical transformer slot table",
+            layout.preset
+        );
+        Ok(cfg)
+    }
+
+    /// (name, shape, group) for every parameter slot, in wire order —
+    /// the rust mirror of `model.py::param_specs`.
+    pub fn param_specs(&self) -> Vec<(String, Vec<usize>, usize)> {
+        let d = self.d_model;
+        let mut specs: Vec<(String, Vec<usize>, usize)> = vec![
+            ("embed/w".into(), vec![self.d_in, d], 0),
+            ("embed/b".into(), vec![d], 0),
+            ("embed/pos".into(), vec![self.seq, d], 0),
+        ];
+        for i in 0..self.n_blocks {
+            let g = i + 1;
+            let p = format!("block{i}");
+            specs.push((format!("{p}/ln1/g"), vec![d], g));
+            specs.push((format!("{p}/ln1/b"), vec![d], g));
+            specs.push((format!("{p}/attn/wqkv"), vec![d, 3 * d], g));
+            specs.push((format!("{p}/attn/bqkv"), vec![3 * d], g));
+            specs.push((format!("{p}/attn/wo"), vec![d, d], g));
+            specs.push((format!("{p}/attn/bo"), vec![d], g));
+            specs.push((format!("{p}/ln2/g"), vec![d], g));
+            specs.push((format!("{p}/ln2/b"), vec![d], g));
+            specs.push((format!("{p}/ffn/w1"), vec![d, self.d_ff], g));
+            specs.push((format!("{p}/ffn/b1"), vec![self.d_ff], g));
+            specs.push((format!("{p}/ffn/w2"), vec![self.d_ff, d], g));
+            specs.push((format!("{p}/ffn/b2"), vec![d], g));
+        }
+        let gh = self.n_blocks + 1;
+        specs.push(("final_ln/g".into(), vec![d], gh));
+        specs.push(("final_ln/b".into(), vec![d], gh));
+        specs.push(("head/w".into(), vec![d, self.n_classes], gh));
+        specs.push(("head/b".into(), vec![self.n_classes], gh));
+        specs
+    }
+
+    /// The canonical [`ModelLayout`] for this config.
+    pub fn layout_named(&self, preset: &str) -> ModelLayout {
+        let mut params = Vec::new();
+        let mut off = 0;
+        for (name, shape, group) in self.param_specs() {
+            let size: usize = shape.iter().product();
+            params.push(ParamSlot { name, shape, group, offset: off, size });
+            off += size;
+        }
+        ModelLayout {
+            preset: preset.to_string(),
+            batch: self.batch,
+            seq: self.seq,
+            d_in: self.d_in,
+            d_model: self.d_model,
+            n_heads: self.n_heads,
+            n_blocks: self.n_blocks,
+            d_ff: self.d_ff,
+            n_classes: self.n_classes,
+            n_params: off,
+            n_groups: self.n_blocks + 2,
+            params,
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.param_specs().iter().map(|(_, shape, _)| shape.iter().product::<usize>()).sum()
+    }
+
+    /// Seeded initial parameters, `model.py::init_params`'s scheme:
+    /// LeCun-normal weights, zero biases, unit LN gains, 0.02-scale
+    /// positional table. One deterministic stream in wire order (the
+    /// *scheme* matches python; the draws need not — initialization is
+    /// backend-local, like the rest of the numerics).
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut out: Vec<f32> = Vec::with_capacity(self.n_params());
+        for (name, shape, _) in self.param_specs() {
+            let size: usize = shape.iter().product();
+            let leaf = name.rsplit('/').next().unwrap_or(&name);
+            match leaf {
+                "b" | "bqkv" | "bo" | "b1" | "b2" => out.resize(out.len() + size, 0.0),
+                "g" => out.resize(out.len() + size, 1.0),
+                "pos" => out.extend((0..size).map(|_| (0.02 * rng.normal()) as f32)),
+                _ => {
+                    let scale = 1.0 / (shape[0] as f64).sqrt();
+                    out.extend((0..size).map(|_| (scale * rng.normal()) as f32));
+                }
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// Parameter offsets
+// ---------------------------------------------------------------------
+
+/// Element offsets of each block's slots inside the flat vector.
+struct BlockOffs {
+    ln1_g: usize,
+    ln1_b: usize,
+    wqkv: usize,
+    bqkv: usize,
+    wo: usize,
+    bo: usize,
+    ln2_g: usize,
+    ln2_b: usize,
+    w1: usize,
+    b1: usize,
+    w2: usize,
+    b2: usize,
+}
+
+struct Offsets {
+    embed_w: usize,
+    embed_b: usize,
+    pos: usize,
+    blocks: Vec<BlockOffs>,
+    final_g: usize,
+    final_b: usize,
+    head_w: usize,
+    head_b: usize,
+}
+
+impl Offsets {
+    fn new(cfg: &NativeConfig) -> Self {
+        let (d, f) = (cfg.d_model, cfg.d_ff);
+        let mut off = 0;
+        let mut take = |n: usize| {
+            let o = off;
+            off += n;
+            o
+        };
+        let embed_w = take(cfg.d_in * d);
+        let embed_b = take(d);
+        let pos = take(cfg.seq * d);
+        // Struct-literal fields evaluate left to right, so each `take`
+        // advances through the wire order exactly like `param_specs`.
+        let blocks = (0..cfg.n_blocks)
+            .map(|_| BlockOffs {
+                ln1_g: take(d),
+                ln1_b: take(d),
+                wqkv: take(d * 3 * d),
+                bqkv: take(3 * d),
+                wo: take(d * d),
+                bo: take(d),
+                ln2_g: take(d),
+                ln2_b: take(d),
+                w1: take(d * f),
+                b1: take(f),
+                w2: take(f * d),
+                b2: take(d),
+            })
+            .collect();
+        Self {
+            embed_w,
+            embed_b,
+            pos,
+            blocks,
+            final_g: take(d),
+            final_b: take(d),
+            head_w: take(d * cfg.n_classes),
+            head_b: take(cfg.n_classes),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Kernels (f64, serial, fixed reduction order)
+// ---------------------------------------------------------------------
+
+/// y[r, :dout] = x[r, :din] · w + b, for `rows` rows.
+fn linear_fwd(
+    x: &[f64],
+    w: &[f64],
+    b: &[f64],
+    rows: usize,
+    din: usize,
+    dout: usize,
+    y: &mut [f64],
+) {
+    for r in 0..rows {
+        let yr = &mut y[r * dout..(r + 1) * dout];
+        yr.copy_from_slice(b);
+        let xr = &x[r * din..(r + 1) * din];
+        for (i, &xv) in xr.iter().enumerate() {
+            let wrow = &w[i * dout..(i + 1) * dout];
+            for (yv, &wv) in yr.iter_mut().zip(wrow) {
+                *yv += xv * wv;
+            }
+        }
+    }
+}
+
+/// Backward of [`linear_fwd`]: accumulates `dw`/`db` and (when `dx` is
+/// given) **adds** `dy · wᵀ` into it.
+#[allow(clippy::too_many_arguments)] // flat-slice kernel: dims travel unpacked
+fn linear_bwd(
+    x: &[f64],
+    w: &[f64],
+    dy: &[f64],
+    rows: usize,
+    din: usize,
+    dout: usize,
+    dw: &mut [f64],
+    db: &mut [f64],
+    dx: Option<&mut [f64]>,
+) {
+    for r in 0..rows {
+        let dyr = &dy[r * dout..(r + 1) * dout];
+        for (dbv, &dyv) in db.iter_mut().zip(dyr) {
+            *dbv += dyv;
+        }
+        let xr = &x[r * din..(r + 1) * din];
+        for (i, &xv) in xr.iter().enumerate() {
+            let dwrow = &mut dw[i * dout..(i + 1) * dout];
+            for (dwv, &dyv) in dwrow.iter_mut().zip(dyr) {
+                *dwv += xv * dyv;
+            }
+        }
+    }
+    if let Some(dx) = dx {
+        for r in 0..rows {
+            let dyr = &dy[r * dout..(r + 1) * dout];
+            let dxr = &mut dx[r * din..(r + 1) * din];
+            for (i, dxv) in dxr.iter_mut().enumerate() {
+                let wrow = &w[i * dout..(i + 1) * dout];
+                let mut acc = 0.0;
+                for (&wv, &dyv) in wrow.iter().zip(dyr) {
+                    acc += wv * dyv;
+                }
+                *dxv += acc;
+            }
+        }
+    }
+}
+
+/// Row-wise layernorm: saves `xhat` and `rstd` for the backward pass.
+#[allow(clippy::too_many_arguments)] // flat-slice kernel: dims travel unpacked
+fn layernorm_fwd(
+    x: &[f64],
+    g: &[f64],
+    b: &[f64],
+    rows: usize,
+    d: usize,
+    xhat: &mut [f64],
+    rstd: &mut [f64],
+    y: &mut [f64],
+) {
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let mu = xr.iter().sum::<f64>() / d as f64;
+        let var = xr.iter().map(|&v| (v - mu) * (v - mu)).sum::<f64>() / d as f64;
+        let rs = 1.0 / (var + LN_EPS).sqrt();
+        rstd[r] = rs;
+        let xh = &mut xhat[r * d..(r + 1) * d];
+        let yr = &mut y[r * d..(r + 1) * d];
+        for j in 0..d {
+            let h = (xr[j] - mu) * rs;
+            xh[j] = h;
+            yr[j] = h * g[j] + b[j];
+        }
+    }
+}
+
+/// Backward of [`layernorm_fwd`]: accumulates `dg`/`db` and **adds**
+/// the input gradient into `dx` (callers merge residual branches).
+#[allow(clippy::too_many_arguments)] // flat-slice kernel: dims travel unpacked
+fn layernorm_bwd(
+    dy: &[f64],
+    xhat: &[f64],
+    rstd: &[f64],
+    g: &[f64],
+    rows: usize,
+    d: usize,
+    dg: &mut [f64],
+    db: &mut [f64],
+    dx: &mut [f64],
+) {
+    for r in 0..rows {
+        let dyr = &dy[r * d..(r + 1) * d];
+        let xh = &xhat[r * d..(r + 1) * d];
+        for j in 0..d {
+            dg[j] += dyr[j] * xh[j];
+            db[j] += dyr[j];
+        }
+        let mut m1 = 0.0;
+        let mut m2 = 0.0;
+        for j in 0..d {
+            let dxh = dyr[j] * g[j];
+            m1 += dxh;
+            m2 += dxh * xh[j];
+        }
+        m1 /= d as f64;
+        m2 /= d as f64;
+        let dxr = &mut dx[r * d..(r + 1) * d];
+        for j in 0..d {
+            let dxh = dyr[j] * g[j];
+            dxr[j] += rstd[r] * (dxh - m1 - xh[j] * m2);
+        }
+    }
+}
+
+fn gelu(x: f64) -> f64 {
+    0.5 * x * (1.0 + (GELU_C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn gelu_grad(x: f64) -> f64 {
+    let t = (GELU_C * (x + 0.044715 * x * x * x)).tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
+// ---------------------------------------------------------------------
+// Saved activations
+// ---------------------------------------------------------------------
+
+/// Per-block activations the backward pass re-reads.
+struct BlockActs {
+    xhat1: Vec<f64>,
+    rstd1: Vec<f64>,
+    a: Vec<f64>,
+    qkv: Vec<f64>,
+    attn: Vec<f64>,
+    ao: Vec<f64>,
+    xhat2: Vec<f64>,
+    rstd2: Vec<f64>,
+    fx: Vec<f64>,
+    u1: Vec<f64>,
+    gact: Vec<f64>,
+}
+
+struct Acts {
+    blocks: Vec<BlockActs>,
+    xhatf: Vec<f64>,
+    rstdf: Vec<f64>,
+    pooled: Vec<f64>,
+    logits: Vec<f64>,
+}
+
+// ---------------------------------------------------------------------
+// The gradient source
+// ---------------------------------------------------------------------
+
+/// Deep-model [`GradientSource`] running the transformer natively —
+/// the offline stand-in for `runtime::PjrtModelSource` with the same
+/// constructor inputs and the same dataset/sharding semantics.
+pub struct NativeModelSource {
+    pub layout: ModelLayout,
+    pub dataset: SyntheticDataset,
+    cfg: NativeConfig,
+    offs: Offsets,
+    t_comp: f64,
+    n_exec: u64,
+}
+
+impl NativeModelSource {
+    /// Build from an (artifact-loaded) layout. `seed` feeds the
+    /// synthetic dataset — pass the artifact manifest's seed, exactly
+    /// like `PjrtModelSource::load` does.
+    pub fn new(layout: &ModelLayout, sigma: f32, seed: u64, t_comp: f64) -> anyhow::Result<Self> {
+        let cfg = NativeConfig::from_layout(layout)?;
+        let offs = Offsets::new(&cfg);
+        let dataset = SyntheticDataset::new(cfg.seq, cfg.d_in, cfg.n_classes, sigma, seed);
+        Ok(Self { layout: layout.clone(), dataset, cfg, offs, t_comp, n_exec: 0 })
+    }
+
+    /// Number of train/eval executions so far (perf accounting).
+    pub fn executions(&self) -> u64 {
+        self.n_exec
+    }
+
+    /// Forward pass, saving activations for [`Self::backward`].
+    fn forward(&self, p: &[f64], x: &[f64]) -> Acts {
+        let NativeConfig { batch: bsz, seq, d_in, d_model: d, n_heads, d_ff, n_classes, .. } =
+            self.cfg;
+        let rows = bsz * seq;
+        let hd = d / n_heads;
+        let inv = 1.0 / (hd as f64).sqrt();
+        let o = &self.offs;
+
+        // Embedding + positional table; `h` carries the running stream.
+        let mut h = vec![0.0; rows * d];
+        linear_fwd(x, &p[o.embed_w..], &p[o.embed_b..o.embed_b + d], rows, d_in, d, &mut h);
+        for b in 0..bsz {
+            for s in 0..seq {
+                let hr = &mut h[(b * seq + s) * d..(b * seq + s + 1) * d];
+                let pr = &p[o.pos + s * d..o.pos + (s + 1) * d];
+                for (hv, &pv) in hr.iter_mut().zip(pr) {
+                    *hv += pv;
+                }
+            }
+        }
+
+        let mut blocks = Vec::with_capacity(self.cfg.n_blocks);
+        for bo in &o.blocks {
+            // ln1 over the block input.
+            let mut xhat1 = vec![0.0; rows * d];
+            let mut rstd1 = vec![0.0; rows];
+            let mut a = vec![0.0; rows * d];
+            let (g1, b1) = (&p[bo.ln1_g..bo.ln1_g + d], &p[bo.ln1_b..bo.ln1_b + d]);
+            layernorm_fwd(&h, g1, b1, rows, d, &mut xhat1, &mut rstd1, &mut a);
+            // qkv projection.
+            let mut qkv = vec![0.0; rows * 3 * d];
+            linear_fwd(&a, &p[bo.wqkv..], &p[bo.bqkv..bo.bqkv + 3 * d], rows, d, 3 * d, &mut qkv);
+            // Scaled-dot attention per (batch, head).
+            let mut attn = vec![0.0; bsz * n_heads * seq * seq];
+            let mut ao = vec![0.0; rows * d];
+            for b in 0..bsz {
+                for hh in 0..n_heads {
+                    let q_of = |s: usize| (b * seq + s) * 3 * d + hh * hd;
+                    let k_of = |s: usize| (b * seq + s) * 3 * d + d + hh * hd;
+                    let v_of = |s: usize| (b * seq + s) * 3 * d + 2 * d + hh * hd;
+                    let at_base = (b * n_heads + hh) * seq * seq;
+                    for s in 0..seq {
+                        // Scores with a max-shifted (stable) softmax.
+                        let mut row = vec![0.0; seq];
+                        let mut mx = f64::NEG_INFINITY;
+                        for (t, rv) in row.iter_mut().enumerate() {
+                            let mut acc = 0.0;
+                            for e in 0..hd {
+                                acc += qkv[q_of(s) + e] * qkv[k_of(t) + e];
+                            }
+                            *rv = acc * inv;
+                            mx = mx.max(*rv);
+                        }
+                        let mut z = 0.0;
+                        for rv in row.iter_mut() {
+                            *rv = (*rv - mx).exp();
+                            z += *rv;
+                        }
+                        let at_row = &mut attn[at_base + s * seq..at_base + (s + 1) * seq];
+                        for (av, &rv) in at_row.iter_mut().zip(&row) {
+                            *av = rv / z;
+                        }
+                        // out_h[s] = Σ_t attn[s,t] · v[t].
+                        let o_of = (b * seq + s) * d + hh * hd;
+                        for (t, &av) in at_row.iter().enumerate() {
+                            for e in 0..hd {
+                                ao[o_of + e] += av * qkv[v_of(t) + e];
+                            }
+                        }
+                    }
+                }
+            }
+            // Output projection; residual folds into `h` in place.
+            let mut proj = vec![0.0; rows * d];
+            linear_fwd(&ao, &p[bo.wo..], &p[bo.bo..bo.bo + d], rows, d, d, &mut proj);
+            for (hv, &pv) in h.iter_mut().zip(&proj) {
+                *hv += pv;
+            }
+            // ln2 -> FFN (GELU) -> residual.
+            let mut xhat2 = vec![0.0; rows * d];
+            let mut rstd2 = vec![0.0; rows];
+            let mut fx = vec![0.0; rows * d];
+            let (g2, b2) = (&p[bo.ln2_g..bo.ln2_g + d], &p[bo.ln2_b..bo.ln2_b + d]);
+            layernorm_fwd(&h, g2, b2, rows, d, &mut xhat2, &mut rstd2, &mut fx);
+            let mut u1 = vec![0.0; rows * d_ff];
+            linear_fwd(&fx, &p[bo.w1..], &p[bo.b1..bo.b1 + d_ff], rows, d, d_ff, &mut u1);
+            let gact: Vec<f64> = u1.iter().map(|&v| gelu(v)).collect();
+            let mut ff = vec![0.0; rows * d];
+            linear_fwd(&gact, &p[bo.w2..], &p[bo.b2..bo.b2 + d], rows, d_ff, d, &mut ff);
+            for (hv, &fv) in h.iter_mut().zip(&ff) {
+                *hv += fv;
+            }
+            blocks.push(BlockActs { xhat1, rstd1, a, qkv, attn, ao, xhat2, rstd2, fx, u1, gact });
+        }
+
+        // Final LN -> mean pool -> head.
+        let mut xhatf = vec![0.0; rows * d];
+        let mut rstdf = vec![0.0; rows];
+        let mut hf = vec![0.0; rows * d];
+        let (gf, bf) = (&p[o.final_g..o.final_g + d], &p[o.final_b..o.final_b + d]);
+        layernorm_fwd(&h, gf, bf, rows, d, &mut xhatf, &mut rstdf, &mut hf);
+        let mut pooled = vec![0.0; bsz * d];
+        for b in 0..bsz {
+            for s in 0..seq {
+                let hr = &hf[(b * seq + s) * d..(b * seq + s + 1) * d];
+                let pr = &mut pooled[b * d..(b + 1) * d];
+                for (pv, &hv) in pr.iter_mut().zip(hr) {
+                    *pv += hv / seq as f64;
+                }
+            }
+        }
+        let mut logits = vec![0.0; bsz * n_classes];
+        let (wh, bh) = (&p[o.head_w..], &p[o.head_b..o.head_b + n_classes]);
+        linear_fwd(&pooled, wh, bh, bsz, d, n_classes, &mut logits);
+        Acts { blocks, xhatf, rstdf, pooled, logits }
+    }
+
+    /// Mean softmax cross-entropy and its logits gradient.
+    fn loss_and_dlogits(&self, logits: &[f64], y: &[i32]) -> (f64, Vec<f64>) {
+        let (bsz, c) = (self.cfg.batch, self.cfg.n_classes);
+        let mut loss = 0.0;
+        let mut dlogits = vec![0.0; bsz * c];
+        for b in 0..bsz {
+            let lr = &logits[b * c..(b + 1) * c];
+            let mx = lr.iter().fold(f64::NEG_INFINITY, |m, &v| m.max(v));
+            let z: f64 = lr.iter().map(|&v| (v - mx).exp()).sum();
+            let lse = mx + z.ln();
+            let yi = y[b] as usize;
+            loss += lse - lr[yi];
+            let dr = &mut dlogits[b * c..(b + 1) * c];
+            for (j, dv) in dr.iter_mut().enumerate() {
+                let soft = (lr[j] - mx).exp() / z;
+                *dv = (soft - if j == yi { 1.0 } else { 0.0 }) / bsz as f64;
+            }
+        }
+        (loss / bsz as f64, dlogits)
+    }
+
+    /// Reverse pass: fills the flat `grads` (same wire layout as `p`).
+    fn backward(&self, p: &[f64], x: &[f64], acts: &Acts, dlogits: &[f64], grads: &mut [f64]) {
+        let NativeConfig { batch: bsz, seq, d_in, d_model: d, n_heads, d_ff, n_classes, .. } =
+            self.cfg;
+        let rows = bsz * seq;
+        let hd = d / n_heads;
+        let inv = 1.0 / (hd as f64).sqrt();
+        let o = &self.offs;
+
+        // Head: logits = pooled · Wh + bh. (Every `split_at_mut` below
+        // leans on the wire order putting each bias right after its
+        // weight slot — guaranteed by `param_specs`.)
+        let mut dpooled = vec![0.0; bsz * d];
+        {
+            let (dw, rest) = grads[o.head_w..].split_at_mut(d * n_classes);
+            let db = &mut rest[..n_classes];
+            let dx = Some(&mut dpooled[..]);
+            linear_bwd(&acts.pooled, &p[o.head_w..], dlogits, bsz, d, n_classes, dw, db, dx);
+        }
+        // Mean pool: dhf[b,s,:] = dpooled[b,:] / S.
+        let mut dhf = vec![0.0; rows * d];
+        for b in 0..bsz {
+            let pr = &dpooled[b * d..(b + 1) * d];
+            for s in 0..seq {
+                let dr = &mut dhf[(b * seq + s) * d..(b * seq + s + 1) * d];
+                for (dv, &pv) in dr.iter_mut().zip(pr) {
+                    *dv = pv / seq as f64;
+                }
+            }
+        }
+        // Final LN; `dh` carries the running stream gradient backwards.
+        let mut dh = vec![0.0; rows * d];
+        {
+            let (dg, db) = grads[o.final_g..o.final_g + 2 * d].split_at_mut(d);
+            let gf = &p[o.final_g..o.final_g + d];
+            layernorm_bwd(&dhf, &acts.xhatf, &acts.rstdf, gf, rows, d, dg, db, &mut dh);
+        }
+
+        // Blocks, reversed. Entering each block, `dh` is the gradient
+        // w.r.t. the block output `hout = h1 + ff`.
+        for (bo, ba) in o.blocks.iter().zip(&acts.blocks).rev() {
+            // FFN: ff = gelu(fx·W1 + b1)·W2 + b2.
+            let mut dgact = vec![0.0; rows * d_ff];
+            {
+                let (dw2, rest) = grads[bo.w2..].split_at_mut(d_ff * d);
+                let db2 = &mut rest[..d];
+                let dx = Some(&mut dgact[..]);
+                linear_bwd(&ba.gact, &p[bo.w2..], &dh, rows, d_ff, d, dw2, db2, dx);
+            }
+            let du1: Vec<f64> =
+                dgact.iter().zip(&ba.u1).map(|(&dv, &uv)| dv * gelu_grad(uv)).collect();
+            let mut dfx = vec![0.0; rows * d];
+            {
+                let (dw1, rest) = grads[bo.w1..].split_at_mut(d * d_ff);
+                let db1 = &mut rest[..d_ff];
+                linear_bwd(&ba.fx, &p[bo.w1..], &du1, rows, d, d_ff, dw1, db1, Some(&mut dfx[..]));
+            }
+            // ln2 adds into the residual path: dh1 = dh + LNbwd(dfx).
+            let mut dh1 = dh;
+            {
+                let (dg, db) = grads[bo.ln2_g..bo.ln2_g + 2 * d].split_at_mut(d);
+                let g2 = &p[bo.ln2_g..bo.ln2_g + d];
+                layernorm_bwd(&dfx, &ba.xhat2, &ba.rstd2, g2, rows, d, dg, db, &mut dh1);
+            }
+            // h1 = hin + ao·Wo + bo.
+            let mut dao = vec![0.0; rows * d];
+            {
+                let (dwo, rest) = grads[bo.wo..].split_at_mut(d * d);
+                let dbo = &mut rest[..d];
+                linear_bwd(&ba.ao, &p[bo.wo..], &dh1, rows, d, d, dwo, dbo, Some(&mut dao[..]));
+            }
+            // Attention backward per (batch, head).
+            let mut dqkv = vec![0.0; rows * 3 * d];
+            for b in 0..bsz {
+                for hh in 0..n_heads {
+                    let q_of = |s: usize| (b * seq + s) * 3 * d + hh * hd;
+                    let k_of = |s: usize| (b * seq + s) * 3 * d + d + hh * hd;
+                    let v_of = |s: usize| (b * seq + s) * 3 * d + 2 * d + hh * hd;
+                    let o_of = |s: usize| (b * seq + s) * d + hh * hd;
+                    let at_base = (b * n_heads + hh) * seq * seq;
+                    for s in 0..seq {
+                        let at_row = &ba.attn[at_base + s * seq..at_base + (s + 1) * seq];
+                        // dattn[s,t] = dao_h[s]·v[t]; dv[t] += attn[s,t]·dao_h[s].
+                        let mut dattn = vec![0.0; seq];
+                        for (t, dat) in dattn.iter_mut().enumerate() {
+                            let mut acc = 0.0;
+                            for e in 0..hd {
+                                acc += dao[o_of(s) + e] * ba.qkv[v_of(t) + e];
+                            }
+                            *dat = acc;
+                            for e in 0..hd {
+                                dqkv[v_of(t) + e] += at_row[t] * dao[o_of(s) + e];
+                            }
+                        }
+                        // Softmax backward, then the 1/sqrt(hd) scale.
+                        let dot: f64 = dattn.iter().zip(at_row).map(|(&da, &av)| da * av).sum();
+                        for t in 0..seq {
+                            let ds = at_row[t] * (dattn[t] - dot) * inv;
+                            for e in 0..hd {
+                                dqkv[q_of(s) + e] += ds * ba.qkv[k_of(t) + e];
+                                dqkv[k_of(t) + e] += ds * ba.qkv[q_of(s) + e];
+                            }
+                        }
+                    }
+                }
+            }
+            // qkv = a·Wqkv + bqkv.
+            let mut da = vec![0.0; rows * d];
+            {
+                let (dwq, rest) = grads[bo.wqkv..].split_at_mut(d * 3 * d);
+                let dbq = &mut rest[..3 * d];
+                let dx = Some(&mut da[..]);
+                linear_bwd(&ba.a, &p[bo.wqkv..], &dqkv, rows, d, 3 * d, dwq, dbq, dx);
+            }
+            // ln1 adds into the residual path: dhin = dh1 + LNbwd(da).
+            let mut dhin = dh1;
+            {
+                let (dg, db) = grads[bo.ln1_g..bo.ln1_g + 2 * d].split_at_mut(d);
+                let g1 = &p[bo.ln1_g..bo.ln1_g + d];
+                layernorm_bwd(&da, &ba.xhat1, &ba.rstd1, g1, rows, d, dg, db, &mut dhin);
+            }
+            dh = dhin;
+        }
+
+        // Embedding: h0 = x·We + be + pos.
+        for b in 0..bsz {
+            for s in 0..seq {
+                let dr = &dh[(b * seq + s) * d..(b * seq + s + 1) * d];
+                let pr = &mut grads[o.pos + s * d..o.pos + (s + 1) * d];
+                for (pv, &dv) in pr.iter_mut().zip(dr) {
+                    *pv += dv;
+                }
+            }
+        }
+        let (dwe, rest) = grads[o.embed_w..].split_at_mut(d_in * d);
+        linear_bwd(x, &p[o.embed_w..], &dh, rows, d_in, d, dwe, &mut rest[..d], None);
+    }
+
+    /// One full train step at `params` on one batch: loss + flat grads.
+    fn train_step(&self, params: &[f64], x: &[f64], y: &[i32]) -> (f64, Vec<f64>) {
+        let acts = self.forward(params, x);
+        let (loss, dlogits) = self.loss_and_dlogits(&acts.logits, y);
+        let mut grads = vec![0.0; params.len()];
+        self.backward(params, x, &acts, &dlogits, &mut grads);
+        (loss, grads)
+    }
+
+    /// Evaluate `params` on `n_batches` held-out batches — the native
+    /// twin of `PjrtModelSource::evaluate` (same dataset, same rank
+    /// counting for Top-5).
+    pub fn evaluate(&mut self, params: &[f32], n_batches: usize) -> anyhow::Result<EvalMetrics> {
+        anyhow::ensure!(params.len() == self.layout.n_params, "flat params dim mismatch");
+        anyhow::ensure!(n_batches > 0, "evaluate needs n_batches >= 1");
+        let p: Vec<f64> = params.iter().map(|&v| v as f64).collect();
+        let (bsz, c) = (self.cfg.batch, self.cfg.n_classes);
+        let mut loss = 0.0;
+        let mut top1 = 0.0;
+        let mut top5 = 0.0;
+        let k = 5usize.min(c);
+        for batch in self.dataset.eval_batches(bsz, n_batches) {
+            let x: Vec<f64> = batch.x.iter().map(|&v| v as f64).collect();
+            let acts = self.forward(&p, &x);
+            let (l, _) = self.loss_and_dlogits(&acts.logits, &batch.y);
+            self.n_exec += 1;
+            loss += l;
+            for b in 0..bsz {
+                let lr = &acts.logits[b * c..(b + 1) * c];
+                let yi = batch.y[b] as usize;
+                // Rank counting, like the exported eval_step: the true
+                // class is in the top k iff < k logits strictly beat it.
+                let rank = lr.iter().filter(|&&v| v > lr[yi]).count();
+                if rank == 0 {
+                    top1 += 1.0;
+                }
+                if rank < k {
+                    top5 += 1.0;
+                }
+            }
+        }
+        let n = n_batches * bsz;
+        Ok(EvalMetrics {
+            loss: loss / n_batches.max(1) as f64,
+            top1: top1 / n as f64,
+            top5: top5 / n as f64,
+            n,
+        })
+    }
+}
+
+impl GradientSource for NativeModelSource {
+    fn dim(&self) -> usize {
+        self.layout.n_params
+    }
+
+    fn update(
+        &mut self,
+        worker: usize,
+        step: u64,
+        x_hat: &[f32],
+        out: &mut [f32],
+    ) -> anyhow::Result<f64> {
+        anyhow::ensure!(x_hat.len() == self.layout.n_params, "flat params dim mismatch");
+        anyhow::ensure!(out.len() == self.layout.n_params, "gradient buffer dim mismatch");
+        let batch = self.dataset.batch(self.cfg.batch, worker, step);
+        let p: Vec<f64> = x_hat.iter().map(|&v| v as f64).collect();
+        let x: Vec<f64> = batch.x.iter().map(|&v| v as f64).collect();
+        let (loss, grads) = self.train_step(&p, &x, &batch.y);
+        self.n_exec += 1;
+        for (ov, &gv) in out.iter_mut().zip(&grads) {
+            *ov = gv as f32;
+        }
+        Ok(loss)
+    }
+
+    fn t_comp(&self) -> f64 {
+        self.t_comp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> NativeConfig {
+        NativeConfig::preset("tiny").unwrap()
+    }
+
+    fn source(cfg: &NativeConfig) -> NativeModelSource {
+        let layout = cfg.layout_named("tiny");
+        NativeModelSource::new(&layout, 0.3, 21, 1.0).unwrap()
+    }
+
+    #[test]
+    fn presets_match_python_param_counts() {
+        // n_params counted the way model.py counts them; tiny's table:
+        // embed 208 + block 2224 + head 202 = 2634.
+        assert_eq!(tiny().n_params(), 2634);
+        for name in PRESETS {
+            let cfg = NativeConfig::preset(name).unwrap();
+            let l = cfg.layout_named(name);
+            l.validate().unwrap();
+            assert_eq!(l.n_params, cfg.n_params());
+            assert_eq!(l.n_groups, cfg.n_blocks + 2);
+            assert_eq!(l.layers().len(), cfg.n_blocks + 2, "{name}");
+        }
+        assert!(NativeConfig::preset("nope").is_err());
+    }
+
+    #[test]
+    fn init_params_scheme() {
+        let cfg = tiny();
+        let p = cfg.init_params(21);
+        assert_eq!(p.len(), cfg.n_params());
+        let layout = cfg.layout_named("tiny");
+        for slot in &layout.params {
+            let vals = &p[slot.offset..slot.offset + slot.size];
+            let leaf = slot.name.rsplit('/').next().unwrap();
+            match leaf {
+                "b" | "bqkv" | "bo" | "b1" | "b2" => assert!(vals.iter().all(|&v| v == 0.0)),
+                "g" => assert!(vals.iter().all(|&v| v == 1.0)),
+                _ => assert!(vals.iter().any(|&v| v != 0.0), "{}", slot.name),
+            }
+        }
+        // Deterministic in the seed.
+        assert_eq!(p, cfg.init_params(21));
+        assert_ne!(p, cfg.init_params(22));
+    }
+
+    #[test]
+    fn from_layout_validates_slot_table() {
+        let cfg = tiny();
+        let layout = cfg.layout_named("tiny");
+        assert_eq!(NativeConfig::from_layout(&layout).unwrap(), cfg);
+        let mut bad = layout.clone();
+        bad.params[3].name = "renamed".into();
+        assert!(NativeConfig::from_layout(&bad).is_err());
+        // A synthetic (non-transformer) layout is rejected up front.
+        assert!(NativeConfig::from_layout(&ModelLayout::synthetic(&[4, 4])).is_err());
+    }
+
+    #[test]
+    fn loss_near_ln10_at_init_and_deterministic() {
+        let cfg = tiny();
+        let mut src = source(&cfg);
+        let params = cfg.init_params(21);
+        let mut g1 = vec![0.0f32; cfg.n_params()];
+        let l1 = src.update(0, 0, &params, &mut g1).unwrap();
+        // Cross-entropy at a random init sits near ln(10).
+        assert!((l1 - (10f64).ln()).abs() < 1.5, "loss={l1}");
+        let norm: f64 = g1.iter().map(|&g| (g as f64) * (g as f64)).sum();
+        assert!(norm > 0.0 && norm.is_finite());
+        let mut g2 = vec![0.0f32; cfg.n_params()];
+        let l2 = src.update(0, 0, &params, &mut g2).unwrap();
+        assert_eq!(l1, l2, "same (worker, step) must be bit-identical");
+        assert_eq!(g1, g2);
+        assert_eq!(src.executions(), 2);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        // The safety net for the hand-written backward pass: central
+        // finite differences over coordinates touching every slot kind
+        // (embed, LN gains/biases, attention, FFN, head). The forward
+        // runs in f64, so tight tolerances hold.
+        let cfg = tiny();
+        let src = source(&cfg);
+        let layout = cfg.layout_named("tiny");
+        let batch = src.dataset.batch(cfg.batch, 0, 0);
+        let p0: Vec<f64> = cfg.init_params(21).iter().map(|&v| v as f64).collect();
+        let x: Vec<f64> = batch.x.iter().map(|&v| v as f64).collect();
+        let (_, grads) = src.train_step(&p0, &x, &batch.y);
+        let eps = 1e-5;
+        for slot in &layout.params {
+            // First, middle and last coordinate of every slot.
+            for idx in [slot.offset, slot.offset + slot.size / 2, slot.offset + slot.size - 1] {
+                let mut pp = p0.clone();
+                pp[idx] += eps;
+                let (lp, _) = src.train_step(&pp, &x, &batch.y);
+                pp[idx] = p0[idx] - eps;
+                let (lm, _) = src.train_step(&pp, &x, &batch.y);
+                let fd = (lp - lm) / (2.0 * eps);
+                let an = grads[idx];
+                assert!(
+                    (fd - an).abs() <= 1e-6 + 1e-4 * an.abs().max(fd.abs()),
+                    "{}[{}]: analytic {an} vs fd {fd}",
+                    slot.name,
+                    idx - slot.offset
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sgd_reduces_loss() {
+        let cfg = tiny();
+        let mut src = source(&cfg);
+        let mut params = cfg.init_params(21);
+        let mut grads = vec![0.0f32; cfg.n_params()];
+        let first = src.update(0, 0, &params, &mut grads).unwrap();
+        let mut last = first;
+        for step in 0..40 {
+            last = src.update(0, step, &params, &mut grads).unwrap();
+            for (p, &g) in params.iter_mut().zip(&grads) {
+                *p -= 0.05 * g;
+            }
+        }
+        assert!(last < first - 0.15, "loss did not drop: {first:.4} -> {last:.4}");
+    }
+
+    #[test]
+    fn evaluate_counts_consistent() {
+        let cfg = tiny();
+        let mut src = source(&cfg);
+        let params = cfg.init_params(21);
+        let e = src.evaluate(&params, 2).unwrap();
+        assert!(e.loss.is_finite());
+        assert!((0.0..=1.0).contains(&e.top1));
+        assert!(e.top5 >= e.top1 && e.top5 <= 1.0);
+        assert_eq!(e.n, 2 * cfg.batch);
+        let e2 = src.evaluate(&params, 2).unwrap();
+        assert_eq!(e.loss, e2.loss);
+        assert_eq!(e.top1, e2.top1);
+        // Zero batches is a loud error, not NaN accuracies.
+        assert!(src.evaluate(&params, 0).is_err());
+    }
+}

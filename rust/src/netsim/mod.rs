@@ -20,6 +20,8 @@ pub mod events;
 
 pub use events::{Event, EventKind, EventQueue};
 
+use std::sync::Arc;
+
 use crate::bandwidth::BandwidthTrace;
 
 /// Direction of a transfer on a worker link.
@@ -32,16 +34,21 @@ pub enum Direction {
 }
 
 /// One worker's asymmetric link.
+///
+/// The traces are held by shared handle: traces are immutable, so a
+/// scenario cell family can build each per-worker trace once and
+/// assemble every member cell's `NetSim` from `Arc` clones of the same
+/// allocation (`driver::WarmFamily`) — bit-identical to building fresh
+/// traces from the spec, since construction is deterministic.
 pub struct Link {
-    pub up: Box<dyn BandwidthTrace>,
-    pub down: Box<dyn BandwidthTrace>,
+    pub up: Arc<dyn BandwidthTrace>,
+    pub down: Arc<dyn BandwidthTrace>,
 }
 
 impl Link {
-    pub fn new(up: Box<dyn BandwidthTrace>, down: Box<dyn BandwidthTrace>) -> Self {
+    pub fn new(up: Arc<dyn BandwidthTrace>, down: Arc<dyn BandwidthTrace>) -> Self {
         Self { up, down }
     }
-
 }
 
 /// Result of simulating one transfer.
@@ -109,6 +116,13 @@ impl NetSim {
         self.links.len()
     }
 
+    /// Worker `m`'s link (read-only: lets tests assert that a
+    /// family-assembled netsim really shares its trace handles via
+    /// `Arc::ptr_eq`).
+    pub fn link(&self, worker: usize) -> &Link {
+        &self.links[worker]
+    }
+
     /// Ground-truth instantaneous bandwidth (for plots / oracles only —
     /// the coordinator must go through a `BandwidthMonitor`).
     pub fn true_bps(&self, worker: usize, dir: Direction, t: f64) -> f64 {
@@ -155,12 +169,12 @@ mod tests {
     fn sim2() -> NetSim {
         NetSim::new(vec![
             Link::new(
-                Box::new(ConstantTrace::new(100.0)),
-                Box::new(ConstantTrace::new(200.0)),
+                Arc::new(ConstantTrace::new(100.0)),
+                Arc::new(ConstantTrace::new(200.0)),
             ),
             Link::new(
-                Box::new(SinSquaredTrace::new(50.0, 1.0, 10.0)),
-                Box::new(ConstantTrace::new(50.0)),
+                Arc::new(SinSquaredTrace::new(50.0, 1.0, 10.0)),
+                Arc::new(ConstantTrace::new(50.0)),
             ),
         ])
     }

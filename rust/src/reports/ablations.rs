@@ -7,6 +7,7 @@
 //! 3. Kimad+ discretization factor D: allocation quality vs DP cost
 //!    (the paper's O(N·K·D) knob, §3.2).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::bandwidth::{BandwidthTrace, SinSquaredTrace};
@@ -30,8 +31,8 @@ fn sim_with(budget_safety: f64, monitor_alpha: f64) -> Simulation<QuadraticSourc
         (0..2)
             .map(|i| {
                 Link::new(
-                    Box::new(wave(0.3 * i as f64)),
-                    Box::new(wave(1.0 + 0.3 * i as f64)),
+                    Arc::new(wave(0.3 * i as f64)),
+                    Arc::new(wave(1.0 + 0.3 * i as f64)),
                 )
             })
             .collect(),

@@ -2,12 +2,13 @@
 //! regimes. GD vs best-tuned EF21(TopK) vs Kimad, f(x) against virtual
 //! time; uplink only (the paper neglects the downlink here).
 
+use std::sync::Arc;
+
 use crate::bandwidth::{ConstantTrace, SinSquaredTrace};
-use crate::coordinator::{QuadraticSource, SimConfig, Simulation};
+use crate::coordinator::{GradientSource, QuadraticSource, SimConfig, Simulation};
 use crate::kimad::{BudgetParams, CompressPolicy};
 use crate::metrics::{Series, SeriesSet};
 use crate::netsim::{Link, NetSim};
-use crate::coordinator::GradientSource;
 use crate::optim::{LayerwiseSgd, Schedule};
 use crate::quadratic::Quadratic;
 
@@ -121,8 +122,8 @@ pub fn run_at(scn: Scenario, method: Method, gamma: f64, t_sys: f64, horizon: f6
     let src = QuadraticSource::new(q, T_COMP);
     // Uplink = the scenario trace; downlink neglected (≈infinite).
     let net = NetSim::new(vec![Link::new(
-        Box::new(SinSquaredTrace::new(eta, theta, delta)),
-        Box::new(ConstantTrace::new(1e15)),
+        Arc::new(SinSquaredTrace::new(eta, theta, delta)),
+        Arc::new(ConstantTrace::new(1e15)),
     )]);
     let cfg = SimConfig {
         m: 1,

@@ -65,6 +65,11 @@ impl Manifest {
 pub struct ArtifactStore {
     pub dir: PathBuf,
     manifest: Manifest,
+    /// Initial-params cache (preset → shared flat vector): a store
+    /// shared across warm families (`Arc<ArtifactStore>`) reads each
+    /// `params-<preset>.bin` from disk once, however many families
+    /// hold it.
+    params_cache: std::sync::Mutex<BTreeMap<String, std::sync::Arc<Vec<f32>>>>,
 }
 
 impl ArtifactStore {
@@ -78,7 +83,7 @@ impl ArtifactStore {
             )
         })?;
         let manifest = Manifest::from_json(&Value::parse(&text)?)?;
-        Ok(Self { dir, manifest })
+        Ok(Self { dir, manifest, params_cache: Default::default() })
     }
 
     /// Default location: ./artifacts or $KIMAD_ARTIFACTS.
@@ -120,13 +125,137 @@ impl ArtifactStore {
 
     /// The seeded initial parameters (f32 LE), when exported.
     pub fn initial_params(&self, preset: &str) -> anyhow::Result<Vec<f32>> {
+        Ok((*self.initial_params_shared(preset)?).clone())
+    }
+
+    /// Whether the preset's exported train HLO is real lowered text —
+    /// as opposed to the `gen-artifacts` placeholder, which only the
+    /// native backend can execute. The driver keys its PJRT-vs-native
+    /// backend choice on this, so a native-generated artifact set
+    /// keeps working on a build that carries the real PJRT bindings.
+    /// A missing/unreadable HLO file is an **error** (the manifest
+    /// lists it, so the set is broken), never a silent backend switch.
+    /// Only a fixed-size prefix is read — real HLO modules run to MB.
+    pub fn has_real_hlo(&self, preset: &str) -> anyhow::Result<bool> {
+        use std::io::Read;
+        let m = self.model(preset)?;
+        let path = self.path(&m.train_hlo);
+        let file = std::fs::File::open(&path).map_err(|e| {
+            anyhow::anyhow!("reading {} (broken artifact set?): {e}", path.display())
+        })?;
+        let mut head = Vec::new();
+        file.take(64).read_to_end(&mut head)?;
+        Ok(!head.starts_with(NATIVE_HLO_PLACEHOLDER.as_bytes()))
+    }
+
+    /// [`Self::initial_params`] behind a shared handle, read from disk
+    /// once per store — what `driver::WarmDeep` holds so several warm
+    /// families over one preset keep one resident copy.
+    pub fn initial_params_shared(
+        &self,
+        preset: &str,
+    ) -> anyhow::Result<std::sync::Arc<Vec<f32>>> {
+        let mut cache = self.params_cache.lock().expect("params cache poisoned");
+        if let Some(p) = cache.get(preset) {
+            return Ok(p.clone());
+        }
         let m = self.model(preset)?;
         let rel = m
             .params
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("preset '{preset}' has no params.bin"))?;
-        read_f32_le(&self.path(rel))
+        let params = std::sync::Arc::new(read_f32_le(&self.path(rel))?);
+        cache.insert(preset.to_string(), params.clone());
+        Ok(params)
     }
+}
+
+/// First line of the placeholder HLO files `write_native_artifacts`
+/// emits — the marker [`ArtifactStore::has_real_hlo`] keys on.
+pub const NATIVE_HLO_PLACEHOLDER: &str = "// native artifact set";
+
+/// Write a **native** artifact set — layout + seeded initial params +
+/// manifest — for the given transformer presets, without JAX: the rust
+/// mirror of `python/compile/aot.py` minus the HLO lowering. The HLO
+/// entries point at placeholder text files (the native backend never
+/// reads them). Regenerating cannot clobber a full `make artifacts`
+/// set: an existing manifest is *merged into* (other presets and the
+/// Pallas kernel entries survive), a preset whose HLO is real lowered
+/// text is **refused** outright (its JAX-drawn params/layout stay
+/// authoritative — pick a fresh `--out-dir`), and a seed mismatch
+/// against an existing manifest is an error (params and dataset must
+/// agree on one seed). This is what `kimad gen-artifacts` runs, and
+/// what lets CI smoke the deep-model scenario grid offline.
+pub fn write_native_artifacts(
+    dir: &Path,
+    presets: &[String],
+    seed: u64,
+) -> anyhow::Result<ArtifactStore> {
+    use crate::model::NativeConfig;
+    std::fs::create_dir_all(dir)?;
+    // Merge with an existing manifest instead of clobbering it.
+    let manifest_path = dir.join("manifest.json");
+    let mut manifest = match std::fs::read_to_string(&manifest_path) {
+        Ok(text) => {
+            let v = Value::parse(&text)?;
+            let existing = v.get("seed")?.as_u64()?;
+            anyhow::ensure!(
+                existing == seed,
+                "artifacts at {} were built with seed {existing}, not {seed}; pick a \
+                 fresh --out-dir or pass the matching --seed",
+                dir.display()
+            );
+            v
+        }
+        Err(_) => Value::obj(vec![
+            ("seed", Value::num(seed as f64)),
+            ("models", Value::Obj(Default::default())),
+            ("kernels", Value::Obj(Default::default())),
+        ]),
+    };
+    for preset in presets {
+        let cfg = NativeConfig::preset(preset)?;
+        let layout = cfg.layout_named(preset);
+        // A preset `make artifacts` exported for real (lowered HLO on
+        // disk) keeps its JAX-drawn params/layout: silently replacing
+        // params-<preset>.bin with native draws would change every
+        // subsequent PJRT run's starting point.
+        let train_hlo = dir.join(format!("model-{preset}.hlo.txt"));
+        if let Ok(existing) = std::fs::read_to_string(&train_hlo) {
+            anyhow::ensure!(
+                existing.starts_with(NATIVE_HLO_PLACEHOLDER),
+                "preset '{preset}' in {} carries real lowered HLO (from `make artifacts`); \
+                 refusing to overwrite its params/layout — use a fresh --out-dir",
+                dir.display()
+            );
+        }
+        std::fs::write(dir.join(format!("layout-{preset}.json")), layout.to_json().to_string())?;
+        let params = cfg.init_params(seed);
+        let bytes: Vec<u8> = params.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join(format!("params-{preset}.bin")), bytes)?;
+        let placeholder = format!(
+            "{NATIVE_HLO_PLACEHOLDER} (kimad gen-artifacts): no HLO exported for '{preset}'.\n\
+             // Run `make artifacts` (python -m compile.aot) to lower the real modules.\n"
+        );
+        std::fs::write(&train_hlo, &placeholder)?;
+        std::fs::write(dir.join(format!("eval-{preset}.hlo.txt")), &placeholder)?;
+        let entry = Value::obj(vec![
+            ("train_hlo", Value::str(format!("model-{preset}.hlo.txt"))),
+            ("eval_hlo", Value::str(format!("eval-{preset}.hlo.txt"))),
+            ("layout", Value::str(format!("layout-{preset}.json"))),
+            ("n_params", Value::num(layout.n_params as f64)),
+            ("params", Value::str(format!("params-{preset}.bin"))),
+        ]);
+        let Value::Obj(fields) = &mut manifest else {
+            anyhow::bail!("manifest is not an object");
+        };
+        match fields.get_mut("models") {
+            Some(Value::Obj(models)) => models.insert(preset.clone(), entry),
+            _ => anyhow::bail!("manifest 'models' is not an object"),
+        };
+    }
+    std::fs::write(&manifest_path, manifest.to_string())?;
+    ArtifactStore::open(dir)
 }
 
 /// Read a little-endian f32 binary file.
@@ -175,6 +304,67 @@ mod tests {
         let dir = tmpdir("missing");
         let err = ArtifactStore::open(&dir).unwrap_err().to_string();
         assert!(err.contains("make artifacts"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn native_artifacts_roundtrip_through_the_store() {
+        let dir = tmpdir("native");
+        let store =
+            write_native_artifacts(&dir, &["tiny".to_string(), "small".to_string()], 21).unwrap();
+        assert_eq!(store.seed(), 21);
+        assert_eq!(store.model_presets(), vec!["small", "tiny"]);
+        let layout = store.layout("tiny").unwrap();
+        layout.validate().unwrap();
+        let cfg = crate::model::NativeConfig::preset("tiny").unwrap();
+        assert_eq!(layout.n_params, cfg.n_params());
+        // The params round-trip bit-for-bit through the f32-LE file,
+        // and the shared handle is cached (one disk read per store).
+        assert_eq!(store.initial_params("tiny").unwrap(), cfg.init_params(21));
+        let a = store.initial_params_shared("tiny").unwrap();
+        let b = store.initial_params_shared("tiny").unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+        // And the layout is exactly the canonical transformer table, so
+        // the native source accepts it.
+        crate::model::NativeConfig::from_layout(&layout).unwrap();
+        // Unknown presets still fail loudly.
+        assert!(write_native_artifacts(&dir, &["nope".to_string()], 21).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn native_artifacts_merge_into_existing_sets_without_clobbering() {
+        let dir = tmpdir("merge");
+        // Simulate a full `make artifacts` set: a manifest carrying
+        // another preset and a Pallas kernel, plus real lowered HLO
+        // for the 'small' preset.
+        std::fs::write(dir.join("model-small.hlo.txt"), "HloModule real").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"seed": 21, "models": {"small": {"train_hlo": "model-small.hlo.txt",
+                "eval_hlo": "b", "layout": "c", "n_params": 10}},
+               "kernels": {"k": {"hlo": "e", "d": 4096}}}"#,
+        )
+        .unwrap();
+        let store = write_native_artifacts(&dir, &["tiny".to_string()], 21).unwrap();
+        // The JAX preset and the kernel entries survive the merge.
+        assert_eq!(store.model_presets(), vec!["small", "tiny"]);
+        assert!(store.kernel("k").is_ok());
+        // The backend chooser can tell the two presets apart.
+        assert!(store.has_real_hlo("small").unwrap());
+        assert!(!store.has_real_hlo("tiny").unwrap());
+        // Regenerating a native preset is fine; a JAX-exported preset
+        // is refused (its params/layout stay authoritative).
+        write_native_artifacts(&dir, &["tiny".to_string()], 21).unwrap();
+        let err = write_native_artifacts(&dir, &["small".to_string()], 21).unwrap_err();
+        assert!(err.to_string().contains("real lowered HLO"), "{err}");
+        assert_eq!(
+            std::fs::read_to_string(dir.join("model-small.hlo.txt")).unwrap(),
+            "HloModule real"
+        );
+        // A seed mismatch against the existing set is refused.
+        let err = write_native_artifacts(&dir, &["tiny".to_string()], 22).unwrap_err();
+        assert!(err.to_string().contains("seed"), "{err}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

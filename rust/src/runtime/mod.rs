@@ -22,6 +22,6 @@ pub mod backend;
 pub mod client;
 pub mod model_exec;
 
-pub use artifact::{ArtifactStore, KernelArtifact, ModelArtifact};
+pub use artifact::{write_native_artifacts, ArtifactStore, KernelArtifact, ModelArtifact};
 pub use client::{Executable, Runtime};
 pub use model_exec::{EvalMetrics, PjrtModelSource};

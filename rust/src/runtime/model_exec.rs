@@ -1,6 +1,8 @@
 //! The deep-model gradient source: `train_step`/`eval_step` HLO
 //! executables driven from the coordinator (Python never runs here).
 
+use std::sync::Arc;
+
 use crate::coordinator::GradientSource;
 use crate::data::SyntheticDataset;
 use crate::model::ModelLayout;
@@ -18,11 +20,16 @@ pub struct EvalMetrics {
 }
 
 /// GradientSource backed by the AOT-compiled JAX model.
+///
+/// The executables are held by shared handle: compiling HLO is the
+/// most expensive setup step, so a warm cell family compiles the two
+/// modules once ([`Self::compile`]) and builds one source per member
+/// cell from the shared handles ([`Self::from_parts`]).
 pub struct PjrtModelSource {
     pub layout: ModelLayout,
     pub dataset: SyntheticDataset,
-    train: Executable,
-    eval: Executable,
+    train: Arc<Executable>,
+    eval: Arc<Executable>,
     /// Virtual computation time per round (§4.2 sets
     /// `T_comp = ModelSize / AverageBandwidth`).
     pub t_comp: f64,
@@ -39,18 +46,38 @@ impl PjrtModelSource {
         sigma: f32,
         t_comp: f64,
     ) -> anyhow::Result<Self> {
-        let art = store.model(preset)?;
+        let (train, eval) = Self::compile(rt, store, preset)?;
         let layout = store.layout(preset)?;
-        let train = rt.load_hlo_text(&store.path(&art.train_hlo))?;
-        let eval = rt.load_hlo_text(&store.path(&art.eval_hlo))?;
-        let dataset = SyntheticDataset::new(
-            layout.seq,
-            layout.d_in,
-            layout.n_classes,
-            sigma,
-            store.seed(),
-        );
-        Ok(Self { layout, dataset, train, eval, t_comp, n_exec: 0 })
+        Ok(Self::from_parts(layout, train, eval, sigma, store.seed(), t_comp))
+    }
+
+    /// Compile the preset's train/eval HLO modules once, behind shared
+    /// handles a family can hand to every member cell's source.
+    pub fn compile(
+        rt: &Runtime,
+        store: &ArtifactStore,
+        preset: &str,
+    ) -> anyhow::Result<(Arc<Executable>, Arc<Executable>)> {
+        let art = store.model(preset)?;
+        let train = Arc::new(rt.load_hlo_text(&store.path(&art.train_hlo))?);
+        let eval = Arc::new(rt.load_hlo_text(&store.path(&art.eval_hlo))?);
+        Ok((train, eval))
+    }
+
+    /// Assemble a source from pre-compiled executables and a parsed
+    /// layout — the warm-family path ([`Self::load`] is compile +
+    /// this).
+    pub fn from_parts(
+        layout: ModelLayout,
+        train: Arc<Executable>,
+        eval: Arc<Executable>,
+        sigma: f32,
+        seed: u64,
+        t_comp: f64,
+    ) -> Self {
+        let dataset =
+            SyntheticDataset::new(layout.seq, layout.d_in, layout.n_classes, sigma, seed);
+        Self { layout, dataset, train, eval, t_comp, n_exec: 0 }
     }
 
     /// Number of train/eval executions so far (perf accounting).

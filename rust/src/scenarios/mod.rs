@@ -1,7 +1,7 @@
-//! Scenario-matrix engine: sweep {bandwidth trace × compression policy
-//! × execution mode × worker count × budget safety factor × server
-//! shard count} and execute the cross-product in parallel, one JSON
-//! summary per cell.
+//! Scenario-matrix engine: sweep {workload × bandwidth trace ×
+//! compression policy × execution mode × worker count × budget safety
+//! factor × server shard count} and execute the cross-product in
+//! parallel, one JSON summary per cell.
 //!
 //! This is how the repo evaluates "as many scenarios as you can
 //! imagine" (ROADMAP) the way Accordion and the gradient-compression
@@ -10,14 +10,16 @@
 //! experiment on a work-stealing thread pool. Per-cell results are
 //! bit-reproducible regardless of pool size.
 //!
-//! Two scaling mechanisms keep big grids honest (PR 4):
+//! Two scaling mechanisms keep big grids honest:
 //!
-//! * **Cell families** — cells sharing {uplink trace × workload × M}
-//!   reuse one [`WarmQuadratic`]: the trace statistics, the
-//!   `Quadratic` instance and the layer layout are built once per
-//!   family, not once per cell. Warm and cold runs are bit-identical
-//!   (the warm path *is* the cold path minus the rebuilds — asserted
-//!   in tests).
+//! * **Cell families** — cells sharing {workload × uplink trace × M}
+//!   reuse one [`WarmFamily`]: the `Arc`-shared bandwidth traces, the
+//!   workload instance (the `Quadratic`, or the deep model's
+//!   `ArtifactStore`/layout/initial params) and the trace-derived
+//!   prior/`T_comp` are built once per family, not once per cell
+//!   ([`plan_families`]). Warm and cold runs are bit-identical (the
+//!   warm path *is* the cold path minus the rebuilds — asserted in
+//!   tests).
 //! * **Cooperative thread budget** — [`thread_budget`] splits the
 //!   machine between the matrix pool and the cells
 //!   (`workers × per-cell ≤ available_parallelism`), and every cell
@@ -31,18 +33,34 @@
 
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::bandwidth::TraceSpec;
 use crate::config::{
-    compute_from_json, compute_to_json, policy_from_json, policy_to_json, ExecModeSpec,
-    ExperimentConfig, OptimizerSpec, WorkloadSpec,
+    compute_from_json, compute_to_json, policy_from_json, policy_to_json, workload_from_json,
+    workload_to_json, ExecModeSpec, ExperimentConfig, OptimizerSpec, WorkloadSpec,
 };
 use crate::coordinator::ComputeModel;
-use crate::driver::{ExperimentResult, WarmQuadratic};
+use crate::driver::{open_artifact_store, ExperimentResult, WarmFamily};
 use crate::kimad::{BudgetParams, CompressPolicy};
+use crate::runtime::ArtifactStore;
 use crate::util::json::Value;
+
+/// One named workload in the grid — the axis that mixes the §4.1
+/// quadratic and deep-model presets in a single sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NamedWorkload {
+    pub name: String,
+    pub spec: WorkloadSpec,
+}
+
+impl NamedWorkload {
+    /// Name the workload by its [`WorkloadSpec::short_name`].
+    pub fn from_spec(spec: WorkloadSpec) -> Self {
+        Self { name: spec.short_name(), spec }
+    }
+}
 
 /// One named uplink bandwidth pattern in the grid.
 #[derive(Debug, Clone, PartialEq)]
@@ -76,13 +94,10 @@ impl NamedMode {
     }
 }
 
-/// Per-cell constants: the workload and schedule every cell shares.
+/// Per-cell constants: the schedule and environment every cell shares
+/// (the workload itself is an axis — see [`ScenarioGrid::workloads`]).
 #[derive(Debug, Clone, PartialEq)]
 pub struct GridBase {
-    /// Quadratic workload dimension (§4.1).
-    pub d: usize,
-    pub n_layers: usize,
-    pub t_comp: f64,
     /// Per-direction communication-time budget (§4.2 convention).
     pub t_comm: f64,
     pub gamma: f64,
@@ -95,6 +110,9 @@ pub struct GridBase {
     /// async cells diverge from lockstep).
     pub compute: ComputeModel,
     pub seed: u64,
+    /// Artifact directory for deep-model workloads (`None` =
+    /// `./artifacts` or `$KIMAD_ARTIFACTS`).
+    pub artifacts: Option<String>,
 }
 
 /// The declarative scenario matrix.
@@ -102,6 +120,10 @@ pub struct GridBase {
 pub struct ScenarioGrid {
     pub name: String,
     pub base: GridBase,
+    /// Workload axis: §4.1 quadratics and/or deep-model presets. Deep
+    /// entries run against `base.artifacts` (PJRT when the backend is
+    /// real, the native transformer otherwise).
+    pub workloads: Vec<NamedWorkload>,
     pub traces: Vec<NamedTrace>,
     pub policies: Vec<NamedPolicy>,
     pub modes: Vec<NamedMode>,
@@ -117,6 +139,7 @@ pub struct ScenarioGrid {
 #[derive(Debug, Clone)]
 pub struct ScenarioCell {
     pub id: String,
+    pub workload: String,
     pub trace: String,
     pub policy: String,
     pub mode: String,
@@ -130,6 +153,7 @@ pub struct ScenarioCell {
 #[derive(Debug, Clone, PartialEq)]
 pub struct CellSummary {
     pub id: String,
+    pub workload: String,
     pub trace: String,
     pub policy: String,
     pub mode: String,
@@ -138,7 +162,8 @@ pub struct CellSummary {
     /// Server-shard knob the cell ran with (0 = auto).
     pub shards: usize,
     pub rounds: usize,
-    /// Final objective f(x) at the server model.
+    /// Final objective f(x) at the server model (NaN for workloads
+    /// without an objective notion — the deep model reports loss).
     pub final_f_x: f64,
     /// Final mean worker loss.
     pub final_loss: f64,
@@ -159,9 +184,9 @@ pub struct CellSummary {
 }
 
 impl ScenarioGrid {
-    /// The built-in quick grid: 2 traces × 4 policies × 3 execution
-    /// modes × 2 worker counts (× 1 safety factor) over the §4.1
-    /// quadratic — the smallest sweep that exercises every
+    /// The built-in quick grid: 1 workload × 2 traces × 4 policies × 3
+    /// execution modes × 2 worker counts (× 1 safety factor) over the
+    /// §4.1 quadratic — the smallest sweep that exercises every
     /// `CompressPolicy` and every `ExecMode` under both a flat and an
     /// oscillating link. The compute profile makes the last of four
     /// workers a 4× straggler, so the semi-sync and async cells
@@ -171,9 +196,6 @@ impl ScenarioGrid {
         Self {
             name: "quick".into(),
             base: GridBase {
-                d: 30,
-                n_layers: 3,
-                t_comp: 0.1,
                 t_comm: 0.9,
                 gamma: 0.03,
                 rounds: 60,
@@ -181,7 +203,12 @@ impl ScenarioGrid {
                 warm_start: true,
                 compute: ComputeModel::Profile { factors: vec![1.0, 1.0, 1.0, 4.0] },
                 seed: 21,
+                artifacts: None,
             },
+            workloads: vec![NamedWorkload {
+                name: "quad".into(),
+                spec: WorkloadSpec::Quadratic { d: 30, n_layers: 3, t_comp: 0.1 },
+            }],
             traces: vec![
                 NamedTrace {
                     name: "flat".into(),
@@ -228,74 +255,23 @@ impl ScenarioGrid {
 
     /// Total number of cells in the cross-product.
     pub fn n_cells(&self) -> usize {
-        self.traces.len() * self.policies.len() * self.modes.len()
+        self.workloads.len() * self.traces.len() * self.policies.len() * self.modes.len()
             * self.worker_counts.len() * self.safety_factors.len() * self.shard_counts.len()
     }
 
-    /// Expand the cross-product in deterministic (trace-major) order.
+    /// Expand the cross-product in deterministic (workload-major,
+    /// then trace-major) order.
     pub fn expand(&self) -> Vec<ScenarioCell> {
         let mut cells = Vec::with_capacity(self.n_cells());
-        for tr in &self.traces {
-            for pol in &self.policies {
-                for mode in &self.modes {
-                    for &m in &self.worker_counts {
-                        for &safety in &self.safety_factors {
-                            for &shards in &self.shard_counts {
-                                let id = format!(
-                                    "{}_{}_{}_m{m}_s{safety}_sh{shards}",
-                                    tr.name,
-                                    pol.name,
-                                    mode.name()
-                                );
-                                let cfg = ExperimentConfig {
-                                    name: id.clone(),
-                                    m,
-                                    workload: WorkloadSpec::Quadratic {
-                                        d: self.base.d,
-                                        n_layers: self.base.n_layers,
-                                        t_comp: self.base.t_comp,
-                                    },
-                                    budget: BudgetParams::PerDirection {
-                                        t_comm: self.base.t_comm,
-                                    },
-                                    up_policy: pol.policy.clone(),
-                                    down_policy: pol.policy.clone(),
-                                    optimizer: OptimizerSpec {
-                                        gamma: self.base.gamma,
-                                        layer_weights: vec![],
-                                    },
-                                    uplink: tr.spec.clone(),
-                                    downlink: self.base.downlink.clone(),
-                                    alpha: 1.0,
-                                    rounds: self.base.rounds,
-                                    prior_bps: 0.0,
-                                    warm_start: self.base.warm_start,
-                                    single_layer: false,
-                                    budget_safety: safety,
-                                    // The grid level owns the
-                                    // parallelism; one thread per cell
-                                    // keeps the pool honest. The shard
-                                    // axis is the deliberate exception
-                                    // (results are shard-invariant);
-                                    // run_matrix clamps it to the
-                                    // cooperative per-cell budget.
-                                    threads: 1,
-                                    shards,
-                                    thread_cap: 0,
-                                    mode: mode.spec,
-                                    compute: self.base.compute.clone(),
-                                    seed: self.base.seed,
-                                };
-                                cells.push(ScenarioCell {
-                                    id,
-                                    trace: tr.name.clone(),
-                                    policy: pol.name.clone(),
-                                    mode: mode.name(),
-                                    m,
-                                    safety,
-                                    shards,
-                                    cfg,
-                                });
+        for wl in &self.workloads {
+            for tr in &self.traces {
+                for pol in &self.policies {
+                    for mode in &self.modes {
+                        for &m in &self.worker_counts {
+                            for &safety in &self.safety_factors {
+                                for &shards in &self.shard_counts {
+                                    cells.push(self.cell(wl, tr, pol, mode, m, safety, shards));
+                                }
                             }
                         }
                     }
@@ -305,8 +281,67 @@ impl ScenarioGrid {
         cells
     }
 
+    #[allow(clippy::too_many_arguments)] // private expansion helper over the 7 axes
+    fn cell(
+        &self,
+        wl: &NamedWorkload,
+        tr: &NamedTrace,
+        pol: &NamedPolicy,
+        mode: &NamedMode,
+        m: usize,
+        safety: f64,
+        shards: usize,
+    ) -> ScenarioCell {
+        let id = format!(
+            "{}_{}_{}_{}_m{m}_s{safety}_sh{shards}",
+            wl.name,
+            tr.name,
+            pol.name,
+            mode.name()
+        );
+        let cfg = ExperimentConfig {
+            name: id.clone(),
+            m,
+            workload: wl.spec.clone(),
+            budget: BudgetParams::PerDirection { t_comm: self.base.t_comm },
+            up_policy: pol.policy.clone(),
+            down_policy: pol.policy.clone(),
+            optimizer: OptimizerSpec { gamma: self.base.gamma, layer_weights: vec![] },
+            uplink: tr.spec.clone(),
+            downlink: self.base.downlink.clone(),
+            alpha: 1.0,
+            rounds: self.base.rounds,
+            prior_bps: 0.0,
+            warm_start: self.base.warm_start,
+            single_layer: false,
+            budget_safety: safety,
+            // The grid level owns the parallelism; one thread per cell
+            // keeps the pool honest. The shard axis is the deliberate
+            // exception (results are shard-invariant); run_matrix
+            // clamps it to the cooperative per-cell budget.
+            threads: 1,
+            shards,
+            thread_cap: 0,
+            mode: mode.spec,
+            compute: self.base.compute.clone(),
+            seed: self.base.seed,
+        };
+        ScenarioCell {
+            id,
+            workload: wl.name.clone(),
+            trace: tr.name.clone(),
+            policy: pol.name.clone(),
+            mode: mode.name(),
+            m,
+            safety,
+            shards,
+            cfg,
+        }
+    }
+
     /// Reject empty axes and duplicate cell ids before running.
     pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.workloads.is_empty(), "grid '{}' has no workloads", self.name);
         anyhow::ensure!(!self.traces.is_empty(), "grid '{}' has no traces", self.name);
         anyhow::ensure!(!self.policies.is_empty(), "grid '{}' has no policies", self.name);
         anyhow::ensure!(!self.modes.is_empty(), "grid '{}' has no execution modes", self.name);
@@ -344,10 +379,7 @@ impl ScenarioGrid {
     // -- JSON codec (grid files) ---------------------------------------
 
     pub fn to_json(&self) -> Value {
-        let base = Value::obj(vec![
-            ("d", Value::num(self.base.d as f64)),
-            ("n_layers", Value::num(self.base.n_layers as f64)),
-            ("t_comp", Value::num(self.base.t_comp)),
+        let mut base_fields = vec![
             ("t_comm", Value::num(self.base.t_comm)),
             ("gamma", Value::num(self.base.gamma)),
             ("rounds", Value::num(self.base.rounds as f64)),
@@ -355,10 +387,27 @@ impl ScenarioGrid {
             ("warm_start", Value::Bool(self.base.warm_start)),
             ("compute", compute_to_json(&self.base.compute)),
             ("seed", Value::num(self.base.seed as f64)),
-        ]);
+        ];
+        if let Some(dir) = &self.base.artifacts {
+            base_fields.push(("artifacts", Value::str(dir.clone())));
+        }
         Value::obj(vec![
             ("name", Value::str(self.name.clone())),
-            ("base", base),
+            ("base", Value::obj(base_fields)),
+            (
+                "workloads",
+                Value::Arr(
+                    self.workloads
+                        .iter()
+                        .map(|w| {
+                            Value::obj(vec![
+                                ("name", Value::str(w.name.clone())),
+                                ("spec", workload_to_json(&w.spec)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             (
                 "modes",
                 Value::Arr(self.modes.iter().map(|m| m.spec.to_json()).collect()),
@@ -424,9 +473,6 @@ impl ScenarioGrid {
     pub fn from_json(v: &Value) -> anyhow::Result<Self> {
         let b = v.get("base")?;
         let base = GridBase {
-            d: b.get("d")?.as_usize()?,
-            n_layers: b.get("n_layers")?.as_usize()?,
-            t_comp: b.get("t_comp")?.as_f64()?,
             t_comm: b.get("t_comm")?.as_f64()?,
             gamma: b.get("gamma")?.as_f64()?,
             rounds: b.get("rounds")?.as_u64()?,
@@ -440,6 +486,32 @@ impl ScenarioGrid {
                 Some(c) => compute_from_json(c)?,
             },
             seed: b.opt("seed").and_then(|x| x.as_u64().ok()).unwrap_or(21),
+            artifacts: b
+                .opt("artifacts")
+                .and_then(|x| x.as_str().ok())
+                .map(|s| s.to_string()),
+        };
+        // Grids predating the workload axis hardcoded the quadratic's
+        // knobs in base: {d, n_layers, t_comp}.
+        let workloads = match v.opt("workloads") {
+            Some(arr) => arr
+                .as_arr()?
+                .iter()
+                .map(|w| {
+                    Ok(NamedWorkload {
+                        name: w.get("name")?.as_str()?.to_string(),
+                        spec: workload_from_json(w.get("spec")?)?,
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            None => vec![NamedWorkload {
+                name: "quad".into(),
+                spec: WorkloadSpec::Quadratic {
+                    d: b.get("d")?.as_usize()?,
+                    n_layers: b.get("n_layers")?.as_usize()?,
+                    t_comp: b.get("t_comp")?.as_f64()?,
+                },
+            }],
         };
         // Grids predating the mode axis run lockstep.
         let modes = match v.opt("modes") {
@@ -496,6 +568,7 @@ impl ScenarioGrid {
         Ok(Self {
             name: v.get("name")?.as_str()?.to_string(),
             base,
+            workloads,
             traces,
             policies,
             modes,
@@ -514,8 +587,12 @@ impl ScenarioGrid {
 
 impl CellSummary {
     pub fn to_json(&self) -> Value {
+        // JSON has no NaN: workloads without an f(x) notion (the deep
+        // model) serialize their objective column as null.
+        let num_or_null = |n: f64| if n.is_finite() { Value::num(n) } else { Value::Null };
         Value::obj(vec![
             ("id", Value::str(self.id.clone())),
+            ("workload", Value::str(self.workload.clone())),
             ("trace", Value::str(self.trace.clone())),
             ("policy", Value::str(self.policy.clone())),
             ("mode", Value::str(self.mode.clone())),
@@ -523,8 +600,8 @@ impl CellSummary {
             ("safety", Value::num(self.safety)),
             ("shards", Value::num(self.shards as f64)),
             ("rounds", Value::num(self.rounds as f64)),
-            ("final_f_x", Value::num(self.final_f_x)),
-            ("final_loss", Value::num(self.final_loss)),
+            ("final_f_x", num_or_null(self.final_f_x)),
+            ("final_loss", num_or_null(self.final_loss)),
             ("total_up_bits", Value::num(self.total_up_bits as f64)),
             ("total_down_bits", Value::num(self.total_down_bits as f64)),
             ("virtual_time_s", Value::num(self.virtual_time_s)),
@@ -562,6 +639,7 @@ fn summarize(
     let max_staleness = res.records.iter().map(|r| r.max_staleness()).max().unwrap_or(0);
     Ok(CellSummary {
         id: cell.id.clone(),
+        workload: cell.workload.clone(),
         trace: cell.trace.clone(),
         policy: cell.policy.clone(),
         mode: cell.mode.clone(),
@@ -585,7 +663,7 @@ fn summarize(
 /// state, under the cooperative per-cell thread budget.
 fn run_cell(
     cell: &ScenarioCell,
-    warm: &WarmQuadratic,
+    warm: &WarmFamily,
     cell_threads: usize,
 ) -> anyhow::Result<CellSummary> {
     let t0 = Instant::now();
@@ -596,6 +674,47 @@ fn run_cell(
         .map_err(|e| anyhow::anyhow!("cell '{}': {e}", cell.id))?;
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
     summarize(cell, &res, wall_ms)
+}
+
+/// Group `cells` into warm families keyed by {workload × uplink trace
+/// × M} and prepare each family **once** — the traces are built once,
+/// the deep-model artifacts opened once. Returns the families plus
+/// each cell's family index, in cell order.
+///
+/// Public as the build-count probe the tests use: the number of
+/// `WarmFamily` values *is* the number of trace/artifact builds the
+/// matrix performs, and each family's [`WarmFamily::links`] handles
+/// are the (`Arc::ptr_eq`-testable) allocations every member netsim
+/// shares.
+pub fn plan_families(
+    cells: &[ScenarioCell],
+    artifacts: Option<&str>,
+) -> anyhow::Result<(Vec<WarmFamily>, Vec<usize>)> {
+    let mut keys: Vec<(&str, &str, usize)> = Vec::new();
+    let mut families: Vec<WarmFamily> = Vec::new();
+    let mut cell_family = Vec::with_capacity(cells.len());
+    // One ArtifactStore per artifacts directory, opened lazily and
+    // handed to every deep family (its params cache then reads each
+    // preset from disk once, however many families share the preset).
+    let mut store: Option<Arc<ArtifactStore>> = None;
+    for cell in cells {
+        let key = (cell.workload.as_str(), cell.trace.as_str(), cell.m);
+        let fi = match keys.iter().position(|k| *k == key) {
+            Some(i) => i,
+            None => {
+                keys.push(key);
+                if store.is_none()
+                    && matches!(cell.cfg.workload, WorkloadSpec::DeepModel { .. })
+                {
+                    store = Some(Arc::new(open_artifact_store(artifacts)?));
+                }
+                families.push(WarmFamily::prepare_with(&cell.cfg, artifacts, store.clone())?);
+                keys.len() - 1
+            }
+        };
+        cell_family.push(fi);
+    }
+    Ok((families, cell_family))
 }
 
 /// The cooperative thread budget: how many matrix workers to run and
@@ -626,12 +745,12 @@ pub fn run_matrix(grid: &ScenarioGrid, threads: usize) -> anyhow::Result<Vec<Cel
 /// oversubscribes — useful when sweeping the shard axis for wall-clock
 /// scaling on an otherwise idle box.
 ///
-/// Cells are grouped into *families* (same uplink trace × workload ×
-/// M): the bandwidth trace statistics, the `Quadratic` instance and
-/// the layer layout are built once per family
-/// ([`WarmQuadratic`]) and every member cell starts from that warm
-/// state — bit-identical to a cold build, since the warm path is the
-/// cold path minus the rebuilds.
+/// Cells are grouped into *families* ([`plan_families`]): the
+/// `Arc`-shared bandwidth traces, the workload instance (quadratic, or
+/// the deep model's store/layout/params) and the trace-derived
+/// prior/`T_comp` are built once per family ([`WarmFamily`]) and every
+/// member cell starts from that warm state — bit-identical to a cold
+/// build, since the warm path is the cold path minus the rebuilds.
 pub fn run_matrix_with(
     grid: &ScenarioGrid,
     threads: usize,
@@ -643,23 +762,9 @@ pub fn run_matrix_with(
     let per_cell = if cell_threads == 0 { budget } else { cell_threads };
 
     // Family prep, serial in expansion order (deterministic and cheap
-    // relative to the sweep: one trace integration + one workload
-    // build per family instead of per cell).
-    let mut family_keys: Vec<(&str, usize)> = Vec::new();
-    let mut families: Vec<WarmQuadratic> = Vec::new();
-    let mut cell_family = Vec::with_capacity(cells.len());
-    for cell in &cells {
-        let key = (cell.trace.as_str(), cell.m);
-        let fi = match family_keys.iter().position(|k| *k == key) {
-            Some(i) => i,
-            None => {
-                family_keys.push(key);
-                families.push(WarmQuadratic::prepare(&cell.cfg)?);
-                family_keys.len() - 1
-            }
-        };
-        cell_family.push(fi);
-    }
+    // relative to the sweep: one trace + workload build per family
+    // instead of per cell).
+    let (families, cell_family) = plan_families(&cells, grid.base.artifacts.as_deref())?;
 
     type CellSlot = Mutex<Option<anyhow::Result<CellSummary>>>;
     let next = AtomicUsize::new(0);
@@ -727,13 +832,14 @@ fn sanitize(id: &str) -> String {
 /// Render a compact markdown table over the summaries (CLI output).
 pub fn render_table(summaries: &[CellSummary]) -> String {
     let mut out = String::from(
-        "| cell | rounds | final f(x) | up Mbit | step s | lag s | stale | sh | wall ms |\n\
-         |---|---|---|---|---|---|---|---|---|\n",
+        "| cell | wl | rounds | final f(x) | up Mbit | step s | lag s | stale | sh | wall ms |\n\
+         |---|---|---|---|---|---|---|---|---|---|\n",
     );
     for s in summaries {
         out.push_str(&format!(
-            "| {} | {} | {:.3e} | {:.3} | {:.2} | {:.2} | {} | {} | {:.0} |\n",
+            "| {} | {} | {} | {:.3e} | {:.3} | {:.2} | {:.2} | {} | {} | {:.0} |\n",
             s.id,
+            s.workload,
             s.rounds,
             s.final_f_x,
             s.total_up_bits as f64 / 1e6,
@@ -749,7 +855,10 @@ pub fn render_table(summaries: &[CellSummary]) -> String {
 
 #[cfg(test)]
 mod tests {
+    use std::sync::Arc;
+
     use super::*;
+    use crate::runtime::write_native_artifacts;
 
     fn tiny_grid() -> ScenarioGrid {
         let mut g = ScenarioGrid::default_grid();
@@ -759,10 +868,29 @@ mod tests {
         g
     }
 
+    /// A quad + deep-tiny grid over a generated native artifact set.
+    /// Callers remove `dir` when done.
+    fn mixed_grid(tag: &str) -> (ScenarioGrid, std::path::PathBuf) {
+        let dir = std::env::temp_dir().join(format!("kimad-mixed-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        write_native_artifacts(&dir, &["tiny".to_string()], 21).unwrap();
+        let mut g = tiny_grid();
+        g.base.rounds = 4;
+        g.base.artifacts = Some(dir.to_str().unwrap().to_string());
+        g.policies.truncate(1);
+        g.modes.truncate(2); // sync + semisync
+        g.worker_counts = vec![2];
+        g.workloads.push(NamedWorkload {
+            name: "deep-tiny".into(),
+            spec: WorkloadSpec::DeepModel { preset: "tiny".into(), sigma: 0.3, t_comp: 0.5 },
+        });
+        (g, dir)
+    }
+
     #[test]
     fn expansion_is_full_cross_product() {
         let g = ScenarioGrid::default_grid();
-        assert_eq!(g.n_cells(), 2 * 4 * 3 * 2, "default shard axis is [1]");
+        assert_eq!(g.n_cells(), 2 * 4 * 3 * 2, "default workload and shard axes are singletons");
         let cells = g.expand();
         assert_eq!(cells.len(), g.n_cells());
         let mut ids: Vec<_> = cells.iter().map(|c| c.id.clone()).collect();
@@ -770,6 +898,9 @@ mod tests {
         ids.dedup();
         assert_eq!(ids.len(), cells.len(), "ids must be unique");
         g.validate().unwrap();
+        // Cell ids lead with the workload column.
+        assert!(cells.iter().all(|c| c.id.starts_with("quad_")));
+        assert!(cells.iter().all(|c| c.workload == "quad"));
         // Every execution mode appears in the expansion (parameterized
         // modes carry their parameter in the name: semisync0.5).
         for mode in ["sync", "semisync", "async"] {
@@ -781,11 +912,97 @@ mod tests {
     }
 
     #[test]
+    fn workload_axis_expands_and_groups_families() {
+        let (g, dir) = mixed_grid("families");
+        g.validate().unwrap();
+        // 2 workloads x 2 traces x 1 policy x 2 modes x 1 m.
+        assert_eq!(g.n_cells(), 8);
+        let cells = g.expand();
+        assert!(cells.iter().any(|c| c.id.starts_with("quad_")));
+        assert!(cells.iter().any(|c| c.id.starts_with("deep-tiny_")));
+        // Families group by {workload x trace x M}: 2 x 2 x 1 = 4
+        // preparations for 8 cells — each family's traces and (deep)
+        // artifacts are built exactly once.
+        let (families, cell_family) = plan_families(&cells, g.base.artifacts.as_deref()).unwrap();
+        assert_eq!(families.len(), 4);
+        assert_eq!(cell_family.len(), cells.len());
+        for (cell, &fi) in cells.iter().zip(cell_family.iter()) {
+            assert!(families[fi].compatible(&cell.cfg), "{}", cell.id);
+            // Same key => same family index; different key => different.
+            for (other, &fj) in cells.iter().zip(cell_family.iter()) {
+                let same_key = cell.workload == other.workload
+                    && cell.trace == other.trace
+                    && cell.m == other.m;
+                assert_eq!(same_key, fi == fj, "{} vs {}", cell.id, other.id);
+            }
+        }
+        // Member netsims share the family's Arc trace handles.
+        for (cell, &fi) in cells.iter().zip(cell_family.iter()) {
+            let net = families[fi].netsim(&cell.cfg);
+            for w in 0..cell.m {
+                assert!(Arc::ptr_eq(&net.link(w).up, &families[fi].links()[w].0));
+                assert!(Arc::ptr_eq(&net.link(w).down, &families[fi].links()[w].1));
+            }
+        }
+        // All deep families share ONE opened ArtifactStore (whose
+        // params cache reads each preset from disk once).
+        let deep: Vec<_> =
+            families.iter().filter_map(|f| f.artifact_store()).collect();
+        assert_eq!(deep.len(), 2, "two deep families (one per trace)");
+        assert!(Arc::ptr_eq(deep[0], deep[1]));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mixed_quad_deep_matrix_runs_warm_equals_cold() {
+        // The acceptance invariant: a mixed quad+deep grid runs through
+        // the family path and reproduces the per-cell cold path
+        // (run_experiment) bit for bit, deterministically across pool
+        // sizes, deep cells included.
+        let (g, dir) = mixed_grid("run");
+        let warm = run_matrix(&g, 4).unwrap();
+        let serial = run_matrix(&g, 1).unwrap();
+        assert_eq!(warm.len(), g.n_cells());
+        let art = g.base.artifacts.as_deref();
+        for (w, cell) in warm.iter().zip(g.expand()) {
+            assert_eq!(w.id, cell.id);
+            let res = crate::driver::run_experiment(&cell.cfg, art, 0).unwrap();
+            let mut cold = summarize(&cell, &res, 0.0).unwrap();
+            let mut w_cmp = w.clone();
+            w_cmp.wall_ms = 0.0;
+            // Deep cells carry f_x = NaN (no objective notion), and
+            // NaN != NaN under PartialEq — normalize when BOTH sides
+            // agree it is NaN so the whole-struct compare still bites.
+            if w_cmp.final_f_x.is_nan() && cold.final_f_x.is_nan() {
+                w_cmp.final_f_x = 0.0;
+                cold.final_f_x = 0.0;
+            }
+            assert_eq!(w_cmp, cold, "warm summary diverged from cold for {}", w.id);
+        }
+        for (a, b) in warm.iter().zip(&serial) {
+            assert_eq!(a.final_loss, b.final_loss, "{}", a.id);
+            assert_eq!(a.total_up_bits, b.total_up_bits, "{}", a.id);
+        }
+        // Deep cells actually trained (finite loss, bits on the wire).
+        for s in warm.iter().filter(|s| s.workload == "deep-tiny") {
+            assert!(s.final_loss.is_finite(), "{}", s.id);
+            assert!(s.total_up_bits > 0, "{}", s.id);
+            assert!(s.final_f_x.is_nan(), "deep model has no f(x) notion: {}", s.id);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn grid_json_roundtrip() {
         let g = ScenarioGrid::default_grid();
         let text = g.to_json().to_string();
         let back = ScenarioGrid::from_json(&Value::parse(&text).unwrap()).unwrap();
         assert_eq!(back, g);
+        // The workload axis and artifacts dir round-trip too.
+        let (g, dir) = mixed_grid("json");
+        let back = ScenarioGrid::from_json(&Value::parse(&g.to_json().to_string()).unwrap());
+        assert_eq!(back.unwrap(), g);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
@@ -804,6 +1021,13 @@ mod tests {
         assert!(g.validate().is_err());
         let mut g = ScenarioGrid::default_grid();
         g.shard_counts.clear();
+        assert!(g.validate().is_err());
+        let mut g = ScenarioGrid::default_grid();
+        g.workloads.clear();
+        assert!(g.validate().is_err());
+        // Two workloads with the same name collide on cell ids.
+        let mut g = ScenarioGrid::default_grid();
+        g.workloads.push(g.workloads[0].clone());
         assert!(g.validate().is_err());
         // Two modes with the same name collide on cell ids.
         let mut g = ScenarioGrid::default_grid();
@@ -831,22 +1055,35 @@ mod tests {
     }
 
     #[test]
-    fn grids_without_mode_axis_default_to_sync() {
-        // Backward compatibility: grid files written before the mode
-        // and shard axes still parse (and run lockstep with uniform
-        // compute on the serialized server).
+    fn grids_without_workload_or_mode_axes_parse_as_before() {
+        // Backward compatibility: grid files written before the
+        // workload, mode and shard axes still parse — base carried the
+        // quadratic knobs {d, n_layers, t_comp} directly, cells ran
+        // lockstep with uniform compute on the serialized server.
         let mut v = ScenarioGrid::default_grid().to_json();
         if let Value::Obj(fields) = &mut v {
+            fields.remove("workloads");
             fields.remove("modes");
             fields.remove("shard_counts");
             if let Some(Value::Obj(bf)) = fields.get_mut("base") {
                 bf.remove("compute");
+                bf.insert("d".into(), Value::num(30.0));
+                bf.insert("n_layers".into(), Value::num(3.0));
+                bf.insert("t_comp".into(), Value::num(0.1));
             }
         }
         let g = ScenarioGrid::from_json(&v).unwrap();
+        assert_eq!(
+            g.workloads,
+            vec![NamedWorkload {
+                name: "quad".into(),
+                spec: WorkloadSpec::Quadratic { d: 30, n_layers: 3, t_comp: 0.1 },
+            }]
+        );
         assert_eq!(g.modes, vec![NamedMode { spec: ExecModeSpec::Sync }]);
         assert_eq!(g.base.compute, ComputeModel::Constant);
         assert_eq!(g.shard_counts, vec![1]);
+        assert_eq!(g.base.artifacts, None);
     }
 
     #[test]
@@ -858,7 +1095,8 @@ mod tests {
         g.worker_counts = vec![2];
         g.shard_counts = vec![1, 3];
         g.validate().unwrap();
-        assert_eq!(g.n_cells(), 2 * 1 * 2 * 1 * 1 * 2);
+        // 1 workload x 2 traces x 1 policy x 2 modes x 1 m x 2 shards.
+        assert_eq!(g.n_cells(), 8);
         let cells = g.expand();
         assert!(cells.iter().any(|c| c.id.ends_with("_sh1")));
         assert!(cells.iter().any(|c| c.id.ends_with("_sh3")));
@@ -1002,6 +1240,7 @@ mod tests {
             let p = dir.join(format!("{}.json", sanitize(&s.id)));
             let v = Value::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
             assert_eq!(v.get("id").unwrap().as_str().unwrap(), s.id);
+            assert_eq!(v.get("workload").unwrap().as_str().unwrap(), s.workload);
             assert!(v.get("final_f_x").unwrap().as_f64().unwrap().is_finite());
         }
         let idx =
@@ -1015,7 +1254,7 @@ mod tests {
 
     #[test]
     fn sanitize_keeps_ids_safe() {
-        assert_eq!(sanitize("wave_kimad_m4_s0.8"), "wave_kimad_m4_s0.8");
+        assert_eq!(sanitize("quad_wave_kimad_m4_s0.8"), "quad_wave_kimad_m4_s0.8");
         assert_eq!(sanitize("a/b c"), "a-b-c");
     }
 }

@@ -11,7 +11,9 @@ fn help_lists_subcommands() {
     let out = kimad().arg("--help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["train", "report", "scenarios", "synthetic", "trace", "presets"] {
+    let cmds =
+        ["train", "report", "scenarios", "synthetic", "trace", "presets", "gen-artifacts"];
+    for cmd in cmds {
         assert!(text.contains(cmd), "help missing '{cmd}'");
     }
 }
@@ -110,6 +112,66 @@ fn scenarios_print_grid_roundtrips_through_file() {
         .unwrap();
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     assert!(dir.join("out/index.json").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gen_artifacts_then_deep_workload_scenarios_end_to_end() {
+    // The offline deep-model path: a native (JAX-free) artifact set
+    // feeds a --workload deep:tiny grid, cell ids and summaries carry
+    // the workload column, and `presets` reads the generated manifest.
+    let dir = std::env::temp_dir().join(format!("kimad-cli-deep-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let art = dir.join("artifacts");
+    let out = kimad()
+        .args(["gen-artifacts", "--presets", "tiny", "--out-dir", art.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(art.join("manifest.json").exists());
+    assert!(art.join("layout-tiny.json").exists());
+    assert!(art.join("params-tiny.bin").exists());
+
+    let presets = kimad()
+        .args(["presets", "--artifacts", art.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(presets.status.success());
+    assert!(String::from_utf8_lossy(&presets.stdout).contains("tiny"));
+
+    let scen_dir = dir.join("out");
+    let out = kimad()
+        .args([
+            "scenarios",
+            "--rounds",
+            "4",
+            "--threads",
+            "2",
+            "--workload",
+            "deep:tiny",
+            "--artifacts",
+            art.to_str().unwrap(),
+            "--modes",
+            "sync",
+            "--out-dir",
+            scen_dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let index = std::fs::read_to_string(scen_dir.join("index.json")).unwrap();
+    // 1 workload x 2 traces x 4 policies x 1 mode x 2 worker counts.
+    assert!(index.contains("\"n_cells\":16"), "{index}");
+    assert!(index.contains("deep-tiny_"), "{index}");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("deep-tiny"), "{text}");
+
+    // A bad workload token fails at the CLI, before any cell runs.
+    let bad = kimad()
+        .args(["scenarios", "--workload", "resnet:18", "--print-grid"])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
     let _ = std::fs::remove_dir_all(&dir);
 }
 

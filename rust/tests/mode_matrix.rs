@@ -7,6 +7,8 @@
 //!   and across repeated runs.
 //! * With homogeneous workers, async staleness is bounded by M.
 
+use std::sync::Arc;
+
 use kimad::bandwidth::{ConstantTrace, SinSquaredTrace};
 use kimad::coordinator::{
     ComputeModel, ExecMode, QuadraticSource, RoundRecord, SimConfig, Simulation,
@@ -24,10 +26,10 @@ fn wave_net(m: usize) -> NetSim {
         (0..m)
             .map(|i| {
                 Link::new(
-                    Box::new(
+                    Arc::new(
                         SinSquaredTrace::new(1500.0, 0.13, 200.0).with_phase(0.2 * i as f64),
                     ),
-                    Box::new(ConstantTrace::new(1e6)),
+                    Arc::new(ConstantTrace::new(1e6)),
                 )
             })
             .collect(),
@@ -41,8 +43,8 @@ fn flat_net(m: usize, bps: f64) -> NetSim {
         (0..m)
             .map(|_| {
                 Link::new(
-                    Box::new(ConstantTrace::new(bps)),
-                    Box::new(ConstantTrace::new(bps)),
+                    Arc::new(ConstantTrace::new(bps)),
+                    Arc::new(ConstantTrace::new(bps)),
                 )
             })
             .collect(),
@@ -125,17 +127,17 @@ fn sync_bit_identity_with_heterogeneous_downlinks() {
     // — the sync drain must dispatch interleaved milestone kinds.
     let net = NetSim::new(vec![
         Link::new(
-            Box::new(ConstantTrace::new(1500.0)),
-            Box::new(ConstantTrace::new(1e6)), // fast downlink
+            Arc::new(ConstantTrace::new(1500.0)),
+            Arc::new(ConstantTrace::new(1e6)), // fast downlink
         ),
         Link::new(
-            Box::new(ConstantTrace::new(1500.0)),
-            Box::new(ConstantTrace::new(300.0)), // slow downlink
+            Arc::new(ConstantTrace::new(1500.0)),
+            Arc::new(ConstantTrace::new(300.0)), // slow downlink
         ),
     ]);
     let oracle_net = NetSim::new(vec![
-        Link::new(Box::new(ConstantTrace::new(1500.0)), Box::new(ConstantTrace::new(1e6))),
-        Link::new(Box::new(ConstantTrace::new(1500.0)), Box::new(ConstantTrace::new(300.0))),
+        Link::new(Arc::new(ConstantTrace::new(1500.0)), Arc::new(ConstantTrace::new(1e6))),
+        Link::new(Arc::new(ConstantTrace::new(1500.0)), Arc::new(ConstantTrace::new(300.0))),
     ]);
     let mut engine = build(
         2,

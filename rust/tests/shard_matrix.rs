@@ -10,6 +10,8 @@
 //! forced shard counts here (the unforced golden lives in
 //! `mode_matrix.rs`, untouched).
 
+use std::sync::Arc;
+
 use kimad::bandwidth::{ConstantTrace, SinSquaredTrace};
 use kimad::coordinator::{
     ComputeModel, ExecMode, QuadraticSource, RoundRecord, SimConfig, Simulation,
@@ -29,10 +31,10 @@ fn wave_net(m: usize) -> NetSim {
         (0..m)
             .map(|i| {
                 Link::new(
-                    Box::new(
+                    Arc::new(
                         SinSquaredTrace::new(1500.0, 0.13, 200.0).with_phase(0.2 * i as f64),
                     ),
-                    Box::new(ConstantTrace::new(1e6)),
+                    Arc::new(ConstantTrace::new(1e6)),
                 )
             })
             .collect(),
@@ -46,8 +48,8 @@ fn flat_net(m: usize, bps: f64) -> NetSim {
         (0..m)
             .map(|_| {
                 Link::new(
-                    Box::new(ConstantTrace::new(bps)),
-                    Box::new(ConstantTrace::new(bps)),
+                    Arc::new(ConstantTrace::new(bps)),
+                    Arc::new(ConstantTrace::new(bps)),
                 )
             })
             .collect(),
