@@ -4,10 +4,9 @@
 //! allocation-free), EF21 advance, error curves, knapsack DP, full
 //! simulator rounds, and (with artifacts) one PJRT train_step.
 
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use kimad::bench::{allocs, CountingAlloc};
 use kimad::compress::{Compressed, Compressor, TopK};
 use kimad::coordinator::{shard, QuadraticSource, ShardPlan, SimConfig, Simulation, WorkerState};
 use kimad::ef21::Estimator;
@@ -18,33 +17,9 @@ use kimad::quadratic::Quadratic;
 use kimad::util::bench::{bench, black_box, fmt_ns};
 use kimad::util::rng::Rng;
 
-/// Counts heap allocations so this bench can *prove* the buffer-reuse
-/// compress path performs zero per-call allocations once warm.
-struct CountingAlloc;
-
-static ALLOCS: AtomicU64 = AtomicU64::new(0);
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
-    }
-
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-
-    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
-    }
-
-    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc_zeroed(layout)
-    }
-}
-
+/// The shared counting allocator (kimad::bench::alloc) proves the
+/// buffer-reuse compress paths perform zero per-call allocations once
+/// warm; installing it is the bench binary's job.
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
 
@@ -79,12 +54,12 @@ fn main() {
         c.compress_into(black_box(&u), &mut msg);
         black_box(&msg);
     });
-    let before = ALLOCS.load(Ordering::Relaxed);
+    let before = allocs();
     let reps = 100u64;
     for _ in 0..reps {
         c.compress_into(black_box(&u), &mut msg);
     }
-    let delta = ALLOCS.load(Ordering::Relaxed) - before;
+    let delta = allocs() - before;
     println!(
         "    -> compress_into: {delta} heap allocations over {reps} calls (target 0); \
          {:.2}x faster than the allocating path",
@@ -114,7 +89,7 @@ fn main() {
         );
         black_box(&msg2);
     });
-    let before = ALLOCS.load(Ordering::Relaxed);
+    let before = allocs();
     for _ in 0..reps {
         est2.compress_advance_into(
             &TopK::new(d / 100),
@@ -124,7 +99,7 @@ fn main() {
             &mut msg2,
         );
     }
-    let delta = ALLOCS.load(Ordering::Relaxed) - before;
+    let delta = allocs() - before;
     println!("    -> compress_advance_into: {delta} heap allocations over {reps} calls");
     assert_eq!(delta, 0, "EF21 reuse path must not allocate per call");
 
@@ -194,13 +169,13 @@ fn main() {
     let batch: Vec<Event> = (0..2usize)
         .map(|w| Event { time: 1.0, worker: w, kind: EventKind::UploadDone, round: 0 })
         .collect();
-    let before = ALLOCS.load(Ordering::Relaxed);
+    let before = allocs();
     for _ in 0..reps {
         shard::deliver_batch(&sharded_plan, &layers_sh, &mut mirrors, &ws, &batch, false);
         shard::aggregate(&sharded_plan, &weights_sh, &u_hats, &mut agg, false);
         shard::step(&sharded_plan, &opt_sh, 3, 1.0, &mut x_sh, &agg, &layers_sh, false);
     }
-    let delta = ALLOCS.load(Ordering::Relaxed) - before;
+    let delta = allocs() - before;
     println!("    -> sharded server kernels: {delta} heap allocations over {reps} rounds");
     assert_eq!(delta, 0, "sharded aggregation path must not allocate per round");
 
@@ -282,7 +257,7 @@ fn main() {
     // serialized fan-out through the shard kernel stays allocation-free
     // once warm (the parallel fan-out pays its thread scope per round,
     // the same cost class as the other shard kernels).
-    let before = ALLOCS.load(Ordering::Relaxed);
+    let before = allocs();
     for _ in 0..reps {
         shard::broadcast(
             &serial_plan,
@@ -296,7 +271,7 @@ fn main() {
             false,
         );
     }
-    let delta = ALLOCS.load(Ordering::Relaxed) - before;
+    let delta = allocs() - before;
     println!("    -> serialized broadcast kernel: {delta} heap allocations over {reps} rounds");
     assert_eq!(delta, 0, "serialized broadcast path must not allocate per round");
 
@@ -339,10 +314,7 @@ fn main() {
     let r = bench("simulator round (M=4, d=1000, 10 layers)", 10, || {
         black_box(sim.round().unwrap());
     });
-    println!(
-        "    -> {:.0} rounds/s",
-        1e9 / r.median_ns()
-    );
+    println!("    -> {:.0} rounds/s", 1e9 / r.median_ns());
 
     // --- Kimad+ round (knapsack on the hot path).
     let q2 = Quadratic::paper_instance(1000);

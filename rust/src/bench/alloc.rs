@@ -1,0 +1,56 @@
+//! Counting allocator shared by the `kimad bench` subcommand, the
+//! rust/benches/ harnesses, and the bench-harness integration test.
+//!
+//! A `#[global_allocator]` can only be installed by the final binary,
+//! so the library exposes the type and the counter here and each
+//! entry point (src/main.rs, benches/hotpath.rs,
+//! tests/bench_harness.rs) declares:
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static GLOBAL: kimad::bench::CountingAlloc = kimad::bench::CountingAlloc;
+//! ```
+//!
+//! When it is *not* installed, [`allocs`] just reads a counter nothing
+//! increments — callers report deltas, which are then zero, so the
+//! library stays usable either way.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Total allocation events (alloc / realloc / alloc_zeroed; frees are
+/// not counted) since process start, when [`CountingAlloc`] is the
+/// global allocator.
+pub static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+/// Current value of the allocation counter. Take a delta around the
+/// region of interest; absolute values include harness overhead.
+#[inline]
+pub fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Counts heap allocations so benches can *prove* the buffer-reuse
+/// paths perform zero per-call allocations once warm.
+pub struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}

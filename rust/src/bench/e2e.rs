@@ -1,0 +1,58 @@
+//! End-to-end throughput: run a scenario grid through the real matrix
+//! runner ([`run_matrix`]) and report cells/sec. This is the number the
+//! committed baseline pins — kernel wins that do not move it are not
+//! wins on the path that matters.
+
+use std::time::Instant;
+
+use crate::bench::report::E2eRecord;
+use crate::scenarios::{run_matrix, ScenarioGrid};
+
+/// The default 48-cell reference grid (`kimad scenarios` with no file).
+pub fn default_grid() -> ScenarioGrid {
+    ScenarioGrid::default_grid()
+}
+
+/// The reduced grid `--quick` runs (and full runs include, so CI's
+/// quick reports always have a matching baseline entry): the same 48
+/// cells at a third of the rounds.
+pub fn quick_grid() -> ScenarioGrid {
+    let mut g = ScenarioGrid::default_grid();
+    g.name = "quick-r20".into();
+    g.base.rounds = 20;
+    g
+}
+
+/// Execute `grid` once on the full worker pool and summarize. Wall
+/// time covers the whole matrix run (family prep included — that is
+/// the end-to-end number); the summed per-cell `build_ms` is reported
+/// alongside so regressions can be attributed.
+pub fn run_grid(grid: &ScenarioGrid) -> anyhow::Result<E2eRecord> {
+    let t0 = Instant::now();
+    let summaries = run_matrix(grid, 0)?;
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let cells = summaries.len();
+    let build_ms: f64 = summaries.iter().map(|s| s.build_ms).sum();
+    Ok(E2eRecord {
+        grid: grid.name.clone(),
+        cells,
+        wall_ms,
+        build_ms,
+        cells_per_sec: if wall_ms > 0.0 { cells as f64 / (wall_ms / 1e3) } else { 0.0 },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_grid_is_the_default_grid_at_fewer_rounds() {
+        let q = quick_grid();
+        let d = default_grid();
+        assert_eq!(q.n_cells(), d.n_cells());
+        assert_eq!(q.n_cells(), 48);
+        assert!(q.base.rounds < d.base.rounds);
+        assert_ne!(q.name, d.name, "distinct baseline keys");
+    }
+}

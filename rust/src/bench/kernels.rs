@@ -1,0 +1,165 @@
+//! The hot-path kernel suite `kimad bench` runs: every per-round
+//! kernel the simulator's inner loop executes, measured standalone on
+//! parameterized sizes — median ns/iter from the timing core, plus a
+//! heap-allocation count per iteration from the counting allocator
+//! (real only when the calling binary installs
+//! [`CountingAlloc`](crate::bench::CountingAlloc); otherwise the delta
+//! reads 0, which is also what the warm reuse paths must report).
+
+use crate::bench::alloc::allocs;
+use crate::bench::report::KernelRecord;
+use crate::bench::timing::{bench, black_box};
+use crate::compress::{Compressed, Compressor, QuantizeBits, RandK, TopK};
+use crate::coordinator::shard::{self, BroadcastScratch, ShardPlan};
+use crate::ef21::Estimator;
+use crate::kimad::select::SPARSE_COORD_BITS;
+use crate::kimad::{CompressPolicy, Selector};
+use crate::model::ModelLayout;
+use crate::util::chunk;
+use crate::util::rng::Rng;
+
+/// Reps for the allocation count (separate from the timed samples so
+/// calibration noise never leaks into the alloc delta).
+const ALLOC_REPS: u64 = 32;
+
+/// Mirrors for the aggregate/broadcast kernels.
+const M: usize = 4;
+/// Layers for the layered kernels (aggregate/broadcast/EF21 spans).
+const N_LAYERS: usize = 8;
+
+fn grad(d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..d).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+}
+
+/// Time + count one kernel: `bench` for the median, then a fixed rep
+/// loop for the alloc delta (averaged, rounding up so a single cold
+/// allocation inside the loop still registers).
+fn measure<F: FnMut()>(
+    name: &str,
+    n: usize,
+    bytes_per_iter: u64,
+    samples: usize,
+    mut f: F,
+) -> KernelRecord {
+    f(); // warm buffers + thread-local scratch before anything counts
+    let r = bench(&format!("{name} n={n}"), samples, &mut f);
+    let before = allocs();
+    for _ in 0..ALLOC_REPS {
+        f();
+    }
+    let delta = allocs() - before;
+    KernelRecord {
+        name: name.to_string(),
+        n,
+        ns_per_iter: r.median_ns(),
+        bytes_per_iter,
+        allocs: delta.div_ceil(ALLOC_REPS),
+    }
+}
+
+/// Run the whole kernel suite at each size in `sizes` with `samples`
+/// timed samples per kernel. Deterministic inputs (seeded RNG), so two
+/// runs report identical `allocs` columns.
+pub fn run_kernels(sizes: &[usize], samples: usize) -> Vec<KernelRecord> {
+    let mut out = Vec::new();
+    for &n in sizes {
+        let n = n.max(N_LAYERS); // layered kernels need a coordinate per layer
+        let k = (n / 100).max(1);
+        let a = grad(n, 1);
+        let b = grad(n, 2);
+
+        // diff: the EF21 `u − û` fill (upload leg + broadcast phase 1).
+        let mut d = vec![0.0f32; n];
+        out.push(measure("diff", n, 12 * n as u64, samples, || {
+            chunk::diff_into(black_box(&mut d), black_box(&a), black_box(&b));
+        }));
+
+        // topk_select: the quickselect behind every TopK compressor.
+        let mut idx = Vec::new();
+        let mut packed = Vec::new();
+        out.push(measure("topk_select", n, 4 * n as u64, samples, || {
+            TopK::select_indices_with(black_box(&a), k, &mut idx, &mut packed);
+            black_box(&idx);
+        }));
+
+        // randk_select: the RandK baseline's sampling + gather.
+        let randk = RandK::new(k, 7);
+        let mut msg = Compressed::default();
+        out.push(measure("randk_select", n, 4 * n as u64, samples, || {
+            randk.compress_into(black_box(&a), &mut msg);
+            black_box(&msg);
+        }));
+
+        // quantize: 8-bit uniform with the chunked max-abs scale scan.
+        let q8 = QuantizeBits::new(8);
+        let mut qmsg = Compressed::default();
+        out.push(measure("quantize", n, 8 * n as u64, samples, || {
+            q8.compress_into(black_box(&a), &mut qmsg);
+            black_box(&qmsg);
+        }));
+
+        // ef21_advance: compress-advance of one layer-sized estimator.
+        let layer = crate::model::Layer { id: 0, name: "l".into(), offset: 0, size: n };
+        let mut est = Estimator::zeros(n);
+        let mut scratch = Vec::with_capacity(n);
+        let mut emsg = Compressed::default();
+        let topk = TopK::new(k);
+        out.push(measure("ef21_advance", n, 16 * n as u64, samples, || {
+            est.compress_advance_into(&topk, black_box(&a), &layer, &mut scratch, &mut emsg);
+            black_box(&emsg);
+        }));
+
+        // aggregate: Σ w_m û_m over M mirrors (serialized shard kernel).
+        let layers = ModelLayout::synthetic(&[n / N_LAYERS; N_LAYERS]).layers();
+        let dim = layers.iter().map(|l| l.size).sum::<usize>();
+        let plan = ShardPlan::build(&layers, 1);
+        let u_hats: Vec<Estimator> = (0..M)
+            .map(|w| {
+                let mut e = Estimator::zeros(dim);
+                e.value.copy_from_slice(&grad(dim, 10 + w as u64));
+                e
+            })
+            .collect();
+        let weights = vec![1.0 / M as f64; M];
+        let mut agg = vec![0.0f32; dim];
+        out.push(measure(
+            "aggregate",
+            dim,
+            (M as u64 + 1) * 4 * dim as u64,
+            samples,
+            || {
+                black_box(shard::aggregate(&plan, &weights, &u_hats, &mut agg, false));
+            },
+        ));
+
+        // broadcast: the full downlink phase (diff + A^compress +
+        // per-layer EF21) through the serialized shard kernel.
+        let sel = Selector::new(CompressPolicy::KimadUniform);
+        let c_down = (dim as u64 / 100).max(1) * SPARSE_COORD_BITS;
+        let xb = &a[..dim];
+        let mut hat = Estimator::zeros(dim);
+        let mut diff_b = vec![0.0f32; dim];
+        let mut scr = BroadcastScratch::default();
+        out.push(measure("broadcast", dim, 16 * dim as u64, samples, || {
+            black_box(shard::broadcast(
+                &plan,
+                &sel,
+                &layers,
+                c_down,
+                black_box(xb),
+                &mut hat,
+                &mut diff_b,
+                &mut scr,
+                false,
+            ));
+        }));
+    }
+    out
+}
+
+/// The kernels whose warm paths must report exactly zero allocations
+/// per iteration (the buffer-reuse contract the benches assert).
+pub fn alloc_free_kernels() -> &'static [&'static str] {
+    &["diff", "topk_select", "quantize", "ef21_advance", "aggregate", "broadcast"]
+}

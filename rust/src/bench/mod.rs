@@ -1,0 +1,47 @@
+//! The perf subsystem behind `kimad bench`: one shared timing core
+//! (also used by every rust/benches/ harness), a counting allocator,
+//! the hot-path kernel suite, the end-to-end grid runner, and the
+//! `BENCH_*.json` report schema the CI regression gate compares.
+//!
+//! See docs/ARCHITECTURE.md §7 for the timing core and the
+//! fixed-reduction-order rule that keeps hot-path optimizations
+//! bit-reproducible.
+
+pub mod alloc;
+pub mod e2e;
+pub mod kernels;
+pub mod report;
+pub mod timing;
+
+pub use alloc::{allocs, CountingAlloc, ALLOCS};
+pub use report::{current_commit, host_tag, BenchConfig, BenchReport, E2eRecord, KernelRecord};
+pub use timing::{bench, black_box, fmt_ns, time_once, BenchResult};
+
+/// Kernel problem sizes every run measures (identical in quick and
+/// full mode, so a quick CI run always has matching baseline rows).
+pub const KERNEL_SIZES: [usize; 2] = [1 << 16, 1 << 20];
+
+/// Run the whole suite: kernels at [`KERNEL_SIZES`], then the
+/// end-to-end grid(s) — the reduced `quick-r20` grid always, plus the
+/// default 48-cell grid when `quick` is false.
+pub fn run(quick: bool) -> anyhow::Result<BenchReport> {
+    let sizes = KERNEL_SIZES.to_vec();
+    let samples = if quick { 3 } else { 10 };
+    let kernels = kernels::run_kernels(&sizes, samples);
+    let mut e2e_records = vec![e2e::run_grid(&e2e::quick_grid())?];
+    if !quick {
+        e2e_records.push(e2e::run_grid(&e2e::default_grid())?);
+    }
+    Ok(BenchReport {
+        commit: current_commit(),
+        config: BenchConfig {
+            host: host_tag(),
+            quick,
+            samples,
+            sizes,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        },
+        kernels,
+        e2e: e2e_records,
+    })
+}

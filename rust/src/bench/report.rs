@@ -1,0 +1,307 @@
+//! The `BENCH_*.json` schema: what `kimad bench` emits, what
+//! `scripts/bench_check` compares, and what `BENCH_baseline.json`
+//! commits. One report per run:
+//!
+//! ```json
+//! {
+//!   "commit": "…", "config": {…},
+//!   "kernels": [{"name", "n", "ns_per_iter", "bytes_per_iter", "allocs"}],
+//!   "e2e":     [{"grid", "cells", "wall_ms", "build_ms", "cells_per_sec"}]
+//! }
+//! ```
+//!
+//! `allocs` is the heap-allocation delta per iteration from the
+//! counting allocator (exactly 0 on the buffer-reuse paths); `build_ms`
+//! is per-cell construction time, excluded from `wall_ms` so
+//! `cells_per_sec` is comparable warm vs cold.
+
+use crate::util::json::Value;
+
+/// One hot-path kernel measurement at one problem size.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelRecord {
+    pub name: String,
+    /// Problem size (coordinates processed per iteration).
+    pub n: usize,
+    /// Median wall time per iteration.
+    pub ns_per_iter: f64,
+    /// Bytes the kernel touches per iteration (for MB/s derivation).
+    pub bytes_per_iter: u64,
+    /// Heap allocations per iteration (counting-allocator delta,
+    /// averaged over a fixed rep loop; 0 on the reuse paths).
+    pub allocs: u64,
+}
+
+/// One end-to-end scenario-grid measurement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct E2eRecord {
+    pub grid: String,
+    pub cells: usize,
+    /// Steady-state wall time over the whole grid (construction
+    /// excluded — see `build_ms`).
+    pub wall_ms: f64,
+    /// Per-cell construction/warm-up time summed over the grid.
+    pub build_ms: f64,
+    pub cells_per_sec: f64,
+}
+
+/// Run settings, recorded so baselines are only compared like-for-like.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchConfig {
+    pub host: String,
+    pub quick: bool,
+    pub samples: usize,
+    pub sizes: Vec<usize>,
+    pub threads: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchReport {
+    pub commit: String,
+    pub config: BenchConfig,
+    pub kernels: Vec<KernelRecord>,
+    pub e2e: Vec<E2eRecord>,
+}
+
+impl KernelRecord {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("name", Value::str(&self.name)),
+            ("n", Value::num(self.n as f64)),
+            ("ns_per_iter", Value::num(self.ns_per_iter)),
+            ("bytes_per_iter", Value::num(self.bytes_per_iter as f64)),
+            ("allocs", Value::num(self.allocs as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        Ok(Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            n: v.get("n")?.as_usize()?,
+            ns_per_iter: v.get("ns_per_iter")?.as_f64()?,
+            bytes_per_iter: v.get("bytes_per_iter")?.as_u64()?,
+            allocs: v.get("allocs")?.as_u64()?,
+        })
+    }
+}
+
+impl E2eRecord {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("grid", Value::str(&self.grid)),
+            ("cells", Value::num(self.cells as f64)),
+            ("wall_ms", Value::num(self.wall_ms)),
+            ("build_ms", Value::num(self.build_ms)),
+            ("cells_per_sec", Value::num(self.cells_per_sec)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        Ok(Self {
+            grid: v.get("grid")?.as_str()?.to_string(),
+            cells: v.get("cells")?.as_usize()?,
+            wall_ms: v.get("wall_ms")?.as_f64()?,
+            // Older reports may predate the build_ms split.
+            build_ms: v.opt("build_ms").map_or(Ok(0.0), Value::as_f64)?,
+            cells_per_sec: v.get("cells_per_sec")?.as_f64()?,
+        })
+    }
+}
+
+impl BenchConfig {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("host", Value::str(&self.host)),
+            ("quick", Value::Bool(self.quick)),
+            ("samples", Value::num(self.samples as f64)),
+            (
+                "sizes",
+                Value::Arr(self.sizes.iter().map(|&n| Value::num(n as f64)).collect()),
+            ),
+            ("threads", Value::num(self.threads as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        Ok(Self {
+            host: v.get("host")?.as_str()?.to_string(),
+            quick: v.get("quick")?.as_bool()?,
+            samples: v.get("samples")?.as_usize()?,
+            sizes: v
+                .get("sizes")?
+                .as_arr()?
+                .iter()
+                .map(Value::as_usize)
+                .collect::<anyhow::Result<_>>()?,
+            threads: v.get("threads")?.as_usize()?,
+        })
+    }
+}
+
+impl BenchReport {
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("commit", Value::str(&self.commit)),
+            ("config", self.config.to_json()),
+            (
+                "kernels",
+                Value::Arr(self.kernels.iter().map(KernelRecord::to_json).collect()),
+            ),
+            (
+                "e2e",
+                Value::Arr(self.e2e.iter().map(E2eRecord::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        Ok(Self {
+            commit: v.get("commit")?.as_str()?.to_string(),
+            config: BenchConfig::from_json(v.get("config")?)?,
+            kernels: v
+                .get("kernels")?
+                .as_arr()?
+                .iter()
+                .map(KernelRecord::from_json)
+                .collect::<anyhow::Result<_>>()?,
+            e2e: v
+                .get("e2e")?
+                .as_arr()?
+                .iter()
+                .map(E2eRecord::from_json)
+                .collect::<anyhow::Result<_>>()?,
+        })
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        Self::from_json(&Value::parse(text)?)
+    }
+}
+
+/// Short commit id of HEAD, read straight from `.git` (git may not be
+/// on PATH where the bench runs); `"unknown"` outside a checkout.
+pub fn current_commit() -> String {
+    fn read(p: &std::path::Path) -> Option<String> {
+        std::fs::read_to_string(p).ok().map(|s| s.trim().to_string())
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let git = dir.join(".git");
+        if git.is_dir() {
+            if let Some(head) = read(&git.join("HEAD")) {
+                let sha = match head.strip_prefix("ref: ") {
+                    Some(r) => read(&git.join(r.trim())).unwrap_or(head),
+                    None => head,
+                };
+                let mut sha = sha;
+                sha.truncate(12);
+                if !sha.is_empty() {
+                    return sha;
+                }
+            }
+            break;
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    "unknown".to_string()
+}
+
+/// Host tag for the output filename: `$KIMAD_HOST_TAG`, else the
+/// kernel hostname, else `"local"`. Sanitized to `[A-Za-z0-9._-]`.
+pub fn host_tag() -> String {
+    let raw = std::env::var("KIMAD_HOST_TAG")
+        .ok()
+        .filter(|s| !s.trim().is_empty())
+        .or_else(|| std::fs::read_to_string("/proc/sys/kernel/hostname").ok())
+        .unwrap_or_default();
+    let tag: String = raw
+        .trim()
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') {
+                c
+            } else {
+                '-'
+            }
+        })
+        .collect();
+    if tag.is_empty() {
+        "local".to_string()
+    } else {
+        tag
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BenchReport {
+        BenchReport {
+            commit: "abc123def456".into(),
+            config: BenchConfig {
+                host: "ci".into(),
+                quick: true,
+                samples: 5,
+                sizes: vec![10_000, 100_000],
+                threads: 4,
+            },
+            kernels: vec![KernelRecord {
+                name: "diff".into(),
+                n: 100_000,
+                ns_per_iter: 12_345.6,
+                bytes_per_iter: 1_200_000,
+                allocs: 0,
+            }],
+            e2e: vec![E2eRecord {
+                grid: "quick".into(),
+                cells: 48,
+                wall_ms: 9_876.5,
+                build_ms: 123.4,
+                cells_per_sec: 4.86,
+            }],
+        }
+    }
+
+    #[test]
+    fn report_roundtrips_through_json_text() {
+        let r = sample();
+        let text = r.to_json().to_string();
+        let back = BenchReport::parse(&text).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn schema_has_required_keys() {
+        let v = sample().to_json();
+        for key in ["commit", "config", "kernels", "e2e"] {
+            assert!(v.get(key).is_ok(), "missing top-level '{key}'");
+        }
+        let k = &v.get("kernels").unwrap().as_arr().unwrap()[0];
+        for key in ["name", "n", "ns_per_iter", "bytes_per_iter", "allocs"] {
+            assert!(k.get(key).is_ok(), "missing kernel '{key}'");
+        }
+        let e = &v.get("e2e").unwrap().as_arr().unwrap()[0];
+        for key in ["grid", "cells", "wall_ms", "build_ms", "cells_per_sec"] {
+            assert!(e.get(key).is_ok(), "missing e2e '{key}'");
+        }
+    }
+
+    #[test]
+    fn e2e_build_ms_defaults_for_old_reports() {
+        let text = r#"{"grid":"quick","cells":48,"wall_ms":100.0,"cells_per_sec":480}"#;
+        let e = E2eRecord::from_json(&Value::parse(text).unwrap()).unwrap();
+        assert_eq!(e.build_ms, 0.0);
+    }
+
+    #[test]
+    fn host_tag_is_filename_safe() {
+        let tag = host_tag();
+        assert!(!tag.is_empty());
+        assert!(tag
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-')));
+    }
+}

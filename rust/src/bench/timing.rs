@@ -1,0 +1,124 @@
+//! Micro-benchmark timing core (criterion is unavailable offline):
+//! warmup + timed iterations, median/mean/p95 over samples, throughput
+//! helper. Shared by the `kimad bench` subcommand and every file under
+//! rust/benches/ (which import it through the `util::bench` shim).
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.samples_ns.iter().sum::<f64>() / self.samples_ns.len() as f64
+    }
+
+    pub fn median_ns(&self) -> f64 {
+        let mut s = self.samples_ns.clone();
+        s.sort_by(|a, b| a.total_cmp(b));
+        s[s.len() / 2]
+    }
+
+    pub fn p95_ns(&self) -> f64 {
+        let mut s = self.samples_ns.clone();
+        s.sort_by(|a, b| a.total_cmp(b));
+        s[((s.len() as f64 * 0.95) as usize).min(s.len() - 1)]
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} median {:>12}  mean {:>12}  p95 {:>12}  ({} samples x {} iters)",
+            self.name,
+            fmt_ns(self.median_ns()),
+            fmt_ns(self.mean_ns()),
+            fmt_ns(self.p95_ns()),
+            self.samples_ns.len(),
+            self.iters_per_sample
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, auto-calibrating iteration count to ~20 ms per
+/// sample; prints a criterion-style line and returns the stats.
+pub fn bench<F: FnMut()>(name: &str, samples: usize, mut f: F) -> BenchResult {
+    // Warmup + calibration: find iters such that one sample ~20 ms.
+    let mut iters = 1u64;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t0.elapsed();
+        if dt > Duration::from_millis(20) || iters > 1 << 30 {
+            break;
+        }
+        iters = (iters * 2).max(1);
+    }
+
+    let mut samples_ns = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples_ns.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    let res = BenchResult { name: name.to_string(), samples_ns, iters_per_sample: iters };
+    println!("{}", res.report());
+    res
+}
+
+/// Time one invocation of `f` (for end-to-end report generation).
+pub fn time_once<T, F: FnOnce() -> T>(name: &str, f: F) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    println!("{name}: {}", fmt_ns(t0.elapsed().as_nanos() as f64));
+    out
+}
+
+/// Black-box to stop the optimizer from deleting benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_stats() {
+        let mut acc = 0u64;
+        let r = bench("noop-ish", 5, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(r.samples_ns.len(), 5);
+        assert!(r.mean_ns() > 0.0);
+        assert!(r.median_ns() > 0.0);
+        assert!(r.p95_ns() >= r.median_ns() * 0.5);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

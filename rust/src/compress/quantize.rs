@@ -31,7 +31,9 @@ impl Compressor for QuantizeBits {
 
     fn compress_into(&self, u: &[f32], out: &mut Compressed) {
         let val = dense_parts(out, self.bits);
-        let scale = u.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        // Chunked max-abs scan (f32 max is associative, so the result
+        // is bit-identical to the serial fold — util::chunk docs).
+        let scale = crate::util::chunk::max_abs(u);
         if scale == 0.0 || self.bits >= 32 {
             val.extend_from_slice(u);
         } else {

@@ -44,6 +44,16 @@ impl TopK {
     /// payloads sort above everything, matching total_cmp. ~2-3x
     /// faster at d = 10^7 (EXPERIMENTS.md §Perf).
     pub fn select_indices_into(u: &[f32], k: usize, out: &mut Vec<u32>) {
+        PACKED.with(|cell| Self::select_indices_with(u, k, out, &mut cell.borrow_mut()));
+    }
+
+    /// [`select_indices_into`](Self::select_indices_into) with the
+    /// packed-key scratch passed explicitly — for callers that carry
+    /// their own per-instance scratch (e.g. the selector's
+    /// `SelectScratch`, reused across rounds) instead of the
+    /// thread-local above. The thread-local path delegates here, so
+    /// both forms share one implementation.
+    pub fn select_indices_with(u: &[f32], k: usize, out: &mut Vec<u32>, packed: &mut Vec<u64>) {
         out.clear();
         let d = u.len();
         let k = k.min(d);
@@ -54,17 +64,14 @@ impl TopK {
             out.extend(0..d as u32);
             return;
         }
-        PACKED.with(|cell| {
-            let mut packed = cell.borrow_mut();
-            packed.clear();
-            packed.extend(u.iter().enumerate().map(|(i, &v)| {
-                let abs_bits = (v.to_bits() & 0x7FFF_FFFF) as u64;
-                (abs_bits << 32) | i as u64
-            }));
-            // k-th largest == (d-k)-th smallest.
-            packed.select_nth_unstable(d - k);
-            out.extend(packed[d - k..].iter().map(|&p| p as u32));
-        });
+        packed.clear();
+        packed.extend(u.iter().enumerate().map(|(i, &v)| {
+            let abs_bits = (v.to_bits() & 0x7FFF_FFFF) as u64;
+            (abs_bits << 32) | i as u64
+        }));
+        // k-th largest == (d-k)-th smallest.
+        packed.select_nth_unstable(d - k);
+        out.extend(packed[d - k..].iter().map(|&p| p as u32));
     }
 }
 
@@ -135,6 +142,22 @@ mod tests {
     fn alpha_is_k_over_d() {
         assert!((TopK::new(25).alpha(100) - 0.25).abs() < 1e-12);
         assert_eq!(TopK::new(200).alpha(100), 1.0);
+    }
+
+    #[test]
+    fn explicit_scratch_matches_thread_local() {
+        let mut rng = crate::util::rng::Rng::seed_from_u64(19);
+        let mut packed = Vec::new();
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for _ in 0..20 {
+            let d = rng.range_usize(1, 300);
+            let k = rng.range_usize(0, d + 1);
+            let u: Vec<f32> = (0..d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            TopK::select_indices_into(&u, k, &mut a);
+            TopK::select_indices_with(&u, k, &mut b, &mut packed);
+            assert_eq!(a, b, "d={d} k={k}");
+        }
     }
 
     #[test]

@@ -395,9 +395,10 @@ pub fn broadcast(
     // ---- Phase 1: diff = x − x̂ (and, for curve-driven policies, the
     // per-layer error curves — shard-local work, same fan-out).
     if !par {
-        for (d, (&xv, &xh)) in diff.iter_mut().zip(x.iter().zip(&x_hat.value)) {
-            *d = xv - xh;
-        }
+        // Chunked elementwise diff (bit-identical — util::chunk docs;
+        // like the zip loop it replaces, it stops at the shortest
+        // slice, which is what makes the `par` dim guard above safe).
+        crate::util::chunk::diff_into(diff, x, &x_hat.value);
         // Curves (if any) build inside select_into, serially.
     } else {
         let mut curve_rest: Option<&mut [ErrorCurve]> = if selector.needs_curves() {
@@ -425,9 +426,7 @@ pub fn broadcast(
                 let ls = &layers[span.layer_lo..span.layer_hi];
                 let coord_lo = span.coord_lo;
                 s.spawn(move || {
-                    for ((d, &xv), &xh) in dhead.iter_mut().zip(xs).zip(xhs) {
-                        *d = xv - xh;
-                    }
+                    crate::util::chunk::diff_into(dhead, xs, xhs);
                     if let Some(curves) = chead {
                         for (l, slot) in ls.iter().zip(curves.iter_mut()) {
                             let lo = l.offset - coord_lo;

@@ -218,16 +218,18 @@ fn upload_leg(ctx: &UploadCtx<'_>, w: &mut WorkerState, up_start: f64) -> Upload
     let true_up = ctx.net.true_bps(w.id, Direction::Up, up_start);
     let b_up = w.monitor.estimate_or(ctx.cfg.prior_bps);
     let c_up = effective_budget(ctx.cfg.budget, b_up, ctx.cfg.budget_safety);
-    for (d, (&u, &uh)) in w.diff.iter_mut().zip(w.u.iter().zip(&w.u_hat.value)) {
-        *d = u - uh;
-    }
-    let sel_up = ctx.up_selector.select(&w.diff, &ctx.cfg.layers, c_up);
+    // Chunked elementwise diff (bit-identical — util::chunk docs).
+    crate::util::chunk::diff_into(&mut w.diff, &w.u, &w.u_hat.value);
+    // Allocation-free selection into the worker's reusable scratch
+    // (bit-identical to `select` — it IS `select` minus the builds).
+    ctx.up_selector
+        .select_into(&w.diff, &ctx.cfg.layers, c_up, &mut w.sel_scratch, &mut w.sel);
 
     if w.msgs.len() < ctx.cfg.layers.len() {
         w.msgs.resize_with(ctx.cfg.layers.len(), Compressed::default);
     }
     let mut up_bits = 0u64;
-    for (i, (l, &kk)) in ctx.cfg.layers.iter().zip(&sel_up.k_per_layer).enumerate() {
+    for (i, (l, &kk)) in ctx.cfg.layers.iter().zip(&w.sel.k_per_layer).enumerate() {
         let target = &w.u[l.offset..l.offset + l.size];
         if kk >= l.size {
             w.u_hat.compress_advance_into(&Identity, target, l, &mut w.scratch, &mut w.msgs[i]);

@@ -4,6 +4,7 @@
 use crate::bandwidth::{BandwidthMonitor, EwmaMonitor};
 use crate::compress::Compressed;
 use crate::ef21::Estimator;
+use crate::kimad::{SelectScratch, Selection};
 use crate::util::rng::Rng;
 
 /// How long one gradient computation takes on a given worker, as a
@@ -136,6 +137,11 @@ pub struct WorkerState {
     /// hold the wire content from compression (`ComputeDone`) until the
     /// server applies it on arrival (`UploadDone`).
     pub msgs: Vec<Compressed>,
+    /// Reusable `A^compress` selection scratch for the uplink leg —
+    /// per-worker, so the parallel worker phase never shares it.
+    pub sel_scratch: SelectScratch,
+    /// Reusable uplink selection result (paired with `sel_scratch`).
+    pub sel: Selection,
 }
 
 impl WorkerState {
@@ -148,6 +154,8 @@ impl WorkerState {
             scratch: Vec::with_capacity(dim),
             diff: vec![0.0; dim],
             msgs: Vec::new(),
+            sel_scratch: SelectScratch::default(),
+            sel: Selection::default(),
         }
     }
 

@@ -12,7 +12,8 @@
 //! (fresh) runs are bit-identical **by construction**: the warm path is
 //! the cold path minus the rebuilds.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::bandwidth::{BandwidthTrace, PerWorkerTraces, TraceSpec};
 use crate::config::{ExperimentConfig, WorkloadSpec};
@@ -33,6 +34,11 @@ pub struct ExperimentResult {
     pub eval: Option<EvalMetrics>,
     /// Virtual seconds simulated.
     pub total_time: f64,
+    /// Wall-clock milliseconds spent constructing the run (gradient
+    /// source, initial parameters, simulation assembly) before the
+    /// first round — the per-cell build cost the scenario matrix
+    /// attributes separately from steady-state `wall_ms`.
+    pub build_ms: f64,
 }
 
 impl ExperimentResult {
@@ -160,6 +166,31 @@ struct FamilyBase {
     cfg_prior: f64,
     links: SharedLinks,
     prior_bps: f64,
+    /// Recycled model-vector buffers (the x0/server-model allocation,
+    /// the largest per-cell buffer): member cells check one out at
+    /// build time and return it after the run, so a warm family pays
+    /// the allocation once per concurrent cell instead of once per
+    /// cell. Contents are always fully overwritten before use, so
+    /// pooling cannot change results.
+    pool: Mutex<Vec<Vec<f32>>>,
+}
+
+impl FamilyBase {
+    /// Check a buffer out of the pool (empty `Vec` when none is free).
+    fn take_buf(&self) -> Vec<f32> {
+        self.pool
+            .lock()
+            .ok()
+            .and_then(|mut p| p.pop())
+            .unwrap_or_default()
+    }
+
+    /// Return a buffer to the pool for the next member cell.
+    fn put_buf(&self, buf: Vec<f32>) {
+        if let Ok(mut p) = self.pool.lock() {
+            p.push(buf);
+        }
+    }
 }
 
 /// Open the artifact directory a deep family loads from (`None` =
@@ -296,6 +327,7 @@ impl WarmFamily {
             cfg_prior: cfg.prior_bps,
             links,
             prior_bps,
+            pool: Mutex::new(Vec::new()),
         };
         match &cfg.workload {
             WorkloadSpec::Quadratic { d, n_layers, t_comp } => {
@@ -414,6 +446,7 @@ impl WarmFamily {
         );
         match self {
             WarmFamily::Quadratic(f) => {
+                let t_build = Instant::now();
                 let layers = if cfg.single_layer {
                     f.layout.single_layer()
                 } else {
@@ -421,16 +454,30 @@ impl WarmFamily {
                 };
                 let d = f.q.dim();
                 let src = QuadraticSource::new(f.q.clone(), f.t_comp);
-                let x0 = vec![1.0f32; d];
+                // Pooled x0 buffer: cleared + refilled, so the values
+                // are exactly those of a fresh `vec![1.0; d]`.
+                let mut x0 = f.base.take_buf();
+                x0.clear();
+                x0.resize(d, 1.0);
                 let sim_cfg = sim_config(cfg, layers.clone(), f.t_comp, f.base.prior_bps);
                 let mut sim = Simulation::new(sim_cfg, self.netsim(cfg), src, x0);
                 sim.shards = cfg.shards;
                 sim.thread_cap = cfg.thread_cap;
+                let build_ms = t_build.elapsed().as_secs_f64() * 1e3;
                 let records = sim.run(cfg.rounds)?;
                 let total_time = sim.clock;
-                Ok(ExperimentResult { records, layers, n_params: d, eval: None, total_time })
+                f.base.put_buf(std::mem::take(&mut sim.server.x));
+                Ok(ExperimentResult {
+                    records,
+                    layers,
+                    n_params: d,
+                    eval: None,
+                    total_time,
+                    build_ms,
+                })
             }
             WarmFamily::Deep(f) => {
+                let t_build = Instant::now();
                 let layers = if cfg.single_layer {
                     f.layout.single_layer()
                 } else {
@@ -438,10 +485,15 @@ impl WarmFamily {
                 };
                 let src = f.source()?;
                 let sim_cfg = sim_config(cfg, layers.clone(), f.t_comp, f.base.prior_bps);
-                let x0 = f.x0.as_ref().clone();
+                // Pooled x0 buffer: cleared + refilled from the shared
+                // initial params, byte-identical to a fresh clone.
+                let mut x0 = f.base.take_buf();
+                x0.clear();
+                x0.extend_from_slice(f.x0.as_ref());
                 let mut sim = Simulation::new(sim_cfg, self.netsim(cfg), src, x0);
                 sim.shards = cfg.shards;
                 sim.thread_cap = cfg.thread_cap;
+                let build_ms = t_build.elapsed().as_secs_f64() * 1e3;
                 let records = sim.run(cfg.rounds)?;
                 let total_time = sim.clock;
                 let eval = if eval_batches > 0 {
@@ -449,8 +501,16 @@ impl WarmFamily {
                 } else {
                     None
                 };
+                f.base.put_buf(std::mem::take(&mut sim.server.x));
                 let n_params = f.layout.n_params;
-                Ok(ExperimentResult { records, layers, n_params, eval, total_time })
+                Ok(ExperimentResult {
+                    records,
+                    layers,
+                    n_params,
+                    eval,
+                    total_time,
+                    build_ms,
+                })
             }
         }
     }
@@ -698,6 +758,22 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn x0_pool_recycles_without_changing_results() {
+        // The second warm run checks its x0 buffer out of the family
+        // pool (stocked by the first run's returned server model); the
+        // refill must make it indistinguishable from a fresh build.
+        let cfg = quad_cfg();
+        let warm = WarmFamily::prepare(&cfg, None).unwrap();
+        let a = warm.run(&cfg).unwrap();
+        let b = warm.run(&cfg).unwrap();
+        assert_eq!(a.records, b.records, "pooled x0 changed the run");
+        assert_eq!(a.total_time, b.total_time);
+        let cold = run_experiment(&cfg, None, 0).unwrap();
+        assert_eq!(a.records, cold.records);
+        assert!(a.build_ms >= 0.0 && cold.build_ms >= 0.0);
     }
 
     #[test]

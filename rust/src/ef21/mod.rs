@@ -124,8 +124,11 @@ pub fn compress_advance_span(
     scratch: &mut Vec<f32>,
     msg: &mut Compressed,
 ) {
+    // Chunked elementwise diff; `resize` on the just-cleared vec reuses
+    // its capacity, so the warm path stays allocation-free.
     scratch.clear();
-    scratch.extend(target_layer.iter().zip(est_span.iter()).map(|(&t, &e)| t - e));
+    scratch.resize(target_layer.len(), 0.0);
+    crate::util::chunk::diff_into(scratch, target_layer, est_span);
     compressor.compress_into(scratch, msg);
     msg.add_into(est_span);
 }

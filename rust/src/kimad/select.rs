@@ -72,6 +72,9 @@ pub struct SelectScratch {
     order: Vec<usize>,
     /// Whole-model TopK index buffer.
     idx: Vec<u32>,
+    /// Whole-model TopK packed-key quickselect scratch, reused across
+    /// rounds (the per-instance twin of the compressor's thread-local).
+    packed: Vec<u64>,
     /// Per-layer error curves (`KimadPlus`). Only consumed by the next
     /// `select_into` when [`set_curves_ready`](Self::set_curves_ready)
     /// was called after an external fill — see [`curves_mut`](Self::curves_mut).
@@ -206,7 +209,7 @@ impl Selector {
             CompressPolicy::WholeModelTopK => {
                 let d_total: usize = layers.iter().map(|l| l.size).sum();
                 let k_global = ((budget_bits / SPARSE_COORD_BITS) as usize).min(d_total);
-                TopK::select_indices_into(diff, k_global, &mut scratch.idx);
+                TopK::select_indices_with(diff, k_global, &mut scratch.idx, &mut scratch.packed);
                 out.k_per_layer.resize(layers.len(), 0);
                 for &i in &scratch.idx {
                     let i = i as usize;

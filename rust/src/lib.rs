@@ -29,6 +29,7 @@
 //! ```
 
 pub mod bandwidth;
+pub mod bench;
 pub mod compress;
 pub mod config;
 pub mod coordinator;

@@ -9,6 +9,8 @@
 //!             JSON summary per cell
 //!   synthetic quick §4.1 quadratic comparison for one scenario
 //!   trace     sample a bandwidth trace spec (JSON) to stdout
+//!   bench     run the hot-path kernel suite + an end-to-end grid and
+//!             emit a machine-readable BENCH_<host-tag>.json
 //!   presets   list AOT model presets available in artifacts/
 //!   gen-artifacts  write a native (JAX-free) artifact set — layout +
 //!             seeded params + manifest — for deep-model presets
@@ -34,10 +36,16 @@ USAGE:
                [--shards 1,2,4] [--workload 'quad:d=30,layers=3|deep:tiny'] \\
                [--artifacts DIR] [--print-grid]
   kimad synthetic [--scenario xsmall|small|oscillation|high] [--fast] [--out-dir DIR]
+  kimad bench [--quick] [--out FILE]
   kimad trace --spec '<json TraceSpec>' [--seconds S] [--step S]
   kimad presets [--artifacts DIR]
   kimad gen-artifacts [--presets tiny,small] [--out-dir DIR] [--seed N]
 ";
+
+/// Make the `kimad bench` allocation counts real: the library's
+/// counting allocator only counts when a binary installs it.
+#[global_allocator]
+static GLOBAL: kimad::bench::CountingAlloc = kimad::bench::CountingAlloc;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -48,7 +56,7 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> anyhow::Result<()> {
-    let args = Args::parse(argv, &["fast", "help", "print-grid"])?;
+    let args = Args::parse(argv, &["fast", "help", "print-grid", "quick"])?;
     if args.flag("help") || args.positional.is_empty() {
         println!("{USAGE}");
         return Ok(());
@@ -58,6 +66,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "report" => report(&args),
         "scenarios" => scenarios(&args),
         "synthetic" => synthetic(&args),
+        "bench" => bench_cmd(&args),
         "trace" => trace(&args),
         "presets" => presets(&args),
         "gen-artifacts" => gen_artifacts(&args),
@@ -253,6 +262,27 @@ fn synthetic(args: &Args) -> anyhow::Result<()> {
     };
     std::fs::create_dir_all(&ctx.out_dir)?;
     println!("{}", kimad::reports::synthetic::generate_one(&ctx, scn)?);
+    Ok(())
+}
+
+/// `kimad bench` — run the hot-path kernel suite plus the end-to-end
+/// reference grid(s) and write one BENCH_<host-tag>.json (schema:
+/// rust/src/bench/report.rs; gated in CI by scripts/bench_check).
+fn bench_cmd(args: &Args) -> anyhow::Result<()> {
+    let quick = args.flag("quick");
+    let report = kimad::bench::run(quick)?;
+    let out = match args.opt("out") {
+        Some(p) => PathBuf::from(p),
+        None => PathBuf::from(format!("BENCH_{}.json", report.config.host)),
+    };
+    std::fs::write(&out, report.to_json().to_string())?;
+    for e in &report.e2e {
+        println!(
+            "e2e {}: {} cells in {:.0} ms ({:.2} cells/s, build {:.0} ms)",
+            e.grid, e.cells, e.wall_ms, e.cells_per_sec, e.build_ms
+        );
+    }
+    println!("wrote {}", out.display());
     Ok(())
 }
 

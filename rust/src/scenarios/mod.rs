@@ -179,8 +179,14 @@ pub struct CellSummary {
     pub mean_arrival_lag_s: f64,
     /// Largest staleness any aggregated upload carried (0 in sync).
     pub max_staleness: u64,
-    /// Wall-clock milliseconds this cell took to execute.
+    /// Wall-clock milliseconds of the cell's steady-state run — the
+    /// rounds themselves, with construction attributed to `build_ms`.
     pub wall_ms: f64,
+    /// Wall-clock milliseconds of per-cell construction (config
+    /// clone/clamp plus workload-source and simulation build — the
+    /// family warm-up a cold first cell pays). Kept out of `wall_ms`
+    /// so e2e cells/sec is comparable warm vs cold.
+    pub build_ms: f64,
 }
 
 impl ScenarioGrid {
@@ -609,6 +615,7 @@ impl CellSummary {
             ("mean_arrival_lag_s", Value::num(self.mean_arrival_lag_s)),
             ("max_staleness", Value::num(self.max_staleness as f64)),
             ("wall_ms", Value::num(self.wall_ms)),
+            ("build_ms", Value::num(self.build_ms)),
         ])
     }
 }
@@ -618,6 +625,7 @@ fn summarize(
     cell: &ScenarioCell,
     res: &ExperimentResult,
     wall_ms: f64,
+    build_ms: f64,
 ) -> anyhow::Result<CellSummary> {
     let last = res
         .records
@@ -656,6 +664,7 @@ fn summarize(
         mean_arrival_lag_s,
         max_staleness,
         wall_ms,
+        build_ms,
     })
 }
 
@@ -669,11 +678,16 @@ fn run_cell(
     let t0 = Instant::now();
     let mut cfg = cell.cfg.clone();
     cfg.clamp_parallelism(cell_threads);
+    let pre_ms = t0.elapsed().as_secs_f64() * 1e3;
     let res = warm
         .run(&cfg)
         .map_err(|e| anyhow::anyhow!("cell '{}': {e}", cell.id))?;
-    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
-    summarize(cell, &res, wall_ms)
+    // `res.build_ms` is the in-run construction (source + simulation
+    // build); together with the config clone/clamp above it is the
+    // cell's build cost, kept out of the steady-state wall_ms.
+    let build_ms = pre_ms + res.build_ms;
+    let wall_ms = (t0.elapsed().as_secs_f64() * 1e3 - build_ms).max(0.0);
+    summarize(cell, &res, wall_ms, build_ms)
 }
 
 /// Group `cells` into warm families keyed by {workload × uplink trace
@@ -832,12 +846,13 @@ fn sanitize(id: &str) -> String {
 /// Render a compact markdown table over the summaries (CLI output).
 pub fn render_table(summaries: &[CellSummary]) -> String {
     let mut out = String::from(
-        "| cell | wl | rounds | final f(x) | up Mbit | step s | lag s | stale | sh | wall ms |\n\
-         |---|---|---|---|---|---|---|---|---|---|\n",
+        "| cell | wl | rounds | final f(x) | up Mbit | step s | lag s | stale | sh \
+         | wall ms | build ms |\n\
+         |---|---|---|---|---|---|---|---|---|---|---|\n",
     );
     for s in summaries {
         out.push_str(&format!(
-            "| {} | {} | {} | {:.3e} | {:.3} | {:.2} | {:.2} | {} | {} | {:.0} |\n",
+            "| {} | {} | {} | {:.3e} | {:.3} | {:.2} | {:.2} | {} | {} | {:.0} | {:.0} |\n",
             s.id,
             s.workload,
             s.rounds,
@@ -848,6 +863,7 @@ pub fn render_table(summaries: &[CellSummary]) -> String {
             s.max_staleness,
             s.shards,
             s.wall_ms,
+            s.build_ms,
         ));
     }
     out
@@ -967,9 +983,11 @@ mod tests {
         for (w, cell) in warm.iter().zip(g.expand()) {
             assert_eq!(w.id, cell.id);
             let res = crate::driver::run_experiment(&cell.cfg, art, 0).unwrap();
-            let mut cold = summarize(&cell, &res, 0.0).unwrap();
+            let mut cold = summarize(&cell, &res, 0.0, 0.0).unwrap();
             let mut w_cmp = w.clone();
             w_cmp.wall_ms = 0.0;
+            w_cmp.build_ms = 0.0;
+            cold.build_ms = 0.0;
             // Deep cells carry f_x = NaN (no objective notion), and
             // NaN != NaN under PartialEq — normalize when BOTH sides
             // agree it is NaN so the whole-struct compare still bites.
@@ -1130,17 +1148,20 @@ mod tests {
             .map(|cell| {
                 // The pre-family cold path: a fresh build per cell.
                 let res = crate::driver::run_experiment(&cell.cfg, None, 0).unwrap();
-                summarize(cell, &res, 0.0).unwrap()
+                summarize(cell, &res, 0.0, 0.0).unwrap()
             })
             .collect();
         assert_eq!(warm.len(), cold.len());
         for (w, c) in warm.iter().zip(&cold) {
-            // Every field except the wall-clock timing column must be
+            // Every field except the wall-clock timing columns must be
             // bit-identical (CellSummary is PartialEq, so zeroing the
-            // one timing field compares the whole struct at once).
+            // timing fields compares the whole struct at once).
             let mut w_cmp = w.clone();
+            let mut c_cmp = c.clone();
             w_cmp.wall_ms = 0.0;
-            assert_eq!(w_cmp, *c, "warm summary diverged from cold for {}", w.id);
+            w_cmp.build_ms = 0.0;
+            c_cmp.build_ms = 0.0;
+            assert_eq!(w_cmp, c_cmp, "warm summary diverged from cold for {}", w.id);
         }
         let dir_w = std::env::temp_dir().join(format!("kimad-warm-{}", std::process::id()));
         let dir_c = std::env::temp_dir().join(format!("kimad-cold-{}", std::process::id()));

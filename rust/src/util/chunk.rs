@@ -1,0 +1,132 @@
+//! Chunked elementwise kernels for the hot paths (the EF21 diff fills,
+//! the quantizer's max-abs scale scan).
+//!
+//! # The fixed-reduction-order rule
+//!
+//! Every optimization here must keep simulations bit-identical to the
+//! frozen serial loops (`Simulation::round_reference` is the golden),
+//! so only two shapes of loop may be chunked:
+//!
+//! * **elementwise maps** (`out[i] = a[i] - b[i]`): each output depends
+//!   on exactly one input index, so any block structure visits the same
+//!   operations in the same per-element order — identical bits for
+//!   every chunk size;
+//! * **associative reductions over f32 `max`** (the quantizer's max-abs
+//!   scale): `f32::max` is associative and commutative over the
+//!   non-negative absolute values it sees here, so regrouping per chunk
+//!   cannot change the result.
+//!
+//! Non-associative accumulations — every f32/f64 **sum** on the hot
+//! path (aggregate norms, compression errors, `OneBitSign`'s mean) —
+//! stay strictly serial in their original order and must never route
+//! through this module. Tests assert bit-identity against the naive
+//! serial forms across chunk sizes on randomized inputs.
+//!
+//! The fixed [`CHUNK`] width gives the optimizer short inner loops with
+//! a known trip count (unroll + vectorize) while the `_chunked` forms
+//! keep the width testable.
+
+/// Block width of the production entry points. 64 f32s = one 256-byte
+/// block — enough for full vector unrolling, small enough to stay in
+/// registers/L1.
+pub const CHUNK: usize = 64;
+
+/// `out[i] = a[i] − b[i]` over the common prefix of the three slices
+/// (like the `zip` loops it replaces, extra tail elements are left
+/// untouched). Bit-identical to the serial loop for every chunk width.
+#[inline]
+pub fn diff_into(out: &mut [f32], a: &[f32], b: &[f32]) {
+    diff_into_chunked(out, a, b, CHUNK);
+}
+
+/// [`diff_into`] with an explicit block width (test hook).
+pub fn diff_into_chunked(out: &mut [f32], a: &[f32], b: &[f32], chunk: usize) {
+    let chunk = chunk.max(1);
+    for ((oc, ac), bc) in out
+        .chunks_mut(chunk)
+        .zip(a.chunks(chunk))
+        .zip(b.chunks(chunk))
+    {
+        for ((o, &x), &y) in oc.iter_mut().zip(ac).zip(bc) {
+            *o = x - y;
+        }
+    }
+}
+
+/// The per-message quantization scale `max_i |u_i|`, chunked.
+/// Bit-identical to the serial fold: `max` over the non-negative
+/// `|u_i|` is associative, so per-chunk partials regroup freely.
+#[inline]
+pub fn max_abs(u: &[f32]) -> f32 {
+    max_abs_chunked(u, CHUNK)
+}
+
+/// [`max_abs`] with an explicit block width (test hook).
+pub fn max_abs_chunked(u: &[f32], chunk: usize) -> f32 {
+    let chunk = chunk.max(1);
+    let mut m = 0.0f32;
+    for c in u.chunks(chunk) {
+        let mut cm = 0.0f32;
+        for &v in c {
+            cm = cm.max(v.abs());
+        }
+        m = m.max(cm);
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The chunked kernels vs the frozen serial forms, across chunk
+    /// widths (including widths that do and do not divide the length)
+    /// on randomized inputs — the bit-identity contract.
+    #[test]
+    fn chunked_kernels_match_serial_bitwise() {
+        let mut rng = Rng::seed_from_u64(17);
+        for len in [0usize, 1, 7, 63, 64, 65, 200, 1023] {
+            let a: Vec<f32> = (0..len).map(|_| rng.range_f32(-10.0, 10.0)).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.range_f32(-10.0, 10.0)).collect();
+            let mut want = vec![0.0f32; len];
+            for (d, (&x, &y)) in want.iter_mut().zip(a.iter().zip(&b)) {
+                *d = x - y;
+            }
+            let want_max = b.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            for chunk in [1usize, 2, 3, 7, 16, 64, 101, 4096] {
+                let mut got = vec![f32::NAN; len];
+                diff_into_chunked(&mut got, &a, &b, chunk);
+                let same = got
+                    .iter()
+                    .zip(&want)
+                    .all(|(g, w)| g.to_bits() == w.to_bits());
+                assert!(same, "diff len={len} chunk={chunk}");
+                let gm = max_abs_chunked(&b, chunk);
+                assert_eq!(gm.to_bits(), want_max.to_bits(), "max len={len} chunk={chunk}");
+            }
+            // The production entry points are the CHUNK-width forms.
+            let mut got = vec![0.0f32; len];
+            diff_into(&mut got, &a, &b);
+            assert_eq!(got, want);
+            assert_eq!(max_abs(&b).to_bits(), want_max.to_bits());
+        }
+    }
+
+    #[test]
+    fn diff_stops_at_shortest_like_zip() {
+        let a = [5.0f32, 6.0, 7.0];
+        let b = [1.0f32, 1.0];
+        let mut out = [f32::NAN; 4];
+        diff_into(&mut out, &a, &b);
+        assert_eq!(&out[..2], &[4.0, 5.0]);
+        assert!(out[2].is_nan() && out[3].is_nan(), "tail untouched");
+    }
+
+    #[test]
+    fn max_abs_edge_cases() {
+        assert_eq!(max_abs(&[]), 0.0);
+        assert_eq!(max_abs(&[-0.0]), 0.0);
+        assert_eq!(max_abs(&[-3.5, 2.0]), 3.5);
+    }
+}

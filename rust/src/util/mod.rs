@@ -3,6 +3,7 @@
 //! harness, and a property-testing loop.
 
 pub mod bench;
+pub mod chunk;
 pub mod cli;
 pub mod json;
 pub mod prop;

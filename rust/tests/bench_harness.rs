@@ -1,0 +1,105 @@
+//! Integration tests for the `kimad bench` harness: the BENCH_*.json
+//! schema round-trips through the report types, and the kernel suite's
+//! allocation counts are deterministic (and exactly zero on the
+//! buffer-reuse paths) under a real installed counting allocator.
+
+use std::sync::Mutex;
+
+use kimad::bench::{
+    allocs, kernels, BenchConfig, BenchReport, CountingAlloc, E2eRecord, KernelRecord,
+};
+
+/// Install the counting allocator so the `allocs` column in this test
+/// binary is real, exactly as in the bench binaries.
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Serializes every test in this binary: the allocation-counting tests
+/// read the global counter, and any concurrently allocating test
+/// thread (even the JSON one) would pollute their deltas.
+static ALLOC_LOCK: Mutex<()> = Mutex::new(());
+
+fn sample_report() -> BenchReport {
+    BenchReport {
+        commit: "deadbeefcafe".into(),
+        config: BenchConfig {
+            host: "ci".into(),
+            quick: true,
+            samples: 3,
+            sizes: vec![1 << 16, 1 << 20],
+            threads: 8,
+        },
+        kernels: vec![KernelRecord {
+            name: "diff".into(),
+            n: 65536,
+            ns_per_iter: 12345.5,
+            bytes_per_iter: 786432,
+            allocs: 0,
+        }],
+        e2e: vec![E2eRecord {
+            grid: "quick-r20".into(),
+            cells: 48,
+            wall_ms: 1500.0,
+            build_ms: 120.0,
+            cells_per_sec: 32.0,
+        }],
+    }
+}
+
+#[test]
+fn bench_report_round_trips_through_json_text() {
+    let _guard = ALLOC_LOCK.lock().unwrap();
+    let report = sample_report();
+    let text = report.to_json().to_string();
+    let back = BenchReport::parse(&text).expect("emitted JSON must parse back");
+    assert_eq!(back.to_json().to_string(), text, "round-trip must be lossless");
+    assert_eq!(back.commit, "deadbeefcafe");
+    assert_eq!(back.config.sizes, vec![65536, 1048576]);
+    assert_eq!(back.kernels[0].name, "diff");
+    assert_eq!(back.e2e[0].grid, "quick-r20");
+    assert_eq!(back.e2e[0].build_ms, 120.0);
+
+    // The schema the CI gate greps for: every required key is present.
+    for key in ["\"commit\"", "\"config\"", "\"kernels\"", "\"e2e\"", "\"ns_per_iter\"",
+        "\"bytes_per_iter\"", "\"allocs\"", "\"cells_per_sec\"", "\"build_ms\""]
+    {
+        assert!(text.contains(key), "schema key {key} missing from {text}");
+    }
+}
+
+#[test]
+fn counting_allocator_is_installed_and_counts() {
+    let _guard = ALLOC_LOCK.lock().unwrap();
+    let before = allocs();
+    let v = std::hint::black_box(vec![0u8; 4096]);
+    drop(v);
+    assert!(allocs() > before, "installed CountingAlloc must count heap allocations");
+}
+
+#[test]
+fn kernel_alloc_counts_are_deterministic_and_zero_on_reuse_paths() {
+    let _guard = ALLOC_LOCK.lock().unwrap();
+    // Tiny size + 1 sample: fast, but the same warm/count protocol as
+    // the real `kimad bench` run.
+    let first = kernels::run_kernels(&[64], 1);
+    let second = kernels::run_kernels(&[64], 1);
+    assert_eq!(first.len(), second.len());
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.n, b.n);
+        assert_eq!(
+            a.allocs, b.allocs,
+            "allocation count for {} must be deterministic across runs",
+            a.name
+        );
+    }
+    for rec in &first {
+        if kernels::alloc_free_kernels().contains(&rec.name.as_str()) {
+            assert_eq!(
+                rec.allocs, 0,
+                "warm {} path must be allocation-free, saw {} allocs/iter",
+                rec.name, rec.allocs
+            );
+        }
+    }
+}
