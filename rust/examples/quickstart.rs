@@ -15,6 +15,8 @@ fn main() -> anyhow::Result<()> {
     let cfg = ExperimentConfig {
         name: "quickstart".into(),
         m: 1,
+        participation: 1.0,
+        cohorts: 0,
         workload: WorkloadSpec::Quadratic { d: 30, n_layers: 3, t_comp: 0.2 },
         budget: BudgetParams::PerDirection { t_comm: 0.8 },
         up_policy: CompressPolicy::KimadUniform,

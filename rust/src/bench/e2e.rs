@@ -23,6 +23,33 @@ pub fn quick_grid() -> ScenarioGrid {
     g
 }
 
+/// The workers-scaling suite: one single-cell population grid per
+/// decade of M (10² → 10⁶), each sampling a fixed ~10-client quorum so
+/// wall time measures how cell cost scales with the *population* size
+/// while per-round work stays constant. A flat engine (cells/sec
+/// roughly equal across the three) demonstrates the O(quorum + cohorts)
+/// contract; a dense engine would scale linearly in M and the m1m grid
+/// would not finish.
+pub fn workers_scaling_grids() -> Vec<ScenarioGrid> {
+    // (tag, population, participation): each pair keeps
+    // quorum = ceil(p·M) = 10.
+    [("m100", 100, 0.1), ("m10k", 10_000, 1e-3), ("m1m", 1_000_000, 1e-5)]
+        .into_iter()
+        .map(|(tag, m, p)| {
+            let mut g = ScenarioGrid::default_grid();
+            g.name = format!("workers-scaling-{tag}");
+            g.base.rounds = 10;
+            g.workloads.truncate(1); // quad
+            g.traces.truncate(1); // flat
+            g.policies.retain(|pol| pol.name == "kimad");
+            g.modes.truncate(1); // sync (population cells are Sync-only)
+            g.worker_counts = vec![m];
+            g.participations = vec![p];
+            g
+        })
+        .collect()
+}
+
 /// Execute `grid` once on the full worker pool and summarize. Wall
 /// time covers the whole matrix run (family prep included — that is
 /// the end-to-end number); the summed per-cell `build_ms` is reported
@@ -54,5 +81,30 @@ mod tests {
         assert_eq!(q.n_cells(), 48);
         assert!(q.base.rounds < d.base.rounds);
         assert_ne!(q.name, d.name, "distinct baseline keys");
+    }
+
+    #[test]
+    fn workers_scaling_grids_pin_a_fixed_quorum() {
+        let grids = workers_scaling_grids();
+        assert_eq!(grids.len(), 3);
+        for g in &grids {
+            assert_eq!(g.n_cells(), 1, "{}: one cell per grid", g.name);
+            g.validate().unwrap();
+            let cells = g.expand();
+            let cell = &cells[0];
+            assert!(cell.cfg.is_population(), "{}: must use the sampled engine", g.name);
+            assert_eq!(cell.cfg.quorum(), 10, "{}: fixed 10-client quorum", g.name);
+        }
+        assert_eq!(grids[2].worker_counts, vec![1_000_000]);
+    }
+
+    #[test]
+    fn million_worker_grid_runs_in_quorum_sized_time() {
+        // The headline satellite check: the M = 10⁶ cell completes like
+        // a small one because per-round state is O(quorum + cohorts).
+        let grids = workers_scaling_grids();
+        let rec = run_grid(&grids[2]).unwrap();
+        assert_eq!(rec.cells, 1);
+        assert!(rec.cells_per_sec > 0.0);
     }
 }

@@ -115,6 +115,22 @@ fn check_participation(p: f64) -> anyhow::Result<f64> {
     Ok(p)
 }
 
+/// Range check for the *population* participation fraction (per-round
+/// client sampling — distinct from semisync's race-based first-K
+/// quorum, which is `ExecModeSpec::SemiSync`).
+pub fn check_pop_participation(p: f64) -> anyhow::Result<f64> {
+    anyhow::ensure!(
+        p.is_finite() && p > 0.0 && p <= 1.0,
+        "population participation must be in (0, 1], got {p}"
+    );
+    Ok(p)
+}
+
+/// Default cohort count for population runs that leave `cohorts` at
+/// auto (0): enough link/compute diversity to be interesting, small
+/// enough that per-round probing stays O(1)-ish at any M.
+pub const DEFAULT_COHORTS: usize = 64;
+
 fn check_damping(d: f64) -> anyhow::Result<f64> {
     anyhow::ensure!(d > 0.0 && d <= 1.0, "async damping must be in (0, 1], got {d}");
     Ok(d)
@@ -302,8 +318,21 @@ pub struct OptimizerSpec {
 #[derive(Debug, Clone, PartialEq)]
 pub struct ExperimentConfig {
     pub name: String,
-    /// Number of workers M.
+    /// Number of workers M. With `participation < 1.0` (or an explicit
+    /// `cohorts`), M is a *population* size: clients exist as weighted
+    /// cohorts and only a sampled quorum materializes per round — see
+    /// `coordinator::population`.
     pub m: usize,
+    /// Per-round participation fraction p in (0, 1]: each round samples
+    /// `ceil(p · M)` clients (deterministically from `seed`). 1.0 with
+    /// `cohorts == 0` = the dense path (every client is a resident
+    /// worker, exactly the pre-population engine).
+    pub participation: f64,
+    /// Cohort count C for population runs: clients share their cohort's
+    /// bandwidth traces and link monitors (`client % C`). 0 = auto
+    /// (`min(M, DEFAULT_COHORTS)` when sampling, dense otherwise);
+    /// `cohorts == M` reproduces dense per-worker traces exactly.
+    pub cohorts: usize,
     pub workload: WorkloadSpec,
     pub budget: BudgetParams,
     pub up_policy: CompressPolicy,
@@ -459,6 +488,8 @@ impl ExperimentConfig {
         Value::obj(vec![
             ("name", Value::str(self.name.clone())),
             ("m", Value::num(self.m as f64)),
+            ("participation", Value::num(self.participation)),
+            ("cohorts", Value::num(self.cohorts as f64)),
             ("workload", workload_to_json(&self.workload)),
             ("budget", budget_to_json(&self.budget)),
             ("up_policy", policy_to_json(&self.up_policy)),
@@ -500,6 +531,13 @@ impl ExperimentConfig {
         Ok(Self {
             name: v.get("name")?.as_str()?.to_string(),
             m: v.get("m")?.as_usize()?,
+            // Absent in pre-population configs: dense p = 1.
+            participation: check_pop_participation(
+                v.opt("participation")
+                    .and_then(|a| a.as_f64().ok())
+                    .unwrap_or(1.0),
+            )?,
+            cohorts: v.opt("cohorts").and_then(|a| a.as_usize().ok()).unwrap_or(0),
             workload: workload_from_json(v.get("workload")?)?,
             budget: budget_from_json(v.get("budget")?)?,
             up_policy: policy_from_json(v.get("up_policy")?)?,
@@ -569,6 +607,44 @@ impl ExperimentConfig {
         self.to_json().to_string()
     }
 
+    /// Does this config use the population engine (sampled per-round
+    /// participation and/or cohort-shared links) instead of the dense
+    /// per-worker path? `participation = 1` with auto cohorts is dense
+    /// by definition — the population engine at p = 1, C = M is
+    /// bit-identical to it, so routing there would only cost clarity.
+    pub fn is_population(&self) -> bool {
+        self.participation < 1.0 || self.cohorts != 0
+    }
+
+    /// Per-round sampled quorum size: `ceil(p · M)`, never below one
+    /// client, never above the population.
+    pub fn quorum(&self) -> usize {
+        ((self.participation * self.m as f64).ceil() as usize).clamp(1, self.m.max(1))
+    }
+
+    /// Resolved cohort count C for population runs: the explicit knob
+    /// clamped to M, else `min(M, DEFAULT_COHORTS)`.
+    pub fn resolved_cohorts(&self) -> usize {
+        let m = self.m.max(1);
+        if self.cohorts != 0 {
+            self.cohorts.min(m)
+        } else {
+            m.min(DEFAULT_COHORTS)
+        }
+    }
+
+    /// How many physical netsim links this config needs: one per worker
+    /// on the dense path, one per cohort under the population model —
+    /// the quantity trace building, family sharing and the netsim
+    /// assembly all key on.
+    pub fn n_links(&self) -> usize {
+        if self.is_population() {
+            self.resolved_cohorts()
+        } else {
+            self.m
+        }
+    }
+
     /// Cap this experiment's intra-simulation parallelism to `budget`
     /// concurrent threads — the cooperative thread-budget rule: a
     /// scenario matrix running W cell workers hands each cell at most
@@ -598,6 +674,8 @@ mod tests {
         ExperimentConfig {
             name: "fig8".into(),
             m: 4,
+            participation: 1.0,
+            cohorts: 0,
             workload: WorkloadSpec::DeepModel {
                 preset: "e2e".into(),
                 sigma: 0.3,
@@ -712,6 +790,9 @@ mod tests {
         }"#;
         let cfg = ExperimentConfig::from_json(&Value::parse(text).unwrap()).unwrap();
         assert_eq!(cfg.alpha, 1.0);
+        assert_eq!(cfg.participation, 1.0, "pre-population configs parse as dense");
+        assert_eq!(cfg.cohorts, 0);
+        assert!(!cfg.is_population());
         assert!(cfg.warm_start);
         assert!(!cfg.single_layer);
         assert_eq!(cfg.prior_bps, 0.0);
@@ -808,6 +889,58 @@ mod tests {
             WorkloadSpec::parse("deep:tiny,sigma=0.1").unwrap().short_name(),
             WorkloadSpec::parse("deep:tiny,sigma=0.5").unwrap().short_name()
         );
+    }
+
+    #[test]
+    fn population_roundtrip_and_resolution() {
+        let mut cfg = sample();
+        cfg.m = 1_000_000;
+        cfg.participation = 0.001;
+        cfg.cohorts = 128;
+        cfg.mode = ExecModeSpec::Sync;
+        let back =
+            ExperimentConfig::from_json(&Value::parse(&cfg.to_json_string()).unwrap()).unwrap();
+        assert_eq!(back, cfg);
+        assert!(cfg.is_population());
+        assert_eq!(cfg.quorum(), 1000);
+        assert_eq!(cfg.resolved_cohorts(), 128);
+        assert_eq!(cfg.n_links(), 128);
+
+        // Quorum ceils to >= 1 and clamps to M.
+        cfg.m = 3;
+        cfg.participation = 0.0001;
+        assert_eq!(cfg.quorum(), 1);
+        cfg.participation = 1.0;
+        assert_eq!(cfg.quorum(), 3);
+
+        // Auto cohorts: min(M, DEFAULT_COHORTS); explicit clamps to M.
+        cfg.cohorts = 0;
+        cfg.participation = 0.5;
+        assert_eq!(cfg.resolved_cohorts(), 3);
+        cfg.m = 1000;
+        assert_eq!(cfg.resolved_cohorts(), DEFAULT_COHORTS);
+        cfg.cohorts = 5000;
+        assert_eq!(cfg.resolved_cohorts(), 1000);
+
+        // Dense configs keep one link per worker.
+        let dense = sample();
+        assert!(!dense.is_population());
+        assert_eq!(dense.n_links(), dense.m);
+        // p = 1 with explicit cohorts routes through the population
+        // engine (that is the bit-identity test's lever).
+        let mut p1 = sample();
+        p1.cohorts = p1.m;
+        assert!(p1.is_population());
+        assert_eq!(p1.n_links(), p1.m);
+
+        // Out-of-range participation fails at parse time.
+        let mut bad = sample();
+        bad.participation = 0.0;
+        assert!(ExperimentConfig::from_json(&Value::parse(&bad.to_json_string()).unwrap())
+            .is_err());
+        assert!(check_pop_participation(1.5).is_err());
+        assert!(check_pop_participation(f64::NAN).is_err());
+        assert_eq!(check_pop_participation(0.25).unwrap(), 0.25);
     }
 
     #[test]

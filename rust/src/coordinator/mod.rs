@@ -9,22 +9,28 @@
 //! [`sim::ExecMode`].
 //!
 //! Layer map:
-//!   server.rs — server-side state (model x, x̂ / per-worker x̂_m
-//!               mirrors, û_m mirrors)
-//!   worker.rs — worker-side state, GradientSource, compute models
-//!   shard.rs  — layer-sharded server kernels (ShardPlan + the
-//!               deliver/aggregate/step/broadcast kernels)
-//!   round.rs  — per-round records the figures/tables read
-//!   sim.rs    — the event-driven round engine
+//!   server.rs     — server-side state (model x, x̂ / per-worker x̂_m
+//!                   mirrors, û_m mirrors)
+//!   worker.rs     — worker-side state, GradientSource, compute models
+//!   shard.rs      — layer-sharded server kernels (ShardPlan + the
+//!                   deliver/aggregate/step/broadcast kernels)
+//!   round.rs      — per-round records the figures/tables read
+//!   sim.rs        — the event-driven round engine (dense: every worker
+//!                   materialized)
+//!   population.rs — the population/cohort engine (M described, only the
+//!                   sampled quorum materialized; O(quorum + cohorts)
+//!                   state)
 //!
 //! See `docs/ARCHITECTURE.md` for the full data-flow walkthrough.
 
+pub mod population;
 pub mod round;
 pub mod server;
 pub mod shard;
 pub mod sim;
 pub mod worker;
 
+pub use population::{sample_round, PopulationSim, PopulationSpec};
 pub use round::{RoundRecord, WorkerRound};
 pub use server::ServerState;
 pub use shard::{BroadcastScratch, ShardPlan, ShardSpan};

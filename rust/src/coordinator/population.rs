@@ -1,0 +1,772 @@
+//! The population/cohort round engine: a million simulated clients,
+//! O(quorum + cohorts) resident state.
+//!
+//! The dense engine ([`Simulation`](super::Simulation)) materializes
+//! per-worker state — a trace pair, an EF21 estimator û_m, in-flight
+//! message buffers, a bandwidth monitor — for every one of its M
+//! workers, which caps M in the hundreds. This engine models the
+//! federated regime Kimad targets instead: M is a *population* size,
+//! and each synchronous round
+//!
+//! 1. **samples** `quorum = ceil(p · M)` distinct clients with Floyd's
+//!    algorithm ([`Rng::sample_distinct_sorted_into`]) from a per-round
+//!    stream derived as `seed → SAMPLER_STREAM → round` — a pure
+//!    function of `(seed, round)`, so the schedule is identical for
+//!    every thread count, shard count, and resume point;
+//! 2. **seats** the sampled clients in a recycled pool of `quorum`
+//!    worker slots (the j-th seat always holds the j-th smallest
+//!    sampled client). A seat keeps its occupant's EF21 state across
+//!    rounds while the occupant re-appears; a reassigned seat resets to
+//!    a cold client (zeroed û, fresh monitor) — at p = 1 occupants
+//!    never change, which is one half of the dense bit-identity
+//!    argument;
+//! 3. runs the **same round kernels** as the dense Sync path — the
+//!    crate-visible [`upload_leg`]/[`deliver_upload`] worker leg and
+//!    the sharded broadcast/aggregate/step server kernels — over the
+//!    seats only, in the dense engine's exact event order (broadcast
+//!    milestones sorted by (arrival time, client); reductions in
+//!    client-ascending order). That is the other half: with p = 1 and
+//!    C = M every operation sequence is the dense one, so the rounds
+//!    are bit-identical by construction (asserted in the tests).
+//!
+//! Clients share physical links through **cohorts**: client c uses
+//! cohort `c % C`'s (uplink, downlink) trace pair and downlink
+//! monitor, so the netsim carries C links instead of M. With C = M the
+//! cohort map is the identity and the traces are exactly the dense
+//! per-worker ones.
+//!
+//! Per-round cost is O(C + quorum · d); resident memory is
+//! O(quorum · d + C) — both independent of M, which is what lets a
+//! `--workers 1000000 --participation 0.001` cell finish in seconds.
+
+use crate::bandwidth::{BandwidthMonitor, EwmaMonitor};
+use crate::compress::Identity;
+use crate::ef21::Estimator;
+use crate::kimad::{effective_budget, Selector};
+use crate::netsim::{Direction, NetSim};
+use crate::util::rng::Rng;
+
+use super::round::{RoundRecord, WorkerRound};
+use super::shard::{self, ShardPlan};
+use super::sim::{
+    deliver_upload, effective_shards, effective_threads, upload_leg, ExecMode, SimConfig,
+    UploadCtx, UploadLeg, PROBE_BITS, PROBE_WINDOW,
+};
+use super::worker::{GradientSource, WorkerState};
+
+/// The sampler's stream tag: participant sampling draws from
+/// `seed_from_u64(seed).derive(SAMPLER_STREAM).derive(round)`, so it
+/// can never collide with the compute-model or trace seed derivations
+/// (documented in docs/ARCHITECTURE.md §8 — changing this constant
+/// changes every sampled schedule).
+pub const SAMPLER_STREAM: u64 = 0x504f_505f_5341_4d50; // "POP_SAMP"
+
+/// The round `round`'s participant set: `quorum` distinct client ids in
+/// ascending order, a pure function of `(seed, population, quorum,
+/// round)`. Exposed as a free function so determinism is testable
+/// without building a simulation.
+pub fn sample_round(seed: u64, population: usize, quorum: usize, round: u64, out: &mut Vec<u32>) {
+    let mut rng = Rng::seed_from_u64(seed).derive(SAMPLER_STREAM).derive(round);
+    rng.sample_distinct_sorted_into(population, quorum, out);
+}
+
+/// The population model: how many clients exist, what fraction of them
+/// a round samples, and how they share physical links.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PopulationSpec {
+    /// Population size M (the config's `m`).
+    pub population: usize,
+    /// Per-round participation fraction p in (0, 1].
+    pub participation: f64,
+    /// Cohort count C: client c uses link `c % C`. C = M reproduces
+    /// dense per-worker links exactly.
+    pub cohorts: usize,
+    /// Sampling seed (the config's `seed`).
+    pub seed: u64,
+}
+
+impl PopulationSpec {
+    /// Per-round sampled quorum: `ceil(p · M)`, clamped to `[1, M]`.
+    pub fn quorum(&self) -> usize {
+        ((self.participation * self.population as f64).ceil() as usize)
+            .clamp(1, self.population.max(1))
+    }
+
+    /// The cohort (physical link index) client `client` belongs to.
+    pub fn cohort_of(&self, client: u32) -> usize {
+        client as usize % self.cohorts
+    }
+}
+
+/// One recycled worker slot: the per-worker state of whichever sampled
+/// client currently occupies it, plus the per-round leg bookkeeping the
+/// dense engine keeps in its `Chain`.
+struct Seat {
+    state: WorkerState,
+    /// Current occupant (None = never assigned).
+    client: Option<u32>,
+    down_seconds: f64,
+    /// BroadcastDone time `t0 + down_seconds` — kept as the computed
+    /// f64 (not re-derived) so the gradient-phase sort ties break
+    /// exactly like the dense event queue's (time, worker) order.
+    t_bd: f64,
+    t_comp: f64,
+    up_start: f64,
+    loss: f64,
+    leg: UploadLeg,
+}
+
+impl Seat {
+    fn new(dim: usize) -> Self {
+        Self {
+            state: WorkerState::new(0, dim),
+            client: None,
+            down_seconds: 0.0,
+            t_bd: 0.0,
+            t_comp: 0.0,
+            up_start: 0.0,
+            loss: f64::NAN,
+            leg: UploadLeg::default(),
+        }
+    }
+
+    /// Re-seat a different client: reset to the cold state a fresh
+    /// `WorkerState` would have (zeroed EF21 estimator and update
+    /// vector, fresh bandwidth monitor), pointing at the new occupant's
+    /// cohort link. Scratch buffers (`diff`, `msgs`, selection state)
+    /// are fully overwritten every round — the same reuse contract the
+    /// dense engine already relies on across rounds — so they carry
+    /// nothing over. The seat's server-side û mirror is zeroed by the
+    /// caller alongside this.
+    fn assign(&mut self, client: u32, cohort: usize) {
+        self.client = Some(client);
+        self.state.id = cohort;
+        self.state.u_hat.value.iter_mut().for_each(|v| *v = 0.0);
+        self.state.u.iter_mut().for_each(|v| *v = 0.0);
+        self.state.monitor = Box::new(EwmaMonitor::new(0.7));
+    }
+}
+
+/// A running population simulation: server + `quorum` seats + C cohort
+/// links + the gradient source. The API mirrors [`Simulation`]
+/// (`shards`/`thread_cap` knobs, `run`, a public model vector) so the
+/// driver can swap engines per config.
+///
+/// [`Simulation`]: super::Simulation
+pub struct PopulationSim<S: GradientSource> {
+    pub cfg: SimConfig,
+    pub pop: PopulationSpec,
+    pub net: NetSim,
+    pub source: S,
+    /// The global model x^k (the dense engine's `server.x`).
+    pub x: Vec<f32>,
+    /// Shared broadcast estimator x̂ (Sync rounds have one channel).
+    pub x_hat: Estimator,
+    /// Per-cohort downlink monitors (the dense engine's per-worker
+    /// `down_monitors`, one per physical link).
+    pub down_monitors: Vec<Box<dyn BandwidthMonitor>>,
+    pub clock: f64,
+    pub step: u64,
+    /// See [`Simulation::shards`](super::Simulation::shards).
+    pub shards: usize,
+    /// See [`Simulation::thread_cap`](super::Simulation::thread_cap).
+    pub thread_cap: usize,
+    /// Per-seat server-side û mirrors, contiguous so the sharded
+    /// aggregate kernel runs over them unchanged.
+    u_hats: Vec<Estimator>,
+    /// Uniform aggregation weights 1/quorum (= the dense 1/M at p = 1).
+    weights: Vec<f64>,
+    seats: Vec<Seat>,
+    /// This round's sampled clients, ascending.
+    sampled: Vec<u32>,
+    /// Reusable gradient-phase ordering scratch.
+    order: Vec<usize>,
+    up_selector: Selector,
+    down_selector: Selector,
+    agg: Vec<f32>,
+    diff: Vec<f32>,
+    scratch: Vec<f32>,
+    warmed: bool,
+    plan: ShardPlan,
+    bcast: shard::BroadcastScratch,
+}
+
+impl<S: GradientSource> PopulationSim<S> {
+    pub fn new(
+        cfg: SimConfig,
+        pop: PopulationSpec,
+        net: NetSim,
+        source: S,
+        x0: Vec<f32>,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            matches!(cfg.mode, ExecMode::Sync),
+            "population sampling runs Sync rounds only: semisync/async already model \
+             partial participation as a race outcome, and layering sampled \
+             participation on top would double-count it"
+        );
+        anyhow::ensure!(
+            cfg.weights.is_empty(),
+            "population aggregation is uniform 1/quorum; explicit per-worker weights \
+             are a dense-path feature"
+        );
+        anyhow::ensure!(pop.population >= 1, "population must be >= 1");
+        anyhow::ensure!(
+            cfg.m == pop.population,
+            "SimConfig.m ({}) != population ({})",
+            cfg.m,
+            pop.population
+        );
+        anyhow::ensure!(
+            pop.participation > 0.0 && pop.participation <= 1.0,
+            "participation must be in (0, 1], got {}",
+            pop.participation
+        );
+        anyhow::ensure!(
+            pop.cohorts >= 1 && pop.cohorts <= pop.population,
+            "cohorts must be in [1, population], got {}",
+            pop.cohorts
+        );
+        anyhow::ensure!(
+            net.n_workers() == pop.cohorts,
+            "netsim links ({}) != cohorts ({})",
+            net.n_workers(),
+            pop.cohorts
+        );
+        assert_eq!(x0.len(), source.dim(), "x0 dim != source dim");
+        let dim = x0.len();
+        let q = pop.quorum();
+        let up_selector = Selector::new(cfg.up_policy.clone());
+        let down_selector = Selector::new(cfg.down_policy.clone());
+        let plan = ShardPlan::build(&cfg.layers, effective_shards(0, cfg.layers.len(), dim, 0));
+        Ok(Self {
+            cfg,
+            pop,
+            net,
+            source,
+            x: x0,
+            x_hat: Estimator::zeros(dim),
+            down_monitors: (0..pop.cohorts)
+                .map(|_| Box::new(EwmaMonitor::new(0.7)) as Box<dyn BandwidthMonitor>)
+                .collect(),
+            clock: 0.0,
+            step: 0,
+            shards: 0,
+            thread_cap: 0,
+            u_hats: (0..q).map(|_| Estimator::zeros(dim)).collect(),
+            weights: vec![1.0 / q as f64; q],
+            seats: (0..q).map(|_| Seat::new(dim)).collect(),
+            sampled: Vec::with_capacity(q),
+            order: Vec::with_capacity(q),
+            up_selector,
+            down_selector,
+            agg: vec![0.0; dim],
+            diff: vec![0.0; dim],
+            scratch: Vec::with_capacity(dim),
+            warmed: false,
+            plan,
+            bcast: shard::BroadcastScratch::default(),
+        })
+    }
+
+    /// The per-round quorum (seat count).
+    pub fn quorum(&self) -> usize {
+        self.seats.len()
+    }
+
+    /// The current round's sampled clients (ascending) — test hook.
+    pub fn sampled(&self) -> &[u32] {
+        &self.sampled
+    }
+
+    /// Rebuild the shard plan iff the `shards` knob changed (mirrors
+    /// the dense engine).
+    fn ensure_plan(&mut self) {
+        let n = effective_shards(self.shards, self.cfg.layers.len(), self.x.len(), self.thread_cap);
+        if self.plan.n_shards() != n && !self.cfg.layers.is_empty() {
+            self.plan = ShardPlan::build(&self.cfg.layers, n);
+        }
+    }
+
+    /// The shared half of the §4.2 warmup: advance x̂ to x⁰ by one
+    /// uncompressed exchange (the dense `warm_start`'s first phase; the
+    /// per-client half runs per seat on assignment).
+    fn warm_shared(&mut self) {
+        let id = Identity;
+        for l in &self.cfg.layers {
+            let target = &self.x[l.offset..l.offset + l.size];
+            self.x_hat.compress_advance(&id, target, l, &mut self.scratch);
+        }
+    }
+
+    /// Sample round `round`'s participants and (re)seat them. Seats
+    /// whose occupant re-appears keep all state; reassigned seats reset
+    /// cold and — under `warm_start` — run the per-client uncompressed
+    /// warm exchange at the current x̂ (round 0 at p = 1 is therefore
+    /// exactly the dense `warm_start` sequence).
+    fn resample(&mut self, round: u64) -> anyhow::Result<()> {
+        if self.pop.participation >= 1.0 {
+            if self.sampled.len() != self.pop.population {
+                self.sampled.clear();
+                self.sampled.extend(0..self.pop.population as u32);
+            }
+        } else {
+            sample_round(
+                self.pop.seed,
+                self.pop.population,
+                self.seats.len(),
+                round,
+                &mut self.sampled,
+            );
+        }
+        debug_assert_eq!(self.sampled.len(), self.seats.len());
+        for j in 0..self.sampled.len() {
+            let client = self.sampled[j];
+            if self.seats[j].client == Some(client) {
+                continue;
+            }
+            let cohort = self.pop.cohort_of(client);
+            self.seats[j].assign(client, cohort);
+            self.u_hats[j].value.iter_mut().for_each(|v| *v = 0.0);
+            if self.cfg.warm_start {
+                // The per-client §4.2 warm exchange (dense warm_start's
+                // second phase): u at the current x̂, û := u
+                // uncompressed, mirrored on the server.
+                let seat = &mut self.seats[j];
+                self.source
+                    .update(client as usize, 0, &self.x_hat.value, &mut seat.state.u)?;
+                let id = Identity;
+                for l in &self.cfg.layers {
+                    let target = &seat.state.u[l.offset..l.offset + l.size];
+                    let msg =
+                        seat.state.u_hat.compress_advance(&id, target, l, &mut seat.state.scratch);
+                    self.u_hats[j].apply(&msg, l);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One synchronous population round: probe the C cohort links,
+    /// broadcast the shared x̂ under the slowest-cohort budget, run the
+    /// quorum's worker legs in the dense engine's event order, then
+    /// aggregate Σ (1/q) û over the seats and step — all through the
+    /// sharded server kernels.
+    pub fn round(&mut self) -> anyhow::Result<RoundRecord> {
+        self.ensure_plan();
+        if self.cfg.warm_start && !self.warmed {
+            self.warm_shared();
+            self.warmed = true;
+        }
+        let k = self.step;
+        self.resample(k)?;
+        let t0 = self.clock;
+        let q = self.seats.len();
+
+        // Continuous bandwidth monitoring, one probe per cohort link
+        // (the dense per-worker probe at C = M).
+        for (c, mon) in self.down_monitors.iter_mut().enumerate() {
+            let bd = self.net.window_bps(c, Direction::Down, t0, PROBE_WINDOW);
+            mon.observe(PROBE_BITS, PROBE_BITS / bd.max(1e-9));
+        }
+        let b_down = self
+            .down_monitors
+            .iter()
+            .map(|m| m.estimate_or(self.cfg.prior_bps))
+            .fold(f64::INFINITY, f64::min);
+        let c_down = effective_budget(self.cfg.budget, b_down, self.cfg.budget_safety);
+        let down_bits = shard::broadcast(
+            &self.plan,
+            &self.down_selector,
+            &self.cfg.layers,
+            c_down,
+            &self.x,
+            &mut self.x_hat,
+            &mut self.diff,
+            &mut self.bcast,
+            self.plan.n_shards() > 1,
+        );
+
+        // Downlink transfers, seat (= client-ascending) order — the
+        // dense begin_chain loop over workers 0..M.
+        for s in self.seats.iter_mut() {
+            let tr = self.net.transfer(s.state.id, Direction::Down, t0, down_bits as f64);
+            self.down_monitors[s.state.id].observe(down_bits as f64, tr.seconds);
+            s.down_seconds = tr.seconds;
+            s.t_bd = t0 + tr.seconds;
+        }
+
+        // Gradient phase in the dense engine's BroadcastDone order:
+        // (arrival time, client) ascending. The source is one mutable
+        // resource, so this ordering is the only part of the event
+        // drain that can affect state.
+        self.order.clear();
+        self.order.extend(0..q);
+        {
+            let seats = &self.seats;
+            self.order.sort_by(|&a, &b| {
+                seats[a]
+                    .t_bd
+                    .total_cmp(&seats[b].t_bd)
+                    .then(seats[a].client.cmp(&seats[b].client))
+            });
+        }
+        let base_t = self.source.t_comp();
+        for idx in 0..q {
+            let j = self.order[idx];
+            let client = self.seats[j].client.expect("seated clients are assigned") as usize;
+            let loss =
+                self.source.update(client, k, &self.x_hat.value, &mut self.seats[j].state.u)?;
+            let t_comp = self.cfg.compute.sample(base_t, client, k);
+            let s = &mut self.seats[j];
+            s.loss = loss;
+            s.t_comp = t_comp;
+            s.up_start = s.t_bd + t_comp;
+        }
+
+        // Upload legs: per-seat state is disjoint, so the batch rides
+        // the scoped-thread pool exactly like the dense Sync batch
+        // (chunking is bit-invariant).
+        let n_threads = effective_threads(self.cfg.threads, q, self.x.len(), self.thread_cap);
+        let uctx = UploadCtx { cfg: &self.cfg, net: &self.net, up_selector: &self.up_selector };
+        if n_threads <= 1 {
+            for s in self.seats.iter_mut() {
+                s.leg = upload_leg(&uctx, &mut s.state, s.up_start);
+            }
+        } else {
+            let chunk = q.div_ceil(n_threads);
+            let seats = &mut self.seats;
+            let uctx = &uctx;
+            std::thread::scope(|sc| {
+                let handles: Vec<_> = seats
+                    .chunks_mut(chunk)
+                    .map(|ss| {
+                        sc.spawn(move || {
+                            for s in ss.iter_mut() {
+                                s.leg = upload_leg(uctx, &mut s.state, s.up_start);
+                            }
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().expect("upload leg thread panicked");
+                }
+            });
+        }
+
+        // The barrier: every seat's upload lands; mirror deliveries are
+        // per-seat disjoint, so seat order ≡ the dense arrival order.
+        for (j, s) in self.seats.iter().enumerate() {
+            deliver_upload(&mut self.u_hats[j], &self.cfg.layers, &s.state.msgs);
+        }
+
+        // Records, reductions and the step, in seat (client) order.
+        let worker_rounds: Vec<WorkerRound> = self
+            .seats
+            .iter()
+            .map(|s| WorkerRound {
+                worker: s.client.expect("seated clients are assigned") as usize,
+                up_bits: s.leg.up_bits,
+                up_seconds: s.leg.up_seconds,
+                down_seconds: s.down_seconds,
+                loss: s.loss,
+                compression_error: s.leg.compression_error,
+                est_up_bps: s.leg.est_up_bps,
+                true_up_bps: s.leg.true_up_bps,
+                arrival_lag: s.down_seconds + s.t_comp + s.leg.up_seconds,
+                staleness: 0,
+            })
+            .collect();
+        let loss_sum: f64 = self.seats.iter().map(|s| s.loss).sum();
+        let mut duration = worker_rounds.iter().map(|w| w.arrival_lag).fold(0.0f64, f64::max);
+        let total_up: u64 = worker_rounds.iter().map(|w| w.up_bits).sum();
+        // Zero-information guard, as in the dense engine: never step on
+        // unchanged estimators (outside the EF21 contraction regime).
+        let agg_norm_sq = if total_up > 0 || k == 0 {
+            let par = self.plan.n_shards() > 1;
+            let n = shard::aggregate(&self.plan, &self.weights, &self.u_hats, &mut self.agg, par);
+            shard::step(
+                &self.plan,
+                &self.cfg.optimizer,
+                k as usize,
+                1.0,
+                &mut self.x,
+                &self.agg,
+                &self.cfg.layers,
+                par,
+            );
+            n
+        } else {
+            0.0
+        };
+        if let Some(deadline) = self.cfg.round_deadline {
+            duration = duration.max(deadline);
+        }
+        let f_x = self.source.objective(&self.x).unwrap_or(f64::NAN);
+        self.clock = t0 + duration;
+        self.step += 1;
+        Ok(RoundRecord {
+            step: k,
+            t_start: t0,
+            duration,
+            down_bits,
+            workers: worker_rounds,
+            loss: loss_sum / q as f64,
+            f_x,
+            agg_norm_sq,
+        })
+    }
+
+    /// Run `n` rounds, collecting the records.
+    pub fn run(&mut self, n: u64) -> anyhow::Result<Vec<RoundRecord>> {
+        let mut out = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            out.push(self.round()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::bandwidth::ConstantTrace;
+    use crate::coordinator::{ComputeModel, QuadraticSource, Simulation};
+    use crate::kimad::{BudgetParams, CompressPolicy};
+    use crate::netsim::Link;
+    use crate::optim::{LayerwiseSgd, Schedule};
+    use crate::quadratic::Quadratic;
+
+    /// Heterogeneous constant links: worker/cohort i's bandwidth grows
+    /// with i, so download times differ and the event order is
+    /// non-trivial.
+    fn hetero_net(n: usize, base: f64) -> NetSim {
+        NetSim::new(
+            (0..n)
+                .map(|i| {
+                    let bps = base * (1.0 + 0.37 * i as f64);
+                    Link::new(
+                        Arc::new(ConstantTrace::new(bps)),
+                        Arc::new(ConstantTrace::new(bps * 1.5)),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    fn sim_cfg(m: usize, policy: CompressPolicy, bps: f64) -> SimConfig {
+        let q = Quadratic::paper_instance(30);
+        SimConfig {
+            m,
+            weights: vec![],
+            budget: BudgetParams::PerDirection { t_comm: 1.0 },
+            up_policy: policy.clone(),
+            down_policy: policy,
+            optimizer: LayerwiseSgd::new(Schedule::Constant(0.02)),
+            layers: q.layout(3).layers(),
+            warm_start: true,
+            prior_bps: bps,
+            round_deadline: Some(1.0),
+            budget_safety: 1.0,
+            threads: 1,
+            mode: ExecMode::Sync,
+            compute: ComputeModel::Profile { factors: vec![1.0, 2.5, 0.7] },
+        }
+    }
+
+    fn quad_source() -> QuadraticSource {
+        QuadraticSource::new(Quadratic::paper_instance(30), 0.01)
+    }
+
+    fn pop_sim(
+        m: usize,
+        participation: f64,
+        cohorts: usize,
+        policy: CompressPolicy,
+    ) -> PopulationSim<QuadraticSource> {
+        let cfg = sim_cfg(m, policy, 640.0);
+        let pop = PopulationSpec { population: m, participation, cohorts, seed: 21 };
+        PopulationSim::new(cfg, pop, hetero_net(cohorts, 640.0), quad_source(), vec![1.0f32; 30])
+            .unwrap()
+    }
+
+    #[test]
+    fn p1_full_cohorts_bit_identical_to_dense() {
+        // THE tentpole invariant: p = 1 with C = M runs the exact dense
+        // Sync round — every record bit-identical, on heterogeneous
+        // links and straggler compute.
+        for policy in [
+            CompressPolicy::KimadUniform,
+            CompressPolicy::KimadPlus { discretization: 200, ratios: vec![] },
+            CompressPolicy::FixedRatio { ratio: 0.3 },
+        ] {
+            for m in [1usize, 3, 5] {
+                let mut dense = Simulation::new(
+                    sim_cfg(m, policy.clone(), 640.0),
+                    hetero_net(m, 640.0),
+                    quad_source(),
+                    vec![1.0f32; 30],
+                );
+                let mut pop = pop_sim(m, 1.0, m, policy.clone());
+                let a = dense.run(25).unwrap();
+                let b = pop.run(25).unwrap();
+                assert_eq!(a, b, "{policy:?} m={m}: population p=1 diverged from dense");
+                assert_eq!(dense.server.x, pop.x, "final models diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn sampler_is_deterministic_and_engine_knob_invariant() {
+        // Same seed => identical participant schedule, whatever the
+        // thread and shard knobs say — and identical records too.
+        let mut a = pop_sim(1000, 0.01, 16, CompressPolicy::KimadUniform);
+        let mut b = pop_sim(1000, 0.01, 16, CompressPolicy::KimadUniform);
+        b.cfg.threads = 4;
+        b.shards = 3;
+        let ra = a.run(8).unwrap();
+        let rb = b.run(8).unwrap();
+        assert_eq!(a.sampled(), b.sampled(), "schedules diverged across knobs");
+        assert_eq!(ra, rb, "thread/shard knobs changed population records");
+        // And directly at the sampler level, across disjoint calls.
+        let (mut s1, mut s2) = (Vec::new(), Vec::new());
+        for round in 0..20 {
+            sample_round(21, 1000, 10, round, &mut s1);
+            sample_round(21, 1000, 10, round, &mut s2);
+            assert_eq!(s1, s2);
+            assert!(s1.windows(2).all(|w| w[0] < w[1]));
+        }
+        // Different rounds sample different sets (with overwhelming
+        // probability for these sizes — this seed included).
+        sample_round(21, 1000, 10, 0, &mut s1);
+        sample_round(21, 1000, 10, 1, &mut s2);
+        assert_ne!(s1, s2);
+    }
+
+    #[test]
+    fn quorum_edge_cases() {
+        // Quorum ceils to >= 1 even at vanishing participation.
+        let spec =
+            PopulationSpec { population: 1000, participation: 1e-9, cohorts: 4, seed: 1 };
+        assert_eq!(spec.quorum(), 1);
+        let mut s = pop_sim(1000, 1e-9, 4, CompressPolicy::KimadUniform);
+        assert_eq!(s.quorum(), 1);
+        let recs = s.run(5).unwrap();
+        for r in &recs {
+            assert_eq!(r.workers.len(), 1);
+            assert!(r.f_x.is_finite());
+        }
+        // M = 1: the only client participates every round.
+        let mut one = pop_sim(1, 0.5, 1, CompressPolicy::KimadUniform);
+        let recs = one.run(4).unwrap();
+        for r in &recs {
+            assert_eq!(r.workers.len(), 1);
+            assert_eq!(r.workers[0].worker, 0);
+        }
+        // p = 1 quorum is the whole population.
+        assert_eq!(
+            PopulationSpec { population: 7, participation: 1.0, cohorts: 7, seed: 1 }.quorum(),
+            7
+        );
+    }
+
+    #[test]
+    fn million_population_runs_with_quorum_sized_state() {
+        // The scaling contract: M = 1e6 with a 10-client quorum holds
+        // 10 seats and C links, never M of anything dense.
+        let mut s = pop_sim(1_000_000, 1e-5, 8, CompressPolicy::KimadUniform);
+        assert_eq!(s.quorum(), 10);
+        assert_eq!(s.down_monitors.len(), 8);
+        assert_eq!(s.net.n_workers(), 8);
+        let recs = s.run(3).unwrap();
+        assert_eq!(recs.len(), 3);
+        for r in &recs {
+            assert_eq!(r.workers.len(), 10);
+            assert!(r.f_x.is_finite());
+            for w in &r.workers {
+                assert!(w.worker < 1_000_000);
+            }
+        }
+        assert_eq!(s.seats.len(), 10, "seat pool never grows past the quorum");
+    }
+
+    #[test]
+    fn reassigned_seats_reset_returning_clients_persist() {
+        let mut s = pop_sim(50, 0.1, 5, CompressPolicy::KimadUniform);
+        let mut seen = std::collections::HashSet::new();
+        let recs = s.run(30).unwrap();
+        for (k, r) in recs.iter().enumerate() {
+            // Every arrival is a sampled client of that round's draw.
+            let mut expect = Vec::new();
+            sample_round(21, 50, 5, k as u64, &mut expect);
+            let got: Vec<u32> = r.workers.iter().map(|w| w.worker as u32).collect();
+            assert_eq!(got, expect, "round {k} recorded the wrong participants");
+            seen.extend(got);
+        }
+        // Churn actually happened (many distinct clients seated) while
+        // the pool stayed at quorum size.
+        assert!(seen.len() > 20, "only {} distinct clients in 30 rounds", seen.len());
+        assert_eq!(s.seats.len(), 5);
+        assert!(recs.last().unwrap().f_x.is_finite());
+    }
+
+    #[test]
+    fn rejects_non_sync_modes_and_bad_specs() {
+        let mut cfg = sim_cfg(10, CompressPolicy::KimadUniform, 640.0);
+        cfg.mode = ExecMode::SemiSync { quorum: 2 };
+        let pop = PopulationSpec { population: 10, participation: 0.5, cohorts: 2, seed: 1 };
+        assert!(PopulationSim::new(
+            cfg,
+            pop,
+            hetero_net(2, 640.0),
+            quad_source(),
+            vec![1.0f32; 30]
+        )
+        .is_err());
+        // Cohorts must match the netsim's link count.
+        let cfg = sim_cfg(10, CompressPolicy::KimadUniform, 640.0);
+        assert!(PopulationSim::new(
+            cfg,
+            pop,
+            hetero_net(3, 640.0),
+            quad_source(),
+            vec![1.0f32; 30]
+        )
+        .is_err());
+        // Participation and cohort ranges.
+        let cfg = sim_cfg(10, CompressPolicy::KimadUniform, 640.0);
+        let bad = PopulationSpec { population: 10, participation: 0.0, cohorts: 2, seed: 1 };
+        assert!(PopulationSim::new(
+            cfg,
+            bad,
+            hetero_net(2, 640.0),
+            quad_source(),
+            vec![1.0f32; 30]
+        )
+        .is_err());
+        let cfg = sim_cfg(10, CompressPolicy::KimadUniform, 640.0);
+        let bad = PopulationSpec { population: 10, participation: 0.5, cohorts: 11, seed: 1 };
+        assert!(PopulationSim::new(
+            cfg,
+            bad,
+            hetero_net(11, 640.0),
+            quad_source(),
+            vec![1.0f32; 30]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn population_converges_under_sparse_participation() {
+        // 1%-participation rounds still train the quadratic: the
+        // sampled-quorum EF21 aggregate is a (1/q)-weighted descent
+        // direction.
+        let mut s = pop_sim(200, 0.05, 8, CompressPolicy::KimadUniform);
+        let recs = s.run(150).unwrap();
+        let first = recs[0].f_x;
+        let last = recs.last().unwrap().f_x;
+        assert!(last < first * 0.5, "f0={first} fK={last}");
+    }
+}

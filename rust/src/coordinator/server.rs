@@ -47,20 +47,38 @@ impl ServerState {
     /// engine's honest per-worker channel: each worker only ever sees
     /// what was actually compressed onto *its* downlink, instead of the
     /// shared-broadcast-channel abstraction where one x̂ stood for all).
+    ///
+    /// The mirrors start as dim-0 **copy-on-write placeholders**: until
+    /// a worker's first broadcast, its channel is indistinguishable
+    /// from the shared x̂ ([`model_estimate`](Self::model_estimate)
+    /// falls back to it), so allocating M dense copies up front would
+    /// buy nothing. [`materialize_mirror`](Self::materialize_mirror)
+    /// clones the shared estimator into a slot on first use — O(active
+    /// workers · d) instead of O(M · d).
     pub fn with_per_worker_mirrors(mut self) -> Self {
-        let dim = self.dim();
-        self.x_hats = (0..self.u_hats.len()).map(|_| Estimator::zeros(dim)).collect();
+        self.x_hats = (0..self.u_hats.len()).map(|_| Estimator::zeros(0)).collect();
         self
     }
 
     /// The model estimate worker `worker` computes gradients at: its
-    /// own mirror when per-worker channels are on, the shared broadcast
-    /// estimator otherwise.
+    /// own mirror when per-worker channels are on *and* the mirror has
+    /// been materialized, the shared broadcast estimator otherwise
+    /// (empty-placeholder slots are copy-on-write views of x̂).
     pub fn model_estimate(&self, worker: usize) -> &[f32] {
-        if self.x_hats.is_empty() {
-            &self.x_hat.value
-        } else {
-            &self.x_hats[worker].value
+        match self.x_hats.get(worker) {
+            Some(xh) if !xh.value.is_empty() => &xh.value,
+            _ => &self.x_hat.value,
+        }
+    }
+
+    /// Materialize worker `worker`'s copy-on-write mirror: clone the
+    /// shared x̂ into its slot iff it is still a dim-0 placeholder.
+    /// Bit-identical to eager allocation because the shared estimator
+    /// is static between mirror creation and first use (async rounds
+    /// only ever advance the per-worker channels).
+    pub fn materialize_mirror(&mut self, worker: usize) {
+        if self.x_hats[worker].value.is_empty() {
+            self.x_hats[worker] = self.x_hat.clone();
         }
     }
 
@@ -140,6 +158,26 @@ mod tests {
         per.x_hats[1].value = vec![3.0, 4.0];
         assert_eq!(per.model_estimate(0), &[0.0, 0.0]);
         assert_eq!(per.model_estimate(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn mirrors_are_copy_on_write_placeholders() {
+        // Creation costs O(M) slots, not O(M·d) floats: every slot is a
+        // dim-0 placeholder until materialized.
+        let mut s = ServerState::new(vec![0.0; 4], 3).with_per_worker_mirrors();
+        assert!(s.x_hats.iter().all(|xh| xh.value.is_empty()));
+        // Placeholder slots read through to the shared estimator.
+        s.x_hat.value = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(s.model_estimate(2), &[1.0, 2.0, 3.0, 4.0]);
+        // First use clones the shared channel; later materializations
+        // are no-ops (the mirror now evolves independently).
+        s.materialize_mirror(2);
+        assert_eq!(s.x_hats[2].value, vec![1.0, 2.0, 3.0, 4.0]);
+        s.x_hats[2].value[0] = 9.0;
+        s.materialize_mirror(2);
+        assert_eq!(s.x_hats[2].value, vec![9.0, 2.0, 3.0, 4.0]);
+        // Untouched slots stay placeholders.
+        assert!(s.x_hats[0].value.is_empty() && s.x_hats[1].value.is_empty());
     }
 
     #[test]

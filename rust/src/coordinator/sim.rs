@@ -63,9 +63,10 @@ use super::shard::{self, ShardPlan};
 use super::worker::{ComputeModel, GradientSource, WorkerState};
 
 /// Synthetic NIC-counter probe: bits/window observed by the continuous
-/// bandwidth monitor each round (§2.4, §3).
-const PROBE_BITS: f64 = 1.0e4;
-const PROBE_WINDOW: f64 = 0.5;
+/// bandwidth monitor each round (§2.4, §3). Crate-visible so the
+/// population engine ([`super::population`]) probes identically.
+pub(crate) const PROBE_BITS: f64 = 1.0e4;
+pub(crate) const PROBE_WINDOW: f64 = 0.5;
 
 /// Execution mode of the round engine.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -158,7 +159,7 @@ fn avail_within(cap: usize) -> usize {
     }
 }
 
-fn effective_threads(requested: usize, m: usize, dim: usize, cap: usize) -> usize {
+pub(crate) fn effective_threads(requested: usize, m: usize, dim: usize, cap: usize) -> usize {
     let m = m.max(1);
     if requested != 0 {
         return requested.min(m);
@@ -175,7 +176,7 @@ fn effective_threads(requested: usize, m: usize, dim: usize, cap: usize) -> usiz
 /// than one per layer. An explicit `shards = n` always wins (clamped
 /// to the layer count) — results are bit-identical either way, so
 /// forcing small-model runs parallel is purely a testing device.
-fn effective_shards(requested: usize, n_layers: usize, dim: usize, cap: usize) -> usize {
+pub(crate) fn effective_shards(requested: usize, n_layers: usize, dim: usize, cap: usize) -> usize {
     let layer_cap = n_layers.max(1);
     if requested != 0 {
         return requested.min(layer_cap);
@@ -186,21 +187,24 @@ fn effective_shards(requested: usize, n_layers: usize, dim: usize, cap: usize) -
     avail_within(cap).min(layer_cap)
 }
 
-/// Shared, immutable inputs of a worker upload leg.
-struct UploadCtx<'a> {
-    cfg: &'a SimConfig,
-    net: &'a NetSim,
-    up_selector: &'a Selector,
+/// Shared, immutable inputs of a worker upload leg. Crate-visible so
+/// the population engine ([`super::population`]) reuses the exact same
+/// leg kernel (bit-identity at p = 1 is by construction, not by test
+/// alone).
+pub(crate) struct UploadCtx<'a> {
+    pub(crate) cfg: &'a SimConfig,
+    pub(crate) net: &'a NetSim,
+    pub(crate) up_selector: &'a Selector,
 }
 
 /// What one upload leg produced (recorded when the upload arrives).
 #[derive(Debug, Clone, Copy, Default)]
-struct UploadLeg {
-    up_bits: u64,
-    up_seconds: f64,
-    est_up_bps: f64,
-    true_up_bps: f64,
-    compression_error: f64,
+pub(crate) struct UploadLeg {
+    pub(crate) up_bits: u64,
+    pub(crate) up_seconds: f64,
+    pub(crate) est_up_bps: f64,
+    pub(crate) true_up_bps: f64,
+    pub(crate) compression_error: f64,
 }
 
 /// One worker's uplink leg at `up_start` ("when communication is
@@ -212,7 +216,7 @@ struct UploadLeg {
 /// the wire content stays in `w.msgs` until the upload *arrives*
 /// ([`deliver_upload`]), which is what makes async aggregation honest
 /// about in-flight data.
-fn upload_leg(ctx: &UploadCtx<'_>, w: &mut WorkerState, up_start: f64) -> UploadLeg {
+pub(crate) fn upload_leg(ctx: &UploadCtx<'_>, w: &mut WorkerState, up_start: f64) -> UploadLeg {
     let b_probe = ctx.net.window_bps(w.id, Direction::Up, up_start, PROBE_WINDOW);
     w.monitor.observe(PROBE_BITS, PROBE_BITS / b_probe.max(1e-9));
     let true_up = ctx.net.true_bps(w.id, Direction::Up, up_start);
@@ -267,7 +271,7 @@ fn upload_leg(ctx: &UploadCtx<'_>, w: &mut WorkerState, up_start: f64) -> Upload
 
 /// Server side of an upload arrival: advance the û_m mirror by the
 /// worker's in-flight per-layer messages.
-fn deliver_upload(mirror: &mut Estimator, layers: &[Layer], msgs: &[Compressed]) {
+pub(crate) fn deliver_upload(mirror: &mut Estimator, layers: &[Layer], msgs: &[Compressed]) {
     for (l, msg) in layers.iter().zip(msgs) {
         mirror.apply(msg, l);
     }
@@ -451,9 +455,11 @@ impl<S: GradientSource> Simulation<S> {
             }
         }
         // Per-worker broadcast mirrors (async channels) warm to the
-        // same x⁰ as the shared estimator.
+        // same x⁰ as the shared estimator. Copy-on-write placeholders
+        // (dim 0) stay untouched: they already read through to the
+        // freshly-warmed shared x̂ and will clone it on first use.
         let ServerState { x, x_hats, scratch, .. } = &mut self.server;
-        for xh in x_hats.iter_mut() {
+        for xh in x_hats.iter_mut().filter(|xh| !xh.value.is_empty()) {
             for l in &layers {
                 let target = &x[l.offset..l.offset + l.size];
                 xh.compress_advance(&id, target, l, scratch);
@@ -501,6 +507,10 @@ impl<S: GradientSource> Simulation<S> {
     /// through the same sharded kernel.
     fn broadcast_phase_for(&mut self, worker: usize, b_down: f64) -> u64 {
         let c_down = effective_budget(self.cfg.budget, b_down, self.cfg.budget_safety);
+        // First broadcast on this channel: materialize the worker's
+        // copy-on-write mirror from the shared estimator (bit-identical
+        // to eager allocation — x̂ is static while mirrors are in play).
+        self.server.materialize_mirror(worker);
         let ServerState { x, x_hats, .. } = &mut self.server;
         shard::broadcast(
             &self.plan,
@@ -904,11 +914,13 @@ impl<S: GradientSource> Simulation<S> {
         let mut down_bits = 0u64;
 
         // `cfg.mode` is public, so a simulation built for another mode
-        // can be switched to Async mid-run: create the per-worker
-        // mirrors lazily, seeded from the shared estimator every worker
-        // was tracking until now.
+        // can be switched to Async mid-run: create per-worker mirror
+        // *slots* lazily. Each slot is a dim-0 copy-on-write placeholder
+        // that reads through to the shared estimator every worker was
+        // tracking until now and clones it on the worker's first
+        // broadcast — O(M) slots instead of the old O(M·d) eager copy.
         if self.server.x_hats.is_empty() {
-            self.server.x_hats = vec![self.server.x_hat.clone(); self.cfg.m];
+            self.server.x_hats = (0..self.cfg.m).map(|_| Estimator::zeros(0)).collect();
         }
 
         // Bootstrap (first round, or every worker idle): broadcast to
@@ -1348,6 +1360,29 @@ mod tests {
         switched.cfg.round_deadline = None;
         switched.run(3).unwrap();
         assert_eq!(switched.server.x_hats.len(), 2, "lazy per-worker mirrors");
+    }
+
+    #[test]
+    fn async_mirrors_materialize_lazily_not_eagerly() {
+        // The COW contract: constructing an async simulation allocates
+        // M placeholder slots, zero mirror floats; a worker's mirror
+        // densifies only on its first broadcast.
+        let mut proto = sim(2, 640.0, CompressPolicy::KimadUniform, 0.02);
+        proto.cfg.mode = ExecMode::Async { damping: 0.7 };
+        proto.cfg.round_deadline = None;
+        let cfg = proto.cfg;
+        let mut s = Simulation::new(
+            cfg,
+            constant_net(2, 640.0),
+            crate::coordinator::QuadraticSource::new(Quadratic::paper_instance(30), 0.01),
+            vec![1.0f32; 30],
+        );
+        assert!(s.server.x_hats.iter().all(|xh| xh.value.is_empty()));
+        // Until then every worker reads the shared channel.
+        assert_eq!(s.server.model_estimate(1), s.server.x_hat.value.as_slice());
+        // The bootstrap round broadcasts to everyone: all materialize.
+        s.round().unwrap();
+        assert!(s.server.x_hats.iter().all(|xh| xh.value.len() == 30));
     }
 
     #[test]

@@ -17,7 +17,10 @@ use std::time::Instant;
 
 use crate::bandwidth::{BandwidthTrace, PerWorkerTraces, TraceSpec};
 use crate::config::{ExperimentConfig, WorkloadSpec};
-use crate::coordinator::{GradientSource, QuadraticSource, RoundRecord, SimConfig, Simulation};
+use crate::coordinator::{
+    GradientSource, PopulationSim, PopulationSpec, QuadraticSource, RoundRecord, SimConfig,
+    Simulation,
+};
 use crate::kimad::BudgetParams;
 use crate::model::{Layer, ModelLayout, NativeModelSource};
 use crate::netsim::{Link, NetSim};
@@ -58,11 +61,14 @@ pub fn trace_mean_bps(trace: &dyn BandwidthTrace, horizon: f64) -> f64 {
 /// The per-worker (uplink, downlink) trace handles one family shares.
 pub type SharedLinks = Vec<(Arc<dyn BandwidthTrace>, Arc<dyn BandwidthTrace>)>;
 
-/// Build the M-link netsim from the config's trace specs — the cold
-/// twin of [`WarmFamily::netsim`] (fresh builds instead of `Arc`
-/// clones; bit-identical, since trace construction is deterministic).
+/// Build the netsim from the config's trace specs — the cold twin of
+/// [`WarmFamily::netsim`] (fresh builds instead of `Arc` clones;
+/// bit-identical, since trace construction is deterministic). Dense
+/// configs get one link per worker; population configs get one link per
+/// *cohort* ([`ExperimentConfig::n_links`]), which is what keeps a
+/// million-client population's network state O(cohorts).
 pub fn build_netsim(cfg: &ExperimentConfig) -> NetSim {
-    let pairs = PerWorkerTraces::build(&cfg.uplink, &cfg.downlink, cfg.m);
+    let pairs = PerWorkerTraces::build(&cfg.uplink, &cfg.downlink, cfg.n_links());
     NetSim::new(
         pairs
             .into_iter()
@@ -121,6 +127,77 @@ impl DeepSource {
         match self {
             DeepSource::Pjrt(s) => s.evaluate(params, n_batches),
             DeepSource::Native(s) => s.evaluate(params, n_batches),
+        }
+    }
+}
+
+/// The engine a cell actually runs: the dense event-driven
+/// [`Simulation`] (every worker materialized) or the
+/// [`PopulationSim`] (M described as a population, only the sampled
+/// quorum materialized). The driver picks per config
+/// ([`ExperimentConfig::is_population`]) and the rest of the run path
+/// is engine-agnostic — which is what makes p = 1 population cells
+/// directly comparable (bit-identical at C = M) to dense ones.
+enum EngineSim<S: GradientSource> {
+    Dense(Simulation<S>),
+    Population(PopulationSim<S>),
+}
+
+impl<S: GradientSource> EngineSim<S> {
+    fn new(
+        cfg: &ExperimentConfig,
+        sim_cfg: SimConfig,
+        net: NetSim,
+        source: S,
+        x0: Vec<f32>,
+    ) -> anyhow::Result<Self> {
+        if cfg.is_population() {
+            let pop = PopulationSpec {
+                population: cfg.m,
+                participation: cfg.participation,
+                cohorts: cfg.resolved_cohorts(),
+                seed: cfg.seed,
+            };
+            let mut sim = PopulationSim::new(sim_cfg, pop, net, source, x0)?;
+            sim.shards = cfg.shards;
+            sim.thread_cap = cfg.thread_cap;
+            Ok(EngineSim::Population(sim))
+        } else {
+            let mut sim = Simulation::new(sim_cfg, net, source, x0);
+            sim.shards = cfg.shards;
+            sim.thread_cap = cfg.thread_cap;
+            Ok(EngineSim::Dense(sim))
+        }
+    }
+
+    fn run(&mut self, rounds: u64) -> anyhow::Result<Vec<RoundRecord>> {
+        match self {
+            EngineSim::Dense(s) => s.run(rounds),
+            EngineSim::Population(s) => s.run(rounds),
+        }
+    }
+
+    fn clock(&self) -> f64 {
+        match self {
+            EngineSim::Dense(s) => s.clock,
+            EngineSim::Population(s) => s.clock,
+        }
+    }
+
+    /// The gradient source and the final model, borrowed together
+    /// (deep-model evaluation needs both at once).
+    fn source_and_model(&mut self) -> (&mut S, &[f32]) {
+        match self {
+            EngineSim::Dense(s) => (&mut s.source, &s.server.x),
+            EngineSim::Population(s) => (&mut s.source, &s.x),
+        }
+    }
+
+    /// Take the model vector out (returned to the family's x0 pool).
+    fn take_model(&mut self) -> Vec<f32> {
+        match self {
+            EngineSim::Dense(s) => std::mem::take(&mut s.server.x),
+            EngineSim::Population(s) => std::mem::take(&mut s.x),
         }
     }
 }
@@ -304,13 +381,14 @@ impl WarmFamily {
         artifacts: Option<&str>,
         store: Option<Arc<ArtifactStore>>,
     ) -> anyhow::Result<Self> {
-        // Build every trace once: the M per-worker link pairs, plus —
-        // only when something derives from it — one base uplink that
-        // both the cold-start prior and the §4.2 T_comp derivation
-        // read (the pre-family deep arm built it twice, once per
-        // derivation; configs with an explicit prior and T_comp skip
-        // the 120 s integration entirely).
-        let links = PerWorkerTraces::build(&cfg.uplink, &cfg.downlink, cfg.m);
+        // Build every trace once: the per-link pairs (M worker links
+        // dense, C cohort links for a population), plus — only when
+        // something derives from it — one base uplink that both the
+        // cold-start prior and the §4.2 T_comp derivation read (the
+        // pre-family deep arm built it twice, once per derivation;
+        // configs with an explicit prior and T_comp skip the 120 s
+        // integration entirely).
+        let links = PerWorkerTraces::build(&cfg.uplink, &cfg.downlink, cfg.n_links());
         let needs_mean = cfg.prior_bps <= 0.0
             || matches!(&cfg.workload, WorkloadSpec::DeepModel { t_comp, .. } if *t_comp <= 0.0);
         let mean_up = if needs_mean {
@@ -384,17 +462,21 @@ impl WarmFamily {
     }
 
     /// Is `cfg` a member of this family? Everything the warm state was
-    /// derived from must match — workload, both trace specs, M and the
-    /// prior field; policy, mode, safety, shards and alpha stay free
-    /// axes. (The downlink joined the key when families started sharing
-    /// the built downlink traces; a scenario grid's downlink is
-    /// base-constant, so grid grouping is unaffected.)
+    /// derived from must match — workload, both trace specs, M, the
+    /// built link count (a population cell with C cohort links is not
+    /// interchangeable with a dense M-link cell of the same M) and the
+    /// prior field; policy, mode, safety, shards, participation (at a
+    /// fixed link count) and alpha stay free axes. (The downlink joined
+    /// the key when families started sharing the built downlink traces;
+    /// a scenario grid's downlink is base-constant, so grid grouping is
+    /// unaffected.)
     pub fn compatible(&self, cfg: &ExperimentConfig) -> bool {
         let b = self.base();
         cfg.workload == b.workload
             && cfg.uplink == b.uplink
             && cfg.downlink == b.downlink
             && cfg.m == b.m
+            && cfg.n_links() == b.links.len()
             && cfg.prior_bps == b.cfg_prior
     }
 
@@ -460,13 +542,11 @@ impl WarmFamily {
                 x0.clear();
                 x0.resize(d, 1.0);
                 let sim_cfg = sim_config(cfg, layers.clone(), f.t_comp, f.base.prior_bps);
-                let mut sim = Simulation::new(sim_cfg, self.netsim(cfg), src, x0);
-                sim.shards = cfg.shards;
-                sim.thread_cap = cfg.thread_cap;
+                let mut sim = EngineSim::new(cfg, sim_cfg, self.netsim(cfg), src, x0)?;
                 let build_ms = t_build.elapsed().as_secs_f64() * 1e3;
                 let records = sim.run(cfg.rounds)?;
-                let total_time = sim.clock;
-                f.base.put_buf(std::mem::take(&mut sim.server.x));
+                let total_time = sim.clock();
+                f.base.put_buf(sim.take_model());
                 Ok(ExperimentResult {
                     records,
                     layers,
@@ -490,18 +570,17 @@ impl WarmFamily {
                 let mut x0 = f.base.take_buf();
                 x0.clear();
                 x0.extend_from_slice(f.x0.as_ref());
-                let mut sim = Simulation::new(sim_cfg, self.netsim(cfg), src, x0);
-                sim.shards = cfg.shards;
-                sim.thread_cap = cfg.thread_cap;
+                let mut sim = EngineSim::new(cfg, sim_cfg, self.netsim(cfg), src, x0)?;
                 let build_ms = t_build.elapsed().as_secs_f64() * 1e3;
                 let records = sim.run(cfg.rounds)?;
-                let total_time = sim.clock;
+                let total_time = sim.clock();
                 let eval = if eval_batches > 0 {
-                    Some(sim.source.evaluate(&sim.server.x, eval_batches)?)
+                    let (source, model) = sim.source_and_model();
+                    Some(source.evaluate(model, eval_batches)?)
                 } else {
                     None
                 };
-                f.base.put_buf(std::mem::take(&mut sim.server.x));
+                f.base.put_buf(sim.take_model());
                 let n_params = f.layout.n_params;
                 Ok(ExperimentResult {
                     records,
@@ -568,6 +647,8 @@ mod tests {
         ExperimentConfig {
             name: "t".into(),
             m: 2,
+            participation: 1.0,
+            cohorts: 0,
             workload: WorkloadSpec::Quadratic { d: 30, n_layers: 3, t_comp: 0.01 },
             budget: BudgetParams::PerDirection { t_comm: 1.0 },
             up_policy: CompressPolicy::KimadUniform,
@@ -774,6 +855,68 @@ mod tests {
         let cold = run_experiment(&cfg, None, 0).unwrap();
         assert_eq!(a.records, cold.records);
         assert!(a.build_ms >= 0.0 && cold.build_ms >= 0.0);
+    }
+
+    #[test]
+    fn population_p1_full_cohorts_matches_dense_through_the_driver() {
+        // The tentpole invariant at the driver layer: forcing the
+        // population engine (cohorts = M) at p = 1 reproduces the dense
+        // run record for record — same traces, same warm family
+        // machinery, different engine.
+        let dense = run_experiment(&quad_cfg(), None, 0).unwrap();
+        let mut cfg = quad_cfg();
+        cfg.cohorts = cfg.m; // population engine, dense link map
+        assert!(cfg.is_population());
+        let pop = run_experiment(&cfg, None, 0).unwrap();
+        assert_eq!(dense.records, pop.records, "population p=1 diverged from dense");
+        assert_eq!(dense.total_time, pop.total_time);
+    }
+
+    #[test]
+    fn population_warm_family_matches_cold_and_guards_link_count() {
+        let mut cfg = quad_cfg();
+        cfg.m = 40;
+        cfg.participation = 0.25;
+        cfg.cohorts = 8;
+        let warm = WarmFamily::prepare(&cfg, None).unwrap();
+        assert_eq!(warm.links().len(), 8, "population families build cohort links");
+        let a = warm.run(&cfg).unwrap();
+        let b = run_experiment(&cfg, None, 0).unwrap();
+        assert_eq!(a.records, b.records, "population warm diverged from cold");
+        // Every round carries exactly the quorum, sampled from the
+        // population.
+        for r in &a.records {
+            assert_eq!(r.workers.len(), 10);
+            assert!(r.workers.iter().all(|w| w.worker < 40));
+        }
+        // Same M but a different link count is a different family.
+        let mut dense_cfg = quad_cfg();
+        dense_cfg.m = 40;
+        assert!(!warm.compatible(&dense_cfg));
+        // Population + non-sync mode is rejected, not silently run.
+        let mut bad = cfg.clone();
+        bad.mode = ExecModeSpec::Async { damping: 0.7 };
+        assert!(run_experiment(&bad, None, 0).is_err());
+    }
+
+    #[test]
+    fn large_population_runs_in_quorum_sized_state() {
+        // A hundred-thousand-client population with a 10-client quorum
+        // must build C links + q seats, never 1e5 of anything — this
+        // test is fast precisely because the contract holds.
+        let mut cfg = quad_cfg();
+        cfg.m = 100_000;
+        cfg.participation = 1e-4;
+        cfg.rounds = 5;
+        assert_eq!(cfg.quorum(), 10);
+        assert_eq!(cfg.n_links(), 64, "auto cohorts");
+        assert_eq!(build_netsim(&cfg).n_workers(), 64);
+        let res = run_experiment(&cfg, None, 0).unwrap();
+        assert_eq!(res.records.len(), 5);
+        for r in &res.records {
+            assert_eq!(r.workers.len(), 10);
+            assert!(r.f_x.is_finite());
+        }
     }
 
     #[test]

@@ -5,8 +5,8 @@
 //!   report    regenerate a paper figure/table (fig1, fig3..fig9,
 //!             table1, table2, or `all`)
 //!   scenarios run a scenario matrix (workloads × traces × policies ×
-//!             modes × workers × safety × shards) in parallel, one
-//!             JSON summary per cell
+//!             modes × workers × safety × participation × shards) in
+//!             parallel, one JSON summary per cell
 //!   synthetic quick §4.1 quadratic comparison for one scenario
 //!   trace     sample a bandwidth trace spec (JSON) to stdout
 //!   bench     run the hot-path kernel suite + an end-to-end grid and
@@ -33,7 +33,8 @@ USAGE:
                [--out-dir DIR] [--fast]
   kimad scenarios [--grid <grid.json>] [--out-dir DIR] [--threads N] \\
                [--cell-threads N] [--rounds N] [--modes sync,semisync,async] \\
-               [--shards 1,2,4] [--workload 'quad:d=30,layers=3|deep:tiny'] \\
+               [--shards 1,2,4] [--workers 100,1000000] [--participation 1,0.001] \\
+               [--workload 'quad:d=30,layers=3|deep:tiny'] \\
                [--artifacts DIR] [--print-grid]
   kimad synthetic [--scenario xsmall|small|oscillation|high] [--fast] [--out-dir DIR]
   kimad bench [--quick] [--out FILE]
@@ -111,6 +112,35 @@ fn scenarios(args: &Args) -> anyhow::Result<()> {
             })
             .collect::<anyhow::Result<Vec<_>>>()?;
     }
+    if let Some(workers) = args.opt("workers") {
+        // Override the worker-count axis: comma-separated population
+        // sizes. Combined with --participation < 1 these run as
+        // sampled population cells, so million-client counts are fine.
+        grid.worker_counts = workers
+            .split(',')
+            .map(|tok| {
+                tok.trim()
+                    .parse::<usize>()
+                    .map_err(|e| anyhow::anyhow!("--workers token '{tok}': {e}"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+    }
+    if let Some(participation) = args.opt("participation") {
+        // Override the participation axis: comma-separated fractions in
+        // (0, 1]. 1 keeps the dense engine (and dense cell ids); p < 1
+        // samples ceil(p*M) clients per round (Sync modes only).
+        grid.participations = participation
+            .split(',')
+            .map(|tok| {
+                let p: f64 = tok
+                    .trim()
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("--participation token '{tok}': {e}"))?;
+                kimad::config::check_pop_participation(p)?;
+                Ok(p)
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+    }
     if let Some(workloads) = args.opt("workload") {
         // Override the workload axis: |-separated tokens, each
         // quad[:d=..,layers=..,tcomp=..] or deep:<preset>[,sigma=..].
@@ -140,7 +170,7 @@ fn scenarios(args: &Args) -> anyhow::Result<()> {
     let out_dir = PathBuf::from(args.opt_or("out-dir", "reports/scenarios"));
     eprintln!(
         "running grid '{}': {} cells ({} workloads x {} traces x {} policies x {} modes \
-         x {} worker counts x {} safety x {} shard counts)...",
+         x {} worker counts x {} safety x {} participations x {} shard counts)...",
         grid.name,
         grid.n_cells(),
         grid.workloads.len(),
@@ -149,6 +179,7 @@ fn scenarios(args: &Args) -> anyhow::Result<()> {
         grid.modes.len(),
         grid.worker_counts.len(),
         grid.safety_factors.len(),
+        grid.participations.len(),
         grid.shard_counts.len()
     );
     // Surface silent neutering of a shard-axis sweep: under the

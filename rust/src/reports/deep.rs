@@ -52,6 +52,8 @@ pub fn base_config(
     ExperimentConfig {
         name: "deep".into(),
         m,
+        participation: 1.0,
+        cohorts: 0,
         workload: WorkloadSpec::DeepModel {
             preset: ctx.preset().into(),
             sigma: 0.3,

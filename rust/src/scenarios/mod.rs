@@ -1,7 +1,13 @@
 //! Scenario-matrix engine: sweep {workload × bandwidth trace ×
 //! compression policy × execution mode × worker count × budget safety
-//! factor × server shard count} and execute the cross-product in
-//! parallel, one JSON summary per cell.
+//! factor × participation fraction × server shard count} and execute
+//! the cross-product in parallel, one JSON summary per cell.
+//!
+//! The worker axis scales to populations: a cell with `participation
+//! < 1` (or an explicit `base.cohorts`) runs the population engine —
+//! `m` is a *population* size, each round samples `quorum = ceil(p·m)`
+//! clients, and per-cell state is O(quorum + cohorts), so
+//! `worker_counts: [1000000]` is a normal axis value.
 //!
 //! This is how the repo evaluates "as many scenarios as you can
 //! imagine" (ROADMAP) the way Accordion and the gradient-compression
@@ -113,6 +119,11 @@ pub struct GridBase {
     /// Artifact directory for deep-model workloads (`None` =
     /// `./artifacts` or `$KIMAD_ARTIFACTS`).
     pub artifacts: Option<String>,
+    /// Cohort count for population cells (clients share links via
+    /// `client % cohorts`): 0 = dense per-worker links at
+    /// participation 1, auto (`min(m, 64)`) otherwise. A non-zero
+    /// value forces the population engine even at participation 1.
+    pub cohorts: usize,
 }
 
 /// The declarative scenario matrix.
@@ -129,6 +140,10 @@ pub struct ScenarioGrid {
     pub modes: Vec<NamedMode>,
     pub worker_counts: Vec<usize>,
     pub safety_factors: Vec<f64>,
+    /// Per-round participation axis: 1.0 = dense (every worker, the
+    /// classic engine); p < 1 samples `ceil(p·m)` clients per round on
+    /// the population engine (Sync modes only). `[1.0]` = dense only.
+    pub participations: Vec<f64>,
     /// Server-shard axis (`Simulation::shards`): sharding is
     /// bit-deterministic, so this axis exists to measure wall-clock
     /// scaling, not to change results. `[1]` = serialized only.
@@ -145,6 +160,8 @@ pub struct ScenarioCell {
     pub mode: String,
     pub m: usize,
     pub safety: f64,
+    /// Per-round participation fraction (1.0 = dense).
+    pub participation: f64,
     pub shards: usize,
     pub cfg: ExperimentConfig,
 }
@@ -159,6 +176,13 @@ pub struct CellSummary {
     pub mode: String,
     pub m: usize,
     pub safety: f64,
+    /// Per-round participation fraction (1.0 = dense: every worker in
+    /// every round).
+    pub participation: f64,
+    /// Sampled clients per round — `ceil(participation · m)`, = m for
+    /// dense cells. The column that makes population rows comparable:
+    /// per-round bits and losses are quorum-sized, not m-sized.
+    pub quorum: usize,
     /// Server-shard knob the cell ran with (0 = auto).
     pub shards: usize,
     pub rounds: usize,
@@ -210,6 +234,7 @@ impl ScenarioGrid {
                 compute: ComputeModel::Profile { factors: vec![1.0, 1.0, 1.0, 4.0] },
                 seed: 21,
                 artifacts: None,
+                cohorts: 0,
             },
             workloads: vec![NamedWorkload {
                 name: "quad".into(),
@@ -255,6 +280,7 @@ impl ScenarioGrid {
             ],
             worker_counts: vec![1, 4],
             safety_factors: vec![1.0],
+            participations: vec![1.0],
             shard_counts: vec![1],
         }
     }
@@ -262,7 +288,8 @@ impl ScenarioGrid {
     /// Total number of cells in the cross-product.
     pub fn n_cells(&self) -> usize {
         self.workloads.len() * self.traces.len() * self.policies.len() * self.modes.len()
-            * self.worker_counts.len() * self.safety_factors.len() * self.shard_counts.len()
+            * self.worker_counts.len() * self.safety_factors.len()
+            * self.participations.len() * self.shard_counts.len()
     }
 
     /// Expand the cross-product in deterministic (workload-major,
@@ -275,8 +302,12 @@ impl ScenarioGrid {
                     for mode in &self.modes {
                         for &m in &self.worker_counts {
                             for &safety in &self.safety_factors {
-                                for &shards in &self.shard_counts {
-                                    cells.push(self.cell(wl, tr, pol, mode, m, safety, shards));
+                                for &p in &self.participations {
+                                    for &shards in &self.shard_counts {
+                                        cells.push(
+                                            self.cell(wl, tr, pol, mode, m, safety, p, shards),
+                                        );
+                                    }
                                 }
                             }
                         }
@@ -287,7 +318,7 @@ impl ScenarioGrid {
         cells
     }
 
-    #[allow(clippy::too_many_arguments)] // private expansion helper over the 7 axes
+    #[allow(clippy::too_many_arguments)] // private expansion helper over the 8 axes
     fn cell(
         &self,
         wl: &NamedWorkload,
@@ -296,10 +327,18 @@ impl ScenarioGrid {
         mode: &NamedMode,
         m: usize,
         safety: f64,
+        participation: f64,
         shards: usize,
     ) -> ScenarioCell {
+        // Dense cells (p = 1) keep their pre-population ids byte for
+        // byte; only sampled cells grow a `_p` token.
+        let ptok = if participation == 1.0 {
+            String::new()
+        } else {
+            format!("_p{participation}")
+        };
         let id = format!(
-            "{}_{}_{}_{}_m{m}_s{safety}_sh{shards}",
+            "{}_{}_{}_{}_m{m}_s{safety}{ptok}_sh{shards}",
             wl.name,
             tr.name,
             pol.name,
@@ -308,6 +347,8 @@ impl ScenarioGrid {
         let cfg = ExperimentConfig {
             name: id.clone(),
             m,
+            participation,
+            cohorts: self.base.cohorts,
             workload: wl.spec.clone(),
             budget: BudgetParams::PerDirection { t_comm: self.base.t_comm },
             up_policy: pol.policy.clone(),
@@ -340,6 +381,7 @@ impl ScenarioGrid {
             mode: mode.name(),
             m,
             safety,
+            participation,
             shards,
             cfg,
         }
@@ -366,6 +408,26 @@ impl ScenarioGrid {
             "grid '{}' has no shard counts",
             self.name
         );
+        anyhow::ensure!(
+            !self.participations.is_empty(),
+            "grid '{}' has no participations",
+            self.name
+        );
+        for &p in &self.participations {
+            crate::config::check_pop_participation(p)
+                .map_err(|e| anyhow::anyhow!("grid '{}': {e}", self.name))?;
+        }
+        // Population cells (sampled participation, or cohort-shared
+        // links) run Sync rounds only — semisync/async already model
+        // partial participation as a race outcome.
+        if self.participations.iter().any(|&p| p < 1.0) || self.base.cohorts != 0 {
+            anyhow::ensure!(
+                self.modes.iter().all(|m| m.spec == ExecModeSpec::Sync),
+                "grid '{}': population cells (participation < 1 or base.cohorts != 0) \
+                 require all-Sync modes",
+                self.name
+            );
+        }
         anyhow::ensure!(
             self.worker_counts.iter().all(|&m| m >= 1),
             "worker counts must be >= 1"
@@ -396,6 +458,11 @@ impl ScenarioGrid {
         ];
         if let Some(dir) = &self.base.artifacts {
             base_fields.push(("artifacts", Value::str(dir.clone())));
+        }
+        // Dense grids serialize exactly as they did before the
+        // population axis existed (and parse back identically).
+        if self.base.cohorts != 0 {
+            base_fields.push(("cohorts", Value::num(self.base.cohorts as f64)));
         }
         Value::obj(vec![
             ("name", Value::str(self.name.clone())),
@@ -465,6 +532,15 @@ impl ScenarioGrid {
                 ),
             ),
             (
+                "participations",
+                Value::Arr(
+                    self.participations
+                        .iter()
+                        .map(|&p| Value::num(p))
+                        .collect(),
+                ),
+            ),
+            (
                 "shard_counts",
                 Value::Arr(
                     self.shard_counts
@@ -496,6 +572,7 @@ impl ScenarioGrid {
                 .opt("artifacts")
                 .and_then(|x| x.as_str().ok())
                 .map(|s| s.to_string()),
+            cohorts: b.opt("cohorts").and_then(|x| x.as_usize().ok()).unwrap_or(0),
         };
         // Grids predating the workload axis hardcoded the quadratic's
         // knobs in base: {d, n_layers, t_comp}.
@@ -562,6 +639,15 @@ impl ScenarioGrid {
             .iter()
             .map(|s| s.as_f64())
             .collect::<anyhow::Result<Vec<_>>>()?;
+        // Grids predating the participation axis run dense.
+        let participations = match v.opt("participations") {
+            None => vec![1.0],
+            Some(arr) => arr
+                .as_arr()?
+                .iter()
+                .map(|p| p.as_f64())
+                .collect::<anyhow::Result<Vec<_>>>()?,
+        };
         // Grids predating the shard axis run the serialized server.
         let shard_counts = match v.opt("shard_counts") {
             None => vec![1],
@@ -580,6 +666,7 @@ impl ScenarioGrid {
             modes,
             worker_counts,
             safety_factors,
+            participations,
             shard_counts,
         })
     }
@@ -604,6 +691,8 @@ impl CellSummary {
             ("mode", Value::str(self.mode.clone())),
             ("m", Value::num(self.m as f64)),
             ("safety", Value::num(self.safety)),
+            ("participation", Value::num(self.participation)),
+            ("quorum", Value::num(self.quorum as f64)),
             ("shards", Value::num(self.shards as f64)),
             ("rounds", Value::num(self.rounds as f64)),
             ("final_f_x", num_or_null(self.final_f_x)),
@@ -653,6 +742,8 @@ fn summarize(
         mode: cell.mode.clone(),
         m: cell.m,
         safety: cell.safety,
+        participation: cell.participation,
+        quorum: cell.cfg.quorum(),
         shards: cell.shards,
         rounds: res.records.len(),
         final_f_x: last.f_x,
@@ -704,7 +795,10 @@ pub fn plan_families(
     cells: &[ScenarioCell],
     artifacts: Option<&str>,
 ) -> anyhow::Result<(Vec<WarmFamily>, Vec<usize>)> {
-    let mut keys: Vec<(&str, &str, usize)> = Vec::new();
+    // The link count joins the key: a population cell (C cohort links)
+    // and a dense cell of the same M build different trace sets and
+    // must not share a family.
+    let mut keys: Vec<(&str, &str, usize, usize)> = Vec::new();
     let mut families: Vec<WarmFamily> = Vec::new();
     let mut cell_family = Vec::with_capacity(cells.len());
     // One ArtifactStore per artifacts directory, opened lazily and
@@ -712,7 +806,7 @@ pub fn plan_families(
     // preset from disk once, however many families share the preset).
     let mut store: Option<Arc<ArtifactStore>> = None;
     for cell in cells {
-        let key = (cell.workload.as_str(), cell.trace.as_str(), cell.m);
+        let key = (cell.workload.as_str(), cell.trace.as_str(), cell.m, cell.cfg.n_links());
         let fi = match keys.iter().position(|k| *k == key) {
             Some(i) => i,
             None => {
@@ -846,13 +940,14 @@ fn sanitize(id: &str) -> String {
 /// Render a compact markdown table over the summaries (CLI output).
 pub fn render_table(summaries: &[CellSummary]) -> String {
     let mut out = String::from(
-        "| cell | wl | rounds | final f(x) | up Mbit | step s | lag s | stale | sh \
-         | wall ms | build ms |\n\
-         |---|---|---|---|---|---|---|---|---|---|---|\n",
+        "| cell | wl | rounds | final f(x) | up Mbit | step s | lag s | stale | pop | p | q \
+         | sh | wall ms | build ms |\n\
+         |---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n",
     );
     for s in summaries {
         out.push_str(&format!(
-            "| {} | {} | {} | {:.3e} | {:.3} | {:.2} | {:.2} | {} | {} | {:.0} | {:.0} |\n",
+            "| {} | {} | {} | {:.3e} | {:.3} | {:.2} | {:.2} | {} | {} | {} | {} | {} \
+             | {:.0} | {:.0} |\n",
             s.id,
             s.workload,
             s.rounds,
@@ -861,6 +956,9 @@ pub fn render_table(summaries: &[CellSummary]) -> String {
             s.mean_step_time_s,
             s.mean_arrival_lag_s,
             s.max_staleness,
+            s.m,
+            s.participation,
+            s.quorum,
             s.shards,
             s.wall_ms,
             s.build_ms,
@@ -1271,6 +1369,101 @@ mod tests {
             summaries.len()
         );
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn participation_axis_expands_with_stable_dense_ids() {
+        let mut g = tiny_grid();
+        g.modes.truncate(1); // population cells are Sync-only
+        g.participations = vec![1.0, 0.5];
+        g.validate().unwrap();
+        // 1 workload x 2 traces x 2 policies x 1 mode x 2 m x 2 p.
+        assert_eq!(g.n_cells(), 16);
+        let cells = g.expand();
+        // Dense cells keep their pre-population ids byte for byte;
+        // sampled cells carry the `_p` token before the shard suffix.
+        let dense: Vec<_> = cells.iter().filter(|c| c.participation == 1.0).collect();
+        let sampled: Vec<_> = cells.iter().filter(|c| c.participation == 0.5).collect();
+        assert_eq!(dense.len(), 8);
+        assert_eq!(sampled.len(), 8);
+        assert!(dense.iter().all(|c| !c.id.contains("_p") && c.id.ends_with("_sh1")));
+        assert!(sampled.iter().all(|c| c.id.contains("_p0.5_sh1")));
+        assert!(dense.iter().all(|c| !c.cfg.is_population()));
+        assert!(sampled.iter().all(|c| c.cfg.is_population()));
+        // Validation: participation range and the Sync-only rule.
+        let mut bad = g.clone();
+        bad.participations = vec![0.0];
+        assert!(bad.validate().is_err());
+        let mut bad = g.clone();
+        bad.participations = vec![1.5];
+        assert!(bad.validate().is_err());
+        let mut bad = g.clone();
+        bad.modes = ScenarioGrid::default_grid().modes; // sync+semisync+async
+        assert!(bad.validate().is_err(), "population x non-sync modes must be rejected");
+        // Cohorts alone (participation 1.0) also forces the Sync rule.
+        let mut bad = tiny_grid();
+        bad.base.cohorts = 2;
+        assert!(bad.validate().is_err());
+        bad.modes.truncate(1);
+        bad.validate().unwrap();
+    }
+
+    #[test]
+    fn population_cells_run_warm_equals_cold_with_quorum_columns() {
+        let mut g = tiny_grid();
+        g.base.rounds = 8;
+        g.policies.truncate(1);
+        g.modes.truncate(1); // sync
+        // M = 100: population cells auto-resolve to 64 cohort links,
+        // dense cells keep 100 per-worker links — distinct families.
+        g.worker_counts = vec![100];
+        g.participations = vec![1.0, 0.25];
+        let summaries = run_matrix(&g, 2).unwrap();
+        assert_eq!(summaries.len(), g.n_cells());
+        for (s, cell) in summaries.iter().zip(g.expand()) {
+            // Quorum column: ceil(p * m).
+            let expect_q = (s.participation * s.m as f64).ceil() as usize;
+            assert_eq!(s.quorum, expect_q, "{}", s.id);
+            // Warm family path == cold per-cell path, population cells
+            // included.
+            let res = crate::driver::run_experiment(&cell.cfg, None, 0).unwrap();
+            let cold = summarize(&cell, &res, 0.0, 0.0).unwrap();
+            let mut w = s.clone();
+            w.wall_ms = 0.0;
+            w.build_ms = 0.0;
+            assert_eq!(w, cold, "warm diverged from cold for {}", s.id);
+        }
+        // Population cells group into their own families (cohort links
+        // != dense links), dense cells into theirs.
+        let cells = g.expand();
+        let (families, cell_family) = plan_families(&cells, None).unwrap();
+        assert_eq!(families.len(), 4, "2 traces x {{dense, population}}");
+        for (cell, &fi) in cells.iter().zip(cell_family.iter()) {
+            assert_eq!(families[fi].links().len(), cell.cfg.n_links(), "{}", cell.id);
+        }
+        // The summary JSON carries the population columns.
+        let v = summaries[0].to_json();
+        assert!(v.get("participation").is_ok() && v.get("quorum").is_ok());
+    }
+
+    #[test]
+    fn population_grid_json_roundtrips_and_old_grids_parse_dense() {
+        let mut g = tiny_grid();
+        g.modes.truncate(1);
+        g.participations = vec![1.0, 0.01];
+        g.base.cohorts = 16;
+        let back = ScenarioGrid::from_json(&Value::parse(&g.to_json().to_string()).unwrap());
+        assert_eq!(back.unwrap(), g);
+        // A grid JSON written before the participation axis parses as
+        // dense p = 1 with per-worker links.
+        let mut v = ScenarioGrid::default_grid().to_json();
+        if let Value::Obj(fields) = &mut v {
+            fields.remove("participations");
+        }
+        let g = ScenarioGrid::from_json(&v).unwrap();
+        assert_eq!(g.participations, vec![1.0]);
+        assert_eq!(g.base.cohorts, 0);
+        assert_eq!(g, ScenarioGrid::default_grid());
     }
 
     #[test]

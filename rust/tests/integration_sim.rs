@@ -10,6 +10,8 @@ fn quad_cfg(m: usize, policy: CompressPolicy, rounds: u64) -> ExperimentConfig {
     ExperimentConfig {
         name: "it".into(),
         m,
+        participation: 1.0,
+        cohorts: 0,
         workload: WorkloadSpec::Quadratic { d: 30, n_layers: 3, t_comp: 0.1 },
         budget: BudgetParams::PerDirection { t_comm: 0.9 },
         up_policy: policy.clone(),
