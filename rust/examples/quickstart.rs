@@ -37,6 +37,7 @@ fn main() -> anyhow::Result<()> {
         thread_cap: 0,
         mode: kimad::config::ExecModeSpec::Sync,
         compute: kimad::coordinator::ComputeModel::Constant,
+        transport: kimad::config::TransportSpec::Inproc,
         seed: 21,
     };
 

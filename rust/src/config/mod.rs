@@ -8,6 +8,50 @@ use crate::coordinator::{ComputeModel, ExecMode};
 use crate::kimad::{BudgetParams, CompressPolicy};
 use crate::util::json::Value;
 
+/// Where the round engine's messages travel: the single-process
+/// virtual-time engine, or real frames over localhost sockets between
+/// a coordinator and M worker peers (`transport::run_wired`). The wire
+/// transports carry byte-identical per-round payloads to `Inproc` —
+/// only arrival timestamps differ — which the transport layer verifies
+/// frame by frame at runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportSpec {
+    /// Virtual-time, in-process rounds (the default).
+    #[default]
+    Inproc,
+    /// Length-prefixed frames over localhost TCP.
+    Tcp,
+    /// Length-prefixed frames over a Unix-domain socket.
+    Uds,
+}
+
+impl TransportSpec {
+    /// Parse a CLI/JSON token: `inproc`, `tcp`, or `uds`.
+    pub fn parse(token: &str) -> anyhow::Result<Self> {
+        Ok(match token {
+            "inproc" => TransportSpec::Inproc,
+            "tcp" => TransportSpec::Tcp,
+            "uds" => TransportSpec::Uds,
+            other => anyhow::bail!("unknown transport '{other}' (want inproc, tcp or uds)"),
+        })
+    }
+
+    /// The token [`parse`](Self::parse) accepts.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TransportSpec::Inproc => "inproc",
+            TransportSpec::Tcp => "tcp",
+            TransportSpec::Uds => "uds",
+        }
+    }
+
+    /// Does this config cross a real socket (and hence spawn worker
+    /// peers) instead of running the in-process engine?
+    pub fn is_wire(self) -> bool {
+        !matches!(self, TransportSpec::Inproc)
+    }
+}
+
 /// Declarative execution mode, resolved against the worker count M at
 /// simulation build time (so one spec can drive cells with different
 /// M in a scenario grid).
@@ -371,6 +415,11 @@ pub struct ExperimentConfig {
     pub mode: ExecModeSpec,
     /// Per-worker compute-time model (straggler profiles).
     pub compute: ComputeModel,
+    /// Message transport: in-process virtual time (default) or real
+    /// frames over TCP / Unix sockets (Sync dense runs only). Wire
+    /// payloads are byte-identical to inproc per round; only arrival
+    /// timestamps differ.
+    pub transport: TransportSpec,
     pub seed: u64,
 }
 
@@ -485,7 +534,7 @@ pub fn workload_from_json(v: &Value) -> anyhow::Result<WorkloadSpec> {
 
 impl ExperimentConfig {
     pub fn to_json(&self) -> Value {
-        Value::obj(vec![
+        let mut fields = vec![
             ("name", Value::str(self.name.clone())),
             ("m", Value::num(self.m as f64)),
             ("participation", Value::num(self.participation)),
@@ -523,8 +572,14 @@ impl ExperimentConfig {
             ("thread_cap", Value::num(self.thread_cap as f64)),
             ("mode", self.mode.to_json()),
             ("compute", compute_to_json(&self.compute)),
-            ("seed", Value::num(self.seed as f64)),
-        ])
+        ];
+        // Emitted only off the default so pre-transport config JSON
+        // stays byte-identical (the warm-reuse CI checks `cmp` it).
+        if self.transport.is_wire() {
+            fields.push(("transport", Value::str(self.transport.as_str())));
+        }
+        fields.push(("seed", Value::num(self.seed as f64)));
+        Value::obj(fields)
     }
 
     pub fn from_json(v: &Value) -> anyhow::Result<Self> {
@@ -592,6 +647,10 @@ impl ExperimentConfig {
             compute: match v.opt("compute") {
                 None => ComputeModel::Constant,
                 Some(c) => compute_from_json(c)?,
+            },
+            transport: match v.opt("transport") {
+                None => TransportSpec::Inproc,
+                Some(t) => TransportSpec::parse(t.as_str()?)?,
             },
             seed: v.opt("seed").and_then(|a| a.as_u64().ok()).unwrap_or(21),
         })
@@ -698,6 +757,7 @@ mod tests {
             thread_cap: 0,
             mode: ExecModeSpec::SemiSync { participation: 0.75 },
             compute: ComputeModel::Lognormal { sigma: 0.3, seed: 7 },
+            transport: TransportSpec::Inproc,
             seed: 21,
         }
     }
@@ -722,6 +782,27 @@ mod tests {
         let back =
             ExperimentConfig::from_json(&Value::parse(&cfg.to_json_string()).unwrap()).unwrap();
         assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn transport_roundtrip_and_backcompat() {
+        // Default transport is invisible in JSON: pre-transport configs
+        // parse to Inproc and serializing Inproc emits no field, so
+        // existing config bytes are unchanged.
+        let cfg = sample();
+        assert_eq!(cfg.transport, TransportSpec::Inproc);
+        assert!(!cfg.to_json_string().contains("transport"));
+        for spec in [TransportSpec::Tcp, TransportSpec::Uds] {
+            let mut wired = sample();
+            wired.transport = spec;
+            let text = wired.to_json_string();
+            assert!(text.contains(&format!("\"transport\":\"{}\"", spec.as_str())));
+            let back = ExperimentConfig::from_json(&Value::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, wired);
+        }
+        assert_eq!(TransportSpec::parse("tcp").unwrap(), TransportSpec::Tcp);
+        assert!(TransportSpec::parse("carrier-pigeon").is_err());
+        assert!(TransportSpec::Uds.is_wire() && !TransportSpec::Inproc.is_wire());
     }
 
     #[test]

@@ -34,5 +34,5 @@ pub use population::{sample_round, PopulationSim, PopulationSpec};
 pub use round::{RoundRecord, WorkerRound};
 pub use server::ServerState;
 pub use shard::{BroadcastScratch, ShardPlan, ShardSpan};
-pub use sim::{ExecMode, SimConfig, Simulation};
+pub use sim::{ExecMode, RoundWire, SimConfig, Simulation};
 pub use worker::{ComputeModel, GradientSource, QuadraticSource, WorkerState};

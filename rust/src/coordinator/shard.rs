@@ -388,9 +388,32 @@ pub fn broadcast(
     scratch: &mut BroadcastScratch,
     parallel: bool,
 ) -> u64 {
+    broadcast_tapped(plan, selector, layers, c_down, x, x_hat, diff, scratch, parallel, None)
+}
+
+/// [`broadcast`] with an optional wire tap: when `tap` is `Some`, the
+/// per-layer compress-advance messages are appended to it in layer
+/// order — the transport layer's capture point for broadcast payload
+/// bytes (the lane buffers are otherwise overwritten layer by layer).
+/// A tapped call runs the serialized pass, which is bit-identical to
+/// the sharded fan-out by the module determinism contract, so tapping
+/// never changes results.
+#[allow(clippy::too_many_arguments)] // the flattened borrow set of one broadcast
+pub fn broadcast_tapped(
+    plan: &ShardPlan,
+    selector: &Selector,
+    layers: &[Layer],
+    c_down: u64,
+    x: &[f32],
+    x_hat: &mut Estimator,
+    diff: &mut [f32],
+    scratch: &mut BroadcastScratch,
+    parallel: bool,
+    mut tap: Option<&mut Vec<Compressed>>,
+) -> u64 {
     scratch.ensure(plan.n_shards());
     let BroadcastScratch { lanes, select, sel } = scratch;
-    let par = parallel && plan.n_shards() > 1 && plan.dim() == diff.len();
+    let par = parallel && plan.n_shards() > 1 && plan.dim() == diff.len() && tap.is_none();
 
     // ---- Phase 1: diff = x − x̂ (and, for curve-driven policies, the
     // per-layer error curves — shard-local work, same fan-out).
@@ -465,6 +488,9 @@ pub fn broadcast(
                 );
             }
             down_bits += lane.msg.wire_bits();
+            if let Some(sink) = tap.as_deref_mut() {
+                sink.push(lane.msg.clone());
+            }
         }
     } else {
         std::thread::scope(|s| {

@@ -371,6 +371,30 @@ pub struct Simulation<S: GradientSource> {
     bcast: shard::BroadcastScratch,
     /// Reusable same-timestamp event batch buffer.
     batch: Vec<Event>,
+    /// When set, every Sync round stores its wire-visible messages in
+    /// `last_wire` for the transport layer ([`Self::take_wire`]).
+    /// Results are unaffected: the tap only copies messages the round
+    /// already produced.
+    pub wire_tap: bool,
+    /// Scratch the tapped broadcast kernel appends per-layer messages
+    /// to (drained into `last_wire` at the end of the round).
+    wire_bcast: Vec<Compressed>,
+    last_wire: Option<RoundWire>,
+}
+
+/// One Sync round's wire-visible content, captured when
+/// [`Simulation::wire_tap`] is set: exactly the bytes that cross a
+/// real wire in the multi-process transport, excluding timestamps.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct RoundWire {
+    /// The round index the capture belongs to.
+    pub step: u64,
+    /// Per-layer broadcast messages, in layer order (identical for
+    /// every worker in Sync mode — the server state is shared).
+    pub broadcast: Vec<Compressed>,
+    /// Per-worker upload messages (`uploads[m][l]` = worker m, layer
+    /// l), in worker-index order.
+    pub uploads: Vec<Vec<Compressed>>,
 }
 
 impl<S: GradientSource> Simulation<S> {
@@ -416,7 +440,16 @@ impl<S: GradientSource> Simulation<S> {
             plan,
             bcast: shard::BroadcastScratch::default(),
             batch: Vec::new(),
+            wire_tap: false,
+            wire_bcast: Vec::new(),
+            last_wire: None,
         }
+    }
+
+    /// Take the last Sync round's captured wire content. `None` when
+    /// the tap is off or no round has run since the last take.
+    pub fn take_wire(&mut self) -> Option<RoundWire> {
+        self.last_wire.take()
     }
 
     /// Rebuild the shard plan iff the `shards` knob changed since the
@@ -487,8 +520,10 @@ impl<S: GradientSource> Simulation<S> {
     /// message.
     fn broadcast_phase(&mut self, b_down: f64) -> u64 {
         let c_down = effective_budget(self.cfg.budget, b_down, self.cfg.budget_safety);
+        self.wire_bcast.clear();
+        let tap = if self.wire_tap { Some(&mut self.wire_bcast) } else { None };
         let ServerState { x, x_hat, .. } = &mut self.server;
-        shard::broadcast(
+        shard::broadcast_tapped(
             &self.plan,
             &self.down_selector,
             &self.cfg.layers,
@@ -498,6 +533,7 @@ impl<S: GradientSource> Simulation<S> {
             &mut self.diff,
             &mut self.bcast,
             self.plan.n_shards() > 1,
+            tap,
         )
     }
 
@@ -788,6 +824,22 @@ impl<S: GradientSource> Simulation<S> {
             self.chains[w].busy = false;
         }
         debug_assert!(self.queue.is_empty());
+
+        // Wire tap: after the barrier every worker's `msgs` holds this
+        // round's upload exactly as delivered; `wire_bcast` holds the
+        // broadcast the round opened with.
+        if self.wire_tap {
+            let nl = self.cfg.layers.len();
+            self.last_wire = Some(RoundWire {
+                step: k,
+                broadcast: std::mem::take(&mut self.wire_bcast),
+                uploads: self
+                    .workers
+                    .iter()
+                    .map(|w| w.msgs[..nl.min(w.msgs.len())].to_vec())
+                    .collect(),
+            });
+        }
 
         // Records, reductions and the step, all in worker-index order.
         let worker_rounds: Vec<WorkerRound> = self

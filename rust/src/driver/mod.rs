@@ -18,8 +18,8 @@ use std::time::Instant;
 use crate::bandwidth::{BandwidthTrace, PerWorkerTraces, TraceSpec};
 use crate::config::{ExperimentConfig, WorkloadSpec};
 use crate::coordinator::{
-    GradientSource, PopulationSim, PopulationSpec, QuadraticSource, RoundRecord, SimConfig,
-    Simulation,
+    ExecMode, GradientSource, PopulationSim, PopulationSpec, QuadraticSource, RoundRecord,
+    RoundWire, SimConfig, Simulation,
 };
 use crate::kimad::BudgetParams;
 use crate::model::{Layer, ModelLayout, NativeModelSource};
@@ -526,6 +526,13 @@ impl WarmFamily {
             "experiment '{}' is not a member of this cell family",
             cfg.name
         );
+        // Wire transports run the same rounds as real frames between a
+        // coordinator and M worker peers; the transport layer builds
+        // its replicas through `build_wired` (never back through here),
+        // so this dispatch cannot recurse.
+        if cfg.transport.is_wire() {
+            return crate::transport::run_wired(self, cfg, eval_batches);
+        }
         match self {
             WarmFamily::Quadratic(f) => {
                 let t_build = Instant::now();
@@ -590,6 +597,130 @@ impl WarmFamily {
                     total_time,
                     build_ms,
                 })
+            }
+        }
+    }
+}
+
+/// A wire-tapped dense engine for the multi-process transport: the
+/// deterministic [`Simulation`] replica both the coordinator and every
+/// worker process rebuild from the same config + seed, stepped in
+/// lockstep round by round. Wraps both workload arms so the transport
+/// layer stays workload-agnostic.
+pub enum WiredEngine {
+    Quadratic(Simulation<QuadraticSource>),
+    Deep(Simulation<DeepSource>),
+}
+
+/// One wired replica plus the run metadata [`ExperimentResult`] needs.
+pub struct WiredCell {
+    engine: WiredEngine,
+    pub layers: Vec<Layer>,
+    pub n_params: usize,
+}
+
+impl WiredCell {
+    /// Run one round and return its record.
+    pub fn round(&mut self) -> anyhow::Result<RoundRecord> {
+        match &mut self.engine {
+            WiredEngine::Quadratic(s) => s.round(),
+            WiredEngine::Deep(s) => s.round(),
+        }
+    }
+
+    /// Take the round's captured wire content (the tap is always on
+    /// for wired cells).
+    pub fn take_wire(&mut self) -> anyhow::Result<RoundWire> {
+        let wire = match &mut self.engine {
+            WiredEngine::Quadratic(s) => s.take_wire(),
+            WiredEngine::Deep(s) => s.take_wire(),
+        };
+        wire.ok_or_else(|| anyhow::anyhow!("wired round produced no wire capture"))
+    }
+
+    /// Virtual seconds simulated so far.
+    pub fn clock(&self) -> f64 {
+        match &self.engine {
+            WiredEngine::Quadratic(s) => s.clock,
+            WiredEngine::Deep(s) => s.clock,
+        }
+    }
+
+    /// The current model vector.
+    pub fn model(&self) -> &[f32] {
+        match &self.engine {
+            WiredEngine::Quadratic(s) => &s.server.x,
+            WiredEngine::Deep(s) => &s.server.x,
+        }
+    }
+
+    /// Final-model evaluation (deep model only, like
+    /// [`WarmFamily::run_with_eval`]).
+    pub fn evaluate(&mut self, eval_batches: usize) -> anyhow::Result<Option<EvalMetrics>> {
+        match &mut self.engine {
+            WiredEngine::Quadratic(_) => Ok(None),
+            WiredEngine::Deep(s) => {
+                let metrics = s.source.evaluate(&s.server.x, eval_batches)?;
+                Ok(Some(metrics))
+            }
+        }
+    }
+}
+
+impl WarmFamily {
+    /// Build one wire-tapped engine replica for `cfg` — the exact
+    /// build sequence of [`Self::run_with_eval`]'s in-process arms
+    /// (fresh x0 instead of the pooled buffer: pooled buffers are
+    /// refilled to the same bytes, and replicas never return them).
+    /// Wire runs are dense Sync only: partial participation and
+    /// arrival-ordered modes have no lockstep barrier to replicate.
+    pub fn build_wired(&self, cfg: &ExperimentConfig) -> anyhow::Result<WiredCell> {
+        anyhow::ensure!(
+            self.compatible(cfg),
+            "experiment '{}' is not a member of this cell family",
+            cfg.name
+        );
+        anyhow::ensure!(
+            !cfg.is_population(),
+            "wire transports run dense cells only (participation = 1, cohorts = 0); \
+             population runs stay inproc"
+        );
+        anyhow::ensure!(
+            matches!(cfg.mode.resolve(cfg.m), ExecMode::Sync),
+            "wire transports support the sync execution mode only; \
+             semisync/async runs stay inproc"
+        );
+        match self {
+            WarmFamily::Quadratic(f) => {
+                let layers = if cfg.single_layer {
+                    f.layout.single_layer()
+                } else {
+                    f.layout.layers()
+                };
+                let d = f.q.dim();
+                let src = QuadraticSource::new(f.q.clone(), f.t_comp);
+                let sim_cfg = sim_config(cfg, layers.clone(), f.t_comp, f.base.prior_bps);
+                let mut sim = Simulation::new(sim_cfg, self.netsim(cfg), src, vec![1.0; d]);
+                sim.shards = cfg.shards;
+                sim.thread_cap = cfg.thread_cap;
+                sim.wire_tap = true;
+                Ok(WiredCell { engine: WiredEngine::Quadratic(sim), layers, n_params: d })
+            }
+            WarmFamily::Deep(f) => {
+                let layers = if cfg.single_layer {
+                    f.layout.single_layer()
+                } else {
+                    f.layout.layers()
+                };
+                let src = f.source()?;
+                let sim_cfg = sim_config(cfg, layers.clone(), f.t_comp, f.base.prior_bps);
+                let x0 = f.x0.as_ref().clone();
+                let mut sim = Simulation::new(sim_cfg, self.netsim(cfg), src, x0);
+                sim.shards = cfg.shards;
+                sim.thread_cap = cfg.thread_cap;
+                sim.wire_tap = true;
+                let n_params = f.layout.n_params;
+                Ok(WiredCell { engine: WiredEngine::Deep(sim), layers, n_params })
             }
         }
     }
@@ -667,6 +798,7 @@ mod tests {
             thread_cap: 0,
             mode: ExecModeSpec::Sync,
             compute: ComputeModel::Constant,
+            transport: crate::config::TransportSpec::Inproc,
             seed: 21,
         }
     }

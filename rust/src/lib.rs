@@ -45,4 +45,5 @@ pub mod quadratic;
 pub mod reports;
 pub mod runtime;
 pub mod scenarios;
+pub mod transport;
 pub mod util;

@@ -14,6 +14,8 @@
 //!   presets   list AOT model presets available in artifacts/
 //!   gen-artifacts  write a native (JAX-free) artifact set — layout +
 //!             seeded params + manifest — for deep-model presets
+//!   worker    join a multi-process run: dial a coordinator and serve
+//!             one worker id over the real wire (see rust/src/transport/)
 
 use std::path::PathBuf;
 
@@ -35,12 +37,14 @@ USAGE:
                [--cell-threads N] [--rounds N] [--modes sync,semisync,async] \\
                [--shards 1,2,4] [--workers 100,1000000] [--participation 1,0.001] \\
                [--workload 'quad:d=30,layers=3|deep:tiny'] \\
-               [--artifacts DIR] [--print-grid]
+               [--transport inproc|tcp|uds] [--artifacts DIR] [--print-grid]
   kimad synthetic [--scenario xsmall|small|oscillation|high] [--fast] [--out-dir DIR]
   kimad bench [--quick] [--out FILE]
   kimad trace --spec '<json TraceSpec>' [--seconds S] [--step S]
   kimad presets [--artifacts DIR]
   kimad gen-artifacts [--presets tiny,small] [--out-dir DIR] [--seed N]
+  kimad worker --connect <tcp:HOST:PORT|uds:PATH> --config <file.json> --id N \\
+               [--artifacts DIR]
 ";
 
 /// Make the `kimad bench` allocation counts real: the library's
@@ -71,6 +75,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "trace" => trace(&args),
         "presets" => presets(&args),
         "gen-artifacts" => gen_artifacts(&args),
+        "worker" => worker(&args),
         other => anyhow::bail!("unknown subcommand '{other}'\n{USAGE}"),
     }
 }
@@ -157,6 +162,12 @@ fn scenarios(args: &Args) -> anyhow::Result<()> {
     if let Some(dir) = args.opt("artifacts") {
         // Deep-model cells load from this artifact directory.
         grid.base.artifacts = Some(dir.to_string());
+    }
+    if let Some(t) = args.opt("transport") {
+        // Run every cell over a real transport (coordinator + worker
+        // processes exchanging frames) instead of in-process. Runtime
+        // only: index.json stays byte-identical to an inproc run.
+        grid.base.transport = kimad::config::TransportSpec::parse(t)?;
     }
     if args.flag("print-grid") {
         println!("{}", grid.to_json());
@@ -315,6 +326,24 @@ fn bench_cmd(args: &Args) -> anyhow::Result<()> {
     }
     println!("wrote {}", out.display());
     Ok(())
+}
+
+/// `kimad worker` — the worker half of a multi-process run. Normally
+/// spawned by the coordinating `kimad scenarios --transport ...`
+/// process, but speaks a stable enough protocol to launch by hand.
+fn worker(args: &Args) -> anyhow::Result<()> {
+    let addr = args
+        .opt("connect")
+        .ok_or_else(|| anyhow::anyhow!("worker requires --connect <tcp:HOST:PORT|uds:PATH>"))?;
+    let config = args
+        .opt("config")
+        .ok_or_else(|| anyhow::anyhow!("worker requires --config <file.json>"))?;
+    let id_text = args
+        .opt("id")
+        .ok_or_else(|| anyhow::anyhow!("worker requires --id <N>"))?;
+    let id: usize = id_text.parse().map_err(|e| anyhow::anyhow!("--id={id_text}: {e}"))?;
+    let cfg = ExperimentConfig::from_json_file(config.as_ref())?;
+    kimad::transport::worker::run_worker(&cfg, args.opt("artifacts"), addr, id)
 }
 
 fn trace(args: &Args) -> anyhow::Result<()> {

@@ -78,6 +78,7 @@ pub fn base_config(
         thread_cap: 0,
         mode: crate::config::ExecModeSpec::Sync,
         compute: crate::coordinator::ComputeModel::Constant,
+        transport: crate::config::TransportSpec::Inproc,
         seed: 21,
     }
 }

@@ -45,7 +45,7 @@ use std::time::Instant;
 use crate::bandwidth::TraceSpec;
 use crate::config::{
     compute_from_json, compute_to_json, policy_from_json, policy_to_json, workload_from_json,
-    workload_to_json, ExecModeSpec, ExperimentConfig, OptimizerSpec, WorkloadSpec,
+    workload_to_json, ExecModeSpec, ExperimentConfig, OptimizerSpec, TransportSpec, WorkloadSpec,
 };
 use crate::coordinator::ComputeModel;
 use crate::driver::{open_artifact_store, ExperimentResult, WarmFamily};
@@ -124,6 +124,11 @@ pub struct GridBase {
     /// participation 1, auto (`min(m, 64)`) otherwise. A non-zero
     /// value forces the population engine even at participation 1.
     pub cohorts: usize,
+    /// How cells execute: in-process (default) or over a real
+    /// transport ([`crate::transport`]). Runtime-only — set from the
+    /// CLI (`kimad scenarios --transport ...`), never serialized, so a
+    /// grid's `index.json` is byte-identical however its cells ran.
+    pub transport: TransportSpec,
 }
 
 /// The declarative scenario matrix.
@@ -185,6 +190,10 @@ pub struct CellSummary {
     pub quorum: usize,
     /// Server-shard knob the cell ran with (0 = auto).
     pub shards: usize,
+    /// Transport the cell executed over (`"inproc"`, `"tcp"`, `"uds"`).
+    /// Results are transport-invariant by the wire-bit-identity
+    /// contract; the column records how this run actually moved bytes.
+    pub transport: String,
     pub rounds: usize,
     /// Final objective f(x) at the server model (NaN for workloads
     /// without an objective notion — the deep model reports loss).
@@ -235,6 +244,7 @@ impl ScenarioGrid {
                 seed: 21,
                 artifacts: None,
                 cohorts: 0,
+                transport: TransportSpec::Inproc,
             },
             workloads: vec![NamedWorkload {
                 name: "quad".into(),
@@ -371,6 +381,7 @@ impl ScenarioGrid {
             thread_cap: 0,
             mode: mode.spec,
             compute: self.base.compute.clone(),
+            transport: self.base.transport,
             seed: self.base.seed,
         };
         ScenarioCell {
@@ -573,6 +584,8 @@ impl ScenarioGrid {
                 .and_then(|x| x.as_str().ok())
                 .map(|s| s.to_string()),
             cohorts: b.opt("cohorts").and_then(|x| x.as_usize().ok()).unwrap_or(0),
+            // Runtime-only (CLI `--transport`); grid files never carry it.
+            transport: TransportSpec::Inproc,
         };
         // Grids predating the workload axis hardcoded the quadratic's
         // knobs in base: {d, n_layers, t_comp}.
@@ -694,6 +707,7 @@ impl CellSummary {
             ("participation", Value::num(self.participation)),
             ("quorum", Value::num(self.quorum as f64)),
             ("shards", Value::num(self.shards as f64)),
+            ("transport", Value::str(self.transport.clone())),
             ("rounds", Value::num(self.rounds as f64)),
             ("final_f_x", num_or_null(self.final_f_x)),
             ("final_loss", num_or_null(self.final_loss)),
@@ -745,6 +759,7 @@ fn summarize(
         participation: cell.participation,
         quorum: cell.cfg.quorum(),
         shards: cell.shards,
+        transport: cell.cfg.transport.as_str().to_string(),
         rounds: res.records.len(),
         final_f_x: last.f_x,
         final_loss: last.loss,
@@ -1441,9 +1456,11 @@ mod tests {
         for (cell, &fi) in cells.iter().zip(cell_family.iter()) {
             assert_eq!(families[fi].links().len(), cell.cfg.n_links(), "{}", cell.id);
         }
-        // The summary JSON carries the population columns.
+        // The summary JSON carries the population columns, and the
+        // transport column records how the cells ran (inproc here).
         let v = summaries[0].to_json();
         assert!(v.get("participation").is_ok() && v.get("quorum").is_ok());
+        assert_eq!(v.get("transport").unwrap().as_str().unwrap(), "inproc");
     }
 
     #[test]

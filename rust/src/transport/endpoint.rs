@@ -1,0 +1,581 @@
+//! Blocking-I/O endpoint layer: TCP / Unix-socket connections carrying
+//! [`Frame`]s with per-peer ordered, acknowledged delivery.
+//!
+//! The protocol is stop-and-wait per connection and direction: each
+//! data frame carries a sequence number; the receiver acks in-order
+//! frames immediately, re-acks duplicates, and rejects gaps (a gap is
+//! a protocol bug, not a network fault — TCP/UDS never reorder). The
+//! sender retransmits on ack timeout with bounded exponential backoff.
+//! An in-order *data* frame arriving while the sender awaits an ack is
+//! an implicit acknowledgement: the lockstep protocol only lets a peer
+//! send data after it has received ours, so the frame is stashed in a
+//! one-slot pending buffer and the send completes.
+//!
+//! Connection setup retries with the same bounded exponential backoff
+//! ([`backoff_delay`]), so workers may dial before the coordinator
+//! finishes binding. After retry budgets are exhausted the endpoint
+//! fails loudly — the run model is crash-stop, not partition-tolerant.
+
+use super::faults::{self, FaultInjector};
+use super::frame::{decode_step, Decoded, Frame, PayloadKind};
+use crate::config::TransportSpec;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+#[cfg(unix)]
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// Timeout and retry knobs for one endpoint.
+#[derive(Debug, Clone)]
+pub struct TimeoutCfg {
+    /// Longest single blocking read before the poll loop re-checks
+    /// its deadline.
+    pub io_chunk: Duration,
+    /// Base ack-wait before the first retransmission.
+    pub ack_base: Duration,
+    /// Ceiling for the exponentially backed-off ack wait.
+    pub ack_cap: Duration,
+    /// Retransmission attempts before a send fails.
+    pub max_retries: u32,
+    /// Overall deadline for a blocking receive.
+    pub recv_deadline: Duration,
+    /// Connection attempts before a dial fails.
+    pub dial_attempts: u32,
+    /// Base delay between dial attempts (exponential, capped).
+    pub dial_base: Duration,
+    /// Ceiling for the dial backoff.
+    pub dial_cap: Duration,
+}
+
+impl Default for TimeoutCfg {
+    fn default() -> Self {
+        TimeoutCfg {
+            io_chunk: Duration::from_millis(500),
+            ack_base: Duration::from_millis(100),
+            ack_cap: Duration::from_secs(2),
+            max_retries: 40,
+            recv_deadline: Duration::from_secs(60),
+            dial_attempts: 10,
+            dial_base: Duration::from_millis(25),
+            dial_cap: Duration::from_secs(2),
+        }
+    }
+}
+
+/// Bounded exponential backoff: `base * 2^attempt`, saturating at
+/// `cap`. Pure so the schedule is unit-testable.
+pub fn backoff_delay(attempt: u32, base: Duration, cap: Duration) -> Duration {
+    let mult = 1u32.checked_shl(attempt.min(16)).unwrap_or(u32::MAX);
+    base.checked_mul(mult).map_or(cap, |d| d.min(cap))
+}
+
+/// One established wire connection.
+#[derive(Debug)]
+pub enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Uds(UnixStream),
+}
+
+impl Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.read(buf),
+        }
+    }
+
+    fn write_all(&mut self, buf: &[u8]) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.write_all(buf),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.write_all(buf),
+        }
+    }
+
+    fn set_read_timeout(&self, dur: Duration) -> std::io::Result<()> {
+        // A zero timeout means "block forever" to the socket API;
+        // clamp up so the poll loop always regains control.
+        let dur = dur.max(Duration::from_millis(1));
+        match self {
+            Conn::Tcp(s) => s.set_read_timeout(Some(dur)),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.set_read_timeout(Some(dur)),
+        }
+    }
+
+    fn set_blocking(&self) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_nonblocking(false),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.set_nonblocking(false),
+        }
+    }
+}
+
+/// Dial an address token (`tcp:HOST:PORT`, `uds:PATH`, or bare
+/// `HOST:PORT`) with bounded exponential-backoff retries.
+pub fn dial(token: &str, timeouts: &TimeoutCfg) -> anyhow::Result<Conn> {
+    let mut last: Option<std::io::Error> = None;
+    for attempt in 0..timeouts.dial_attempts.max(1) {
+        if attempt > 0 {
+            std::thread::sleep(backoff_delay(attempt - 1, timeouts.dial_base, timeouts.dial_cap));
+        }
+        match try_connect(token) {
+            Ok(conn) => return Ok(conn),
+            Err(err) => last = Some(err),
+        }
+    }
+    anyhow::bail!(
+        "failed to connect to {token} after {} attempts: {}",
+        timeouts.dial_attempts,
+        last.map_or_else(|| "no attempt made".into(), |e| e.to_string())
+    )
+}
+
+fn try_connect(token: &str) -> std::io::Result<Conn> {
+    if let Some(path) = token.strip_prefix("uds:") {
+        #[cfg(unix)]
+        return Ok(Conn::Uds(UnixStream::connect(path)?));
+        #[cfg(not(unix))]
+        return Err(std::io::Error::new(
+            ErrorKind::Unsupported,
+            format!("unix sockets unavailable on this platform ({path})"),
+        ));
+    }
+    let addr = token.strip_prefix("tcp:").unwrap_or(token);
+    Ok(Conn::Tcp(TcpStream::connect(addr)?))
+}
+
+/// A bound accept socket for the coordinator side.
+#[derive(Debug)]
+pub enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Uds(UnixListener, PathBuf),
+}
+
+impl Listener {
+    /// Bind per the transport spec: TCP on an ephemeral localhost
+    /// port, or a fresh socket path under the system temp dir.
+    pub fn bind(spec: TransportSpec) -> anyhow::Result<Self> {
+        match spec {
+            TransportSpec::Tcp => Ok(Listener::Tcp(TcpListener::bind("127.0.0.1:0")?)),
+            TransportSpec::Uds => bind_uds(),
+            TransportSpec::Inproc => anyhow::bail!("inproc transport has no listener"),
+        }
+    }
+
+    /// The `--connect` token workers dial to reach this listener.
+    pub fn addr_token(&self) -> anyhow::Result<String> {
+        match self {
+            Listener::Tcp(l) => Ok(format!("tcp:{}", l.local_addr()?)),
+            #[cfg(unix)]
+            Listener::Uds(_, path) => Ok(format!("uds:{}", path.display())),
+        }
+    }
+
+    /// Accept one connection, polling against a deadline so a worker
+    /// that never dials fails the run loudly instead of hanging.
+    pub fn accept_deadline(&self, deadline: Instant) -> anyhow::Result<Conn> {
+        self.set_nonblocking(true)?;
+        loop {
+            let conn = match self {
+                Listener::Tcp(l) => l.accept().map(|(s, _)| Conn::Tcp(s)),
+                #[cfg(unix)]
+                Listener::Uds(l, _) => l.accept().map(|(s, _)| Conn::Uds(s)),
+            };
+            match conn {
+                Ok(conn) => {
+                    conn.set_blocking()?;
+                    return Ok(conn);
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        anyhow::bail!("timed out waiting for a worker to connect");
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+            #[cfg(unix)]
+            Listener::Uds(l, _) => l.set_nonblocking(nb),
+        }
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Listener::Uds(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+#[cfg(unix)]
+fn bind_uds() -> anyhow::Result<Listener> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static UDS_COUNTER: AtomicU64 = AtomicU64::new(0);
+    // Socket paths must stay short (the sockaddr_un limit), so use the
+    // system temp dir with a pid + counter suffix for uniqueness.
+    let path = std::env::temp_dir().join(format!(
+        "kimad-{}-{}.sock",
+        std::process::id(),
+        UDS_COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_file(&path);
+    Ok(Listener::Uds(UnixListener::bind(&path)?, path))
+}
+
+#[cfg(not(unix))]
+fn bind_uds() -> anyhow::Result<Listener> {
+    anyhow::bail!("unix-socket transport unavailable on this platform")
+}
+
+/// One reliable frame endpoint over an established connection.
+#[derive(Debug)]
+pub struct Endpoint {
+    conn: Conn,
+    faults: FaultInjector,
+    timeouts: TimeoutCfg,
+    label: String,
+    next_send_seq: u64,
+    next_recv_seq: u64,
+    /// One-slot buffer for a data frame that arrived as an implicit
+    /// ack during [`Endpoint::send_reliable`].
+    pending: Option<Frame>,
+    rx: Vec<u8>,
+}
+
+impl Endpoint {
+    pub fn new(conn: Conn, faults: FaultInjector, timeouts: TimeoutCfg, label: String) -> Self {
+        Endpoint {
+            conn,
+            faults,
+            timeouts,
+            label,
+            next_send_seq: 0,
+            next_recv_seq: 0,
+            pending: None,
+            rx: Vec::new(),
+        }
+    }
+
+    /// Swap in a fault injector (the coordinator learns which worker a
+    /// connection belongs to — and hence its fault leg — only after
+    /// the Probe handshake).
+    pub fn set_faults(&mut self, faults: FaultInjector) {
+        self.faults = faults;
+    }
+
+    /// Rename the endpoint for error messages.
+    pub fn set_label(&mut self, label: String) {
+        self.label = label;
+    }
+
+    /// Send one data frame, retransmitting with exponential backoff
+    /// until it is acknowledged (explicitly, or implicitly by the
+    /// peer's next in-order data frame).
+    pub fn send_reliable(
+        &mut self,
+        kind: PayloadKind,
+        worker: u32,
+        round: u64,
+        payload: Vec<u8>,
+    ) -> anyhow::Result<()> {
+        debug_assert!(kind != PayloadKind::Ack, "acks are sent internally");
+        let seq = self.next_send_seq;
+        self.next_send_seq += 1;
+        let bytes = Frame::new(kind, worker, round, seq, payload).encode();
+        for attempt in 0..=self.timeouts.max_retries {
+            self.transmit(&bytes)?;
+            let wait = backoff_delay(attempt, self.timeouts.ack_base, self.timeouts.ack_cap);
+            let deadline = Instant::now() + wait;
+            while let Some(frame) = self.poll_frame(deadline)? {
+                if self.note_frame(frame, seq)? {
+                    return Ok(());
+                }
+            }
+        }
+        anyhow::bail!(
+            "no ack for seq {seq} from {} after {} retransmissions",
+            self.label,
+            self.timeouts.max_retries
+        )
+    }
+
+    /// Classify a frame seen while awaiting the ack for `sent_seq`.
+    /// Returns true once that send is acknowledged.
+    fn note_frame(&mut self, frame: Frame, sent_seq: u64) -> anyhow::Result<bool> {
+        match frame.kind {
+            // For acks, `round` carries the acknowledged sequence.
+            PayloadKind::Ack => Ok(frame.round == sent_seq),
+            _ => {
+                if frame.seq == self.next_recv_seq {
+                    // Implicit ack: the peer only sends data after
+                    // receiving ours. Ack it, stash it for the next
+                    // recv, and consider our send complete.
+                    self.next_recv_seq += 1;
+                    self.ack(&frame)?;
+                    anyhow::ensure!(
+                        self.pending.is_none(),
+                        "protocol violation: two unconsumed data frames from {}",
+                        self.label
+                    );
+                    self.pending = Some(frame);
+                    Ok(true)
+                } else if frame.seq < self.next_recv_seq {
+                    // Our earlier ack was lost; quench the retransmit.
+                    self.ack(&frame)?;
+                    Ok(false)
+                } else {
+                    anyhow::bail!(
+                        "out-of-order frame from {}: seq {} but expected {}",
+                        self.label,
+                        frame.seq,
+                        self.next_recv_seq
+                    )
+                }
+            }
+        }
+    }
+
+    /// Receive the next in-order data frame, acking it (and re-acking
+    /// any duplicates drained along the way).
+    pub fn recv_reliable(&mut self) -> anyhow::Result<Frame> {
+        if let Some(frame) = self.pending.take() {
+            return Ok(frame);
+        }
+        let deadline = Instant::now() + self.timeouts.recv_deadline;
+        loop {
+            let Some(frame) = self.poll_frame(deadline)? else {
+                anyhow::bail!(
+                    "timed out after {:?} waiting for a frame from {}",
+                    self.timeouts.recv_deadline,
+                    self.label
+                )
+            };
+            match frame.kind {
+                // A stale ack for a send that already completed.
+                PayloadKind::Ack => continue,
+                _ => {
+                    if frame.seq == self.next_recv_seq {
+                        self.next_recv_seq += 1;
+                        self.ack(&frame)?;
+                        return Ok(frame);
+                    } else if frame.seq < self.next_recv_seq {
+                        self.ack(&frame)?;
+                    } else {
+                        anyhow::bail!(
+                            "out-of-order frame from {}: seq {} but expected {}",
+                            self.label,
+                            frame.seq,
+                            self.next_recv_seq
+                        )
+                    }
+                }
+            }
+        }
+    }
+
+    /// Drain and re-ack retransmissions until the peer closes the
+    /// connection (or the receive deadline passes). The last ack a
+    /// side sends can always be lost, so whoever finishes first must
+    /// stay around to quench retransmissions instead of slamming the
+    /// socket shut — a worker calls this after `Shutdown`, and the
+    /// coordinator's drop of the connection is what releases it.
+    pub fn linger(&mut self) {
+        let deadline = Instant::now() + self.timeouts.recv_deadline;
+        loop {
+            match self.poll_frame(deadline) {
+                Ok(Some(frame)) => {
+                    if frame.kind != PayloadKind::Ack
+                        && frame.seq < self.next_recv_seq
+                        && self.ack(&frame).is_err()
+                    {
+                        return;
+                    }
+                }
+                // Deadline, or the peer closed — the normal release.
+                Ok(None) | Err(_) => return,
+            }
+        }
+    }
+
+    fn ack(&mut self, frame: &Frame) -> anyhow::Result<()> {
+        let ack = Frame::new(PayloadKind::Ack, frame.worker, frame.seq, frame.seq, Vec::new());
+        self.transmit(&ack.encode())
+    }
+
+    /// Write one encoded frame, routed through the fault injector.
+    fn transmit(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        let plan = self.faults.next();
+        if plan.delay_ms > 0 {
+            std::thread::sleep(Duration::from_millis(plan.delay_ms));
+        }
+        if plan.drop {
+            return Ok(());
+        }
+        if plan.truncate {
+            self.conn.write_all(&faults::truncate_frame(bytes))?;
+            return Ok(());
+        }
+        self.conn.write_all(bytes)?;
+        if plan.duplicate {
+            self.conn.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    /// Drain the socket until one whole valid frame decodes or the
+    /// deadline passes (`Ok(None)`). Corrupt prefixes are skipped per
+    /// [`decode_step`]'s resync rule.
+    fn poll_frame(&mut self, deadline: Instant) -> anyhow::Result<Option<Frame>> {
+        let mut buf = [0u8; 64 * 1024];
+        loop {
+            loop {
+                match decode_step(&self.rx) {
+                    Decoded::Frame(frame, used) => {
+                        self.rx.drain(..used);
+                        return Ok(Some(frame));
+                    }
+                    Decoded::Incomplete => break,
+                    Decoded::Corrupt { skip, .. } => {
+                        let n = skip.min(self.rx.len());
+                        self.rx.drain(..n);
+                    }
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(None);
+            }
+            self.conn.set_read_timeout((deadline - now).min(self.timeouts.io_chunk))?;
+            match self.conn.read(&mut buf) {
+                Ok(0) => anyhow::bail!("connection to {} closed by peer", self.label),
+                Ok(n) => self.rx.extend_from_slice(&buf[..n]),
+                Err(e)
+                    if e.kind() == ErrorKind::WouldBlock
+                        || e.kind() == ErrorKind::TimedOut
+                        || e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => {
+                    return Err(anyhow::anyhow!("read from {} failed: {e}", self.label));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::faults::FaultPlan;
+
+    #[test]
+    fn backoff_doubles_then_caps() {
+        let base = Duration::from_millis(25);
+        let cap = Duration::from_secs(2);
+        assert_eq!(backoff_delay(0, base, cap), Duration::from_millis(25));
+        assert_eq!(backoff_delay(1, base, cap), Duration::from_millis(50));
+        assert_eq!(backoff_delay(3, base, cap), Duration::from_millis(200));
+        assert_eq!(backoff_delay(10, base, cap), cap);
+        assert_eq!(backoff_delay(u32::MAX, base, cap), cap);
+    }
+
+    fn pair(spec: TransportSpec, plan: &FaultPlan) -> (Endpoint, Endpoint) {
+        let listener = Listener::bind(spec).unwrap();
+        let token = listener.addr_token().unwrap();
+        let timeouts = TimeoutCfg {
+            ack_base: Duration::from_millis(30),
+            recv_deadline: Duration::from_secs(20),
+            ..TimeoutCfg::default()
+        };
+        let client = dial(&token, &timeouts).unwrap();
+        let server = listener.accept_deadline(Instant::now() + Duration::from_secs(5)).unwrap();
+        let coord_faults = FaultInjector::new(plan, 1000);
+        let a = Endpoint::new(server, coord_faults, timeouts.clone(), "client".into());
+        let b = Endpoint::new(client, FaultInjector::new(plan, 1), timeouts, "server".into());
+        (a, b)
+    }
+
+    fn ping_pong(mut a: Endpoint, mut b: Endpoint, rounds: u64) {
+        let worker = std::thread::spawn(move || {
+            for k in 0..rounds {
+                let f = b.recv_reliable().unwrap();
+                assert_eq!(f.kind, PayloadKind::Broadcast);
+                assert_eq!(f.round, k);
+                assert_eq!(f.payload, vec![k as u8; 64]);
+                b.send_reliable(PayloadKind::Upload, 0, k, vec![!k as u8; 32]).unwrap();
+            }
+        });
+        for k in 0..rounds {
+            a.send_reliable(PayloadKind::Broadcast, 0, k, vec![k as u8; 64]).unwrap();
+            let f = a.recv_reliable().unwrap();
+            assert_eq!(f.kind, PayloadKind::Upload);
+            assert_eq!(f.round, k);
+            assert_eq!(f.payload, vec![!k as u8; 32]);
+        }
+        // Our ack of the final upload may have been dropped: keep
+        // re-acking retransmissions until the peer's send completes
+        // and it closes its end.
+        a.linger();
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn reliable_ping_pong_tcp() {
+        let (a, b) = pair(TransportSpec::Tcp, &FaultPlan::none());
+        ping_pong(a, b, 8);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn reliable_ping_pong_uds() {
+        let (a, b) = pair(TransportSpec::Uds, &FaultPlan::none());
+        ping_pong(a, b, 8);
+    }
+
+    #[test]
+    fn reliable_under_faults() {
+        // Heavy seeded faults on every transmission (including acks):
+        // the stop-and-wait layer must still deliver every frame, in
+        // order, with the exact payload bytes.
+        let plan =
+            FaultPlan::parse("drop=0.2,dup=0.15,trunc=0.15,delay=0.2,delay_ms=2,seed=11").unwrap();
+        let (a, b) = pair(TransportSpec::Tcp, &plan);
+        ping_pong(a, b, 12);
+    }
+
+    #[test]
+    fn dial_bad_address_fails_bounded() {
+        let timeouts = TimeoutCfg {
+            dial_attempts: 2,
+            dial_base: Duration::from_millis(1),
+            ..TimeoutCfg::default()
+        };
+        // Port 1 on localhost: nothing listens there in CI.
+        assert!(dial("tcp:127.0.0.1:1", &timeouts).is_err());
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn uds_listener_cleans_up_socket_path() {
+        let listener = Listener::bind(TransportSpec::Uds).unwrap();
+        let token = listener.addr_token().unwrap();
+        let path = PathBuf::from(token.strip_prefix("uds:").unwrap());
+        assert!(path.exists());
+        drop(listener);
+        assert!(!path.exists());
+    }
+}

@@ -1,0 +1,240 @@
+//! Seeded fault injection on the wire: drop / delay / duplicate /
+//! truncate any transmission attempt, deterministically per (seed,
+//! leg, attempt). Faults perturb *delivery*, never content — the
+//! reliable endpoint layer must recover to the exact same byte stream
+//! the fault-free run produces, which is what the golden harness
+//! asserts.
+//!
+//! Plans ride in the `KIMAD_WIRE_FAULTS` environment variable (not
+//! the experiment config) so a faulted run's config JSON — and hence
+//! its cell ids and index.json — stay byte-identical to the clean run:
+//!
+//! ```text
+//! KIMAD_WIRE_FAULTS="drop=0.2,dup=0.1,trunc=0.1,delay=0.2,delay_ms=5,seed=7"
+//! ```
+
+use super::frame::{HEADER_LEN, TRAILER_LEN};
+use crate::util::rng::Rng;
+
+/// Fault probabilities for one run; all legs share the plan but every
+/// endpoint derives its own RNG stream from `seed`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Probability a transmission attempt is silently dropped.
+    pub drop_p: f64,
+    /// Probability a frame is written twice back to back.
+    pub dup_p: f64,
+    /// Probability a frame is truncated (self-consistent shorter
+    /// frame with a stale CRC, so the receiver discards it cleanly).
+    pub trunc_p: f64,
+    /// Probability the attempt is delayed by `delay_ms` first.
+    pub delay_p: f64,
+    /// Delay applied when the delay fault fires, in milliseconds.
+    pub delay_ms: u64,
+    /// Base seed for all fault decision streams.
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// The no-faults plan (every probability zero).
+    pub fn none() -> Self {
+        FaultPlan { drop_p: 0.0, dup_p: 0.0, trunc_p: 0.0, delay_p: 0.0, delay_ms: 0, seed: 0 }
+    }
+
+    /// Does any fault have nonzero probability?
+    pub fn is_active(&self) -> bool {
+        self.drop_p > 0.0 || self.dup_p > 0.0 || self.trunc_p > 0.0 || self.delay_p > 0.0
+    }
+
+    /// Parse a `key=value,key=value` token as carried by
+    /// `KIMAD_WIRE_FAULTS`. Keys: `drop`, `dup`, `trunc`, `delay`
+    /// (probabilities in [0,1]), `delay_ms`, `seed`.
+    pub fn parse(token: &str) -> anyhow::Result<Self> {
+        let mut plan = FaultPlan::none();
+        for part in token.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fault token '{part}' is not key=value"))?;
+            let parse_p = |v: &str| -> anyhow::Result<f64> {
+                let p: f64 =
+                    v.parse().map_err(|_| anyhow::anyhow!("bad fault probability '{v}'"))?;
+                anyhow::ensure!((0.0..=1.0).contains(&p), "fault probability {p} not in [0,1]");
+                Ok(p)
+            };
+            match key.trim() {
+                "drop" => plan.drop_p = parse_p(value)?,
+                "dup" => plan.dup_p = parse_p(value)?,
+                "trunc" => plan.trunc_p = parse_p(value)?,
+                "delay" => plan.delay_p = parse_p(value)?,
+                "delay_ms" => {
+                    plan.delay_ms =
+                        value.parse().map_err(|_| anyhow::anyhow!("bad delay_ms '{value}'"))?
+                }
+                "seed" => {
+                    plan.seed =
+                        value.parse().map_err(|_| anyhow::anyhow!("bad fault seed '{value}'"))?
+                }
+                other => anyhow::bail!("unknown fault key '{other}'"),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Read the plan from `KIMAD_WIRE_FAULTS`; absent or empty means
+    /// no faults.
+    pub fn from_env() -> anyhow::Result<Self> {
+        match std::env::var("KIMAD_WIRE_FAULTS") {
+            Ok(token) if !token.trim().is_empty() => Self::parse(&token),
+            _ => Ok(Self::none()),
+        }
+    }
+
+    /// Serialize back to the env-token form (inverse of [`parse`]),
+    /// used when re-exporting the plan to spawned worker processes.
+    ///
+    /// [`parse`]: FaultPlan::parse
+    pub fn to_token(&self) -> String {
+        format!(
+            "drop={},dup={},trunc={},delay={},delay_ms={},seed={}",
+            self.drop_p, self.dup_p, self.trunc_p, self.delay_p, self.delay_ms, self.seed
+        )
+    }
+}
+
+/// The faults drawn for one transmission attempt.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SendFaults {
+    pub delay_ms: u64,
+    pub drop: bool,
+    pub truncate: bool,
+    pub duplicate: bool,
+}
+
+/// Per-endpoint fault decision stream: `leg` separates the RNG streams
+/// so the coordinator side and each worker side draw independently.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    rng: Rng,
+    active: bool,
+}
+
+impl FaultInjector {
+    pub fn new(plan: &FaultPlan, leg: u64) -> Self {
+        FaultInjector {
+            plan: plan.clone(),
+            rng: Rng::seed_from_u64(plan.seed).derive(leg),
+            active: plan.is_active(),
+        }
+    }
+
+    /// The inert injector — zero draws, zero branches taken.
+    pub fn inert() -> Self {
+        Self::new(&FaultPlan::none(), 0)
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    /// Draw the fault decisions for the next transmission attempt.
+    /// Always burns the same number of RNG draws per call so decision
+    /// streams stay aligned regardless of which faults fire.
+    pub fn next(&mut self) -> SendFaults {
+        if !self.active {
+            return SendFaults::default();
+        }
+        let delay = self.rng.next_f64() < self.plan.delay_p;
+        let drop = self.rng.next_f64() < self.plan.drop_p;
+        let truncate = self.rng.next_f64() < self.plan.trunc_p;
+        let duplicate = self.rng.next_f64() < self.plan.dup_p;
+        SendFaults {
+            delay_ms: if delay { self.plan.delay_ms } else { 0 },
+            drop,
+            truncate,
+            duplicate,
+        }
+    }
+}
+
+/// Corrupt an encoded frame the way a cut cable would: keep the
+/// framing self-consistent (header `len` halved, payload cut to
+/// match) but leave the original CRC trailer, so the receiver parses
+/// a complete frame, fails the checksum, discards it, and recovers by
+/// retransmission. Zero-payload frames get a flipped CRC bit instead.
+pub fn truncate_frame(bytes: &[u8]) -> Vec<u8> {
+    debug_assert!(bytes.len() >= HEADER_LEN + TRAILER_LEN);
+    let len = u32::from_le_bytes(bytes[28..32].try_into().unwrap()) as usize;
+    if len == 0 {
+        let mut out = bytes.to_vec();
+        let last = out.len() - 1;
+        out[last] ^= 0x01;
+        return out;
+    }
+    let new_len = len / 2;
+    let mut out = Vec::with_capacity(HEADER_LEN + new_len + TRAILER_LEN);
+    out.extend_from_slice(&bytes[..28]);
+    out.extend_from_slice(&(new_len as u32).to_le_bytes());
+    out.extend_from_slice(&bytes[HEADER_LEN..HEADER_LEN + new_len]);
+    // Stale CRC: almost surely wrong for the shortened body, and a
+    // flipped bit guarantees it differs from the original's.
+    let stale = &bytes[HEADER_LEN + len..HEADER_LEN + len + TRAILER_LEN];
+    out.extend_from_slice(stale);
+    let last = out.len() - 1;
+    out[last] ^= 0x80;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::frame::{decode_step, Decoded, Frame, PayloadKind};
+
+    #[test]
+    fn parse_roundtrip() {
+        let plan =
+            FaultPlan::parse("drop=0.2, dup=0.1,trunc=0.05,delay=0.3,delay_ms=5,seed=7").unwrap();
+        assert_eq!(plan.drop_p, 0.2);
+        assert_eq!(plan.dup_p, 0.1);
+        assert_eq!(plan.trunc_p, 0.05);
+        assert_eq!(plan.delay_p, 0.3);
+        assert_eq!(plan.delay_ms, 5);
+        assert_eq!(plan.seed, 7);
+        assert!(plan.is_active());
+        assert_eq!(FaultPlan::parse(&plan.to_token()).unwrap(), plan);
+    }
+
+    #[test]
+    fn parse_rejects_bad_tokens() {
+        assert!(FaultPlan::parse("drop=1.5").is_err());
+        assert!(FaultPlan::parse("nope=0.1").is_err());
+        assert!(FaultPlan::parse("drop").is_err());
+        assert!(!FaultPlan::parse("").unwrap().is_active());
+    }
+
+    #[test]
+    fn injector_is_deterministic_per_leg() {
+        let plan = FaultPlan::parse("drop=0.5,dup=0.5,seed=42").unwrap();
+        let draws = |leg| {
+            let mut inj = FaultInjector::new(&plan, leg);
+            (0..32).map(|_| inj.next()).collect::<Vec<_>>()
+        };
+        assert_eq!(draws(1), draws(1));
+        assert_ne!(draws(1), draws(2));
+        assert!(draws(1).iter().any(|f| f.drop));
+    }
+
+    #[test]
+    fn truncated_frame_is_discarded_not_decoded() {
+        let frame = Frame::new(PayloadKind::Upload, 1, 4, 9, vec![7u8; 24]);
+        let cut = truncate_frame(&frame.encode());
+        match decode_step(&cut) {
+            Decoded::Corrupt { skip, .. } => assert_eq!(skip, cut.len()),
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        // Zero-payload frames degrade to a CRC flip, still discarded.
+        let empty = Frame::new(PayloadKind::Ack, 0, 2, 3, vec![]);
+        let cut = truncate_frame(&empty.encode());
+        assert!(matches!(decode_step(&cut), Decoded::Corrupt { .. }));
+    }
+}

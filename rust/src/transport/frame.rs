@@ -1,0 +1,551 @@
+//! Wire codec: length-prefixed, versioned, CRC-protected frames plus
+//! the payload serialization for [`Compressed`] message vectors.
+//!
+//! ## Frame layout (all integers little-endian)
+//!
+//! | offset | size | field    | notes                                  |
+//! |--------|------|----------|----------------------------------------|
+//! | 0      | 4    | magic    | `b"KMAD"`                              |
+//! | 4      | 2    | version  | wire protocol version, currently 1     |
+//! | 6      | 1    | kind     | [`PayloadKind`] discriminant           |
+//! | 7      | 1    | reserved | must encode as 0, ignored on decode    |
+//! | 8      | 4    | worker   | worker id the frame is for / from      |
+//! | 12     | 8    | round    | round index (or acked seq for `Ack`)   |
+//! | 20     | 8    | seq      | per-connection stop-and-wait sequence  |
+//! | 28     | 4    | len      | payload byte count, <= [`MAX_PAYLOAD`] |
+//! | 32     | len  | payload  | kind-specific bytes                    |
+//! | 32+len | 4    | crc      | CRC-32 (IEEE) over bytes `[0, 32+len)` |
+//!
+//! Decoding is total: malformed input yields a typed [`FrameError`],
+//! never a panic, and `len` is validated against both [`MAX_PAYLOAD`]
+//! and the buffer before any allocation happens.
+
+use crate::compress::Compressed;
+
+/// Frame magic: the first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"KMAD";
+/// Wire protocol version emitted (and the only one accepted).
+pub const VERSION: u16 = 1;
+/// Fixed header size in bytes (magic through len).
+pub const HEADER_LEN: usize = 32;
+/// CRC trailer size in bytes.
+pub const TRAILER_LEN: usize = 4;
+/// Hard payload ceiling (64 MiB): `len` fields above this are rejected
+/// before any buffer is sized from them.
+pub const MAX_PAYLOAD: u32 = 1 << 26;
+
+/// What a frame carries; the `kind` byte on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PayloadKind {
+    /// Coordinator -> worker: the round's serialized broadcast messages.
+    Broadcast = 0,
+    /// Worker -> coordinator: the worker's serialized upload messages.
+    Upload = 1,
+    /// Worker -> coordinator handshake: `worker id u32 | m u32`.
+    Probe = 2,
+    /// Delivery acknowledgement for `round` = the acked sequence.
+    Ack = 3,
+    /// Coordinator -> worker: the run is over, close the connection.
+    Shutdown = 4,
+}
+
+impl PayloadKind {
+    fn from_byte(b: u8) -> Result<Self, FrameError> {
+        Ok(match b {
+            0 => PayloadKind::Broadcast,
+            1 => PayloadKind::Upload,
+            2 => PayloadKind::Probe,
+            3 => PayloadKind::Ack,
+            4 => PayloadKind::Shutdown,
+            other => return Err(FrameError::BadKind(other)),
+        })
+    }
+}
+
+/// Typed decode failure. Every malformed input maps to one of these;
+/// the codec never panics and never allocates from an unvalidated
+/// length field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameError {
+    /// The buffer ends before the frame (or a payload field) does.
+    Truncated,
+    /// The first four bytes are not [`MAGIC`].
+    BadMagic,
+    /// Unknown protocol version.
+    BadVersion(u16),
+    /// Unknown payload-kind byte.
+    BadKind(u8),
+    /// `len` exceeds [`MAX_PAYLOAD`].
+    Oversize(u32),
+    /// Header and length were plausible but the CRC trailer mismatched.
+    BadCrc,
+    /// A payload substructure (message vector) failed validation.
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Truncated => write!(f, "frame truncated"),
+            FrameError::BadMagic => write!(f, "bad frame magic"),
+            FrameError::BadVersion(v) => write!(f, "unsupported wire version {v}"),
+            FrameError::BadKind(k) => write!(f, "unknown payload kind {k}"),
+            FrameError::Oversize(n) => write!(f, "payload length {n} exceeds {MAX_PAYLOAD}"),
+            FrameError::BadCrc => write!(f, "frame CRC mismatch"),
+            FrameError::Malformed(what) => write!(f, "malformed payload: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// One decoded wire frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    pub kind: PayloadKind,
+    pub worker: u32,
+    pub round: u64,
+    pub seq: u64,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn new(kind: PayloadKind, worker: u32, round: u64, seq: u64, payload: Vec<u8>) -> Self {
+        Frame { kind, worker, round, seq, payload }
+    }
+
+    /// Total encoded size in bytes.
+    pub fn wire_len(&self) -> usize {
+        HEADER_LEN + self.payload.len() + TRAILER_LEN
+    }
+
+    /// Serialize into a fresh buffer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_len());
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Serialize, appending to `out`.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        assert!(self.payload.len() as u64 <= MAX_PAYLOAD as u64, "payload exceeds MAX_PAYLOAD");
+        let start = out.len();
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.push(self.kind as u8);
+        out.push(0); // reserved
+        out.extend_from_slice(&self.worker.to_le_bytes());
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&self.seq.to_le_bytes());
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        let crc = crc32(&out[start..]);
+        out.extend_from_slice(&crc.to_le_bytes());
+    }
+
+    /// Strict decode of one frame from the start of `buf`. Returns the
+    /// frame plus the number of bytes consumed (the caller may have
+    /// more frames after it). All failures are typed; `Truncated`
+    /// means "feed me more bytes", everything else means the prefix
+    /// can never become a valid frame.
+    pub fn decode(buf: &[u8]) -> Result<(Frame, usize), FrameError> {
+        let len = Self::decode_header(buf)? as usize;
+        let total = HEADER_LEN + len + TRAILER_LEN;
+        if buf.len() < total {
+            return Err(FrameError::Truncated);
+        }
+        let body = &buf[..HEADER_LEN + len];
+        let want = u32::from_le_bytes(buf[HEADER_LEN + len..total].try_into().unwrap());
+        if crc32(body) != want {
+            return Err(FrameError::BadCrc);
+        }
+        let kind = PayloadKind::from_byte(buf[6])?;
+        let worker = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+        let round = u64::from_le_bytes(buf[12..20].try_into().unwrap());
+        let seq = u64::from_le_bytes(buf[20..28].try_into().unwrap());
+        let payload = buf[HEADER_LEN..HEADER_LEN + len].to_vec();
+        Ok((Frame { kind, worker, round, seq, payload }, total))
+    }
+
+    /// Validate the fixed header and return the declared payload
+    /// length. Never reads past `HEADER_LEN` bytes.
+    fn decode_header(buf: &[u8]) -> Result<u32, FrameError> {
+        if buf.len() < HEADER_LEN {
+            return Err(FrameError::Truncated);
+        }
+        if buf[..4] != MAGIC {
+            return Err(FrameError::BadMagic);
+        }
+        let version = u16::from_le_bytes(buf[4..6].try_into().unwrap());
+        if version != VERSION {
+            return Err(FrameError::BadVersion(version));
+        }
+        PayloadKind::from_byte(buf[6])?;
+        let len = u32::from_le_bytes(buf[28..32].try_into().unwrap());
+        if len > MAX_PAYLOAD {
+            return Err(FrameError::Oversize(len));
+        }
+        Ok(len)
+    }
+}
+
+/// Outcome of one streaming decode step over a receive buffer.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Decoded {
+    /// A complete valid frame; `usize` is the bytes to drain.
+    Frame(Frame, usize),
+    /// The buffer holds only a prefix; read more bytes.
+    Incomplete,
+    /// The prefix can never decode; drain `skip` bytes and resync.
+    Corrupt { skip: usize, err: FrameError },
+}
+
+/// Streaming decode: classify the buffer prefix. A corrupt *body*
+/// (CRC mismatch with a plausible header) skips the whole declared
+/// frame; a corrupt *header* skips one byte so the scan can resync on
+/// the next magic. The receiver relies on retransmission — corrupt
+/// frames are dropped, never repaired.
+pub fn decode_step(buf: &[u8]) -> Decoded {
+    match Frame::decode(buf) {
+        Ok((frame, used)) => Decoded::Frame(frame, used),
+        Err(FrameError::Truncated) => Decoded::Incomplete,
+        Err(FrameError::BadCrc) => {
+            // Header was valid, so the declared extent is trustworthy
+            // enough to skip past in one step.
+            let len = u32::from_le_bytes(buf[28..32].try_into().unwrap()) as usize;
+            Decoded::Corrupt { skip: HEADER_LEN + len + TRAILER_LEN, err: FrameError::BadCrc }
+        }
+        Err(err) => Decoded::Corrupt { skip: 1, err },
+    }
+}
+
+/// CRC-32 (IEEE 802.3, reflected, init/final 0xFFFFFFFF) — the same
+/// polynomial as zlib. Table built at compile time; no dependency.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = u32::MAX;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+// ---------------------------------------------------------------------
+// Payload codec for message vectors
+// ---------------------------------------------------------------------
+
+/// Per-message variant tags in [`encode_msgs`] payloads.
+const TAG_SPARSE: u8 = 0;
+const TAG_DENSE: u8 = 1;
+const TAG_FACTORS: u8 = 2;
+
+/// Serialize a per-layer message vector: `count u32`, then per message
+/// a variant tag and its fields. Float values travel as raw IEEE-754
+/// bits, so encode/decode is a bit-exact roundtrip (NaN included).
+pub fn encode_msgs(msgs: &[Compressed]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(msgs.len() as u32).to_le_bytes());
+    for msg in msgs {
+        match msg {
+            Compressed::Sparse { dim, idx, val } => {
+                out.push(TAG_SPARSE);
+                out.extend_from_slice(&(*dim as u64).to_le_bytes());
+                out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                out.extend_from_slice(&(val.len() as u32).to_le_bytes());
+                for i in idx {
+                    out.extend_from_slice(&i.to_le_bytes());
+                }
+                for v in val {
+                    out.extend_from_slice(&v.to_bits().to_le_bytes());
+                }
+            }
+            Compressed::Dense { val, bits_per_val } => {
+                out.push(TAG_DENSE);
+                out.extend_from_slice(&bits_per_val.to_le_bytes());
+                out.extend_from_slice(&(val.len() as u32).to_le_bytes());
+                for v in val {
+                    out.extend_from_slice(&v.to_bits().to_le_bytes());
+                }
+            }
+            Compressed::Factors { rows, cols, u, v } => {
+                out.push(TAG_FACTORS);
+                out.extend_from_slice(&(*rows as u64).to_le_bytes());
+                out.extend_from_slice(&(*cols as u64).to_le_bytes());
+                out.extend_from_slice(&(u.len() as u32).to_le_bytes());
+                out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                for x in u {
+                    out.extend_from_slice(&x.to_bits().to_le_bytes());
+                }
+                for x in v {
+                    out.extend_from_slice(&x.to_bits().to_le_bytes());
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`encode_msgs`]. Total: every count is validated against
+/// the remaining bytes *before* any allocation is sized from it, so
+/// arbitrary input can neither panic nor OOM.
+pub fn decode_msgs(buf: &[u8]) -> Result<Vec<Compressed>, FrameError> {
+    let mut r = Reader { buf, pos: 0 };
+    let count = r.u32()? as usize;
+    // A message is at least 1 tag byte: cheap sanity bound on `count`.
+    if count > buf.len() {
+        return Err(FrameError::Malformed("message count exceeds payload"));
+    }
+    let mut msgs = Vec::with_capacity(count);
+    for _ in 0..count {
+        let msg = match r.u8()? {
+            TAG_SPARSE => {
+                let dim = r.u64()? as usize;
+                let ni = r.u32()? as usize;
+                let nv = r.u32()? as usize;
+                let idx = r.u32_vec(ni)?;
+                let val = r.f32_vec(nv)?;
+                Compressed::Sparse { dim, idx, val }
+            }
+            TAG_DENSE => {
+                let bits_per_val = r.u64()?;
+                let n = r.u32()? as usize;
+                Compressed::Dense { val: r.f32_vec(n)?, bits_per_val }
+            }
+            TAG_FACTORS => {
+                let rows = r.u64()? as usize;
+                let cols = r.u64()? as usize;
+                let nu = r.u32()? as usize;
+                let nv = r.u32()? as usize;
+                let u = r.f32_vec(nu)?;
+                let v = r.f32_vec(nv)?;
+                Compressed::Factors { rows, cols, u, v }
+            }
+            _ => return Err(FrameError::Malformed("unknown message tag")),
+        };
+        msgs.push(msg);
+    }
+    if r.pos != buf.len() {
+        return Err(FrameError::Malformed("trailing bytes after messages"));
+    }
+    Ok(msgs)
+}
+
+/// Bounds-checked little-endian cursor: every read is validated
+/// against the remaining input, so element counts can never size an
+/// allocation past the bytes that actually back them.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl Reader<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8], FrameError> {
+        if self.buf.len() - self.pos < n {
+            return Err(FrameError::Truncated);
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn u32_vec(&mut self, n: usize) -> Result<Vec<u32>, FrameError> {
+        let bytes = self.take(n.checked_mul(4).ok_or(FrameError::Truncated)?)?;
+        Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>, FrameError> {
+        let bytes = self.take(n.checked_mul(4).ok_or(FrameError::Truncated)?)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn arbitrary_frame(rng: &mut Rng) -> Frame {
+        let kinds = [
+            PayloadKind::Broadcast,
+            PayloadKind::Upload,
+            PayloadKind::Probe,
+            PayloadKind::Ack,
+            PayloadKind::Shutdown,
+        ];
+        let n = rng.range_usize(0, 257);
+        let payload: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+        Frame {
+            kind: kinds[rng.range_usize(0, kinds.len())],
+            worker: rng.next_u64() as u32,
+            round: rng.next_u64(),
+            seq: rng.next_u64(),
+            payload,
+        }
+    }
+
+    fn arbitrary_msgs(rng: &mut Rng) -> Vec<Compressed> {
+        let n = rng.range_usize(0, 5);
+        (0..n)
+            .map(|_| match rng.range_usize(0, 3) {
+                0 => {
+                    let k = rng.range_usize(0, 17);
+                    Compressed::Sparse {
+                        dim: rng.range_usize(0, 1000),
+                        idx: (0..k).map(|_| rng.next_u64() as u32).collect(),
+                        val: (0..k).map(|_| rng.range_f32(-10.0, 10.0)).collect(),
+                    }
+                }
+                1 => Compressed::Dense {
+                    val: (0..rng.range_usize(0, 17)).map(|_| rng.next_f32()).collect(),
+                    bits_per_val: rng.range_usize(1, 33) as u64,
+                },
+                _ => {
+                    let (r, c, k) = (rng.range_usize(1, 5), rng.range_usize(1, 5), 2);
+                    Compressed::Factors {
+                        rows: r,
+                        cols: c,
+                        u: (0..r * k).map(|_| rng.next_f32()).collect(),
+                        v: (0..c * k).map(|_| rng.next_f32()).collect(),
+                    }
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn frame_roundtrip_identity() {
+        prop::check("frame-roundtrip", 0xF0A1, 300, |rng| {
+            let frame = arbitrary_frame(rng);
+            let bytes = frame.encode();
+            let (back, used) = Frame::decode(&bytes).expect("roundtrip decode");
+            assert_eq!(used, bytes.len());
+            assert_eq!(back, frame);
+        });
+    }
+
+    #[test]
+    fn truncated_prefix_is_typed_error() {
+        prop::check("frame-truncated", 0xF0A2, 200, |rng| {
+            let bytes = arbitrary_frame(rng).encode();
+            let cut = rng.range_usize(0, bytes.len());
+            assert_eq!(Frame::decode(&bytes[..cut]).unwrap_err(), FrameError::Truncated);
+            assert_eq!(decode_step(&bytes[..cut]), Decoded::Incomplete);
+        });
+    }
+
+    #[test]
+    fn single_bit_flip_is_detected() {
+        // CRC-32 detects every single-bit error, so any one-bit flip
+        // anywhere in the frame must fail decode with a typed error.
+        prop::check("frame-bitflip", 0xF0A3, 300, |rng| {
+            let mut bytes = arbitrary_frame(rng).encode();
+            let bit = rng.range_usize(0, bytes.len() * 8);
+            bytes[bit / 8] ^= 1 << (bit % 8);
+            assert!(Frame::decode(&bytes).is_err());
+        });
+    }
+
+    #[test]
+    fn arbitrary_bytes_never_panic() {
+        prop::check("frame-fuzz", 0xF0A4, 500, |rng| {
+            let n = rng.range_usize(0, 300);
+            let mut bytes: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+            // Half the cases get a real magic prefix so header parsing
+            // is exercised past the first gate.
+            if rng.next_f64() < 0.5 && bytes.len() >= 4 {
+                bytes[..4].copy_from_slice(&MAGIC);
+            }
+            let _ = Frame::decode(&bytes);
+            let _ = decode_step(&bytes);
+        });
+    }
+
+    #[test]
+    fn oversize_len_is_rejected_before_allocation() {
+        let mut frame = Frame::new(PayloadKind::Probe, 0, 0, 0, vec![]).encode();
+        frame[28..32].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert_eq!(Frame::decode(&frame).unwrap_err(), FrameError::Oversize(u32::MAX));
+    }
+
+    #[test]
+    fn corrupt_body_skips_whole_frame() {
+        let good = Frame::new(PayloadKind::Upload, 3, 7, 1, vec![9; 16]);
+        let mut bytes = good.encode();
+        let total = bytes.len();
+        bytes[HEADER_LEN] ^= 0xFF; // corrupt payload, header stays valid
+        let next = Frame::new(PayloadKind::Ack, 3, 1, 2, vec![]);
+        next.encode_into(&mut bytes);
+        match decode_step(&bytes) {
+            Decoded::Corrupt { skip, err } => {
+                assert_eq!(skip, total);
+                assert_eq!(err, FrameError::BadCrc);
+            }
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        let (resynced, _) = Frame::decode(&bytes[total..]).expect("resync on next frame");
+        assert_eq!(resynced, next);
+    }
+
+    #[test]
+    fn msgs_roundtrip_identity() {
+        prop::check("msgs-roundtrip", 0xF0A5, 300, |rng| {
+            let msgs = arbitrary_msgs(rng);
+            let bytes = encode_msgs(&msgs);
+            assert_eq!(decode_msgs(&bytes).expect("roundtrip"), msgs);
+        });
+    }
+
+    #[test]
+    fn msgs_decoder_never_panics() {
+        prop::check("msgs-fuzz", 0xF0A6, 500, |rng| {
+            let n = rng.range_usize(0, 200);
+            let bytes: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+            let _ = decode_msgs(&bytes);
+            // Truncations of a valid encoding must error, not panic.
+            let valid = encode_msgs(&arbitrary_msgs(rng));
+            let cut = rng.range_usize(0, valid.len());
+            if cut < valid.len() {
+                assert!(decode_msgs(&valid[..cut]).is_err());
+            }
+        });
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // The canonical zlib check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+}

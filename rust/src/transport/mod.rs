@@ -1,0 +1,420 @@
+//! A real wire for the round engine: multi-process coordinator/worker
+//! execution over TCP or Unix-domain sockets.
+//!
+//! # Why byte-identity is by construction
+//!
+//! The engine's rounds are bit-deterministic functions of (config,
+//! seed): same compressed selections, same EF21 mirror advances, same
+//! wire messages on every machine. The wire mode exploits that by
+//! running *lockstep replicas* — the coordinator and every worker
+//! build the identical [`Simulation`](crate::coordinator::Simulation)
+//! from the same config ([`WarmFamily::build_wired`]) and step it in
+//! lockstep, so each side can compute the exact bytes the other must
+//! send. Every received payload is verified against the local
+//! replica's bytes frame by frame at runtime: any divergence —
+//! engine nondeterminism, codec bug, corruption the CRC missed —
+//! fails the run loudly instead of training on silently wrong bits.
+//! Only arrival *timestamps* differ between inproc and wired runs;
+//! results ([`ExperimentResult`]) are byte-identical.
+//!
+//! # Frame format
+//!
+//! See [`frame`] for the full spec (32-byte little-endian header,
+//! CRC-32 trailer, typed decode errors, length clamped before
+//! allocation). Kinds: `Broadcast`, `Upload`, `Probe` (handshake),
+//! `Ack`, `Shutdown`.
+//!
+//! # Round protocol (Sync, dense only)
+//!
+//! 1. Workers dial the coordinator (bounded exponential-backoff
+//!    reconnect) and send a `Probe` carrying `(worker id, M)`.
+//! 2. Per round: the coordinator steps its replica, sends each worker
+//!    a `Broadcast` frame (the round's serialized per-layer broadcast
+//!    messages), and waits for each worker's `Upload`. Each worker
+//!    gates its replica's round k on `Broadcast` k, verifies the
+//!    payload equals its own locally computed broadcast bytes, then
+//!    uploads its worker's serialized messages — which the coordinator
+//!    verifies in turn. The round barrier is the M upload receipts.
+//! 3. After the last round the coordinator sends `Shutdown`s.
+//!
+//! Delivery is stop-and-wait with acks, duplicate suppression and
+//! retransmission ([`endpoint`]); seeded fault injection ([`faults`])
+//! can drop/delay/duplicate/truncate any transmission attempt and the
+//! run must still produce identical results.
+
+pub mod endpoint;
+pub mod faults;
+pub mod frame;
+pub mod worker;
+
+use crate::config::ExperimentConfig;
+use crate::driver::{ExperimentResult, WarmFamily, WiredCell};
+use endpoint::{Endpoint, Listener, TimeoutCfg};
+use faults::{FaultInjector, FaultPlan};
+use frame::PayloadKind;
+use std::time::Instant;
+
+/// Fault-injector leg offset for coordinator-side endpoints (worker
+/// side uses `id + 1`), keeping every endpoint's decision stream
+/// distinct.
+const COORD_LEG_BASE: u64 = 1000;
+
+/// How worker peers are spawned for a wired run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpawnMode {
+    /// Processes when a `kimad` binary is identifiable (the running
+    /// executable is `kimad`, or `KIMAD_WORKER_BIN` is set), else
+    /// threads — so `cargo test` binaries transparently get the
+    /// in-process-tree topology.
+    Auto,
+    /// OS threads in this process, sharing the prepared family.
+    Thread,
+    /// Separate OS processes running `kimad worker`.
+    Process,
+}
+
+/// Runtime options for a wired run — env-derived by the driver path,
+/// explicit in tests.
+#[derive(Debug, Clone)]
+pub struct WireOpts {
+    pub faults: FaultPlan,
+    pub timeouts: TimeoutCfg,
+    pub spawn: SpawnMode,
+}
+
+impl Default for WireOpts {
+    fn default() -> Self {
+        WireOpts {
+            faults: FaultPlan::none(),
+            timeouts: TimeoutCfg::default(),
+            spawn: SpawnMode::Auto,
+        }
+    }
+}
+
+impl WireOpts {
+    /// Options from the environment: `KIMAD_WIRE_FAULTS` (see
+    /// [`FaultPlan::parse`]) and `KIMAD_WIRE_SPAWN` (`thread` |
+    /// `process`).
+    pub fn from_env() -> anyhow::Result<Self> {
+        let spawn = match std::env::var("KIMAD_WIRE_SPAWN").ok().as_deref() {
+            Some("thread") => SpawnMode::Thread,
+            Some("process") => SpawnMode::Process,
+            Some(other) => anyhow::bail!("KIMAD_WIRE_SPAWN='{other}' (want thread or process)"),
+            None => SpawnMode::Auto,
+        };
+        Ok(WireOpts { faults: FaultPlan::from_env()?, timeouts: TimeoutCfg::default(), spawn })
+    }
+}
+
+/// One coordinator-side wire event, logged by
+/// [`run_wired_captured`] for the golden harness: the payload bytes
+/// that crossed (or arrived over) the socket, minus transport framing.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapturedFrame {
+    pub kind: PayloadKind,
+    pub worker: u32,
+    pub round: u64,
+    pub payload: Vec<u8>,
+}
+
+/// Run a wired experiment with env-derived options (the
+/// [`WarmFamily::run_with_eval`] dispatch target).
+pub fn run_wired(
+    family: &WarmFamily,
+    cfg: &ExperimentConfig,
+    eval_batches: usize,
+) -> anyhow::Result<ExperimentResult> {
+    let opts = WireOpts::from_env()?;
+    run_wired_with(family, cfg, &opts, eval_batches, None)
+}
+
+/// [`run_wired`] with explicit options, logging every coordinator-side
+/// data frame (sent broadcasts, received uploads) for the harness.
+pub fn run_wired_captured(
+    family: &WarmFamily,
+    cfg: &ExperimentConfig,
+    opts: &WireOpts,
+    eval_batches: usize,
+) -> anyhow::Result<(ExperimentResult, Vec<CapturedFrame>)> {
+    let mut log = Vec::new();
+    let result = run_wired_with(family, cfg, opts, eval_batches, Some(&mut log))?;
+    Ok((result, log))
+}
+
+fn run_wired_with(
+    family: &WarmFamily,
+    cfg: &ExperimentConfig,
+    opts: &WireOpts,
+    eval_batches: usize,
+    capture: Option<&mut Vec<CapturedFrame>>,
+) -> anyhow::Result<ExperimentResult> {
+    anyhow::ensure!(cfg.transport.is_wire(), "config transport is inproc; nothing to wire");
+    anyhow::ensure!(cfg.m >= 1, "wired runs need at least one worker");
+    let listener = Listener::bind(cfg.transport)?;
+    let addr = listener.addr_token()?;
+    match resolve_spawn(opts.spawn)? {
+        Spawned::Threads => {
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..cfg.m)
+                    .map(|id| {
+                        let addr = addr.clone();
+                        s.spawn(move || {
+                            worker::serve_with_family(
+                                family,
+                                cfg,
+                                &addr,
+                                id,
+                                &opts.faults,
+                                &opts.timeouts,
+                            )
+                        })
+                    })
+                    .collect();
+                let result = coordinate(family, cfg, &listener, opts, eval_batches, capture);
+                join_results(result, handles.into_iter().map(|h| h.join()).collect())
+            })
+        }
+        Spawned::Processes(bin) => {
+            let mut procs = WorkerProcs::spawn(&bin, cfg, &addr, &opts.faults)?;
+            let result = coordinate(family, cfg, &listener, opts, eval_batches, capture);
+            procs.finish(result.is_ok()).and(result)
+        }
+    }
+}
+
+/// The coordinator side: accept M handshakes, then drive the lockstep
+/// rounds, verifying every upload payload against the local replica.
+fn coordinate(
+    family: &WarmFamily,
+    cfg: &ExperimentConfig,
+    listener: &Listener,
+    opts: &WireOpts,
+    eval_batches: usize,
+    mut capture: Option<&mut Vec<CapturedFrame>>,
+) -> anyhow::Result<ExperimentResult> {
+    let t_build = Instant::now();
+    let mut cell: WiredCell = family.build_wired(cfg)?;
+    let m = cfg.m;
+    let accept_by = Instant::now() + opts.timeouts.recv_deadline;
+    let mut slots: Vec<Option<Endpoint>> = (0..m).map(|_| None).collect();
+    for _ in 0..m {
+        let conn = listener.accept_deadline(accept_by)?;
+        let mut ep = Endpoint::new(
+            conn,
+            FaultInjector::inert(),
+            opts.timeouts.clone(),
+            "unidentified worker".into(),
+        );
+        let hello = ep.recv_reliable()?;
+        anyhow::ensure!(hello.kind == PayloadKind::Probe, "expected a Probe handshake");
+        anyhow::ensure!(hello.payload.len() == 8, "malformed Probe payload");
+        let id = u32::from_le_bytes(hello.payload[..4].try_into().unwrap()) as usize;
+        let peer_m = u32::from_le_bytes(hello.payload[4..8].try_into().unwrap()) as usize;
+        anyhow::ensure!(peer_m == m, "worker {id} believes M = {peer_m}, coordinator has {m}");
+        anyhow::ensure!(id < m, "worker id {id} out of range for M = {m}");
+        anyhow::ensure!(slots[id].is_none(), "duplicate handshake for worker {id}");
+        ep.set_faults(FaultInjector::new(&opts.faults, COORD_LEG_BASE + id as u64 + 1));
+        ep.set_label(format!("worker {id}"));
+        slots[id] = Some(ep);
+    }
+    let mut eps: Vec<Endpoint> = slots.into_iter().map(|s| s.expect("all slots filled")).collect();
+    let build_ms = t_build.elapsed().as_secs_f64() * 1e3;
+
+    let mut records = Vec::with_capacity(cfg.rounds as usize);
+    for _ in 0..cfg.rounds {
+        let record = cell.round()?;
+        let wire = cell.take_wire()?;
+        let bcast_payload = frame::encode_msgs(&wire.broadcast);
+        for (id, ep) in eps.iter_mut().enumerate() {
+            ep.send_reliable(PayloadKind::Broadcast, id as u32, wire.step, bcast_payload.clone())?;
+            if let Some(log) = capture.as_deref_mut() {
+                log.push(CapturedFrame {
+                    kind: PayloadKind::Broadcast,
+                    worker: id as u32,
+                    round: wire.step,
+                    payload: bcast_payload.clone(),
+                });
+            }
+        }
+        for (id, ep) in eps.iter_mut().enumerate() {
+            let upload = ep.recv_reliable()?;
+            anyhow::ensure!(
+                upload.kind == PayloadKind::Upload && upload.worker == id as u32,
+                "expected worker {id}'s Upload, got {:?} from worker {}",
+                upload.kind,
+                upload.worker
+            );
+            anyhow::ensure!(
+                upload.round == wire.step,
+                "worker {id} uploaded round {} during round {}",
+                upload.round,
+                wire.step
+            );
+            // The wire-bit-identity contract: the peer's bytes must
+            // equal what this replica computed for that worker.
+            let expect = frame::encode_msgs(&wire.uploads[id]);
+            anyhow::ensure!(
+                upload.payload == expect,
+                "wire divergence: worker {id} round {} upload is {} bytes vs local {} \
+                 (or differing content)",
+                wire.step,
+                upload.payload.len(),
+                expect.len()
+            );
+            if let Some(log) = capture.as_deref_mut() {
+                log.push(CapturedFrame {
+                    kind: PayloadKind::Upload,
+                    worker: id as u32,
+                    round: wire.step,
+                    payload: upload.payload,
+                });
+            }
+        }
+        records.push(record);
+    }
+    for (id, ep) in eps.iter_mut().enumerate() {
+        ep.send_reliable(PayloadKind::Shutdown, id as u32, cfg.rounds, Vec::new())?;
+    }
+    let total_time = cell.clock();
+    let eval = if eval_batches > 0 { cell.evaluate(eval_batches)? } else { None };
+    Ok(ExperimentResult {
+        records,
+        layers: cell.layers.clone(),
+        n_params: cell.n_params,
+        eval,
+        total_time,
+        build_ms,
+    })
+}
+
+enum Spawned {
+    Threads,
+    Processes(std::path::PathBuf),
+}
+
+fn resolve_spawn(mode: SpawnMode) -> anyhow::Result<Spawned> {
+    let bin_override = std::env::var_os("KIMAD_WORKER_BIN").map(std::path::PathBuf::from);
+    let own_kimad = || {
+        std::env::current_exe().ok().filter(|exe| {
+            exe.file_stem().map(|s| s.to_string_lossy() == "kimad").unwrap_or(false)
+        })
+    };
+    match mode {
+        SpawnMode::Thread => Ok(Spawned::Threads),
+        SpawnMode::Process => {
+            let bin = bin_override.or_else(own_kimad).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "process spawn needs a kimad binary: set KIMAD_WORKER_BIN or run via kimad"
+                )
+            })?;
+            Ok(Spawned::Processes(bin))
+        }
+        SpawnMode::Auto => match bin_override.or_else(own_kimad) {
+            Some(bin) => Ok(Spawned::Processes(bin)),
+            None => Ok(Spawned::Threads),
+        },
+    }
+}
+
+fn join_results(
+    result: anyhow::Result<ExperimentResult>,
+    joins: Vec<std::thread::Result<anyhow::Result<()>>>,
+) -> anyhow::Result<ExperimentResult> {
+    let mut errs = Vec::new();
+    for (id, join) in joins.into_iter().enumerate() {
+        match join {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => errs.push(format!("worker {id}: {e}")),
+            Err(_) => errs.push(format!("worker {id}: panicked")),
+        }
+    }
+    match result {
+        Ok(res) if errs.is_empty() => Ok(res),
+        Ok(_) => anyhow::bail!("wired run: {}", errs.join("; ")),
+        Err(e) if errs.is_empty() => Err(e),
+        Err(e) => anyhow::bail!("wired run: {e}; {}", errs.join("; ")),
+    }
+}
+
+/// Spawned `kimad worker` children plus their temp config file; both
+/// are reaped/cleaned on drop so a failing coordinator never leaks
+/// orphan processes.
+struct WorkerProcs {
+    children: Vec<std::process::Child>,
+    cfg_path: std::path::PathBuf,
+}
+
+impl WorkerProcs {
+    fn spawn(
+        bin: &std::path::Path,
+        cfg: &ExperimentConfig,
+        addr: &str,
+        faults: &FaultPlan,
+    ) -> anyhow::Result<Self> {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static CFG_COUNTER: AtomicU64 = AtomicU64::new(0);
+        let cfg_path = std::env::temp_dir().join(format!(
+            "kimad-wire-{}-{}.json",
+            std::process::id(),
+            CFG_COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&cfg_path, cfg.to_json_string())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", cfg_path.display()))?;
+        let mut procs = WorkerProcs { children: Vec::with_capacity(cfg.m), cfg_path };
+        for id in 0..cfg.m {
+            let mut cmd = std::process::Command::new(bin);
+            cmd.arg("worker")
+                .arg("--connect")
+                .arg(addr)
+                .arg("--config")
+                .arg(&procs.cfg_path)
+                .arg("--id")
+                .arg(id.to_string());
+            if let Some(dir) = std::env::var_os("KIMAD_ARTIFACTS") {
+                cmd.arg("--artifacts").arg(dir);
+            }
+            // The fault plan travels explicitly so spawned processes
+            // fault-inject identically to in-process threads.
+            if faults.is_active() {
+                cmd.env("KIMAD_WIRE_FAULTS", faults.to_token());
+            } else {
+                cmd.env_remove("KIMAD_WIRE_FAULTS");
+            }
+            let child = cmd
+                .spawn()
+                .map_err(|e| anyhow::anyhow!("spawning {} worker: {e}", bin.display()))?;
+            procs.children.push(child);
+        }
+        Ok(procs)
+    }
+
+    /// Wait for all children (when the coordinator succeeded) or kill
+    /// them (when it failed — they would otherwise block on a dead
+    /// socket until their own timeouts).
+    fn finish(&mut self, coordinator_ok: bool) -> anyhow::Result<()> {
+        let mut errs = Vec::new();
+        for (id, mut child) in self.children.drain(..).enumerate() {
+            if !coordinator_ok {
+                let _ = child.kill();
+            }
+            match child.wait() {
+                Ok(status) if status.success() || !coordinator_ok => {}
+                Ok(status) => errs.push(format!("worker {id} exited with {status}")),
+                Err(e) => errs.push(format!("worker {id}: {e}")),
+            }
+        }
+        anyhow::ensure!(errs.is_empty(), "{}", errs.join("; "));
+        Ok(())
+    }
+}
+
+impl Drop for WorkerProcs {
+    fn drop(&mut self) {
+        for child in &mut self.children {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        let _ = std::fs::remove_file(&self.cfg_path);
+    }
+}

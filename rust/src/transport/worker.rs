@@ -1,0 +1,92 @@
+//! The worker peer of a wired run: a lockstep replica of the round
+//! engine gated on the coordinator's `Broadcast` frames.
+//!
+//! The worker rebuilds the identical deterministic simulation from the
+//! same config + seed, so it *knows* the bytes the coordinator must
+//! broadcast each round. Receiving `Broadcast` k releases round k:
+//! the worker steps its replica, checks the received payload against
+//! its locally computed broadcast bytes (the wire-bit-identity
+//! contract, enforced from both sides), and answers with its own
+//! worker's serialized `Upload` messages. `Shutdown` ends the loop.
+
+use super::endpoint::{self, Endpoint, TimeoutCfg};
+use super::faults::{FaultInjector, FaultPlan};
+use super::frame::{self, PayloadKind};
+use crate::config::ExperimentConfig;
+use crate::driver::WarmFamily;
+
+/// Serve one worker id against a prepared family (the in-process-tree
+/// topology used by thread spawn and the integration harness).
+pub fn serve_with_family(
+    family: &WarmFamily,
+    cfg: &ExperimentConfig,
+    addr: &str,
+    id: usize,
+    faults: &FaultPlan,
+    timeouts: &TimeoutCfg,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(id < cfg.m, "worker id {id} out of range for M = {}", cfg.m);
+    let mut cell = family.build_wired(cfg)?;
+    let conn = endpoint::dial(addr, timeouts)?;
+    let mut ep = Endpoint::new(
+        conn,
+        FaultInjector::new(faults, id as u64 + 1),
+        timeouts.clone(),
+        format!("coordinator (from worker {id})"),
+    );
+
+    // Handshake: claim the worker id and cross-check M.
+    let mut hello = Vec::with_capacity(8);
+    hello.extend_from_slice(&(id as u32).to_le_bytes());
+    hello.extend_from_slice(&(cfg.m as u32).to_le_bytes());
+    ep.send_reliable(PayloadKind::Probe, id as u32, 0, hello)?;
+
+    loop {
+        let f = ep.recv_reliable()?;
+        match f.kind {
+            PayloadKind::Shutdown => {
+                // Our Shutdown ack may have been lost; quench any
+                // retransmissions until the coordinator hangs up.
+                ep.linger();
+                return Ok(());
+            }
+            PayloadKind::Broadcast => {
+                // Broadcast k releases replica round k.
+                cell.round()?;
+                let wire = cell.take_wire()?;
+                anyhow::ensure!(
+                    f.round == wire.step,
+                    "worker {id}: coordinator broadcast round {} but replica is at {}",
+                    f.round,
+                    wire.step
+                );
+                let expect = frame::encode_msgs(&wire.broadcast);
+                anyhow::ensure!(
+                    f.payload == expect,
+                    "wire divergence: worker {id} round {} broadcast is {} bytes from the \
+                     coordinator vs {} computed locally (or differing content)",
+                    wire.step,
+                    f.payload.len(),
+                    expect.len()
+                );
+                let upload = frame::encode_msgs(&wire.uploads[id]);
+                ep.send_reliable(PayloadKind::Upload, id as u32, wire.step, upload)?;
+            }
+            other => anyhow::bail!("worker {id}: unexpected {other:?} frame"),
+        }
+    }
+}
+
+/// The `kimad worker` subcommand body: prepare the family from the
+/// config file and serve until `Shutdown`. Fault plan from
+/// `KIMAD_WIRE_FAULTS` (set by the spawning coordinator).
+pub fn run_worker(
+    cfg: &ExperimentConfig,
+    artifacts: Option<&str>,
+    addr: &str,
+    id: usize,
+) -> anyhow::Result<()> {
+    let family = WarmFamily::prepare(cfg, artifacts)?;
+    let faults = FaultPlan::from_env()?;
+    serve_with_family(&family, cfg, addr, id, &faults, &TimeoutCfg::default())
+}

@@ -1,0 +1,178 @@
+//! Property suite over the compressor family: wire accounting, support
+//! containment, quantization round-trip bounds and the
+//! `compress == compress_into` bit-identity contract, swept across
+//! random shapes and seeds (util::prop, seeded + replayable).
+
+use kimad::compress::{
+    compression_error, Compressed, Compressor, Identity, LowRank, OneBitSign, QuantizeBits,
+    RandK, TopK,
+};
+use kimad::util::prop::check;
+use kimad::util::rng::Rng;
+
+fn rand_vec(rng: &mut Rng, d: usize) -> Vec<f32> {
+    (0..d).map(|_| rng.range_f32(-8.0, 8.0)).collect()
+}
+
+/// A randomized panel covering every compressor family, sized for
+/// dimension `d`. RandK instances are seeded from the property RNG so
+/// each case sweeps a different sampling stream.
+fn panel(rng: &mut Rng, d: usize) -> Vec<Box<dyn Compressor>> {
+    let k = rng.range_usize(0, d + 1);
+    let bits = 1 + rng.range_usize(0, 32) as u64;
+    let rows = 1 + rng.range_usize(0, 12);
+    let cols = 1 + rng.range_usize(0, 12);
+    let rank = 1 + rng.range_usize(0, rows.min(cols));
+    vec![
+        Box::new(Identity),
+        Box::new(TopK::new(k)),
+        Box::new(RandK::new(k, rng.next_u64())),
+        Box::new(QuantizeBits::new(bits)),
+        Box::new(OneBitSign),
+        Box::new(LowRank::new(rows, cols, rank)),
+    ]
+}
+
+#[test]
+fn prop_wire_bits_never_exceed_planned() {
+    check("wire_bits(compress(u)) <= planned_bits(d)", 31, 60, |rng| {
+        let d = rng.range_usize(1, 400);
+        let u = rand_vec(rng, d);
+        for c in panel(rng, d) {
+            let msg = c.compress(&u);
+            assert!(
+                msg.wire_bits() <= c.planned_bits(d),
+                "{}: wire {} > planned {} at d={d}",
+                c.name(),
+                msg.wire_bits(),
+                c.planned_bits(d)
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_sparsifier_support_is_subset_of_input() {
+    check("TopK/RandK: distinct in-range indices, values from u", 32, 60, |rng| {
+        let d = rng.range_usize(1, 500);
+        let u = rand_vec(rng, d);
+        let k = rng.range_usize(0, d + 2);
+        let comps: Vec<Box<dyn Compressor>> =
+            vec![Box::new(TopK::new(k)), Box::new(RandK::new(k, rng.next_u64()))];
+        for c in comps {
+            let Compressed::Sparse { dim, idx, val } = c.compress(&u) else {
+                panic!("{} must produce a sparse message", c.name());
+            };
+            assert_eq!(dim, d, "{}", c.name());
+            assert_eq!(idx.len(), k.min(d), "{}: kept count", c.name());
+            assert_eq!(idx.len(), val.len(), "{}", c.name());
+            let mut seen = idx.clone();
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen.len(), idx.len(), "{}: indices must be distinct", c.name());
+            for (&i, &v) in idx.iter().zip(&val) {
+                assert!((i as usize) < d, "{}: index {i} out of range {d}", c.name());
+                assert_eq!(v.to_bits(), u[i as usize].to_bits(), "{}: value copied", c.name());
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_quantize_roundtrip_error_bounded() {
+    check("quantize: per-coordinate error <= half a grid step", 33, 60, |rng| {
+        let d = rng.range_usize(1, 300);
+        let u = rand_vec(rng, d);
+        let bits = 1 + rng.range_usize(0, 32) as u64;
+        let q = QuantizeBits::new(bits);
+        let dec = q.compress(&u).to_dense(d);
+        let scale = u.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        if scale == 0.0 || bits >= 32 {
+            // Passthrough cases are exact.
+            assert_eq!(dec, u, "bits={bits} scale={scale}");
+            return;
+        }
+        let levels = ((1u64 << (bits - 1)) - 1).max(1) as f64;
+        let step = scale as f64 / levels;
+        for (i, (&a, &b)) in u.iter().zip(&dec).enumerate() {
+            let err = ((a - b) as f64).abs();
+            assert!(
+                err <= step / 2.0 + 1e-5 * scale as f64,
+                "bits={bits} coord {i}: |{a} - {b}| = {err} > step/2 = {}",
+                step / 2.0
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_contraction_bound_holds_across_panel() {
+    check("err(u) <= (1 - alpha(d)) ||u||^2 for deterministic compressors", 34, 40, |rng| {
+        let d = rng.range_usize(1, 300);
+        let u = rand_vec(rng, d);
+        let norm: f64 = u.iter().map(|&x| (x as f64).powi(2)).sum();
+        let k = rng.range_usize(0, d + 1);
+        // RandK is excluded: its bound holds in expectation only
+        // (prop_invariants.rs covers the statistical version).
+        let comps: Vec<Box<dyn Compressor>> = vec![
+            Box::new(Identity),
+            Box::new(TopK::new(k)),
+            Box::new(QuantizeBits::new(1 + rng.range_usize(0, 16) as u64)),
+            Box::new(OneBitSign),
+        ];
+        for c in comps {
+            let err = compression_error(c.as_ref(), &u);
+            assert!(
+                err <= (1.0 - c.alpha(d)) * norm + 1e-3 * norm.max(1.0),
+                "{}: err={err} > (1-alpha)*norm={}",
+                c.name(),
+                (1.0 - c.alpha(d)) * norm
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_compress_into_bit_identical_to_compress() {
+    check("compress_into == compress, bit for bit, into dirty buffers", 35, 60, |rng| {
+        let d = rng.range_usize(1, 400);
+        let u = rand_vec(rng, d);
+        let seed = rng.next_u64();
+        let k = rng.range_usize(0, d + 1);
+        let bits = 1 + rng.range_usize(0, 32) as u64;
+        let rows = 1 + rng.range_usize(0, 10);
+        let cols = 1 + rng.range_usize(0, 10);
+        // Two independent instances per family: RandK advances an
+        // internal call counter, so the fresh-allocation path and the
+        // buffer-reuse path must each consume their own stream.
+        let make = |rng_seed: u64| -> Vec<Box<dyn Compressor>> {
+            vec![
+                Box::new(Identity),
+                Box::new(TopK::new(k)),
+                Box::new(RandK::new(k, rng_seed)),
+                Box::new(QuantizeBits::new(bits)),
+                Box::new(OneBitSign),
+                Box::new(LowRank::new(rows, cols, 1 + (k % rows.min(cols)))),
+            ]
+        };
+        let fresh = make(seed);
+        let reused = make(seed);
+        for (a, b) in fresh.iter().zip(&reused) {
+            let want = a.compress(&u);
+            // Pre-dirty the buffer with a different variant and stale
+            // content so reuse can't pass by accident.
+            let mut out = Compressed::Factors {
+                rows: 2,
+                cols: 2,
+                u: vec![9.0; 4],
+                v: vec![-9.0; 4],
+            };
+            b.compress_into(&u, &mut out);
+            assert_eq!(out, want, "{}: first compress_into", a.name());
+            // Second pass through the now-warm buffer.
+            let want2 = a.compress(&u);
+            b.compress_into(&u, &mut out);
+            assert_eq!(out, want2, "{}: warm compress_into", a.name());
+        }
+    });
+}

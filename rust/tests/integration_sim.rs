@@ -30,6 +30,7 @@ fn quad_cfg(m: usize, policy: CompressPolicy, rounds: u64) -> ExperimentConfig {
         thread_cap: 0,
         mode: kimad::config::ExecModeSpec::Sync,
         compute: kimad::coordinator::ComputeModel::Constant,
+        transport: kimad::config::TransportSpec::Inproc,
         seed: 21,
     }
 }

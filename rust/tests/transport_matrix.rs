@@ -1,0 +1,198 @@
+//! The wire-bit golden harness: a wired run (coordinator + M worker
+//! peers exchanging real frames over UDS/TCP) must move exactly the
+//! bytes the in-process engine computes — frame for frame — and
+//! produce identical [`ExperimentResult`]s, with and without seeded
+//! transport faults.
+//!
+//! Workers run as an in-process tree (`SpawnMode::Thread`) so the
+//! harness stays hermetic under `cargo test`; the frames still cross
+//! real sockets through the full reliable-delivery stack.
+
+use std::time::Duration;
+
+use kimad::bandwidth::TraceSpec;
+use kimad::config::{ExperimentConfig, OptimizerSpec, TransportSpec, WorkloadSpec};
+use kimad::driver::WarmFamily;
+use kimad::kimad::{BudgetParams, CompressPolicy};
+use kimad::transport::endpoint::TimeoutCfg;
+use kimad::transport::faults::FaultPlan;
+use kimad::transport::frame::{self, PayloadKind};
+use kimad::transport::{run_wired_captured, SpawnMode, WireOpts};
+
+/// 1×4 topology, 5 rounds, §4.1 quadratic, oscillating uplink.
+fn wired_cfg(policy: CompressPolicy, safety: f64, transport: TransportSpec) -> ExperimentConfig {
+    ExperimentConfig {
+        name: "wire".into(),
+        m: 4,
+        participation: 1.0,
+        cohorts: 0,
+        workload: WorkloadSpec::Quadratic { d: 30, n_layers: 3, t_comp: 0.1 },
+        budget: BudgetParams::PerDirection { t_comm: 0.9 },
+        up_policy: policy.clone(),
+        down_policy: policy,
+        optimizer: OptimizerSpec { gamma: 0.03, layer_weights: vec![] },
+        uplink: TraceSpec::SinSquared { eta: 512.0, theta: 0.1, delta: 64.0, phase: 0.0 },
+        downlink: TraceSpec::Constant { bps: 1e7 },
+        alpha: 1.0,
+        rounds: 5,
+        prior_bps: 0.0,
+        warm_start: true,
+        single_layer: false,
+        budget_safety: safety,
+        threads: 1,
+        shards: 0,
+        thread_cap: 0,
+        mode: kimad::config::ExecModeSpec::Sync,
+        compute: kimad::coordinator::ComputeModel::Constant,
+        transport,
+        seed: 21,
+    }
+}
+
+fn policies() -> Vec<(&'static str, CompressPolicy)> {
+    vec![
+        ("ef21-fixed25", CompressPolicy::FixedRatio { ratio: 0.25 }),
+        ("kimad", CompressPolicy::KimadUniform),
+        ("kimad-plus", CompressPolicy::KimadPlus { discretization: 400, ratios: vec![] }),
+        ("whole-topk", CompressPolicy::WholeModelTopK),
+    ]
+}
+
+/// Thread-spawned wired options; `ack_base` lowered so fault-injected
+/// retransmissions keep the suite fast.
+fn thread_opts(faults: FaultPlan) -> WireOpts {
+    WireOpts {
+        faults,
+        timeouts: TimeoutCfg {
+            ack_base: Duration::from_millis(30),
+            ..TimeoutCfg::default()
+        },
+        spawn: SpawnMode::Thread,
+    }
+}
+
+/// What the in-process engine says must cross the wire: per round, a
+/// `Broadcast` to each worker (identical payload) then each worker's
+/// `Upload`, in worker order.
+fn expected_frames(
+    family: &WarmFamily,
+    cfg: &ExperimentConfig,
+) -> Vec<(PayloadKind, u32, u64, Vec<u8>)> {
+    let mut cell = family.build_wired(cfg).unwrap();
+    let mut out = Vec::new();
+    for _ in 0..cfg.rounds {
+        cell.round().unwrap();
+        let wire = cell.take_wire().unwrap();
+        let bcast = frame::encode_msgs(&wire.broadcast);
+        for id in 0..cfg.m {
+            out.push((PayloadKind::Broadcast, id as u32, wire.step, bcast.clone()));
+        }
+        for id in 0..cfg.m {
+            let upload = frame::encode_msgs(&wire.uploads[id]);
+            out.push((PayloadKind::Upload, id as u32, wire.step, upload));
+        }
+    }
+    out
+}
+
+fn assert_frames_match(
+    name: &str,
+    expected: &[(PayloadKind, u32, u64, Vec<u8>)],
+    captured: &[kimad::transport::CapturedFrame],
+) {
+    assert_eq!(captured.len(), expected.len(), "{name}: captured frame count");
+    for (i, (cap, exp)) in captured.iter().zip(expected).enumerate() {
+        assert_eq!(cap.kind, exp.0, "{name}: frame {i} kind");
+        assert_eq!(cap.worker, exp.1, "{name}: frame {i} worker");
+        assert_eq!(cap.round, exp.2, "{name}: frame {i} round");
+        assert_eq!(cap.payload, exp.3, "{name}: frame {i} payload bytes");
+    }
+}
+
+#[test]
+fn uds_wire_bits_match_inproc_engine_frame_for_frame() {
+    for (name, policy) in policies() {
+        for safety in [1.0, 0.8] {
+            let cfg = wired_cfg(policy.clone(), safety, TransportSpec::Uds);
+            let family = WarmFamily::prepare(&cfg, None).unwrap();
+            let expected = expected_frames(&family, &cfg);
+            let (wired, captured) =
+                run_wired_captured(&family, &cfg, &thread_opts(FaultPlan::none()), 0).unwrap();
+            assert_frames_match(name, &expected, &captured);
+
+            // The run's results are byte-identical to the in-process
+            // engine's; only wall-clock metadata may differ.
+            let mut inproc_cfg = cfg.clone();
+            inproc_cfg.transport = TransportSpec::Inproc;
+            let inproc = family.run(&inproc_cfg).unwrap();
+            assert_eq!(wired.records, inproc.records, "{name} s{safety}: records");
+            assert_eq!(wired.total_time, inproc.total_time, "{name} s{safety}: virtual clock");
+            assert_eq!(wired.n_params, inproc.n_params, "{name} s{safety}: n_params");
+        }
+    }
+}
+
+#[test]
+fn tcp_wire_bits_match_inproc_engine() {
+    let cfg = wired_cfg(CompressPolicy::KimadUniform, 1.0, TransportSpec::Tcp);
+    let family = WarmFamily::prepare(&cfg, None).unwrap();
+    let expected = expected_frames(&family, &cfg);
+    let (wired, captured) =
+        run_wired_captured(&family, &cfg, &thread_opts(FaultPlan::none()), 0).unwrap();
+    assert_frames_match("tcp-kimad", &expected, &captured);
+    let mut inproc_cfg = cfg.clone();
+    inproc_cfg.transport = TransportSpec::Inproc;
+    assert_eq!(wired.records, family.run(&inproc_cfg).unwrap().records);
+}
+
+#[test]
+fn faulted_wire_converges_to_identical_state() {
+    // Seeded drops, duplicates, truncations and delays on every leg:
+    // the reliable layer must retransmit through all of it and land
+    // the exact same frames — and therefore the exact same model
+    // state — as a clean wired run and the in-process engine.
+    let plan = FaultPlan::parse("drop=0.15,dup=0.1,trunc=0.1,delay=0.2,delay_ms=2,seed=7").unwrap();
+    let cfg = wired_cfg(CompressPolicy::KimadUniform, 1.0, TransportSpec::Uds);
+    let family = WarmFamily::prepare(&cfg, None).unwrap();
+    let expected = expected_frames(&family, &cfg);
+
+    let (faulted, captured) = run_wired_captured(&family, &cfg, &thread_opts(plan), 0).unwrap();
+    assert_frames_match("faulted", &expected, &captured);
+
+    let (clean, _) =
+        run_wired_captured(&family, &cfg, &thread_opts(FaultPlan::none()), 0).unwrap();
+    assert_eq!(faulted.records, clean.records, "faulted vs clean wired records");
+
+    let mut inproc_cfg = cfg.clone();
+    inproc_cfg.transport = TransportSpec::Inproc;
+    let inproc = family.run(&inproc_cfg).unwrap();
+    assert_eq!(faulted.records, inproc.records, "faulted wired vs inproc records");
+}
+
+#[test]
+fn wired_dispatch_through_family_run() {
+    // `WarmFamily::run` on a wire-transport config must route through
+    // the transport layer (thread spawn under cargo test) and still
+    // return in-process-identical records.
+    std::env::set_var("KIMAD_WIRE_SPAWN", "thread");
+    let cfg = wired_cfg(CompressPolicy::FixedRatio { ratio: 0.25 }, 1.0, TransportSpec::Uds);
+    let family = WarmFamily::prepare(&cfg, None).unwrap();
+    let wired = family.run(&cfg).unwrap();
+    let mut inproc_cfg = cfg.clone();
+    inproc_cfg.transport = TransportSpec::Inproc;
+    assert_eq!(wired.records, family.run(&inproc_cfg).unwrap().records);
+    std::env::remove_var("KIMAD_WIRE_SPAWN");
+}
+
+#[test]
+fn population_and_async_cells_refuse_the_wire() {
+    let mut pop = wired_cfg(CompressPolicy::KimadUniform, 1.0, TransportSpec::Uds);
+    pop.participation = 0.5;
+    let family = WarmFamily::prepare(&pop, None).unwrap();
+    assert!(family.build_wired(&pop).is_err(), "population cells must stay inproc");
+
+    let mut async_cfg = wired_cfg(CompressPolicy::KimadUniform, 1.0, TransportSpec::Uds);
+    async_cfg.mode = kimad::config::ExecModeSpec::Async { damping: 0.5 };
+    let family = WarmFamily::prepare(&async_cfg, None).unwrap();
+    assert!(family.build_wired(&async_cfg).is_err(), "async cells must stay inproc");
+}
