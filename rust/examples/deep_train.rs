@@ -11,6 +11,10 @@
 //!     make artifacts   # once (or: kimad gen-artifacts --presets e2e)
 //!     cargo run --release --example deep_train [--preset e2e] [--rounds 300]
 
+// Wall-clock allowlist file (ARCHITECTURE.md §6): examples report real
+// run time; clippy.toml bans the methods in engine code.
+#![allow(clippy::disallowed_methods)]
+
 use kimad::driver::run_experiment;
 use kimad::kimad::CompressPolicy;
 use kimad::reports::{deep, ReportCtx};

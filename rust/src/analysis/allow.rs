@@ -1,0 +1,134 @@
+//! Suppression directives and hot-path markers.
+//!
+//! Two directives are recognized, **only in plain comments** (doc
+//! comments are documentation — see the lexer):
+//!
+//! * `tidy:allow(<rule>) -- <reason>` suppresses `<rule>` on the line
+//!   it shares with code, or — when it sits on a comment-only line —
+//!   on the next code line within five lines. The reason is
+//!   mandatory; a missing reason, an unknown rule, or a bare
+//!   `tidy:allow` is an `allow-syntax` error. An allow that suppresses
+//!   nothing is an `unused-allow` error, so stale exemptions cannot
+//!   accumulate.
+//! * `tidy:alloc-free(<name>)` opens an allocation-free region: from
+//!   the first `{` at or after the marker to its matching brace. The
+//!   names are cross-checked against
+//!   `bench::kernels::alloc_free_kernels()` in both directions.
+
+use std::collections::BTreeMap;
+
+use super::lexer::Masked;
+
+const ALLOW_KEY: &str = "tidy:allow";
+const MARKER_KEY: &str = "tidy:alloc-free(";
+
+/// One parsed `tidy:allow`, with its usage bit. `line` is 0-based.
+pub struct AllowRec {
+    pub line: usize,
+    pub rule: String,
+    pub used: bool,
+}
+
+/// All allows of one file, indexed by the (line, rule) they suppress.
+#[derive(Default)]
+pub struct AllowSet {
+    pub allows: Vec<AllowRec>,
+    by_target: BTreeMap<(usize, String), usize>,
+}
+
+impl AllowSet {
+    /// If an allow targets `(line, rule)`, mark it used and return
+    /// true (the diagnostic is suppressed). `line` is 0-based.
+    pub fn suppress(&mut self, line: usize, rule: &str) -> bool {
+        match self.by_target.get(&(line, rule.to_string())) {
+            Some(&idx) => {
+                self.allows[idx].used = true;
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+/// One `tidy:alloc-free(<name>)` marker. `line` is 0-based.
+pub struct Marker {
+    pub name: String,
+    pub line: usize,
+}
+
+/// Parse every allow in the file. Returns the set plus the 0-based
+/// lines and messages of malformed directives.
+pub fn parse_allows(m: &Masked, known_rules: &[&str]) -> (AllowSet, Vec<(usize, String)>) {
+    let mut set = AllowSet::default();
+    let mut malformed = Vec::new();
+    for ln in 0..m.len() {
+        let ctext = &m.comment[ln];
+        let mut start = 0;
+        while let Some(off) = ctext[start..].find(ALLOW_KEY) {
+            let p = start + off;
+            let rest = &ctext[p + ALLOW_KEY.len()..];
+            match parse_one_allow(rest, known_rules) {
+                Some(rule) => {
+                    let target = bind_target(m, ln);
+                    let idx = set.allows.len();
+                    set.allows.push(AllowRec { line: ln, rule: rule.clone(), used: false });
+                    set.by_target.insert((target, rule), idx);
+                }
+                None => {
+                    let msg =
+                        "malformed tidy:allow — need tidy:allow(<rule>) -- <reason>".to_string();
+                    malformed.push((ln, msg));
+                }
+            }
+            start = p + ALLOW_KEY.len();
+        }
+    }
+    (set, malformed)
+}
+
+/// Validate `(<rule>) -- <reason>` after the directive keyword and
+/// return the rule name.
+fn parse_one_allow(rest: &str, known_rules: &[&str]) -> Option<String> {
+    let inner = rest.strip_prefix('(')?;
+    let close = inner.find(')')?;
+    let rule = &inner[..close];
+    if !known_rules.contains(&rule) {
+        return None;
+    }
+    let tail = inner[close + 1..].trim_start();
+    let reason = tail.strip_prefix("--")?;
+    if reason.trim().is_empty() {
+        return None;
+    }
+    Some(rule.to_string())
+}
+
+/// The line an allow at `ln` suppresses: its own line when it shares
+/// it with code, otherwise the next line carrying code (within five).
+fn bind_target(m: &Masked, ln: usize) -> usize {
+    if !m.code[ln].trim().is_empty() {
+        return ln;
+    }
+    let hi = (ln + 6).min(m.len());
+    for cand in ln + 1..hi {
+        if !m.code[cand].trim().is_empty() {
+            return cand;
+        }
+    }
+    ln
+}
+
+/// Collect every `tidy:alloc-free(<name>)` marker in the file.
+pub fn parse_markers(m: &Masked) -> Vec<Marker> {
+    let mut out = Vec::new();
+    for ln in 0..m.len() {
+        let ctext = &m.comment[ln];
+        if let Some(p) = ctext.find(MARKER_KEY) {
+            let rest = &ctext[p + MARKER_KEY.len()..];
+            if let Some(q) = rest.find(')') {
+                out.push(Marker { name: rest[..q].to_string(), line: ln });
+            }
+        }
+    }
+    out
+}

@@ -1,0 +1,293 @@
+//! A small Rust source lexer that masks string literals and comments,
+//! so rule matching never false-positives on doc text or message
+//! strings.
+//!
+//! [`mask`] walks the source once with a character state machine and
+//! produces, per line, two parallel views:
+//!
+//! * `code`: the raw line with every character that is *not* code
+//!   (string/char-literal interiors, comment text) replaced by a
+//!   space. Delimiters (`"`, `'`) survive so column positions line up
+//!   with the original text.
+//! * `comment`: only the text of **plain** comments (`//` and
+//!   `/* .. */`). Doc comments (`///`, `//!`, `/** */`, `/*! */`) are
+//!   documentation, not directives, and contribute nothing here — a
+//!   rustdoc paragraph describing the allow syntax must never parse
+//!   as an allow.
+//!
+//! Handled: nested block comments, escapes inside strings (including
+//! `\`-newline continuations), raw strings `r#".."#` with any hash
+//! count, byte strings, and the char-literal vs lifetime ambiguity
+//! (`'a'` vs `'a`).
+
+/// Per-line masked views of one source file. All vectors have the
+/// same length: one entry per `\n`-separated line.
+pub struct Masked {
+    /// Raw source lines, exactly as split on `\n`.
+    pub raw: Vec<String>,
+    /// Code view: non-code characters blanked to spaces.
+    pub code: Vec<String>,
+    /// Plain-comment text, blanked elsewhere.
+    pub comment: Vec<String>,
+}
+
+impl Masked {
+    /// Number of lines.
+    pub fn len(&self) -> usize {
+        self.raw.len()
+    }
+
+    /// True when the file is empty (no lines at all never happens:
+    /// even `""` yields one empty line).
+    pub fn is_empty(&self) -> bool {
+        self.raw.is_empty()
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum State {
+    Code,
+    /// `//` comment; `doc` marks `///` and `//!`.
+    Line { doc: bool },
+    /// `/* */` comment at `depth`; `doc` marks `/**` and `/*!`.
+    Block { doc: bool },
+    /// String literal body (escape-aware).
+    Str,
+    /// Raw string body terminated by `"` + `hashes` `#`s.
+    Raw { hashes: usize },
+}
+
+/// Mask one source file. Total over arbitrary input: unterminated
+/// strings or comments simply stay in their state to EOF.
+pub fn mask(src: &str) -> Masked {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut raw = Vec::new();
+    let mut code = Vec::new();
+    let mut comment = Vec::new();
+    let mut cur_raw = String::new();
+    let mut cur_code = String::new();
+    let mut cur_comm = String::new();
+    let mut st = State::Code;
+    let mut depth = 0usize;
+    let mut esc = false;
+    let mut i = 0usize;
+
+    macro_rules! flush_line {
+        () => {
+            raw.push(std::mem::take(&mut cur_raw));
+            code.push(std::mem::take(&mut cur_code));
+            comment.push(std::mem::take(&mut cur_comm));
+        };
+    }
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            flush_line!();
+            if let State::Line { .. } = st {
+                st = State::Code;
+            }
+            i += 1;
+            continue;
+        }
+        cur_raw.push(c);
+        match st {
+            State::Code => {
+                let c2 = chars.get(i + 1).copied();
+                if c == '/' && c2 == Some('/') {
+                    let doc = matches!(chars.get(i + 2), Some(&'/') | Some(&'!'));
+                    st = State::Line { doc };
+                    cur_raw.push('/');
+                    cur_code.push_str("  ");
+                    cur_comm.push_str("  ");
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && c2 == Some('*') {
+                    let empty = chars.get(i + 2) == Some(&'*') && chars.get(i + 3) == Some(&'/');
+                    let doc = matches!(chars.get(i + 2), Some(&'*') | Some(&'!')) && !empty;
+                    st = State::Block { doc };
+                    depth = 1;
+                    cur_raw.push('*');
+                    cur_code.push_str("  ");
+                    cur_comm.push_str("  ");
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    st = State::Str;
+                    esc = false;
+                    cur_code.push('"');
+                    i += 1;
+                    continue;
+                }
+                if c == 'r' || c == 'b' {
+                    if let Some((consumed, hashes)) = raw_string_prefix(&chars, i) {
+                        // Emit the prefix (`r#"` etc.) as code, enter Raw.
+                        cur_code.push(c);
+                        for &pc in &chars[i + 1..i + consumed] {
+                            cur_raw.push(pc);
+                            cur_code.push(pc);
+                        }
+                        st = State::Raw { hashes };
+                        i += consumed;
+                        continue;
+                    }
+                    if c == 'b'
+                        && c2 == Some('"')
+                        && !(i > 0 && is_ident(chars[i - 1]))
+                    {
+                        cur_code.push('b');
+                        i += 1;
+                        continue;
+                    }
+                    cur_code.push(c);
+                    i += 1;
+                    continue;
+                }
+                if c == '\'' {
+                    if let Some(end) = char_literal_end(&chars, i) {
+                        cur_code.push('\'');
+                        for &lc in &chars[i + 1..end] {
+                            cur_raw.push(lc);
+                            cur_code.push(' ');
+                        }
+                        cur_raw.push('\'');
+                        cur_code.push('\'');
+                        i = end + 1;
+                        continue;
+                    }
+                    cur_code.push('\''); // a lifetime tick is code
+                    i += 1;
+                    continue;
+                }
+                cur_code.push(c);
+                i += 1;
+            }
+            State::Line { doc } => {
+                cur_code.push(' ');
+                cur_comm.push(if doc { ' ' } else { c });
+                i += 1;
+            }
+            State::Block { doc } => {
+                let c2 = chars.get(i + 1).copied();
+                if c == '/' && c2 == Some('*') {
+                    depth += 1;
+                    cur_raw.push('*');
+                    cur_code.push_str("  ");
+                    cur_comm.push_str("  ");
+                    i += 2;
+                    continue;
+                }
+                if c == '*' && c2 == Some('/') {
+                    depth -= 1;
+                    cur_raw.push('/');
+                    cur_code.push_str("  ");
+                    cur_comm.push_str("  ");
+                    if depth == 0 {
+                        st = State::Code;
+                    }
+                    i += 2;
+                    continue;
+                }
+                cur_code.push(' ');
+                cur_comm.push(if doc { ' ' } else { c });
+                i += 1;
+            }
+            State::Str => {
+                if esc {
+                    esc = false;
+                    cur_code.push(' ');
+                } else if c == '\\' {
+                    esc = true;
+                    cur_code.push(' ');
+                } else if c == '"' {
+                    st = State::Code;
+                    cur_code.push('"');
+                } else {
+                    cur_code.push(' ');
+                }
+                i += 1;
+            }
+            State::Raw { hashes } => {
+                if c == '"' && trailing_hashes(&chars, i + 1) >= hashes {
+                    cur_code.push('"');
+                    for k in 0..hashes {
+                        cur_raw.push(chars[i + 1 + k]);
+                        cur_code.push('#');
+                    }
+                    st = State::Code;
+                    i += 1 + hashes;
+                    continue;
+                }
+                cur_code.push(' ');
+                i += 1;
+            }
+        }
+    }
+    raw.push(cur_raw);
+    code.push(cur_code);
+    comment.push(cur_comm);
+    Masked { raw, code, comment }
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// If `chars[i..]` starts a raw-string prefix (`r"`, `r#"`, `br"`,
+/// `br#"`, any hash count), return `(prefix_len, hashes)` where
+/// `prefix_len` includes the opening quote. `i` must point at `r` or
+/// `b`; a preceding identifier character disqualifies it (so the `r`
+/// at the end of `var` never opens a string).
+fn raw_string_prefix(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    if i > 0 && is_ident(chars[i - 1]) {
+        return None;
+    }
+    let mut j = i;
+    if chars[j] == 'b' {
+        if chars.get(j + 1) != Some(&'r') {
+            return None;
+        }
+        j += 1;
+    }
+    if chars[j] != 'r' {
+        return None;
+    }
+    let mut k = j + 1;
+    while chars.get(k) == Some(&'#') {
+        k += 1;
+    }
+    if chars.get(k) == Some(&'"') {
+        Some((k - i + 1, k - (j + 1)))
+    } else {
+        None
+    }
+}
+
+/// Count `#` characters starting at `chars[from]`.
+fn trailing_hashes(chars: &[char], from: usize) -> usize {
+    let mut h = 0;
+    while chars.get(from + h) == Some(&'#') {
+        h += 1;
+    }
+    h
+}
+
+/// If `chars[i]` (a `'`) opens a char literal, return the index of its
+/// closing quote; `None` means it is a lifetime tick. Escaped forms
+/// (`'\n'`, `'\u{1F600}'`) scan forward a bounded distance.
+fn char_literal_end(chars: &[char], i: usize) -> Option<usize> {
+    match chars.get(i + 1) {
+        Some('\\') => {
+            let mut j = i + 3; // skip the escaped char
+            while j < chars.len() && chars[j] != '\'' && j - i < 16 {
+                j += 1;
+            }
+            (chars.get(j) == Some(&'\'')).then_some(j)
+        }
+        Some(&c1) if c1 != '\'' && chars.get(i + 2) == Some(&'\'') => Some(i + 2),
+        _ => None,
+    }
+}

@@ -1,0 +1,439 @@
+//! `kimad tidy`: a dependency-free static-analysis pass that enforces
+//! the engine's determinism, wire-safety, and hot-path invariants as
+//! machine-checked rules.
+//!
+//! The scanner walks `src/`, `tests/`, and `benches/` under the crate
+//! root, masks every file through [`lexer::mask`] (so string literals
+//! and comments never false-positive), and applies the
+//! [`rules::REGISTRY`] — each rule mapped one-to-one to a documented
+//! invariant in `docs/ARCHITECTURE.md` §10. Violations are
+//! suppressible only by an in-tree `tidy:allow(<rule>) -- <reason>`
+//! directive, and allows that suppress nothing are themselves errors,
+//! so the exemption list can only shrink unless a human writes down a
+//! new reason.
+//!
+//! The pass runs three ways, all sharing this module: the `kimad
+//! tidy` subcommand (human or `--json` output), the tier-1
+//! integration test `tests/tidy.rs` (fails the build on any
+//! diagnostic), and the CI `tidy` job (JSON report artifact).
+
+pub mod allow;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+use crate::bench::kernels::alloc_free_kernels;
+
+use self::allow::{parse_allows, parse_markers};
+use self::lexer::{mask, Masked};
+use self::report::{Diagnostic, Report};
+use self::rules::{
+    find_word, has_int_type_token, has_numeric_cast, has_slice_indexing, rule_ids, ALLOC_TOKENS,
+    PANIC_TOKENS,
+};
+
+/// Directories holding engine code, where unordered-iteration types
+/// are banned outright.
+const ENGINE_DIRS: &[&str] = &["src/coordinator/", "src/netsim/", "src/scenarios/"];
+
+/// Directories where float reductions must justify their order.
+const REDUCE_DIRS: &[&str] = &[
+    "src/coordinator/",
+    "src/netsim/",
+    "src/scenarios/",
+    "src/ef21/",
+    "src/kimad/",
+    "src/compress/",
+];
+
+/// The fixed-order reduction home: the one file exempt from
+/// `float-reduce` (it *defines* the ordered kernels).
+const REDUCE_HOME: &str = "src/util/chunk.rs";
+
+/// Files allowed to read the wall clock: the transport (real I/O
+/// deadlines), bench timing, and the CLI's top-level duration prints.
+const WALL_CLOCK_ALLOWED: &[&str] = &["src/bench/timing.rs", "src/bench/e2e.rs", "src/main.rs"];
+
+/// Scan result for one file.
+pub struct FileScan {
+    pub diagnostics: Vec<Diagnostic>,
+    /// `tidy:alloc-free` marker names found (for global coverage).
+    pub markers: Vec<String>,
+    pub allows_used: usize,
+}
+
+/// Scan one file's source text. `rel` is the crate-relative path with
+/// `/` separators (`src/...`, `tests/...`, `benches/...`); the rule
+/// scopes key off it.
+pub fn scan_file_source(rel: &str, src: &str) -> FileScan {
+    let m = mask(src);
+    let ids = rule_ids();
+    let (mut allows, malformed) = parse_allows(&m, &ids);
+    let mut diags = Vec::new();
+    for (ln, msg) in malformed {
+        diags.push(Diagnostic::new(rel, ln + 1, "allow-syntax", msg));
+    }
+
+    let in_tests_dir = rel.starts_with("tests/") || rel.starts_with("benches/");
+    let in_engine = ENGINE_DIRS.iter().any(|d| rel.starts_with(d));
+    let in_reduce_scope = REDUCE_DIRS.iter().any(|d| rel.starts_with(d));
+    let in_transport = rel.starts_with("src/transport/");
+    let wall_allowed = in_transport || WALL_CLOCK_ALLOWED.contains(&rel);
+
+    let test_lines = if in_tests_dir { vec![false; m.len()] } else { cfg_test_lines(&m) };
+    let decode_lines = if in_transport { decode_path_lines(&m) } else { vec![false; m.len()] };
+    let markers = parse_markers(&m);
+
+    let mut emit = |allows: &mut allow::AllowSet,
+                    diags: &mut Vec<Diagnostic>,
+                    ln: usize,
+                    rule: &'static str,
+                    msg: String| {
+        if !allows.suppress(ln, rule) {
+            diags.push(Diagnostic::new(rel, ln + 1, rule, msg));
+        }
+    };
+
+    for ln in 0..m.len() {
+        let rawline = &m.raw[ln];
+        let code = &m.code[ln];
+        let non_test = !in_tests_dir && !test_lines[ln];
+
+        // -- mechanical style --------------------------------------
+        let width = rawline.chars().count();
+        if width > 100 {
+            let msg = format!("line is {width} columns (max 100)");
+            emit(&mut allows, &mut diags, ln, "line-width", msg);
+        }
+        if rawline.contains('\t') {
+            let msg = "tab character (spaces only)".to_string();
+            emit(&mut allows, &mut diags, ln, "tab-char", msg);
+        }
+        let no_trail = rawline.trim_end_matches([' ', '\t']);
+        if no_trail != rawline {
+            let msg = if rawline.trim().is_empty() {
+                "whitespace-only line".to_string()
+            } else {
+                "trailing whitespace".to_string()
+            };
+            emit(&mut allows, &mut diags, ln, "trailing-space", msg);
+        }
+
+        // -- determinism -------------------------------------------
+        if in_engine {
+            for w in ["HashMap", "HashSet"] {
+                if find_word(code, w).is_some() {
+                    let msg = format!("{w} in engine code — use BTreeMap/BTreeSet");
+                    emit(&mut allows, &mut diags, ln, "hash-collections", msg);
+                }
+            }
+        }
+        if non_test && !wall_allowed {
+            for w in ["Instant::now", "SystemTime::now"] {
+                if code.contains(w) {
+                    let msg = format!("{w} outside the wall-clock allowlist");
+                    emit(&mut allows, &mut diags, ln, "wall-clock", msg);
+                }
+            }
+        }
+        for w in ["thread_rng", "from_entropy", "from_os_rng"] {
+            if find_word(code, w).is_some() {
+                let msg = format!("{w} — derive streams from util::rng only");
+                emit(&mut allows, &mut diags, ln, "ambient-rng", msg);
+            }
+        }
+        if code.replace(' ', "").contains("rand::random") {
+            let msg = "rand::random — derive streams from util::rng only".to_string();
+            emit(&mut allows, &mut diags, ln, "ambient-rng", msg);
+        }
+        if non_test && in_reduce_scope && rel != REDUCE_HOME && has_float_reduce(&m, ln) {
+            let msg =
+                "float .sum()/.product() — fixed-order reductions only (util::chunk)".to_string();
+            emit(&mut allows, &mut diags, ln, "float-reduce", msg);
+        }
+
+        // -- wire safety -------------------------------------------
+        if non_test && in_transport {
+            if has_numeric_cast(code) {
+                let msg = "`as` numeric cast in transport — use try_from".to_string();
+                emit(&mut allows, &mut diags, ln, "numeric-cast", msg);
+            }
+            if decode_lines[ln] {
+                let panic_tok = PANIC_TOKENS.iter().find(|w| code.contains(*w));
+                if let Some(w) = panic_tok {
+                    let name = w.trim_end_matches('(');
+                    let msg = format!("{name} in a decode path — decoding is total");
+                    emit(&mut allows, &mut diags, ln, "decode-panic", msg);
+                } else if has_slice_indexing(code) {
+                    let msg = "slice indexing in a decode path — use get()".to_string();
+                    emit(&mut allows, &mut diags, ln, "decode-panic", msg);
+                }
+            }
+        }
+        if find_word(code, "unsafe").is_some() && !has_safety_comment(&m, ln) {
+            let msg = "unsafe without a `// SAFETY:` comment".to_string();
+            emit(&mut allows, &mut diags, ln, "safety-comment", msg);
+        }
+    }
+
+    // -- alloc-free regions ----------------------------------------
+    let required = alloc_free_kernels();
+    for marker in &markers {
+        if !required.contains(&marker.name.as_str()) {
+            let msg =
+                format!("marker '{}' not in bench::kernels::alloc_free_kernels()", marker.name);
+            diags.push(Diagnostic::new(rel, marker.line + 1, "alloc-free-coverage", msg));
+        }
+        let (lo, hi) = brace_region(&m, marker.line);
+        for ln in lo..=hi {
+            if let Some(tok) = ALLOC_TOKENS.iter().find(|t| m.code[ln].contains(*t)) {
+                let msg = format!("{tok} inside `tidy:alloc-free({})` region", marker.name);
+                emit(&mut allows, &mut diags, ln, "alloc-free", msg);
+            }
+        }
+    }
+
+    // -- import order ----------------------------------------------
+    check_import_order(rel, &m, &mut diags);
+
+    // -- unused allows ---------------------------------------------
+    let allows_used = allows.allows.iter().filter(|a| a.used).count();
+    for a in &allows.allows {
+        if !a.used {
+            let msg = format!("unused tidy:allow({})", a.rule);
+            diags.push(Diagnostic::new(rel, a.line + 1, "unused-allow", msg));
+        }
+    }
+
+    let marker_names = markers.into_iter().map(|mk| mk.name).collect();
+    FileScan { diagnostics: diags, markers: marker_names, allows_used }
+}
+
+/// Scan a whole crate tree (`src/`, `tests/`, `benches/` under
+/// `root`) and cross-check alloc-free marker coverage.
+pub fn scan_root(root: &Path) -> anyhow::Result<Report> {
+    let mut files = Vec::new();
+    for sub in ["src", "tests", "benches"] {
+        collect_rs_files(&root.join(sub), &mut files)?;
+    }
+    let mut diagnostics = Vec::new();
+    let mut all_markers: Vec<String> = Vec::new();
+    let mut allows_used = 0;
+    let files_scanned = files.len();
+    for path in &files {
+        let rel = rel_path(root, path);
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        let scan = scan_file_source(&rel, &src);
+        diagnostics.extend(scan.diagnostics);
+        all_markers.extend(scan.markers);
+        allows_used += scan.allows_used;
+    }
+    for req in alloc_free_kernels() {
+        if !all_markers.iter().any(|name| name == req) {
+            let msg =
+                format!("alloc_free_kernels() entry '{req}' has no tidy:alloc-free marker");
+            diagnostics.push(Diagnostic::new("(tree)", 0, "alloc-free-coverage", msg));
+        }
+    }
+    let mut report = Report { diagnostics, files_scanned, allows_used };
+    report.sort();
+    Ok(report)
+}
+
+/// Locate the crate root for a default `kimad tidy` invocation: the
+/// manifest dir when running under cargo, else a probe for
+/// `rust/src/lib.rs` / `src/lib.rs` beneath the working directory.
+pub fn default_root() -> PathBuf {
+    if let Ok(dir) = std::env::var("CARGO_MANIFEST_DIR") {
+        return PathBuf::from(dir);
+    }
+    for cand in ["rust", "."] {
+        if Path::new(cand).join("src/lib.rs").exists() {
+            return PathBuf::from(cand);
+        }
+    }
+    PathBuf::from(".")
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> anyhow::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| anyhow::anyhow!("read_dir {}: {e}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    let parts: Vec<String> =
+        rel.components().map(|c| c.as_os_str().to_string_lossy().into_owned()).collect();
+    parts.join("/")
+}
+
+/// Lines covered by `#[cfg(test)]` items: unit-test rules relax there.
+fn cfg_test_lines(m: &Masked) -> Vec<bool> {
+    let mut out = vec![false; m.len()];
+    for ln in 0..m.len() {
+        if m.code[ln].contains("#[cfg(test)]") {
+            let (lo, hi) = brace_region(m, ln);
+            for flag in out.iter_mut().take(hi + 1).skip(lo) {
+                *flag = true;
+            }
+        }
+    }
+    out
+}
+
+/// Lines inside decode-path functions: any `fn` whose signature
+/// mentions `FrameError` or `Decoded`. Decoding is total (§9), so
+/// these bodies may not contain panicking constructs.
+fn decode_path_lines(m: &Masked) -> Vec<bool> {
+    let mut out = vec![false; m.len()];
+    let mut ln = 0;
+    while ln < m.len() {
+        if find_word(&m.code[ln], "fn").is_some() {
+            let mut end = ln;
+            let mut sig = String::new();
+            for j in ln..(ln + 12).min(m.len()) {
+                sig.push_str(&m.code[j]);
+                sig.push(' ');
+                end = j;
+                if m.code[j].contains('{') || m.code[j].contains(';') {
+                    break;
+                }
+            }
+            if find_word(&sig, "FrameError").is_some() || find_word(&sig, "Decoded").is_some() {
+                let (_, hi) = brace_region(m, end);
+                for flag in out.iter_mut().take(hi + 1).skip(ln) {
+                    *flag = true;
+                }
+                ln = hi + 1;
+                continue;
+            }
+        }
+        ln += 1;
+    }
+    out
+}
+
+/// Lines covered from the first `{` at or after `start` to its
+/// matching close (inclusive), counting braces in the code view only.
+fn brace_region(m: &Masked, start: usize) -> (usize, usize) {
+    let mut depth = 0i64;
+    let mut seen = false;
+    for ln in start..m.len() {
+        for c in m.code[ln].chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    seen = true;
+                }
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if seen && depth <= 0 {
+            return (start, ln);
+        }
+    }
+    (start, m.len().saturating_sub(1))
+}
+
+/// Float-reduce detection with the "integer witness" escape: a
+/// `.sum()`/`.product()` whose statement names an integer type (in
+/// the reduction line or up to six lines back, stopping at a
+/// statement boundary) is an ordered integer reduction, not a float
+/// one.
+fn has_float_reduce(m: &Masked, ln: usize) -> bool {
+    let code = &m.code[ln];
+    let reduces = code.contains(".sum()")
+        || code.contains(".sum::<")
+        || code.contains(".product()")
+        || code.contains(".product::<");
+    if !reduces {
+        return false;
+    }
+    if has_int_type_token(code) {
+        return false;
+    }
+    let mut j = ln;
+    let mut back = 0;
+    while j > 0 && back < 6 {
+        j -= 1;
+        back += 1;
+        let prev = m.code[j].trim_end();
+        if prev.trim().is_empty() {
+            continue;
+        }
+        if has_int_type_token(&m.code[j]) {
+            return false;
+        }
+        if prev.ends_with(';') || prev.ends_with('{') || prev.ends_with('}') {
+            break;
+        }
+    }
+    true
+}
+
+/// `unsafe` needs a `// SAFETY:` comment on its line or within the
+/// three lines above.
+fn has_safety_comment(m: &Masked, ln: usize) -> bool {
+    let lo = ln.saturating_sub(3);
+    (lo..=ln).any(|j| m.comment[j].contains("SAFETY:"))
+}
+
+/// Within a contiguous `use` block, non-`self`/`super` items must be
+/// sorted by (case-insensitive, then exact) first-line key.
+fn check_import_order(rel: &str, m: &Masked, diags: &mut Vec<Diagnostic>) {
+    let mut items: Vec<(usize, String)> = Vec::new();
+    let mut ln = 0;
+    while ln < m.len() {
+        let trimmed = m.code[ln].trim();
+        if trimmed.starts_with("use ") || trimmed.starts_with("pub use ") {
+            let start = ln;
+            let key = trimmed.strip_prefix("pub ").unwrap_or(trimmed);
+            let key = key.strip_prefix("use ").unwrap_or(key).to_string();
+            while !m.code[ln].contains(';') && ln + 1 < m.len() {
+                ln += 1;
+            }
+            items.push((start, key));
+            ln += 1;
+        } else {
+            flush_import_block(rel, &items, diags);
+            items.clear();
+            ln += 1;
+        }
+    }
+    flush_import_block(rel, &items, diags);
+}
+
+fn flush_import_block(rel: &str, items: &[(usize, String)], diags: &mut Vec<Diagnostic>) {
+    let keys: Vec<&(usize, String)> = items
+        .iter()
+        .filter(|(_, k)| !k.starts_with("self") && !k.starts_with("super"))
+        .collect();
+    for pair in keys.windows(2) {
+        let (_, ka) = pair[0];
+        let (lb, kb) = pair[1];
+        if (ka.to_lowercase(), ka) > (kb.to_lowercase(), kb) {
+            let short_a: String = ka.chars().take(40).collect();
+            let short_b: String = kb.chars().take(40).collect();
+            let msg = format!("use items unsorted: '{short_b}' after '{short_a}'");
+            diags.push(Diagnostic::new(rel, lb + 1, "import-order", msg));
+        }
+    }
+}

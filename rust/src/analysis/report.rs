@@ -1,0 +1,107 @@
+//! Diagnostic type, deterministic ordering, and the two output
+//! renderings: human-readable lines and the machine-readable JSON
+//! report uploaded by the CI `tidy` job.
+
+use crate::util::json::Value;
+
+use super::rules;
+
+/// One finding. `line` is 1-based (0 for whole-tree findings such as
+/// a missing alloc-free marker).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    /// Crate-relative path (`src/...`, `tests/...`, `benches/...`),
+    /// or `(tree)` for findings not tied to a file.
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn new(file: &str, line: usize, rule: &'static str, message: String) -> Self {
+        Diagnostic { file: file.to_string(), line, rule, message }
+    }
+
+    /// Deterministic report order: file, then line, then rule.
+    fn key(&self) -> (&str, usize, &str, &str) {
+        (&self.file, self.line, self.rule, &self.message)
+    }
+}
+
+/// The result of one scan.
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+    pub files_scanned: usize,
+    pub allows_used: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Sort diagnostics into the deterministic report order.
+    pub fn sort(&mut self) {
+        self.diagnostics.sort_by(|a, b| a.key().cmp(&b.key()));
+    }
+
+    /// Human rendering: one `file:line: [rule] message` per finding,
+    /// a summary line last. With `fix_hints`, each finding carries the
+    /// registry's remediation hint.
+    pub fn render_human(&self, fix_hints: bool) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&format!("{}:{}: [{}] {}\n", d.file, d.line, d.rule, d.message));
+            if fix_hints {
+                if let Some(r) = rules::rule(d.rule) {
+                    out.push_str(&format!("    fix: {} ({})\n", r.hint, r.section));
+                }
+            }
+        }
+        out.push_str(&format!(
+            "tidy: {} file(s), {} diagnostic(s), {} allow(s) used\n",
+            self.files_scanned,
+            self.diagnostics.len(),
+            self.allows_used
+        ));
+        out
+    }
+
+    /// Machine-readable report for CI artifacts.
+    pub fn to_json(&self) -> Value {
+        let diags: Vec<Value> = self
+            .diagnostics
+            .iter()
+            .map(|d| {
+                Value::obj(vec![
+                    ("file", Value::str(d.file.clone())),
+                    ("line", Value::num(to_f64(d.line))),
+                    ("rule", Value::str(d.rule)),
+                    ("message", Value::str(d.message.clone())),
+                ])
+            })
+            .collect();
+        let rules: Vec<Value> = rules::REGISTRY
+            .iter()
+            .map(|r| {
+                Value::obj(vec![
+                    ("id", Value::str(r.id)),
+                    ("summary", Value::str(r.summary)),
+                    ("section", Value::str(r.section)),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("clean", Value::Bool(self.clean())),
+            ("files_scanned", Value::num(to_f64(self.files_scanned))),
+            ("allows_used", Value::num(to_f64(self.allows_used))),
+            ("diagnostics", Value::Arr(diags)),
+            ("rules", Value::Arr(rules)),
+        ])
+    }
+}
+
+fn to_f64(n: usize) -> f64 {
+    u32::try_from(n).map_or(f64::MAX, f64::from)
+}

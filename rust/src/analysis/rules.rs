@@ -1,0 +1,225 @@
+//! The rule registry and the low-level token matchers shared by the
+//! scanner. Every rule maps one-to-one to a documented invariant in
+//! `docs/ARCHITECTURE.md` (the `section` field), and every rule has a
+//! firing + passing fixture pair in `tests/tidy.rs`.
+//!
+//! Matching is hand-rolled word search over the lexer's masked code
+//! view — no regexes, no dependencies — so the scanner can run as a
+//! tier-1 test in the offline workspace.
+
+/// One registered rule.
+pub struct Rule {
+    /// Stable id, the name used in `tidy:allow(<id>)`.
+    pub id: &'static str,
+    /// One-line statement of the invariant.
+    pub summary: &'static str,
+    /// The ARCHITECTURE.md section the rule enforces.
+    pub section: &'static str,
+    /// Suggested remediation, shown by `kimad tidy --fix-report`.
+    pub hint: &'static str,
+}
+
+/// The full registry, in severity-then-name order. Rule ids are the
+/// vocabulary of `tidy:allow`; adding a rule here requires fixtures
+/// in `tests/tidy.rs` and a row in ARCHITECTURE.md §10.
+pub const REGISTRY: &[Rule] = &[
+    Rule {
+        id: "hash-collections",
+        summary: "HashMap/HashSet in engine code (coordinator/, netsim/, scenarios/)",
+        section: "§6 determinism checklist",
+        hint: "use BTreeMap/BTreeSet: iteration order must be deterministic",
+    },
+    Rule {
+        id: "wall-clock",
+        summary: "Instant::now/SystemTime::now outside the wall-clock allowlist",
+        section: "§6 determinism checklist",
+        hint: "engine time is virtual; wall time only in transport/, bench timing, and main",
+    },
+    Rule {
+        id: "ambient-rng",
+        summary: "thread_rng/rand::random/entropy-seeded RNG",
+        section: "§6 determinism checklist",
+        hint: "derive a seeded stream from util::rng instead",
+    },
+    Rule {
+        id: "float-reduce",
+        summary: "float .sum()/.product() outside util/chunk.rs",
+        section: "§6 fixed reduction order",
+        hint: "use util::chunk kernels, or tidy:allow with a determinism argument",
+    },
+    Rule {
+        id: "numeric-cast",
+        summary: "`as` numeric cast in transport/",
+        section: "§9 wire format",
+        hint: "use try_from: silent truncation corrupts wire fields",
+    },
+    Rule {
+        id: "decode-panic",
+        summary: "unwrap/expect/panic/indexing in a decode path",
+        section: "§9 decoding is total",
+        hint: "return a typed FrameError: arbitrary bytes must never panic",
+    },
+    Rule {
+        id: "safety-comment",
+        summary: "`unsafe` without a `// SAFETY:` comment",
+        section: "§7 counting allocator",
+        hint: "state the invariant that makes the unsafe block sound",
+    },
+    Rule {
+        id: "alloc-free",
+        summary: "allocation inside a tidy:alloc-free region",
+        section: "§7 zero-allocation kernels",
+        hint: "reuse caller-provided scratch; the hotpath bench proves these stay alloc-free",
+    },
+    Rule {
+        id: "alloc-free-coverage",
+        summary: "alloc-free markers out of sync with bench::kernels::alloc_free_kernels()",
+        section: "§7 zero-allocation kernels",
+        hint: "every benched kernel carries a marker, every marker names a benched kernel",
+    },
+    Rule {
+        id: "line-width",
+        summary: "line longer than 100 columns",
+        section: "§10 mechanical style",
+        hint: "wrap to rustfmt.toml's max_width = 100",
+    },
+    Rule {
+        id: "tab-char",
+        summary: "tab character",
+        section: "§10 mechanical style",
+        hint: "indent with spaces",
+    },
+    Rule {
+        id: "trailing-space",
+        summary: "trailing whitespace",
+        section: "§10 mechanical style",
+        hint: "strip end-of-line whitespace",
+    },
+    Rule {
+        id: "import-order",
+        summary: "use items out of order within a block",
+        section: "§10 mechanical style",
+        hint: "sort case-insensitively (self/super first, exempt)",
+    },
+    Rule {
+        id: "allow-syntax",
+        summary: "malformed tidy:allow directive",
+        section: "§10 invariants as lints",
+        hint: "write tidy:allow(<rule>) -- <reason>, with a real reason",
+    },
+    Rule {
+        id: "unused-allow",
+        summary: "tidy:allow that suppresses nothing",
+        section: "§10 invariants as lints",
+        hint: "delete the stale exemption",
+    },
+];
+
+/// Rule ids, for directive validation.
+pub fn rule_ids() -> Vec<&'static str> {
+    REGISTRY.iter().map(|r| r.id).collect()
+}
+
+/// Look up a rule by id.
+pub fn rule(id: &str) -> Option<&'static Rule> {
+    REGISTRY.iter().find(|r| r.id == id)
+}
+
+const INT_TYPES: &[&str] =
+    &["u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize"];
+const FLOAT_TYPES: &[&str] = &["f32", "f64"];
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Find `word` in `code` with identifier-boundary guards on both
+/// sides. Returns the char offset of the first match.
+pub fn find_word(code: &str, word: &str) -> Option<usize> {
+    let chars: Vec<char> = code.chars().collect();
+    let pat: Vec<char> = word.chars().collect();
+    if pat.is_empty() || chars.len() < pat.len() {
+        return None;
+    }
+    for start in 0..=chars.len() - pat.len() {
+        if chars[start..start + pat.len()] != pat[..] {
+            continue;
+        }
+        let before_ok = start == 0 || !is_ident(chars[start - 1]);
+        let end = start + pat.len();
+        let after_ok = end >= chars.len() || !is_ident(chars[end]);
+        if before_ok && after_ok {
+            return Some(start);
+        }
+    }
+    None
+}
+
+/// True when the masked line contains an `as <numeric-type>` cast.
+pub fn has_numeric_cast(code: &str) -> bool {
+    let chars: Vec<char> = code.chars().collect();
+    let mut start = 0;
+    while start + 2 <= chars.len() {
+        if chars[start] != 'a' || chars.get(start + 1) != Some(&'s') {
+            start += 1;
+            continue;
+        }
+        let before_ok = start == 0 || !is_ident(chars[start - 1]);
+        let after = start + 2;
+        if before_ok && chars.get(after).is_some_and(|c| c.is_whitespace()) {
+            let mut j = after;
+            while chars.get(j).is_some_and(|c| c.is_whitespace()) {
+                j += 1;
+            }
+            let mut k = j;
+            while chars.get(k).is_some_and(|&c| is_ident(c)) {
+                k += 1;
+            }
+            let ty: String = chars[j..k].iter().collect();
+            if INT_TYPES.contains(&ty.as_str()) || FLOAT_TYPES.contains(&ty.as_str()) {
+                return true;
+            }
+        }
+        start += 2;
+    }
+    false
+}
+
+/// True when the masked line indexes a value (`ident[`, `)[`, `][`) —
+/// a potential panic site in decode paths. Type positions (`&[u8]`,
+/// `Vec<[u8; 4]>`) don't match: their `[` follows punctuation.
+pub fn has_slice_indexing(code: &str) -> bool {
+    let chars: Vec<char> = code.chars().collect();
+    for p in 1..chars.len() {
+        if chars[p] == '[' && (is_ident(chars[p - 1]) || chars[p - 1] == ')' || chars[p - 1] == ']')
+        {
+            return true;
+        }
+    }
+    false
+}
+
+/// True when any word-bounded integer-type token appears in the line
+/// (the float-reduce "integer witness": `let n: u64 = xs.iter().sum()`
+/// is an ordered integer reduction, not a float one).
+pub fn has_int_type_token(code: &str) -> bool {
+    INT_TYPES.iter().any(|t| find_word(code, t).is_some())
+}
+
+/// Tokens that allocate, banned inside `tidy:alloc-free` regions.
+pub const ALLOC_TOKENS: &[&str] = &[
+    "Vec::new",
+    "vec![",
+    ".to_vec(",
+    ".clone(",
+    ".collect(",
+    "Box::new",
+    "String::new",
+    "format!(",
+    ".to_string(",
+    ".to_owned(",
+];
+
+/// Panicking constructs banned in decode paths (prefix match).
+pub const PANIC_TOKENS: &[&str] =
+    &[".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];

@@ -34,21 +34,28 @@ pub fn allocs() -> u64 {
 /// paths perform zero per-call allocations once warm.
 pub struct CountingAlloc;
 
+// SAFETY: a pure pass-through to `System`; the only extra work is a
+// relaxed atomic counter bump, which cannot violate GlobalAlloc's
+// contract (no allocation, no panic, no reentrancy into the allocator).
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: forwards the caller's layout to `System.alloc` unchanged.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.alloc(layout)
     }
 
+    // SAFETY: forwards ptr/layout pairs that `alloc` produced.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
 
+    // SAFETY: forwards the caller's ptr/layout/new_size unchanged.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.realloc(ptr, layout, new_size)
     }
 
+    // SAFETY: forwards the caller's layout to `System.alloc_zeroed`.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOCS.fetch_add(1, Ordering::Relaxed);
         System.alloc_zeroed(layout)

@@ -7,6 +7,9 @@
 //! fixed-reduction-order rule that keeps hot-path optimizations
 //! bit-reproducible.
 
+// The crate denies `unsafe_code`; the counting allocator is the one
+// audited exception (GlobalAlloc is an unsafe trait).
+#[allow(unsafe_code)]
 pub mod alloc;
 pub mod e2e;
 pub mod kernels;

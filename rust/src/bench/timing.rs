@@ -2,6 +2,9 @@
 //! warmup + timed iterations, median/mean/p95 over samples, throughput
 //! helper. Shared by the `kimad bench` subcommand and every file under
 //! rust/benches/ (which import it through the `util::bench` shim).
+// Wall-clock allowlist file (ARCHITECTURE.md §6): this layer measures
+// real time by design; clippy.toml bans the methods elsewhere.
+#![allow(clippy::disallowed_methods)]
 
 use std::time::{Duration, Instant};
 

@@ -187,6 +187,7 @@ pub fn compression_error(c: &dyn Compressor, u: &[f32]) -> f64 {
     u.iter()
         .zip(&dec)
         .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        // tidy:allow(float-reduce) -- serial fold in coordinate order, deterministic
         .sum()
 }
 

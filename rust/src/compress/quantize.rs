@@ -29,6 +29,7 @@ impl Compressor for QuantizeBits {
         out
     }
 
+    // tidy:alloc-free(quantize)
     fn compress_into(&self, u: &[f32], out: &mut Compressed) {
         let val = dense_parts(out, self.bits);
         // Chunked max-abs scan (f32 max is associative, so the result
@@ -82,6 +83,7 @@ impl Compressor for OneBitSign {
         let mag = if d == 0 {
             0.0
         } else {
+            // tidy:allow(float-reduce) -- serial fold in coordinate order, deterministic
             u.iter().map(|v| v.abs()).sum::<f32>() / d as f32
         };
         val.extend(u.iter().map(|&v| mag * v.signum()));

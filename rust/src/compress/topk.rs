@@ -53,6 +53,7 @@ impl TopK {
     /// `SelectScratch`, reused across rounds) instead of the
     /// thread-local above. The thread-local path delegates here, so
     /// both forms share one implementation.
+    // tidy:alloc-free(topk_select)
     pub fn select_indices_with(u: &[f32], k: usize, out: &mut Vec<u32>, packed: &mut Vec<u64>) {
         out.clear();
         let d = u.len();

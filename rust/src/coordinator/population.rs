@@ -477,6 +477,7 @@ impl<S: GradientSource> PopulationSim<S> {
                 staleness: 0,
             })
             .collect();
+        // tidy:allow(float-reduce) -- serial fold in seat order, deterministic
         let loss_sum: f64 = self.seats.iter().map(|s| s.loss).sum();
         let mut duration = worker_rounds.iter().map(|w| w.arrival_lag).fold(0.0f64, f64::max);
         let total_up: u64 = worker_rounds.iter().map(|w| w.up_bits).sum();
@@ -695,7 +696,7 @@ mod tests {
     #[test]
     fn reassigned_seats_reset_returning_clients_persist() {
         let mut s = pop_sim(50, 0.1, 5, CompressPolicy::KimadUniform);
-        let mut seen = std::collections::HashSet::new();
+        let mut seen = std::collections::BTreeSet::new();
         let recs = s.run(30).unwrap();
         for (k, r) in recs.iter().enumerate() {
             // Every arrival is a sampled client of that round's draw.

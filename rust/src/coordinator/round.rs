@@ -90,6 +90,7 @@ impl RoundRecord {
         if self.workers.is_empty() {
             return 0.0;
         }
+        // tidy:allow(float-reduce) -- serial fold in worker order, deterministic
         self.workers.iter().map(|w| w.compression_error).sum::<f64>()
             / self.workers.len() as f64
     }

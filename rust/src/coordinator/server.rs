@@ -101,6 +101,7 @@ impl ServerState {
                 *a += w * u;
             }
         }
+        // tidy:allow(float-reduce) -- serial fold in coordinate order, deterministic
         self.agg.iter().map(|&v| (v as f64) * (v as f64)).sum()
     }
 

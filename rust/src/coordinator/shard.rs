@@ -229,6 +229,7 @@ pub fn deliver_batch(
 /// the squared norm is a single ordered pass over the filled vector,
 /// so the result is bit-identical for every shard count and for both
 /// the serialized and parallel paths.
+// tidy:alloc-free(aggregate)
 pub fn aggregate(
     plan: &ShardPlan,
     weights: &[f64],
@@ -269,6 +270,7 @@ pub fn aggregate(
             }
         });
     }
+    // tidy:allow(float-reduce) -- serial fold in coordinate order, deterministic
     agg.iter().map(|&v| (v as f64) * (v as f64)).sum()
 }
 
@@ -398,6 +400,7 @@ pub fn broadcast(
 /// A tapped call runs the serialized pass, which is bit-identical to
 /// the sharded fan-out by the module determinism contract, so tapping
 /// never changes results.
+// tidy:alloc-free(broadcast)
 #[allow(clippy::too_many_arguments)] // the flattened borrow set of one broadcast
 pub fn broadcast_tapped(
     plan: &ShardPlan,
@@ -489,6 +492,7 @@ pub fn broadcast_tapped(
             }
             down_bits += lane.msg.wire_bits();
             if let Some(sink) = tap.as_deref_mut() {
+                // tidy:allow(alloc-free) -- the wire tap copies messages off the hot path
                 sink.push(lane.msg.clone());
             }
         }

@@ -258,6 +258,7 @@ pub(crate) fn upload_leg(ctx: &UploadCtx<'_>, w: &mut WorkerState, up_start: f64
         .iter()
         .zip(&w.u_hat.value)
         .map(|(&u, &uh)| ((u - uh) as f64).powi(2))
+        // tidy:allow(float-reduce) -- serial fold in coordinate order, deterministic
         .sum();
 
     UploadLeg {
@@ -859,6 +860,7 @@ impl<S: GradientSource> Simulation<S> {
                 staleness: 0,
             })
             .collect();
+        // tidy:allow(float-reduce) -- serial fold in chain order, deterministic
         let loss_sum: f64 = self.chains.iter().map(|c| c.loss).sum();
         let mut duration =
             worker_rounds.iter().map(|w| w.arrival_lag).fold(0.0f64, f64::max);
@@ -932,6 +934,7 @@ impl<S: GradientSource> Simulation<S> {
         if let Some(deadline) = self.cfg.round_deadline {
             duration = duration.max(deadline);
         }
+        // tidy:allow(float-reduce) -- serial fold over sorted arrivals, deterministic
         let loss = arrivals.iter().map(|w| w.loss).sum::<f64>() / arrivals.len() as f64;
         let f_x = self.source.objective(&self.server.x).unwrap_or(f64::NAN);
         self.clock = t0 + duration;
@@ -1120,6 +1123,7 @@ impl<S: GradientSource> Simulation<S> {
                     .collect()
             })
         };
+        // tidy:allow(float-reduce) -- serial fold in worker order, deterministic
         let loss_sum: f64 = losses.iter().sum();
         let mut duration =
             worker_rounds.iter().map(|w| w.arrival_lag).fold(0.0f64, f64::max);

@@ -535,7 +535,8 @@ impl WarmFamily {
         }
         match self {
             WarmFamily::Quadratic(f) => {
-                let t_build = Instant::now();
+                #[allow(clippy::disallowed_methods)]
+                let t_build = Instant::now(); // tidy:allow(wall-clock) -- build_ms metric only
                 let layers = if cfg.single_layer {
                     f.layout.single_layer()
                 } else {
@@ -564,7 +565,8 @@ impl WarmFamily {
                 })
             }
             WarmFamily::Deep(f) => {
-                let t_build = Instant::now();
+                #[allow(clippy::disallowed_methods)]
+                let t_build = Instant::now(); // tidy:allow(wall-clock) -- build_ms metric only
                 let layers = if cfg.single_layer {
                     f.layout.single_layer()
                 } else {

@@ -103,6 +103,7 @@ impl Estimator {
             .iter()
             .zip(target_layer)
             .map(|(&e, &t)| ((e - t) as f64).powi(2))
+            // tidy:allow(float-reduce) -- serial fold in coordinate order, deterministic
             .sum()
     }
 }
@@ -117,6 +118,7 @@ impl Estimator {
 /// `value[layer.offset .. layer.offset + layer.size]`;
 /// `compress_advance_into` delegates here, so the two forms can never
 /// diverge.
+// tidy:alloc-free(ef21_advance)
 pub fn compress_advance_span(
     compressor: &dyn Compressor,
     target_layer: &[f32],

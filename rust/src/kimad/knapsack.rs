@@ -166,6 +166,7 @@ pub fn allocate(options: &[Vec<Option_>], params: KnapsackParams) -> Allocation 
         .iter()
         .zip(options)
         .map(|(&j, o)| o[j].error)
+        // tidy:allow(float-reduce) -- serial fold in layer order, deterministic
         .sum();
     Allocation { choice, total_bits, total_error, degraded: false }
 }

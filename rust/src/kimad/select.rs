@@ -15,8 +15,8 @@
 //!   vector), which is the error-optimal allocation for sparsification.
 
 use crate::compress::{TopK, F32_BITS, IDX_BITS};
-use crate::kimad::knapsack::{allocate, topk_options, KnapsackParams};
 use crate::kimad::ErrorCurve;
+use crate::kimad::knapsack::{allocate, topk_options, KnapsackParams};
 use crate::model::Layer;
 
 /// Bits per kept coordinate for sparse TopK payloads.
@@ -57,6 +57,7 @@ impl Selection {
             .iter()
             .zip(curves)
             .map(|(&k, c)| c.at(k))
+            // tidy:allow(float-reduce) -- serial fold in layer order, deterministic
             .sum()
     }
 }

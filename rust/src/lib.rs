@@ -28,6 +28,12 @@
 //! println!("final loss = {}", res.records.last().unwrap().loss);
 //! ```
 
+// `unsafe` is banned crate-wide; the one exemption is the counting
+// allocator (see bench/mod.rs), whose blocks carry SAFETY comments
+// checked by `kimad tidy`.
+#![deny(unsafe_code)]
+
+pub mod analysis;
 pub mod bandwidth;
 pub mod bench;
 pub mod compress;

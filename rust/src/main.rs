@@ -16,6 +16,11 @@
 //!             seeded params + manifest — for deep-model presets
 //!   worker    join a multi-process run: dial a coordinator and serve
 //!             one worker id over the real wire (see rust/src/transport/)
+//!   tidy      scan the crate's own sources against the invariant
+//!             lints (see rust/src/analysis/); nonzero exit on findings
+// Wall-clock allowlist file (ARCHITECTURE.md §6): this layer measures
+// real time by design; clippy.toml bans the methods elsewhere.
+#![allow(clippy::disallowed_methods)]
 
 use std::path::PathBuf;
 
@@ -45,6 +50,7 @@ USAGE:
   kimad gen-artifacts [--presets tiny,small] [--out-dir DIR] [--seed N]
   kimad worker --connect <tcp:HOST:PORT|uds:PATH> --config <file.json> --id N \\
                [--artifacts DIR]
+  kimad tidy [--json] [--fix-report] [--out FILE] [--root DIR]
 ";
 
 /// Make the `kimad bench` allocation counts real: the library's
@@ -61,7 +67,7 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> anyhow::Result<()> {
-    let args = Args::parse(argv, &["fast", "help", "print-grid", "quick"])?;
+    let args = Args::parse(argv, &["fast", "fix-report", "help", "json", "print-grid", "quick"])?;
     if args.flag("help") || args.positional.is_empty() {
         println!("{USAGE}");
         return Ok(());
@@ -76,6 +82,7 @@ fn run(argv: &[String]) -> anyhow::Result<()> {
         "presets" => presets(&args),
         "gen-artifacts" => gen_artifacts(&args),
         "worker" => worker(&args),
+        "tidy" => tidy(&args),
         other => anyhow::bail!("unknown subcommand '{other}'\n{USAGE}"),
     }
 }
@@ -389,6 +396,36 @@ fn gen_artifacts(args: &Args) -> anyhow::Result<()> {
     for p in store.model_presets() {
         let m = store.model(p)?;
         println!("{p}: {} params -> {}", m.n_params, out_dir.display());
+    }
+    Ok(())
+}
+
+/// `kimad tidy` — run the static-analysis pass over the crate's own
+/// sources (see rust/src/analysis/). Exits nonzero on any diagnostic,
+/// including unused allows, so CI and the tier-1 test agree exactly.
+fn tidy(args: &Args) -> anyhow::Result<()> {
+    let root = match args.opt("root") {
+        Some(r) => PathBuf::from(r),
+        None => kimad::analysis::default_root(),
+    };
+    if !root.join("src").is_dir() {
+        anyhow::bail!("tidy: no src/ under {} (use --root DIR)", root.display());
+    }
+    let report = kimad::analysis::scan_root(&root)?;
+    let rendered = if args.flag("json") {
+        report.to_json().to_string()
+    } else {
+        report.render_human(args.flag("fix-report"))
+    };
+    match args.opt("out") {
+        Some(p) => {
+            std::fs::write(p, &rendered)?;
+            println!("wrote {p}");
+        }
+        None => print!("{rendered}"),
+    }
+    if !report.clean() {
+        anyhow::bail!("tidy: {} diagnostic(s)", report.diagnostics.len());
     }
     Ok(())
 }

@@ -126,7 +126,8 @@ pub fn discretization(ctx: &ReportCtx) -> anyhow::Result<String> {
     let reps = if ctx.fast { 3 } else { 20 };
     let mut base_err = None;
     for &d in &[50usize, 200, 1000, 5000, 20000] {
-        let t0 = Instant::now();
+        #[allow(clippy::disallowed_methods)]
+        let t0 = Instant::now(); // tidy:allow(wall-clock) -- DP timing table, not results
         let mut alloc = None;
         for _ in 0..reps {
             alloc = Some(allocate(

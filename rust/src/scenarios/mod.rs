@@ -744,6 +744,7 @@ fn summarize(
             .iter()
             .flat_map(|r| &r.workers)
             .map(|w| w.arrival_lag)
+            // tidy:allow(float-reduce) -- serial fold in record order, deterministic
             .sum::<f64>()
             / n_arrivals as f64
     };
@@ -781,7 +782,8 @@ fn run_cell(
     warm: &WarmFamily,
     cell_threads: usize,
 ) -> anyhow::Result<CellSummary> {
-    let t0 = Instant::now();
+    #[allow(clippy::disallowed_methods)]
+    let t0 = Instant::now(); // tidy:allow(wall-clock) -- cell wall_ms metric only
     let mut cfg = cell.cfg.clone();
     cfg.clamp_parallelism(cell_threads);
     let pre_ms = t0.elapsed().as_secs_f64() * 1e3;

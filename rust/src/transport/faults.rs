@@ -164,7 +164,8 @@ impl FaultInjector {
 /// retransmission. Zero-payload frames get a flipped CRC bit instead.
 pub fn truncate_frame(bytes: &[u8]) -> Vec<u8> {
     debug_assert!(bytes.len() >= HEADER_LEN + TRAILER_LEN);
-    let len = u32::from_le_bytes(bytes[28..32].try_into().unwrap()) as usize;
+    let len_field = u32::from_le_bytes(bytes[28..32].try_into().expect("header len field"));
+    let len = usize::try_from(len_field).expect("u32 fits usize");
     if len == 0 {
         let mut out = bytes.to_vec();
         let last = out.len() - 1;
@@ -174,7 +175,7 @@ pub fn truncate_frame(bytes: &[u8]) -> Vec<u8> {
     let new_len = len / 2;
     let mut out = Vec::with_capacity(HEADER_LEN + new_len + TRAILER_LEN);
     out.extend_from_slice(&bytes[..28]);
-    out.extend_from_slice(&(new_len as u32).to_le_bytes());
+    out.extend_from_slice(&u32::try_from(new_len).expect("halved len fits u32").to_le_bytes());
     out.extend_from_slice(&bytes[HEADER_LEN..HEADER_LEN + new_len]);
     // Stale CRC: almost surely wrong for the shortened body, and a
     // flipped bit guarantees it differs from the original's.

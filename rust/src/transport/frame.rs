@@ -50,6 +50,17 @@ pub enum PayloadKind {
 }
 
 impl PayloadKind {
+    /// The wire discriminant (inverse of [`PayloadKind::from_byte`]).
+    fn byte(self) -> u8 {
+        match self {
+            PayloadKind::Broadcast => 0,
+            PayloadKind::Upload => 1,
+            PayloadKind::Probe => 2,
+            PayloadKind::Ack => 3,
+            PayloadKind::Shutdown => 4,
+        }
+    }
+
     fn from_byte(b: u8) -> Result<Self, FrameError> {
         Ok(match b {
             0 => PayloadKind::Broadcast,
@@ -128,16 +139,17 @@ impl Frame {
 
     /// Serialize, appending to `out`.
     pub fn encode_into(&self, out: &mut Vec<u8>) {
-        assert!(self.payload.len() as u64 <= MAX_PAYLOAD as u64, "payload exceeds MAX_PAYLOAD");
+        let len = u32::try_from(self.payload.len()).expect("payload exceeds u32 len field");
+        assert!(len <= MAX_PAYLOAD, "payload exceeds MAX_PAYLOAD");
         let start = out.len();
         out.extend_from_slice(&MAGIC);
         out.extend_from_slice(&VERSION.to_le_bytes());
-        out.push(self.kind as u8);
+        out.push(self.kind.byte());
         out.push(0); // reserved
         out.extend_from_slice(&self.worker.to_le_bytes());
         out.extend_from_slice(&self.round.to_le_bytes());
         out.extend_from_slice(&self.seq.to_le_bytes());
-        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&len.to_le_bytes());
         out.extend_from_slice(&self.payload);
         let crc = crc32(&out[start..]);
         out.extend_from_slice(&crc.to_le_bytes());
@@ -149,21 +161,22 @@ impl Frame {
     /// means "feed me more bytes", everything else means the prefix
     /// can never become a valid frame.
     pub fn decode(buf: &[u8]) -> Result<(Frame, usize), FrameError> {
-        let len = Self::decode_header(buf)? as usize;
+        let hdr_len = Self::decode_header(buf)?;
+        let len = usize::try_from(hdr_len).map_err(|_| FrameError::Oversize(hdr_len))?;
         let total = HEADER_LEN + len + TRAILER_LEN;
         if buf.len() < total {
             return Err(FrameError::Truncated);
         }
-        let body = &buf[..HEADER_LEN + len];
-        let want = u32::from_le_bytes(buf[HEADER_LEN + len..total].try_into().unwrap());
+        let body = buf.get(..HEADER_LEN + len).ok_or(FrameError::Truncated)?;
+        let want = u32::from_le_bytes(le_bytes(buf, HEADER_LEN + len)?);
         if crc32(body) != want {
             return Err(FrameError::BadCrc);
         }
-        let kind = PayloadKind::from_byte(buf[6])?;
-        let worker = u32::from_le_bytes(buf[8..12].try_into().unwrap());
-        let round = u64::from_le_bytes(buf[12..20].try_into().unwrap());
-        let seq = u64::from_le_bytes(buf[20..28].try_into().unwrap());
-        let payload = buf[HEADER_LEN..HEADER_LEN + len].to_vec();
+        let kind = PayloadKind::from_byte(*buf.get(6).ok_or(FrameError::Truncated)?)?;
+        let worker = u32::from_le_bytes(le_bytes(buf, 8)?);
+        let round = u64::from_le_bytes(le_bytes(buf, 12)?);
+        let seq = u64::from_le_bytes(le_bytes(buf, 20)?);
+        let payload = buf.get(HEADER_LEN..HEADER_LEN + len).ok_or(FrameError::Truncated)?.to_vec();
         Ok((Frame { kind, worker, round, seq, payload }, total))
     }
 
@@ -173,20 +186,29 @@ impl Frame {
         if buf.len() < HEADER_LEN {
             return Err(FrameError::Truncated);
         }
-        if buf[..4] != MAGIC {
+        if le_bytes::<4>(buf, 0)? != MAGIC {
             return Err(FrameError::BadMagic);
         }
-        let version = u16::from_le_bytes(buf[4..6].try_into().unwrap());
+        let version = u16::from_le_bytes(le_bytes(buf, 4)?);
         if version != VERSION {
             return Err(FrameError::BadVersion(version));
         }
-        PayloadKind::from_byte(buf[6])?;
-        let len = u32::from_le_bytes(buf[28..32].try_into().unwrap());
+        PayloadKind::from_byte(*buf.get(6).ok_or(FrameError::Truncated)?)?;
+        let len = u32::from_le_bytes(le_bytes(buf, 28)?);
         if len > MAX_PAYLOAD {
             return Err(FrameError::Oversize(len));
         }
         Ok(len)
     }
+}
+
+/// Bounds-checked fixed-width field read: the `N` bytes at `off`.
+/// The only way decode paths touch raw buffer bytes — total by
+/// construction, so no decode site ever indexes a slice directly.
+fn le_bytes<const N: usize>(buf: &[u8], off: usize) -> Result<[u8; N], FrameError> {
+    let end = off.checked_add(N).ok_or(FrameError::Truncated)?;
+    let bytes = buf.get(off..end).ok_or(FrameError::Truncated)?;
+    bytes.try_into().map_err(|_| FrameError::Truncated)
 }
 
 /// Outcome of one streaming decode step over a receive buffer.
@@ -211,9 +233,13 @@ pub fn decode_step(buf: &[u8]) -> Decoded {
         Err(FrameError::Truncated) => Decoded::Incomplete,
         Err(FrameError::BadCrc) => {
             // Header was valid, so the declared extent is trustworthy
-            // enough to skip past in one step.
-            let len = u32::from_le_bytes(buf[28..32].try_into().unwrap()) as usize;
-            Decoded::Corrupt { skip: HEADER_LEN + len + TRAILER_LEN, err: FrameError::BadCrc }
+            // enough to skip past in one step. Re-derive it through the
+            // total header parser rather than indexing the raw bytes.
+            let skip = Frame::decode_header(buf)
+                .ok()
+                .and_then(|len| usize::try_from(len).ok())
+                .map_or(1, |len| HEADER_LEN + len + TRAILER_LEN);
+            Decoded::Corrupt { skip, err: FrameError::BadCrc }
         }
         Err(err) => Decoded::Corrupt { skip: 1, err },
     }
@@ -224,7 +250,8 @@ pub fn decode_step(buf: &[u8]) -> Decoded {
 pub fn crc32(bytes: &[u8]) -> u32 {
     let mut c = u32::MAX;
     for &b in bytes {
-        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        // tidy:allow(numeric-cast) -- provably masked 8-bit table index
+        c = CRC_TABLE[((c ^ u32::from(b)) & 0xFF) as usize] ^ (c >> 8);
     }
     !c
 }
@@ -235,6 +262,7 @@ const fn crc_table() -> [u32; 256] {
     let mut table = [0u32; 256];
     let mut i = 0;
     while i < 256 {
+        // tidy:allow(numeric-cast) -- u32::try_from is not usable in a const fn
         let mut c = i as u32;
         let mut k = 0;
         while k < 8 {
@@ -261,14 +289,14 @@ const TAG_FACTORS: u8 = 2;
 /// bits, so encode/decode is a bit-exact roundtrip (NaN included).
 pub fn encode_msgs(msgs: &[Compressed]) -> Vec<u8> {
     let mut out = Vec::new();
-    out.extend_from_slice(&(msgs.len() as u32).to_le_bytes());
+    out.extend_from_slice(&len_u32(msgs.len()));
     for msg in msgs {
         match msg {
             Compressed::Sparse { dim, idx, val } => {
                 out.push(TAG_SPARSE);
-                out.extend_from_slice(&(*dim as u64).to_le_bytes());
-                out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
-                out.extend_from_slice(&(val.len() as u32).to_le_bytes());
+                out.extend_from_slice(&len_u64(*dim));
+                out.extend_from_slice(&len_u32(idx.len()));
+                out.extend_from_slice(&len_u32(val.len()));
                 for i in idx {
                     out.extend_from_slice(&i.to_le_bytes());
                 }
@@ -279,17 +307,17 @@ pub fn encode_msgs(msgs: &[Compressed]) -> Vec<u8> {
             Compressed::Dense { val, bits_per_val } => {
                 out.push(TAG_DENSE);
                 out.extend_from_slice(&bits_per_val.to_le_bytes());
-                out.extend_from_slice(&(val.len() as u32).to_le_bytes());
+                out.extend_from_slice(&len_u32(val.len()));
                 for v in val {
                     out.extend_from_slice(&v.to_bits().to_le_bytes());
                 }
             }
             Compressed::Factors { rows, cols, u, v } => {
                 out.push(TAG_FACTORS);
-                out.extend_from_slice(&(*rows as u64).to_le_bytes());
-                out.extend_from_slice(&(*cols as u64).to_le_bytes());
-                out.extend_from_slice(&(u.len() as u32).to_le_bytes());
-                out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                out.extend_from_slice(&len_u64(*rows));
+                out.extend_from_slice(&len_u64(*cols));
+                out.extend_from_slice(&len_u32(u.len()));
+                out.extend_from_slice(&len_u32(v.len()));
                 for x in u {
                     out.extend_from_slice(&x.to_bits().to_le_bytes());
                 }
@@ -307,7 +335,7 @@ pub fn encode_msgs(msgs: &[Compressed]) -> Vec<u8> {
 /// arbitrary input can neither panic nor OOM.
 pub fn decode_msgs(buf: &[u8]) -> Result<Vec<Compressed>, FrameError> {
     let mut r = Reader { buf, pos: 0 };
-    let count = r.u32()? as usize;
+    let count = r.len()?;
     // A message is at least 1 tag byte: cheap sanity bound on `count`.
     if count > buf.len() {
         return Err(FrameError::Malformed("message count exceeds payload"));
@@ -316,23 +344,23 @@ pub fn decode_msgs(buf: &[u8]) -> Result<Vec<Compressed>, FrameError> {
     for _ in 0..count {
         let msg = match r.u8()? {
             TAG_SPARSE => {
-                let dim = r.u64()? as usize;
-                let ni = r.u32()? as usize;
-                let nv = r.u32()? as usize;
+                let dim = r.len64()?;
+                let ni = r.len()?;
+                let nv = r.len()?;
                 let idx = r.u32_vec(ni)?;
                 let val = r.f32_vec(nv)?;
                 Compressed::Sparse { dim, idx, val }
             }
             TAG_DENSE => {
                 let bits_per_val = r.u64()?;
-                let n = r.u32()? as usize;
+                let n = r.len()?;
                 Compressed::Dense { val: r.f32_vec(n)?, bits_per_val }
             }
             TAG_FACTORS => {
-                let rows = r.u64()? as usize;
-                let cols = r.u64()? as usize;
-                let nu = r.u32()? as usize;
-                let nv = r.u32()? as usize;
+                let rows = r.len64()?;
+                let cols = r.len64()?;
+                let nu = r.len()?;
+                let nv = r.len()?;
                 let u = r.f32_vec(nu)?;
                 let v = r.f32_vec(nv)?;
                 Compressed::Factors { rows, cols, u, v }
@@ -357,38 +385,68 @@ struct Reader<'a> {
 
 impl Reader<'_> {
     fn take(&mut self, n: usize) -> Result<&[u8], FrameError> {
-        if self.buf.len() - self.pos < n {
-            return Err(FrameError::Truncated);
-        }
-        let out = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
+        let end = self.pos.checked_add(n).ok_or(FrameError::Truncated)?;
+        let out = self.buf.get(self.pos..end).ok_or(FrameError::Truncated)?;
+        self.pos = end;
         Ok(out)
     }
 
     fn u8(&mut self) -> Result<u8, FrameError> {
-        Ok(self.take(1)?[0])
+        self.take(1)?.first().copied().ok_or(FrameError::Truncated)
     }
 
     fn u32(&mut self) -> Result<u32, FrameError> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let pos = self.pos;
+        let bytes = le_bytes(self.buf, pos)?;
+        self.pos = pos + 4;
+        Ok(u32::from_le_bytes(bytes))
     }
 
     fn u64(&mut self) -> Result<u64, FrameError> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        let pos = self.pos;
+        let bytes = le_bytes(self.buf, pos)?;
+        self.pos = pos + 8;
+        Ok(u64::from_le_bytes(bytes))
+    }
+
+    /// A `u32` count field converted to the `usize` it sizes.
+    fn len(&mut self) -> Result<usize, FrameError> {
+        usize::try_from(self.u32()?).map_err(|_| FrameError::Malformed("count exceeds usize"))
+    }
+
+    /// A `u64` dimension field converted to the `usize` it describes.
+    fn len64(&mut self) -> Result<usize, FrameError> {
+        usize::try_from(self.u64()?).map_err(|_| FrameError::Malformed("dimension exceeds usize"))
     }
 
     fn u32_vec(&mut self, n: usize) -> Result<Vec<u32>, FrameError> {
         let bytes = self.take(n.checked_mul(4).ok_or(FrameError::Truncated)?)?;
-        Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+        let mut out = Vec::with_capacity(n);
+        for chunk in bytes.chunks_exact(4) {
+            out.push(u32::from_le_bytes(chunk.try_into().map_err(|_| FrameError::Truncated)?));
+        }
+        Ok(out)
     }
 
     fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>, FrameError> {
         let bytes = self.take(n.checked_mul(4).ok_or(FrameError::Truncated)?)?;
-        Ok(bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())))
-            .collect())
+        let mut out = Vec::with_capacity(n);
+        for chunk in bytes.chunks_exact(4) {
+            let bits = u32::from_le_bytes(chunk.try_into().map_err(|_| FrameError::Truncated)?);
+            out.push(f32::from_bits(bits));
+        }
+        Ok(out)
     }
+}
+
+/// Encode a `usize` length as the `u32` count field used on the wire.
+fn len_u32(n: usize) -> [u8; 4] {
+    u32::try_from(n).expect("length exceeds u32 wire field").to_le_bytes()
+}
+
+/// Encode a `usize` dimension as the `u64` field used on the wire.
+fn len_u64(n: usize) -> [u8; 8] {
+    u64::try_from(n).expect("dimension exceeds u64 wire field").to_le_bytes()
 }
 
 #[cfg(test)]

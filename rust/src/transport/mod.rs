@@ -41,6 +41,9 @@
 //! retransmission ([`endpoint`]); seeded fault injection ([`faults`])
 //! can drop/delay/duplicate/truncate any transmission attempt and the
 //! run must still produce identical results.
+// Wall-clock allowlist file (ARCHITECTURE.md §6): this layer measures
+// real time by design; clippy.toml bans the methods elsewhere.
+#![allow(clippy::disallowed_methods)]
 
 pub mod endpoint;
 pub mod faults;
@@ -209,38 +212,42 @@ fn coordinate(
         let hello = ep.recv_reliable()?;
         anyhow::ensure!(hello.kind == PayloadKind::Probe, "expected a Probe handshake");
         anyhow::ensure!(hello.payload.len() == 8, "malformed Probe payload");
-        let id = u32::from_le_bytes(hello.payload[..4].try_into().unwrap()) as usize;
-        let peer_m = u32::from_le_bytes(hello.payload[4..8].try_into().unwrap()) as usize;
+        let id_raw = u32::from_le_bytes(hello.payload[..4].try_into().expect("length checked"));
+        let m_raw = u32::from_le_bytes(hello.payload[4..8].try_into().expect("length checked"));
+        let id = usize::try_from(id_raw).expect("u32 fits usize");
+        let peer_m = usize::try_from(m_raw).expect("u32 fits usize");
         anyhow::ensure!(peer_m == m, "worker {id} believes M = {peer_m}, coordinator has {m}");
         anyhow::ensure!(id < m, "worker id {id} out of range for M = {m}");
         anyhow::ensure!(slots[id].is_none(), "duplicate handshake for worker {id}");
-        ep.set_faults(FaultInjector::new(&opts.faults, COORD_LEG_BASE + id as u64 + 1));
+        ep.set_faults(FaultInjector::new(&opts.faults, COORD_LEG_BASE + u64::from(id_raw) + 1));
         ep.set_label(format!("worker {id}"));
         slots[id] = Some(ep);
     }
     let mut eps: Vec<Endpoint> = slots.into_iter().map(|s| s.expect("all slots filled")).collect();
     let build_ms = t_build.elapsed().as_secs_f64() * 1e3;
 
-    let mut records = Vec::with_capacity(cfg.rounds as usize);
+    let mut records = Vec::with_capacity(usize::try_from(cfg.rounds).unwrap_or(0));
     for _ in 0..cfg.rounds {
         let record = cell.round()?;
         let wire = cell.take_wire()?;
         let bcast_payload = frame::encode_msgs(&wire.broadcast);
         for (id, ep) in eps.iter_mut().enumerate() {
-            ep.send_reliable(PayloadKind::Broadcast, id as u32, wire.step, bcast_payload.clone())?;
+            let wid = u32::try_from(id).expect("worker index fits u32");
+            ep.send_reliable(PayloadKind::Broadcast, wid, wire.step, bcast_payload.clone())?;
             if let Some(log) = capture.as_deref_mut() {
                 log.push(CapturedFrame {
                     kind: PayloadKind::Broadcast,
-                    worker: id as u32,
+                    worker: wid,
                     round: wire.step,
                     payload: bcast_payload.clone(),
                 });
             }
         }
         for (id, ep) in eps.iter_mut().enumerate() {
+            let wid = u32::try_from(id).expect("worker index fits u32");
             let upload = ep.recv_reliable()?;
             anyhow::ensure!(
-                upload.kind == PayloadKind::Upload && upload.worker == id as u32,
+                upload.kind == PayloadKind::Upload && upload.worker == wid,
                 "expected worker {id}'s Upload, got {:?} from worker {}",
                 upload.kind,
                 upload.worker
@@ -265,7 +272,7 @@ fn coordinate(
             if let Some(log) = capture.as_deref_mut() {
                 log.push(CapturedFrame {
                     kind: PayloadKind::Upload,
-                    worker: id as u32,
+                    worker: wid,
                     round: wire.step,
                     payload: upload.payload,
                 });
@@ -274,7 +281,8 @@ fn coordinate(
         records.push(record);
     }
     for (id, ep) in eps.iter_mut().enumerate() {
-        ep.send_reliable(PayloadKind::Shutdown, id as u32, cfg.rounds, Vec::new())?;
+        let wid = u32::try_from(id).expect("worker index fits u32");
+        ep.send_reliable(PayloadKind::Shutdown, wid, cfg.rounds, Vec::new())?;
     }
     let total_time = cell.clock();
     let eval = if eval_batches > 0 { cell.evaluate(eval_batches)? } else { None };

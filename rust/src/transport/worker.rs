@@ -26,20 +26,22 @@ pub fn serve_with_family(
     timeouts: &TimeoutCfg,
 ) -> anyhow::Result<()> {
     anyhow::ensure!(id < cfg.m, "worker id {id} out of range for M = {}", cfg.m);
+    let wid = u32::try_from(id).map_err(|_| anyhow::anyhow!("worker id {id} exceeds u32"))?;
+    let m = u32::try_from(cfg.m).map_err(|_| anyhow::anyhow!("M = {} exceeds u32", cfg.m))?;
     let mut cell = family.build_wired(cfg)?;
     let conn = endpoint::dial(addr, timeouts)?;
     let mut ep = Endpoint::new(
         conn,
-        FaultInjector::new(faults, id as u64 + 1),
+        FaultInjector::new(faults, u64::from(wid) + 1),
         timeouts.clone(),
         format!("coordinator (from worker {id})"),
     );
 
     // Handshake: claim the worker id and cross-check M.
     let mut hello = Vec::with_capacity(8);
-    hello.extend_from_slice(&(id as u32).to_le_bytes());
-    hello.extend_from_slice(&(cfg.m as u32).to_le_bytes());
-    ep.send_reliable(PayloadKind::Probe, id as u32, 0, hello)?;
+    hello.extend_from_slice(&wid.to_le_bytes());
+    hello.extend_from_slice(&m.to_le_bytes());
+    ep.send_reliable(PayloadKind::Probe, wid, 0, hello)?;
 
     loop {
         let f = ep.recv_reliable()?;
@@ -70,7 +72,7 @@ pub fn serve_with_family(
                     expect.len()
                 );
                 let upload = frame::encode_msgs(&wire.uploads[id]);
-                ep.send_reliable(PayloadKind::Upload, id as u32, wire.step, upload)?;
+                ep.send_reliable(PayloadKind::Upload, wid, wire.step, upload)?;
             }
             other => anyhow::bail!("worker {id}: unexpected {other:?} frame"),
         }

@@ -40,6 +40,7 @@ pub fn diff_into(out: &mut [f32], a: &[f32], b: &[f32]) {
 }
 
 /// [`diff_into`] with an explicit block width (test hook).
+// tidy:alloc-free(diff)
 pub fn diff_into_chunked(out: &mut [f32], a: &[f32], b: &[f32], chunk: usize) {
     let chunk = chunk.max(1);
     for ((oc, ac), bc) in out

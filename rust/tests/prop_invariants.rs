@@ -4,8 +4,8 @@
 use kimad::compress::{
     compression_error, Compressor, Identity, OneBitSign, QuantizeBits, RandK, TopK,
 };
-use kimad::ef21::theory::{canonical_consts, max_gamma};
 use kimad::ef21::Estimator;
+use kimad::ef21::theory::{canonical_consts, max_gamma};
 use kimad::kimad::knapsack::{allocate, topk_options, KnapsackParams, Option_};
 use kimad::kimad::{CompressPolicy, ErrorCurve, Selector};
 use kimad::model::{Layer, ModelLayout};

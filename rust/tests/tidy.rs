@@ -1,0 +1,268 @@
+//! Tier-1 gate + fixture corpus for `kimad tidy` (rust/src/analysis/).
+//!
+//! Two halves:
+//!
+//! * the crate's own tree must scan clean — zero diagnostics, which
+//!   also means zero unused allows — the same check CI runs via
+//!   `cargo run --release -- tidy`;
+//! * a fixture corpus proving every registered rule fires on a
+//!   minimal violating snippet and stays quiet on its fixed twin,
+//!   plus the suppression edge cases (allow-with-reason, unused
+//!   allow, malformed allow, doc-comment and string-literal
+//!   false-positive regressions).
+
+use std::path::Path;
+
+use kimad::analysis::rules::{rule_ids, REGISTRY};
+use kimad::analysis::scan_file_source;
+use kimad::analysis::scan_root;
+use kimad::bench::kernels::alloc_free_kernels;
+
+fn fires(rel: &str, src: &str, rule: &str) -> bool {
+    scan_file_source(rel, src).diagnostics.iter().any(|d| d.rule == rule)
+}
+
+fn diag_count(rel: &str, src: &str) -> usize {
+    scan_file_source(rel, src).diagnostics.len()
+}
+
+// ---------------------------------------------------------------- tree
+
+#[test]
+fn own_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = scan_root(root).expect("scan own tree");
+    assert!(report.files_scanned > 50, "walk found only {} files", report.files_scanned);
+    assert!(report.clean(), "tidy findings on the tree:\n{}", report.render_human(true));
+    assert!(report.allows_used > 0, "the tree documents its exemptions via tidy:allow");
+}
+
+#[test]
+fn json_report_shape() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = scan_root(root).expect("scan own tree");
+    let js = report.to_json().to_string();
+    for key in ["\"clean\"", "\"diagnostics\"", "\"rules\"", "\"files_scanned\""] {
+        assert!(js.contains(key), "JSON report missing {key}: {js}");
+    }
+}
+
+#[test]
+fn registry_is_complete_and_unique() {
+    let ids = rule_ids();
+    let mut sorted = ids.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(sorted.len(), ids.len(), "duplicate rule id in REGISTRY");
+    assert_eq!(ids.len(), 15, "rule count drifted from the documented set");
+    for r in REGISTRY {
+        assert!(!r.summary.is_empty() && !r.section.is_empty() && !r.hint.is_empty());
+    }
+}
+
+// --------------------------------------------------------- determinism
+
+#[test]
+fn hash_collections_fires_in_engine_dirs_only() {
+    let src = "use std::collections::HashMap;\n";
+    assert!(fires("src/coordinator/x.rs", src, "hash-collections"));
+    assert!(fires("src/netsim/x.rs", src, "hash-collections"));
+    assert!(!fires("src/util/x.rs", src, "hash-collections"));
+    let fixed = "use std::collections::BTreeMap;\n";
+    assert_eq!(diag_count("src/coordinator/x.rs", fixed), 0);
+}
+
+#[test]
+fn wall_clock_fires_outside_allowlist() {
+    let src = "fn f() -> u64 {\n    let t = std::time::Instant::now();\n    0\n}\n";
+    assert!(fires("src/kimad/x.rs", src, "wall-clock"));
+    assert!(!fires("src/transport/x.rs", src, "wall-clock"));
+    assert!(!fires("src/bench/timing.rs", src, "wall-clock"));
+    assert!(!fires("benches/x.rs", src, "wall-clock"));
+}
+
+#[test]
+fn wall_clock_relaxed_under_cfg_test() {
+    let src = "#[cfg(test)]\nmod tests {\n    fn f() {\n        \
+               let t = std::time::Instant::now();\n    }\n}\n";
+    assert!(!fires("src/kimad/x.rs", src, "wall-clock"));
+}
+
+#[test]
+fn ambient_rng_fires_everywhere() {
+    let src = "fn f() -> u32 {\n    let mut rng = thread_rng();\n    0\n}\n";
+    assert!(fires("src/util/x.rs", src, "ambient-rng"));
+    let src2 = "fn f() -> f64 {\n    rand::random()\n}\n";
+    assert!(fires("src/util/x.rs", src2, "ambient-rng"));
+    let fixed = "fn f(seed: u64) -> u64 {\n    seed.wrapping_mul(3)\n}\n";
+    assert_eq!(diag_count("src/util/x.rs", fixed), 0);
+}
+
+#[test]
+fn float_reduce_fires_in_scope() {
+    let src = "fn total(xs: &[f32]) -> f32 {\n    xs.iter().copied().sum()\n}\n";
+    assert!(fires("src/ef21/x.rs", src, "float-reduce"));
+    assert!(fires("src/compress/x.rs", src, "float-reduce"));
+    assert!(!fires("src/metrics/x.rs", src, "float-reduce"));
+    assert!(!fires("src/util/chunk.rs", src, "float-reduce"));
+}
+
+#[test]
+fn float_reduce_integer_witness_passes() {
+    let same_line = "fn n(xs: &[u32]) -> u64 {\n    xs.iter().map(|x| u64::from(*x)).sum()\n}\n";
+    assert!(!fires("src/ef21/x.rs", same_line, "float-reduce"));
+    let lookback = concat!(
+        "fn n(xs: &[usize]) -> usize {\n",
+        "    let total: usize = xs\n",
+        "        .iter()\n",
+        "        .sum();\n",
+        "    total\n",
+        "}\n"
+    );
+    assert!(!fires("src/ef21/x.rs", lookback, "float-reduce"));
+}
+
+// --------------------------------------------------------- wire safety
+
+#[test]
+fn numeric_cast_fires_in_transport_only() {
+    let src = "fn f(n: usize) -> u32 {\n    n as u32\n}\n";
+    assert!(fires("src/transport/x.rs", src, "numeric-cast"));
+    assert!(!fires("src/kimad/x.rs", src, "numeric-cast"));
+    let fixed = "fn f(n: usize) -> u32 {\n    u32::try_from(n).unwrap_or(u32::MAX)\n}\n";
+    assert!(!fires("src/transport/x.rs", fixed, "numeric-cast"));
+}
+
+#[test]
+fn decode_panic_fires_in_decode_paths() {
+    let index = "fn decode(buf: &[u8]) -> Result<u8, FrameError> {\n    \
+                 let b = buf[0];\n    Ok(b)\n}\n";
+    assert!(fires("src/transport/x.rs", index, "decode-panic"));
+    let unwrap = "fn decode(buf: &[u8]) -> Result<u8, FrameError> {\n    \
+                  let b = buf.first().unwrap();\n    Ok(*b)\n}\n";
+    assert!(fires("src/transport/x.rs", unwrap, "decode-panic"));
+    let total = "fn decode(buf: &[u8]) -> Result<u8, FrameError> {\n    \
+                 buf.first().copied().ok_or(FrameError::Truncated)\n}\n";
+    assert!(!fires("src/transport/x.rs", total, "decode-panic"));
+    let helper = "fn helper(n: usize) -> usize {\n    n.checked_add(1).unwrap()\n}\n";
+    assert!(!fires("src/transport/x.rs", helper, "decode-panic"));
+}
+
+#[test]
+fn safety_comment_required_for_unsafe() {
+    let bare = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+    assert!(fires("src/util/x.rs", bare, "safety-comment"));
+    let doc = "fn f(p: *const u8) -> u8 {\n    // SAFETY: p is valid for reads\n    \
+               unsafe { *p }\n}\n";
+    assert!(!fires("src/util/x.rs", doc, "safety-comment"));
+}
+
+// ------------------------------------------------------------ hot path
+
+#[test]
+fn alloc_free_region_rejects_allocation() {
+    let src = "// tidy:alloc-free(diff)\nfn diff(out: &mut [f32], xs: &[f32]) {\n    \
+               let tmp = xs.to_vec();\n}\n";
+    assert!(fires("src/util/x.rs", src, "alloc-free"));
+    let fixed = "// tidy:alloc-free(diff)\nfn diff(out: &mut [f32], xs: &[f32]) {\n    \
+                 for (o, x) in out.iter_mut().zip(xs) {\n        *o = *x;\n    }\n}\n";
+    assert!(!fires("src/util/x.rs", fixed, "alloc-free"));
+}
+
+#[test]
+fn alloc_free_marker_names_are_checked() {
+    let src = "// tidy:alloc-free(bogus)\nfn f() {}\n";
+    assert!(fires("src/util/x.rs", src, "alloc-free-coverage"));
+    assert!(alloc_free_kernels().contains(&"diff"), "registry anchor kernel exists");
+}
+
+// ------------------------------------------------------------ style
+
+#[test]
+fn line_width_caps_at_100() {
+    let long = format!("fn f() {{}} // {}\n", "x".repeat(88));
+    assert!(fires("src/util/x.rs", &long, "line-width"));
+    let ok = format!("fn f() {{}} // {}\n", "x".repeat(80));
+    assert!(!fires("src/util/x.rs", &ok, "line-width"));
+}
+
+#[test]
+fn tab_and_trailing_whitespace() {
+    assert!(fires("src/util/x.rs", "fn f() {\n\tlet x = 1;\n}\n", "tab-char"));
+    assert!(fires("src/util/x.rs", "fn f() {} \n", "trailing-space"));
+    assert!(fires("src/util/x.rs", "fn f() {}\n   \nfn g() {}\n", "trailing-space"));
+    assert_eq!(diag_count("src/util/x.rs", "fn f() {}\n\nfn g() {}\n"), 0);
+}
+
+#[test]
+fn import_order_within_blocks() {
+    let bad = "use std::fmt;\nuse crate::alpha;\n";
+    assert!(fires("src/util/x.rs", bad, "import-order"));
+    let good = "use crate::alpha;\n\nuse std::fmt;\n";
+    assert!(!fires("src/util/x.rs", good, "import-order"));
+    let blocks = "use std::fmt;\n\nuse crate::alpha;\n";
+    assert!(!fires("src/util/x.rs", blocks, "import-order"));
+    let selfs = "use std::fmt;\nuse self::alpha;\n";
+    assert!(!fires("src/util/x.rs", selfs, "import-order"));
+}
+
+// ------------------------------------------------------- suppressions
+
+#[test]
+fn allow_with_reason_suppresses_and_counts() {
+    let src = "fn total(xs: &[f32]) -> f32 {\n    \
+               // tidy:allow(float-reduce) -- fixture: serial fold, deterministic\n    \
+               xs.iter().copied().sum()\n}\n";
+    let scan = scan_file_source("src/ef21/x.rs", src);
+    assert!(scan.diagnostics.is_empty(), "allow failed: {:?}", scan.diagnostics[0].message);
+    assert_eq!(scan.allows_used, 1);
+}
+
+#[test]
+fn unused_allow_is_an_error() {
+    let src = "fn f() {}\n// tidy:allow(wall-clock) -- stale exemption\nfn g() {}\n";
+    let scan = scan_file_source("src/util/x.rs", src);
+    assert_eq!(scan.allows_used, 0);
+    assert!(scan.diagnostics.iter().any(|d| d.rule == "unused-allow"));
+}
+
+#[test]
+fn malformed_allows_are_errors() {
+    let unknown = "fn f() {}\n// tidy:allow(not-a-rule) -- whatever\n";
+    assert!(fires("src/util/x.rs", unknown, "allow-syntax"));
+    let no_reason = "fn f() {}\n// tidy:allow(wall-clock)\n";
+    assert!(fires("src/util/x.rs", no_reason, "allow-syntax"));
+    let no_parens = "fn f() {}\n// tidy:allow wall-clock -- reason\n";
+    assert!(fires("src/util/x.rs", no_parens, "allow-syntax"));
+}
+
+// -------------------------------------------------- lexer regressions
+
+#[test]
+fn string_literals_never_fire() {
+    let src = "fn f() -> String {\n    \
+               let s = \"Instant::now HashMap thread_rng xs.sum()\";\n    \
+               s.to_string()\n}\n";
+    assert_eq!(diag_count("src/coordinator/x.rs", src), 0);
+}
+
+#[test]
+fn raw_strings_never_fire() {
+    let src = "fn f() -> &'static str {\n    \
+               r#\"thread_rng() and a \"quote\" and a tidy:allow(wall-clock) -- x\"#\n}\n";
+    assert_eq!(diag_count("src/util/x.rs", src), 0);
+}
+
+#[test]
+fn doc_comments_are_not_directives() {
+    let src = "/// Write `tidy:allow(wall-clock) -- why` above the call.\nfn f() {}\n";
+    let scan = scan_file_source("src/util/x.rs", src);
+    assert!(scan.diagnostics.is_empty(), "doc text parsed as directive");
+    assert_eq!(scan.allows_used, 0);
+}
+
+#[test]
+fn char_literals_and_lifetimes_lex_cleanly() {
+    let src = "fn f<'a>(xs: &'a [u8]) -> char {\n    let c = '\\n';\n    let d = '{';\n    c\n}\n";
+    assert_eq!(diag_count("src/util/x.rs", src), 0);
+}
