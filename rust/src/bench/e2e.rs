@@ -9,7 +9,7 @@
 use std::time::Instant;
 
 use crate::bench::report::E2eRecord;
-use crate::scenarios::{run_matrix, ScenarioGrid};
+use crate::scenarios::{run_matrix, run_matrix_cached, CacheMode, ScenarioGrid};
 
 /// The default 48-cell reference grid (`kimad scenarios` with no file).
 pub fn default_grid() -> ScenarioGrid {
@@ -72,6 +72,41 @@ pub fn run_grid(grid: &ScenarioGrid) -> anyhow::Result<E2eRecord> {
     })
 }
 
+/// Execute `grid` twice over a scratch cache directory — a cold pass
+/// to populate it, then a timed `--resume` pass that must hit on every
+/// cell — and summarize the *resumed* pass as `<name>-resume`. This is
+/// the number that keeps the content-addressed cache honest in the
+/// perf baseline: warm cells/sec should sit orders of magnitude above
+/// the cold row, and a probe regression (hash, parse, verify) shows up
+/// here before anyone notices `--resume` got slow.
+pub fn run_grid_resumed(grid: &ScenarioGrid) -> anyhow::Result<E2eRecord> {
+    let dir = std::env::temp_dir()
+        .join(format!("kimad-bench-resume-{}-{}", grid.name, std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    run_matrix_cached(grid, 0, 0, Some(&dir), CacheMode::Fresh)?;
+    let t0 = Instant::now();
+    let run = run_matrix_cached(grid, 0, 0, Some(&dir), CacheMode::Resume)?;
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let _ = std::fs::remove_dir_all(&dir);
+    anyhow::ensure!(
+        run.n_executed == 0,
+        "resumed grid '{}' re-executed {} of {} cells",
+        grid.name,
+        run.n_executed,
+        run.summaries.len()
+    );
+    let cells = run.summaries.len();
+    Ok(E2eRecord {
+        grid: format!("{}-resume", grid.name),
+        cells,
+        wall_ms,
+        // Nothing is built on a full-hit pass; the stored summaries
+        // still carry the cold run's build_ms, which would misattribute.
+        build_ms: 0.0,
+        cells_per_sec: if wall_ms > 0.0 { cells as f64 / (wall_ms / 1e3) } else { 0.0 },
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,6 +134,21 @@ mod tests {
             assert_eq!(cell.cfg.quorum(), 10, "{}: fixed 10-client quorum", g.name);
         }
         assert_eq!(grids[2].worker_counts, vec![1_000_000]);
+    }
+
+    #[test]
+    fn resumed_grid_hits_every_cell() {
+        let mut g = quick_grid();
+        g.name = "resume-test".into();
+        g.base.rounds = 4;
+        g.policies.truncate(1);
+        g.modes.truncate(1);
+        g.worker_counts.truncate(1);
+        let rec = run_grid_resumed(&g).unwrap();
+        assert_eq!(rec.grid, "resume-test-resume");
+        assert_eq!(rec.cells, g.n_cells());
+        assert_eq!(rec.build_ms, 0.0, "a full-hit pass builds nothing");
+        assert!(rec.cells_per_sec > 0.0);
     }
 
     #[test]

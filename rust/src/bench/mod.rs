@@ -25,16 +25,19 @@ pub use timing::{bench, black_box, fmt_ns, time_once, BenchResult};
 pub const KERNEL_SIZES: [usize; 2] = [1 << 16, 1 << 20];
 
 /// Run the whole suite: kernels at [`KERNEL_SIZES`], then the
-/// end-to-end grid(s) — the reduced `quick-r20` grid always, the
-/// default 48-cell grid when `quick` is false, and the three
-/// workers-scaling population grids (M = 10²..10⁶ at a fixed ~10-client
-/// quorum) in both modes — each is a single sampled cell, so they cost
-/// seconds even at a million clients.
+/// end-to-end grid(s) — the reduced `quick-r20` grid always (cold,
+/// plus a `quick-r20-resume` pass over a populated cell cache: the
+/// warm-path number that keeps `--resume` honest), the default 48-cell
+/// grid when `quick` is false, and the three workers-scaling
+/// population grids (M = 10²..10⁶ at a fixed ~10-client quorum) in
+/// both modes — each is a single sampled cell, so they cost seconds
+/// even at a million clients.
 pub fn run(quick: bool) -> anyhow::Result<BenchReport> {
     let sizes = KERNEL_SIZES.to_vec();
     let samples = if quick { 3 } else { 10 };
     let kernels = kernels::run_kernels(&sizes, samples);
     let mut e2e_records = vec![e2e::run_grid(&e2e::quick_grid())?];
+    e2e_records.push(e2e::run_grid_resumed(&e2e::quick_grid())?);
     if !quick {
         e2e_records.push(e2e::run_grid(&e2e::default_grid())?);
     }

@@ -40,6 +40,14 @@ pub use quantize::{OneBitSign, QuantizeBits};
 pub use randk::RandK;
 pub use topk::TopK;
 
+/// The compressor panel identity, folded into content-addressed result
+/// caches (`scenarios::cache`) via [`crate::driver::engine_fingerprint`]:
+/// a coarse stamp for the set of compressor families a policy may
+/// select from. Extend it when a new family lands (sketches, AdaComp,
+/// DGC — see ROADMAP) so summaries cached before the panel grew are
+/// treated as stale rather than silently reused.
+pub const PANEL: &str = "identity,topk,randk,quantize,lowrank";
+
 /// Bits for one f32 on the wire.
 pub const F32_BITS: u64 = 32;
 /// Bits for one coordinate index on the wire.

@@ -666,6 +666,30 @@ impl ExperimentConfig {
         self.to_json().to_string()
     }
 
+    /// The canonical serialization content-addressed result caches
+    /// hash (`scenarios::cache`, docs/ARCHITECTURE.md §11): the full
+    /// config JSON minus the runtime-only `transport` field. Two
+    /// configs are byte-equal here iff they describe the same
+    /// experiment:
+    ///
+    /// * keys emit sorted (`util::json::Value` objects are `BTreeMap`s),
+    ///   so the construction site — hand-built struct, grid expansion,
+    ///   or a `from_json` round trip — never changes the bytes;
+    /// * `transport` is stripped because results are
+    ///   transport-invariant by the wire-bit-identity contract (a cell
+    ///   run over TCP must hit the cache entry its in-process twin
+    ///   wrote, and vice versa).
+    ///
+    /// Thread/shard knobs stay in: they are part of the config a cell
+    /// declares (the matrix serializes cells *pre*-clamp, so the bytes
+    /// are machine-independent), and distinct shard-axis cells are
+    /// distinct experiments by id anyway.
+    pub fn canonical_json(&self) -> String {
+        let mut c = self.clone();
+        c.transport = TransportSpec::Inproc;
+        c.to_json().to_string()
+    }
+
     /// Does this config use the population engine (sampled per-round
     /// participation and/or cohort-shared links) instead of the dense
     /// per-worker path? `participation = 1` with auto cohorts is dense
@@ -803,6 +827,28 @@ mod tests {
         assert_eq!(TransportSpec::parse("tcp").unwrap(), TransportSpec::Tcp);
         assert!(TransportSpec::parse("carrier-pigeon").is_err());
         assert!(TransportSpec::Uds.is_wire() && !TransportSpec::Inproc.is_wire());
+    }
+
+    #[test]
+    fn canonical_json_is_transport_free_key_sorted_and_site_independent() {
+        // Strips the runtime-only transport field: a wired config and
+        // its in-process twin canonicalize to the same bytes.
+        let mut wired = sample();
+        wired.transport = TransportSpec::Tcp;
+        assert_eq!(wired.canonical_json(), sample().canonical_json());
+        assert!(!wired.canonical_json().contains("transport"));
+        // Construction-site independence: a from_json round trip (a
+        // different construction order) emits identical bytes.
+        let canon = sample().canonical_json();
+        let back = ExperimentConfig::from_json(&Value::parse(&canon).unwrap()).unwrap();
+        assert_eq!(back.canonical_json(), canon);
+        // Keys emit sorted (BTreeMap object), so the first field is
+        // alphabetically first, not declaration-first.
+        assert!(canon.starts_with("{\"alpha\":"), "{canon}");
+        // Any results-relevant field change moves the bytes.
+        let mut changed = sample();
+        changed.rounds += 1;
+        assert_ne!(changed.canonical_json(), canon);
     }
 
     #[test]

@@ -53,6 +53,28 @@ impl ExperimentResult {
     }
 }
 
+/// Version of the execution engine's *results contract*. Bump this
+/// when a change alters any summary bit for an unchanged config
+/// (optimizer step order, trace sampling, aggregation order, budget
+/// arithmetic, ...): content-addressed result caches
+/// (`scenarios::cache`) fold it into every key, so bumping it retires
+/// all previously cached summaries at once instead of silently serving
+/// results the current engine would not reproduce.
+pub const ENGINE_VERSION: u32 = 1;
+
+/// The engine-identity string folded into every scenario cache key:
+/// cell results depend on the engine results contract, the wire frame
+/// codec, and the compressor panel — and on nothing else outside the
+/// config itself (never wall clock, transport, or pool layout; those
+/// are bit-invariant by the determinism contract the tests enforce).
+pub fn engine_fingerprint() -> String {
+    format!(
+        "engine-v{ENGINE_VERSION};frame-v{};panel={}",
+        crate::transport::frame::VERSION,
+        crate::compress::PANEL
+    )
+}
+
 /// Numerical mean of a trace over its first `horizon` seconds.
 pub fn trace_mean_bps(trace: &dyn BandwidthTrace, horizon: f64) -> f64 {
     trace.integrate(0.0, horizon) / horizon

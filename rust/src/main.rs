@@ -22,12 +22,13 @@
 // real time by design; clippy.toml bans the methods elsewhere.
 #![allow(clippy::disallowed_methods)]
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use kimad::config::ExperimentConfig;
 use kimad::driver::run_experiment;
 use kimad::metrics::{Series, SeriesSet};
 use kimad::reports::{self, ReportCtx};
+use kimad::util::atomicfile::write_atomic;
 use kimad::util::cli::Args;
 use kimad::util::json::Value;
 
@@ -42,7 +43,8 @@ USAGE:
                [--cell-threads N] [--rounds N] [--modes sync,semisync,async] \\
                [--shards 1,2,4] [--workers 100,1000000] [--participation 1,0.001] \\
                [--workload 'quad:d=30,layers=3|deep:tiny'] \\
-               [--transport inproc|tcp|uds] [--artifacts DIR] [--print-grid]
+               [--transport inproc|tcp|uds] [--artifacts DIR] [--print-grid] \\
+               [--resume | --fresh]
   kimad synthetic [--scenario xsmall|small|oscillation|high] [--fast] [--out-dir DIR]
   kimad bench [--quick] [--out FILE]
   kimad trace --spec '<json TraceSpec>' [--seconds S] [--step S]
@@ -67,7 +69,10 @@ fn main() {
 }
 
 fn run(argv: &[String]) -> anyhow::Result<()> {
-    let args = Args::parse(argv, &["fast", "fix-report", "help", "json", "print-grid", "quick"])?;
+    let args = Args::parse(
+        argv,
+        &["fast", "fix-report", "fresh", "help", "json", "print-grid", "quick", "resume"],
+    )?;
     if args.flag("help") || args.positional.is_empty() {
         println!("{USAGE}");
         return Ok(());
@@ -186,6 +191,14 @@ fn scenarios(args: &Args) -> anyhow::Result<()> {
     // a shard-axis sweep oversubscribe deliberately.
     let cell_threads = args.opt_usize("cell-threads", 0)?;
     let out_dir = PathBuf::from(args.opt_or("out-dir", "reports/scenarios"));
+    // --resume reuses verified on-disk summaries (content-addressed
+    // cell cache, docs/ARCHITECTURE.md §11); the default --fresh
+    // re-executes and overwrites every cell.
+    let mode = match (args.flag("resume"), args.flag("fresh")) {
+        (true, true) => anyhow::bail!("--resume and --fresh are mutually exclusive"),
+        (true, false) => kimad::scenarios::CacheMode::Resume,
+        _ => kimad::scenarios::CacheMode::Fresh,
+    };
     eprintln!(
         "running grid '{}': {} cells ({} workloads x {} traces x {} policies x {} modes \
          x {} worker counts x {} safety x {} participations x {} shard counts)...",
@@ -215,14 +228,22 @@ fn scenarios(args: &Args) -> anyhow::Result<()> {
             );
         }
     }
-    let t0 = std::time::Instant::now();
-    let summaries = kimad::scenarios::run_matrix_with(&grid, threads, cell_threads)?;
-    let wall = t0.elapsed().as_secs_f64();
-    kimad::scenarios::write_summaries(&out_dir, &grid, &summaries)?;
-    print!("{}", kimad::scenarios::render_table(&summaries));
+    let run = kimad::scenarios::run_matrix_cached(
+        &grid,
+        threads,
+        cell_threads,
+        Some(out_dir.as_path()),
+        mode,
+    )?;
+    print!("{}", kimad::scenarios::render_table(&run.summaries, Some(&run.hits)));
     println!(
-        "\n{} cells in {wall:.2}s wall; summaries under {}",
-        summaries.len(),
+        "\ncache: {} hits, {} misses ({} stale re-ran; {} families built)",
+        run.n_hits, run.n_executed, run.n_stale, run.n_families
+    );
+    println!(
+        "{} cells in {:.2}s wall; summaries under {}",
+        run.summaries.len(),
+        run.elapsed_s,
         out_dir.display()
     );
     Ok(())
@@ -324,7 +345,7 @@ fn bench_cmd(args: &Args) -> anyhow::Result<()> {
         Some(p) => PathBuf::from(p),
         None => PathBuf::from(format!("BENCH_{}.json", report.config.host)),
     };
-    std::fs::write(&out, report.to_json().to_string())?;
+    write_atomic(&out, report.to_json().to_string().as_bytes())?;
     for e in &report.e2e {
         println!(
             "e2e {}: {} cells in {:.0} ms ({:.2} cells/s, build {:.0} ms)",
@@ -419,7 +440,7 @@ fn tidy(args: &Args) -> anyhow::Result<()> {
     };
     match args.opt("out") {
         Some(p) => {
-            std::fs::write(p, &rendered)?;
+            write_atomic(Path::new(p), rendered.as_bytes())?;
             println!("wrote {p}");
         }
         None => print!("{rendered}"),

@@ -1,0 +1,202 @@
+//! Content-addressed cell cache (docs/ARCHITECTURE.md §11): the layer
+//! that turns a scenario out_dir from a one-shot dump into a growing,
+//! resumable database of results.
+//!
+//! Every cell file carries a *cache envelope* next to its summary: the
+//! cell's canonical config ([`ExperimentConfig::canonical_json`] — the
+//! exact experiment JSON, transport stripped, keys sorted) plus a hex
+//! key hashing that config together with the engine fingerprint
+//! ([`crate::driver::engine_fingerprint`]: engine results contract,
+//! wire frame codec version, compressor panel). What is **never**
+//! hashed: `wall_ms`/`build_ms` (timings), the transport (results are
+//! transport-invariant), pool layout, or axis ordering — the key
+//! addresses *what experiment ran*, nothing about how fast or where.
+//!
+//! The determinism contract the whole repo enforces — bit-identical
+//! summaries across thread pools, shard counts, warm/cold families and
+//! transports — is exactly what makes hash-equality a sound cache key:
+//! a verified hit *is* the summary a fresh run would produce, minus
+//! the wall clock.
+//!
+//! A probe re-hashes the **stored** canonical config before trusting
+//! an entry, so a corrupt, hand-edited, pre-cache or version-drifted
+//! file re-runs loudly ([`MissReason`]) instead of poisoning results.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::ExperimentConfig;
+use crate::driver::engine_fingerprint;
+use crate::scenarios::{sanitize, CellSummary, ScenarioCell, ScenarioGrid};
+use crate::util::atomicfile::write_atomic;
+use crate::util::hash::sha256_hex;
+use crate::util::json::Value;
+
+/// Bump when the cell-file cache envelope changes shape (not when the
+/// engine changes — that is [`crate::driver::ENGINE_VERSION`]'s job).
+pub const CACHE_SCHEMA_VERSION: u32 = 1;
+
+/// Should the matrix reuse on-disk summaries?
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheMode {
+    /// Ignore existing entries; execute and overwrite every cell.
+    Fresh,
+    /// Probe `out_dir` first and skip verified hits (`--resume`).
+    Resume,
+}
+
+/// The stable hex key a cell's results are addressed by: SHA-256 over
+/// the engine fingerprint plus the cell's canonical config bytes.
+pub fn cell_cache_key(cfg: &ExperimentConfig) -> String {
+    key_for_canonical(&cfg.canonical_json())
+}
+
+fn key_for_canonical(canon: &str) -> String {
+    let payload =
+        format!("kimad-cell-cache-v{CACHE_SCHEMA_VERSION};{}\n{canon}", engine_fingerprint());
+    sha256_hex(payload.as_bytes())
+}
+
+/// Where a cell's summary lives: the filename stays the human-readable
+/// sanitized id (what `reports/` and the CI smokes list); content
+/// addressing lives *inside* the file as the `cache_key`/`config`
+/// envelope, verified on every probe.
+pub fn cell_path(out_dir: &Path, id: &str) -> PathBuf {
+    out_dir.join(format!("{}.json", sanitize(id)))
+}
+
+/// Why a probe did not produce a reusable summary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MissReason {
+    /// No file under the cell's id.
+    Absent,
+    /// A pre-cache summary (no envelope) — written before this layer
+    /// existed; re-run and upgrade in place.
+    PreCache,
+    /// Envelope present but the stored key does not re-hash from the
+    /// stored config, or the summary body does not parse: the entry is
+    /// damaged or hand-edited.
+    Corrupt,
+    /// A valid entry for a *different* experiment or engine version
+    /// (config drift under an unchanged id, or a fingerprint bump).
+    Stale,
+}
+
+/// Outcome of probing `out_dir` for one cell.
+#[derive(Debug, Clone)]
+pub enum Probe {
+    /// A verified summary, reused without executing the cell.
+    Hit(Box<CellSummary>),
+    Miss(MissReason),
+}
+
+/// Probe `out_dir` for `cell`'s summary. Trust requires all of:
+/// the file parses, its envelope is present, the stored canonical
+/// config re-hashes to the stored key (integrity), that key equals the
+/// key of the config the cell wants to run (identity — this is where
+/// stale entries and engine-version drift land), and the summary body
+/// round-trips with the cell's id.
+pub fn probe_cell(out_dir: &Path, cell: &ScenarioCell) -> Probe {
+    let path = cell_path(out_dir, &cell.id);
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(_) => return Probe::Miss(MissReason::Absent),
+    };
+    let v = match Value::parse(&text) {
+        Ok(v) => v,
+        Err(_) => return Probe::Miss(MissReason::Corrupt),
+    };
+    let (stored_key, stored_cfg) = match (v.opt("cache_key"), v.opt("config")) {
+        (Some(k), Some(c)) => match k.as_str() {
+            Ok(k) => (k.to_string(), c),
+            Err(_) => return Probe::Miss(MissReason::Corrupt),
+        },
+        _ => return Probe::Miss(MissReason::PreCache),
+    };
+    // Integrity: the stored envelope must re-hash from its own bytes.
+    if key_for_canonical(&stored_cfg.to_string()) != stored_key {
+        return Probe::Miss(MissReason::Corrupt);
+    }
+    // Identity: the entry must address the experiment this cell runs
+    // under the *current* engine fingerprint.
+    if stored_key != cell_cache_key(&cell.cfg) {
+        return Probe::Miss(MissReason::Stale);
+    }
+    match CellSummary::from_json(&v) {
+        Ok(s) if s.id == cell.id => Probe::Hit(Box::new(s)),
+        _ => Probe::Miss(MissReason::Corrupt),
+    }
+}
+
+/// Incremental, atomic matrix writer: one `<id>.json` per completed
+/// cell (summary + cache envelope) and a refreshed `index.json` after
+/// every commit, each published via tmp + rename
+/// ([`crate::util::atomicfile`]). An interrupted sweep therefore
+/// leaves a valid directory whose index lists exactly the cells that
+/// completed — the state `--resume` picks up from. Dropping the writer
+/// mid-run loses nothing already committed (the resume-semantics test
+/// does exactly that).
+pub struct IncrementalWriter {
+    out_dir: PathBuf,
+    grid: ScenarioGrid,
+    /// Per cell, expansion order: target filename, cache key, and the
+    /// canonical config bytes the key hashes.
+    files: Vec<String>,
+    keys: Vec<String>,
+    canons: Vec<String>,
+    done: Vec<bool>,
+}
+
+impl IncrementalWriter {
+    pub fn open(
+        out_dir: &Path,
+        grid: &ScenarioGrid,
+        cells: &[ScenarioCell],
+    ) -> anyhow::Result<Self> {
+        std::fs::create_dir_all(out_dir)
+            .map_err(|e| anyhow::anyhow!("creating {}: {e}", out_dir.display()))?;
+        let canons: Vec<String> = cells.iter().map(|c| c.cfg.canonical_json()).collect();
+        Ok(Self {
+            out_dir: out_dir.to_path_buf(),
+            grid: grid.clone(),
+            files: cells.iter().map(|c| format!("{}.json", sanitize(&c.id))).collect(),
+            keys: canons.iter().map(|c| key_for_canonical(c)).collect(),
+            canons,
+            done: vec![false; cells.len()],
+        })
+    }
+
+    /// Record cell `i` as already on disk (a verified cache hit): the
+    /// existing file is kept byte for byte; only index membership
+    /// changes.
+    pub fn mark_hit(&mut self, i: usize) {
+        self.done[i] = true;
+    }
+
+    /// Publish cell `i`'s summary (with its cache envelope) and
+    /// refresh `index.json`, both atomically.
+    pub fn commit(&mut self, i: usize, s: &CellSummary) -> anyhow::Result<()> {
+        let mut v = s.to_json();
+        if let Value::Obj(fields) = &mut v {
+            fields.insert("cache_key".into(), Value::str(self.keys[i].clone()));
+            fields.insert("config".into(), Value::parse(&self.canons[i])?);
+        }
+        write_atomic(&self.out_dir.join(&self.files[i]), v.to_string().as_bytes())?;
+        self.done[i] = true;
+        self.write_index()
+    }
+
+    /// Rewrite `index.json` over the cells completed so far, in
+    /// expansion order — so the final index of an interrupted-then-
+    /// resumed sweep is byte-identical to an uninterrupted one.
+    pub fn write_index(&self) -> anyhow::Result<()> {
+        let files: Vec<String> = self
+            .files
+            .iter()
+            .zip(&self.done)
+            .filter(|(_, &d)| d)
+            .map(|(f, _)| f.clone())
+            .collect();
+        let index = super::index_value(&self.grid, &files);
+        write_atomic(&self.out_dir.join("index.json"), index.to_string().as_bytes())
+    }
+}

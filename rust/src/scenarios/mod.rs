@@ -35,7 +35,16 @@
 //!   on an N-core box.
 //!
 //! Outputs land under an output directory as `<cell-id>.json` plus an
-//! `index.json` manifest — the shape `reports/` consumes.
+//! `index.json` manifest — the shape `reports/` consumes. The
+//! directory doubles as a **content-addressed result cache**
+//! ([`cache`], `--resume`): every cell file embeds its canonical
+//! config and a hash key, per-cell files and `index.json` are written
+//! incrementally and atomically after each completed cell, and
+//! [`run_matrix_cached`] skips cells whose verified summary is already
+//! on disk — so a 10⁴-cell grid is a growing database of results, not
+//! a one-shot run.
+
+pub mod cache;
 
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -51,7 +60,12 @@ use crate::coordinator::ComputeModel;
 use crate::driver::{open_artifact_store, ExperimentResult, WarmFamily};
 use crate::kimad::{BudgetParams, CompressPolicy};
 use crate::runtime::ArtifactStore;
+use crate::util::atomicfile::write_atomic;
 use crate::util::json::Value;
+
+pub use cache::{
+    cell_cache_key, cell_path, probe_cell, CacheMode, IncrementalWriter, MissReason, Probe,
+};
 
 /// One named workload in the grid — the axis that mixes the §4.1
 /// quadratic and deep-model presets in a single sweep.
@@ -721,6 +735,43 @@ impl CellSummary {
             ("build_ms", Value::num(self.build_ms)),
         ])
     }
+
+    /// Inverse of [`CellSummary::to_json`] — how a cache hit
+    /// ([`probe_cell`]) rehydrates a summary from disk. `null`
+    /// objective columns parse back to NaN, so `to_json ∘ from_json`
+    /// is the identity on the bytes (asserted in tests).
+    pub fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let num_or_nan = |key: &str| -> anyhow::Result<f64> {
+            match v.get(key)? {
+                Value::Null => Ok(f64::NAN),
+                other => other.as_f64(),
+            }
+        };
+        Ok(Self {
+            id: v.get("id")?.as_str()?.to_string(),
+            workload: v.get("workload")?.as_str()?.to_string(),
+            trace: v.get("trace")?.as_str()?.to_string(),
+            policy: v.get("policy")?.as_str()?.to_string(),
+            mode: v.get("mode")?.as_str()?.to_string(),
+            m: v.get("m")?.as_usize()?,
+            safety: v.get("safety")?.as_f64()?,
+            participation: v.get("participation")?.as_f64()?,
+            quorum: v.get("quorum")?.as_usize()?,
+            shards: v.get("shards")?.as_usize()?,
+            transport: v.get("transport")?.as_str()?.to_string(),
+            rounds: v.get("rounds")?.as_usize()?,
+            final_f_x: num_or_nan("final_f_x")?,
+            final_loss: num_or_nan("final_loss")?,
+            total_up_bits: v.get("total_up_bits")?.as_u64()?,
+            total_down_bits: v.get("total_down_bits")?.as_u64()?,
+            virtual_time_s: v.get("virtual_time_s")?.as_f64()?,
+            mean_step_time_s: v.get("mean_step_time_s")?.as_f64()?,
+            mean_arrival_lag_s: v.get("mean_arrival_lag_s")?.as_f64()?,
+            max_staleness: v.get("max_staleness")?.as_u64()?,
+            wall_ms: v.get("wall_ms")?.as_f64()?,
+            build_ms: v.get("build_ms")?.as_f64()?,
+        })
+    }
 }
 
 /// Roll one executed cell's records up into its summary row.
@@ -881,45 +932,173 @@ pub fn run_matrix_with(
     threads: usize,
     cell_threads: usize,
 ) -> anyhow::Result<Vec<CellSummary>> {
+    Ok(run_matrix_cached(grid, threads, cell_threads, None, CacheMode::Fresh)?.summaries)
+}
+
+/// What one [`run_matrix_cached`] sweep did: the summaries (expansion
+/// order, exactly as [`run_matrix_with`] returns them) plus the cache
+/// ledger the CLI banner and table report.
+#[derive(Debug)]
+pub struct MatrixRun {
+    pub summaries: Vec<CellSummary>,
+    /// Per-cell hit flag, expansion order (`true` = reused from disk).
+    pub hits: Vec<bool>,
+    /// Cells reused from the cache (`hits.iter().filter(|h| **h)`).
+    pub n_hits: usize,
+    /// Cells actually executed this run.
+    pub n_executed: usize,
+    /// Probed entries that existed but could not be reused (pre-cache
+    /// layout, stale config or engine version, corrupt JSON) — these
+    /// re-ran and were overwritten, loudly counted rather than
+    /// silently trusted.
+    pub n_stale: usize,
+    /// Warm families prepared — *miss* cells only, so a fully-cached
+    /// family builds nothing (no traces, no artifact store).
+    pub n_families: usize,
+    /// Wall seconds for the whole sweep (probe + prep + cells).
+    pub elapsed_s: f64,
+}
+
+/// [`run_matrix_with`], plus the content-addressed cell cache
+/// ([`cache`]): when `out_dir` is set, every completed cell publishes
+/// `<id>.json` (summary + cache envelope) and a refreshed `index.json`
+/// — incrementally and atomically, so interruption never leaves a torn
+/// manifest — and under [`CacheMode::Resume`] cells whose verified
+/// summary already sits in `out_dir` are skipped entirely: no family
+/// prep, no execution, just the stored [`CellSummary`].
+///
+/// Warm-family planning runs over the **miss** cells only: a grid that
+/// hits everywhere builds zero families (and never opens a deep
+/// workload's artifact store).
+pub fn run_matrix_cached(
+    grid: &ScenarioGrid,
+    threads: usize,
+    cell_threads: usize,
+    out_dir: Option<&Path>,
+    mode: CacheMode,
+) -> anyhow::Result<MatrixRun> {
+    #[allow(clippy::disallowed_methods)]
+    // tidy:allow(wall-clock) -- cache banner elapsed metric only, never in results
+    let t0 = Instant::now();
     grid.validate()?;
     let cells = grid.expand();
-    let (n_threads, budget) = thread_budget(cells.len(), threads);
-    let per_cell = if cell_threads == 0 { budget } else { cell_threads };
+    let mut writer = match out_dir {
+        Some(dir) => Some(IncrementalWriter::open(dir, grid, &cells)?),
+        None => None,
+    };
 
-    // Family prep, serial in expansion order (deterministic and cheap
-    // relative to the sweep: one trace + workload build per family
-    // instead of per cell).
-    let (families, cell_family) = plan_families(&cells, grid.base.artifacts.as_deref())?;
+    // Probe phase (resume only): verified hits short-circuit to their
+    // stored summaries and join the index immediately.
+    let mut cached: Vec<Option<CellSummary>> = (0..cells.len()).map(|_| None).collect();
+    let mut n_stale = 0usize;
+    if mode == CacheMode::Resume {
+        if let (Some(dir), Some(w)) = (out_dir, writer.as_mut()) {
+            for (i, cell) in cells.iter().enumerate() {
+                match probe_cell(dir, cell) {
+                    Probe::Hit(s) => {
+                        cached[i] = Some(*s);
+                        w.mark_hit(i);
+                    }
+                    Probe::Miss(MissReason::Absent) => {}
+                    Probe::Miss(_) => n_stale += 1,
+                }
+            }
+            w.write_index()?;
+        }
+    }
+    let n_hits = cached.iter().filter(|c| c.is_some()).count();
+
+    // Family prep over the miss cells only, serial in expansion order
+    // (deterministic and cheap relative to the sweep: one trace +
+    // workload build per family instead of per cell).
+    let miss: Vec<usize> = (0..cells.len()).filter(|&i| cached[i].is_none()).collect();
+    let miss_cells: Vec<ScenarioCell> = miss.iter().map(|&i| cells[i].clone()).collect();
+    let (families, cell_family) = plan_families(&miss_cells, grid.base.artifacts.as_deref())?;
+    let n_families = families.len();
+    let (n_threads, budget) = thread_budget(miss_cells.len(), threads);
+    let per_cell = if cell_threads == 0 { budget } else { cell_threads };
 
     type CellSlot = Mutex<Option<anyhow::Result<CellSummary>>>;
     let next = AtomicUsize::new(0);
-    let slots: Vec<CellSlot> = (0..cells.len()).map(|_| Mutex::new(None)).collect();
+    let slots: Vec<CellSlot> = (0..miss_cells.len()).map(|_| Mutex::new(None)).collect();
     let families = &families;
     let cell_family = &cell_family;
+    let writer = Mutex::new(writer);
+    let miss_ref = &miss;
+    let writer_ref = &writer;
     std::thread::scope(|s| {
         for _ in 0..n_threads {
             s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= cells.len() {
+                let k = next.fetch_add(1, Ordering::Relaxed);
+                if k >= miss_cells.len() {
                     break;
                 }
-                let out = run_cell(&cells[i], &families[cell_family[i]], per_cell);
-                *slots[i].lock().expect("cell slot poisoned") = Some(out);
+                // Publish as soon as the cell completes (completion
+                // order): the index converges to the same bytes
+                // regardless, because membership is rewritten in
+                // expansion order on every commit.
+                let out = run_cell(&miss_cells[k], &families[cell_family[k]], per_cell)
+                    .and_then(|summary| {
+                        let mut w = writer_ref.lock().expect("writer poisoned");
+                        if let Some(w) = w.as_mut() {
+                            w.commit(miss_ref[k], &summary)?;
+                        }
+                        Ok(summary)
+                    });
+                *slots[k].lock().expect("cell slot poisoned") = Some(out);
             });
         }
     });
-    slots
+    let executed: Vec<CellSummary> = slots
         .into_iter()
         .map(|slot| {
             slot.into_inner()
                 .expect("cell slot poisoned")
                 .expect("work queue covered every cell")
         })
-        .collect()
+        .collect::<anyhow::Result<_>>()?;
+
+    // Re-interleave hits and executed cells into expansion order.
+    let hits: Vec<bool> = cached.iter().map(|c| c.is_some()).collect();
+    let mut executed_iter = executed.into_iter();
+    let summaries: Vec<CellSummary> = cached
+        .into_iter()
+        .map(|c| match c {
+            Some(s) => s,
+            None => executed_iter.next().expect("one executed summary per miss"),
+        })
+        .collect();
+    Ok(MatrixRun {
+        hits,
+        n_hits,
+        n_executed: miss.len(),
+        n_stale,
+        n_families,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        summaries,
+    })
+}
+
+/// The `index.json` manifest body: the grid spec (self-describing
+/// results directories) plus the completed cell files in expansion
+/// order. Shared by [`write_summaries`] and the incremental writer so
+/// one-shot and resumed sweeps emit byte-identical manifests.
+fn index_value(grid: &ScenarioGrid, files: &[String]) -> Value {
+    Value::obj(vec![
+        ("grid", grid.to_json()),
+        ("n_cells", Value::num(files.len() as f64)),
+        (
+            "cells",
+            Value::Arr(files.iter().map(|f| Value::str(f.clone())).collect()),
+        ),
+    ])
 }
 
 /// Write `<id>.json` per cell plus an `index.json` manifest (grid spec
-/// included, so a results directory is self-describing).
+/// included, so a results directory is self-describing). Every file is
+/// published atomically (tmp + rename). Note the cells written here
+/// carry no cache envelope — [`run_matrix_cached`] is the caching
+/// writer; this helper serializes summaries the caller already holds.
 pub fn write_summaries(
     out_dir: &Path,
     grid: &ScenarioGrid,
@@ -928,22 +1107,16 @@ pub fn write_summaries(
     std::fs::create_dir_all(out_dir)?;
     for s in summaries {
         let path = out_dir.join(format!("{}.json", sanitize(&s.id)));
-        std::fs::write(&path, s.to_json().to_string())?;
+        write_atomic(&path, s.to_json().to_string().as_bytes())?;
     }
-    let index = Value::obj(vec![
-        ("grid", grid.to_json()),
-        ("n_cells", Value::num(summaries.len() as f64)),
-        (
-            "cells",
-            Value::Arr(
-                summaries
-                    .iter()
-                    .map(|s| Value::str(format!("{}.json", sanitize(&s.id))))
-                    .collect(),
-            ),
-        ),
-    ]);
-    std::fs::write(out_dir.join("index.json"), index.to_string())?;
+    let files: Vec<String> = summaries
+        .iter()
+        .map(|s| format!("{}.json", sanitize(&s.id)))
+        .collect();
+    write_atomic(
+        &out_dir.join("index.json"),
+        index_value(grid, &files).to_string().as_bytes(),
+    )?;
     Ok(())
 }
 
@@ -955,16 +1128,20 @@ fn sanitize(id: &str) -> String {
 }
 
 /// Render a compact markdown table over the summaries (CLI output).
-pub fn render_table(summaries: &[CellSummary]) -> String {
+/// With `hits` (per-cell, expansion order — [`MatrixRun::hits`]) a
+/// `cache` column distinguishes reused cells from executed ones.
+pub fn render_table(summaries: &[CellSummary], hits: Option<&[bool]>) -> String {
     let mut out = String::from(
         "| cell | wl | rounds | final f(x) | up Mbit | step s | lag s | stale | pop | p | q \
-         | sh | wall ms | build ms |\n\
-         |---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n",
+         | sh | wall ms | build ms |",
     );
-    for s in summaries {
+    out.push_str(if hits.is_some() { " cache |\n" } else { "\n" });
+    out.push_str("|---|---|---|---|---|---|---|---|---|---|---|---|---|---|");
+    out.push_str(if hits.is_some() { "---|\n" } else { "\n" });
+    for (i, s) in summaries.iter().enumerate() {
         out.push_str(&format!(
             "| {} | {} | {} | {:.3e} | {:.3} | {:.2} | {:.2} | {} | {} | {} | {} | {} \
-             | {:.0} | {:.0} |\n",
+             | {:.0} | {:.0} |",
             s.id,
             s.workload,
             s.rounds,
@@ -980,6 +1157,11 @@ pub fn render_table(summaries: &[CellSummary]) -> String {
             s.wall_ms,
             s.build_ms,
         ));
+        match hits {
+            Some(h) if h.get(i).copied().unwrap_or(false) => out.push_str(" hit |\n"),
+            Some(_) => out.push_str(" run |\n"),
+            None => out.push('\n'),
+        }
     }
     out
 }
@@ -1489,5 +1671,197 @@ mod tests {
     fn sanitize_keeps_ids_safe() {
         assert_eq!(sanitize("quad_wave_kimad_m4_s0.8"), "quad_wave_kimad_m4_s0.8");
         assert_eq!(sanitize("a/b c"), "a-b-c");
+    }
+
+    /// A 4-cell grid (2 traces x 2 policies) — the cheapest sweep the
+    /// cache tests can interrupt, resume, and tamper with.
+    fn cache_grid() -> ScenarioGrid {
+        let mut g = tiny_grid();
+        g.base.rounds = 6;
+        g.modes.truncate(1);
+        g.worker_counts = vec![2];
+        g
+    }
+
+    #[test]
+    fn cache_keys_are_stable_unique_and_transport_invariant() {
+        let g = cache_grid();
+        let cells = g.expand();
+        let keys: Vec<String> = cells.iter().map(|c| cell_cache_key(&c.cfg)).collect();
+        for k in &keys {
+            assert_eq!(k.len(), 64, "SHA-256 hex");
+            assert!(k.chars().all(|c| c.is_ascii_hexdigit()), "{k}");
+        }
+        for i in 0..keys.len() {
+            for j in i + 1..keys.len() {
+                assert_ne!(keys[i], keys[j], "{} vs {}", cells[i].id, cells[j].id);
+            }
+        }
+        // The transport never reaches the key: results are
+        // transport-invariant, so a wired run resumes an inproc cache.
+        let mut wired = cells[0].cfg.clone();
+        wired.transport = TransportSpec::Tcp;
+        assert_eq!(cell_cache_key(&wired), keys[0]);
+        // Anything that changes the experiment changes the key; the
+        // key itself is a pure function of the config.
+        let mut more = cells[0].cfg.clone();
+        more.rounds += 1;
+        assert_ne!(cell_cache_key(&more), keys[0]);
+        assert_eq!(cell_cache_key(&cells[0].cfg), keys[0]);
+    }
+
+    #[test]
+    fn cell_summary_json_roundtrips_including_nan_objective() {
+        let g = cache_grid();
+        let run = run_matrix_cached(&g, 1, 1, None, CacheMode::Fresh).unwrap();
+        assert_eq!(run.n_hits, 0);
+        assert_eq!(run.n_executed, g.n_cells());
+        for s in &run.summaries {
+            let back = CellSummary::from_json(&s.to_json()).unwrap();
+            assert_eq!(&back, s, "{}", s.id);
+        }
+        // The deep model's objective columns serialize as null and
+        // parse back to NaN; to_json ∘ from_json is the identity on
+        // the bytes either way.
+        let mut s = run.summaries[0].clone();
+        s.final_f_x = f64::NAN;
+        s.final_loss = f64::NAN;
+        let v = s.to_json();
+        let back = CellSummary::from_json(&v).unwrap();
+        assert!(back.final_f_x.is_nan() && back.final_loss.is_nan());
+        assert_eq!(back.to_json().to_string(), v.to_string());
+    }
+
+    #[test]
+    fn resume_skips_every_cell_and_reuses_index_bytes() {
+        let dir = std::env::temp_dir().join(format!("kimad-cache-resume-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let g = cache_grid();
+        let cold = run_matrix_cached(&g, 2, 1, Some(&dir), CacheMode::Fresh).unwrap();
+        assert_eq!((cold.n_hits, cold.n_executed), (0, g.n_cells()));
+        let index = std::fs::read(dir.join("index.json")).unwrap();
+        let cell0 = cell_path(&dir, &cold.summaries[0].id);
+        let cell0_bytes = std::fs::read(&cell0).unwrap();
+        let warm = run_matrix_cached(&g, 2, 1, Some(&dir), CacheMode::Resume).unwrap();
+        assert_eq!((warm.n_hits, warm.n_executed), (g.n_cells(), 0));
+        assert_eq!(warm.n_families, 0, "a full-hit sweep builds no families");
+        assert!(warm.hits.iter().all(|&h| h));
+        assert_eq!(std::fs::read(dir.join("index.json")).unwrap(), index);
+        assert_eq!(std::fs::read(&cell0).unwrap(), cell0_bytes, "hits never rewrite files");
+        // A hit *is* the summary the fresh run produced — timings
+        // included, because they come from the stored file.
+        for (a, b) in cold.summaries.iter().zip(&warm.summaries) {
+            assert_eq!(a, b, "{}", a.id);
+        }
+        // Fresh mode ignores the populated cache and re-executes.
+        let fresh = run_matrix_cached(&g, 2, 1, Some(&dir), CacheMode::Fresh).unwrap();
+        assert_eq!((fresh.n_hits, fresh.n_executed), (0, g.n_cells()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn interrupted_run_resumes_and_index_matches_one_shot() {
+        let pid = std::process::id();
+        let one = std::env::temp_dir().join(format!("kimad-cache-oneshot-{pid}"));
+        let cut = std::env::temp_dir().join(format!("kimad-cache-interrupted-{pid}"));
+        let _ = std::fs::remove_dir_all(&one);
+        let _ = std::fs::remove_dir_all(&cut);
+        let g = cache_grid();
+        let n = g.n_cells();
+        let k = 2;
+        let full = run_matrix_cached(&g, 1, 1, Some(&one), CacheMode::Fresh).unwrap();
+        // Simulate an interrupted sweep: commit only the first k cells,
+        // then drop the writer mid-run — the in-process stand-in for a
+        // killed process, since every commit already hit disk
+        // atomically before the drop.
+        {
+            let cells = g.expand();
+            let mut w = IncrementalWriter::open(&cut, &g, &cells).unwrap();
+            for i in 0..k {
+                w.commit(i, &full.summaries[i]).unwrap();
+            }
+        }
+        let idx =
+            Value::parse(&std::fs::read_to_string(cut.join("index.json")).unwrap()).unwrap();
+        assert_eq!(idx.get("n_cells").unwrap().as_usize().unwrap(), k, "torn run: k cells");
+        let resumed = run_matrix_cached(&g, 2, 1, Some(&cut), CacheMode::Resume).unwrap();
+        assert_eq!(resumed.n_hits, k, "exactly the committed cells hit");
+        assert_eq!(resumed.n_executed, n - k, "exactly the missing cells executed");
+        assert_eq!(
+            std::fs::read(cut.join("index.json")).unwrap(),
+            std::fs::read(one.join("index.json")).unwrap(),
+            "resumed index must be byte-identical to the one-shot index"
+        );
+        for (a, b) in full.summaries.iter().zip(&resumed.summaries) {
+            let mut b = b.clone();
+            b.wall_ms = a.wall_ms;
+            b.build_ms = a.build_ms;
+            assert_eq!(*a, b, "{}", a.id);
+        }
+        let _ = std::fs::remove_dir_all(&one);
+        let _ = std::fs::remove_dir_all(&cut);
+    }
+
+    #[test]
+    fn probe_distinguishes_absent_precache_stale_and_corrupt() {
+        let dir = std::env::temp_dir().join(format!("kimad-cache-probe-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let g = cache_grid();
+        let cells = g.expand();
+        let cell = &cells[0];
+        assert!(matches!(probe_cell(&dir, cell), Probe::Miss(MissReason::Absent)));
+        // Pre-cache layout: a summary without the cache envelope.
+        let run = run_matrix_cached(&g, 1, 1, None, CacheMode::Fresh).unwrap();
+        write_summaries(&dir, &g, &run.summaries).unwrap();
+        assert!(matches!(probe_cell(&dir, cell), Probe::Miss(MissReason::PreCache)));
+        // A committed envelope verifies and hits.
+        let mut w = IncrementalWriter::open(&dir, &g, &cells).unwrap();
+        w.commit(0, &run.summaries[0]).unwrap();
+        match probe_cell(&dir, cell) {
+            Probe::Hit(s) => assert_eq!(s.id, cell.id),
+            other => panic!("expected hit, got {other:?}"),
+        }
+        // Same id, different experiment (rounds changed): stale.
+        let mut g2 = g.clone();
+        g2.base.rounds += 1;
+        let cells2 = g2.expand();
+        assert_eq!(cells2[0].id, cell.id, "rounds are not part of the id");
+        assert!(matches!(probe_cell(&dir, &cells2[0]), Probe::Miss(MissReason::Stale)));
+        // Tampering with the stored config breaks the stored key's
+        // integrity re-hash: corrupt, not silently trusted.
+        let p = cell_path(&dir, &cell.id);
+        let tampered =
+            std::fs::read_to_string(&p).unwrap().replace("\"rounds\":6", "\"rounds\":7");
+        std::fs::write(&p, &tampered).unwrap();
+        assert!(matches!(probe_cell(&dir, cell), Probe::Miss(MissReason::Corrupt)));
+        // Unparseable JSON: corrupt.
+        std::fs::write(&p, "{not json").unwrap();
+        assert!(matches!(probe_cell(&dir, cell), Probe::Miss(MissReason::Corrupt)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn incremental_writer_and_write_summaries_agree_on_index_bytes() {
+        let pid = std::process::id();
+        let a = std::env::temp_dir().join(format!("kimad-cache-idx-a-{pid}"));
+        let b = std::env::temp_dir().join(format!("kimad-cache-idx-b-{pid}"));
+        let _ = std::fs::remove_dir_all(&a);
+        let _ = std::fs::remove_dir_all(&b);
+        let g = cache_grid();
+        let run = run_matrix_cached(&g, 2, 1, None, CacheMode::Fresh).unwrap();
+        write_summaries(&a, &g, &run.summaries).unwrap();
+        let cells = g.expand();
+        let mut w = IncrementalWriter::open(&b, &g, &cells).unwrap();
+        // Commit in reverse completion order: index membership is
+        // rewritten in expansion order regardless.
+        for i in (0..cells.len()).rev() {
+            w.commit(i, &run.summaries[i]).unwrap();
+        }
+        assert_eq!(
+            std::fs::read(a.join("index.json")).unwrap(),
+            std::fs::read(b.join("index.json")).unwrap()
+        );
+        let _ = std::fs::remove_dir_all(&a);
+        let _ = std::fs::remove_dir_all(&b);
     }
 }

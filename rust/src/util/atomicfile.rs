@@ -1,0 +1,83 @@
+//! Atomic artifact writes: stage to a hidden temp file in the target
+//! directory, then `rename` over the destination. A crash or kill at
+//! any instant leaves either the previous file or the new one — never
+//! a truncated JSON — which is what makes the scenario matrix's
+//! incremental `index.json` and per-cell summaries safe to resume
+//! from (docs/ARCHITECTURE.md §11).
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Per-process sequence so concurrent writers to *different* paths in
+/// the same directory never collide on a temp name.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Write `bytes` to `path` atomically (tmp file + rename), creating
+/// parent directories as needed. The rename is atomic on the same
+/// filesystem, which the same-directory temp file guarantees.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> anyhow::Result<()> {
+    let parent = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    std::fs::create_dir_all(&parent)
+        .map_err(|e| anyhow::anyhow!("creating {}: {e}", parent.display()))?;
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .ok_or_else(|| anyhow::anyhow!("write_atomic: no file name in {}", path.display()))?;
+    let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    let tmp = parent.join(format!(".{name}.{}.{seq}.tmp", std::process::id()));
+    std::fs::write(&tmp, bytes).map_err(|e| anyhow::anyhow!("writing {}: {e}", tmp.display()))?;
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        // Leave no droppings behind a failed publish.
+        let _ = std::fs::remove_file(&tmp);
+        anyhow::bail!("renaming {} -> {}: {e}", tmp.display(), path.display());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_create_dirs_and_replace_existing() {
+        let dir = std::env::temp_dir().join(format!("kimad-atomic-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("nested/out.json");
+        write_atomic(&path, b"{\"v\":1}").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"{\"v\":1}");
+        // Overwrite is atomic replace, not append.
+        write_atomic(&path, b"{\"v\":2}").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"{\"v\":2}");
+        // No temp droppings remain next to the target.
+        let leftovers: Vec<_> = std::fs::read_dir(path.parent().unwrap())
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .filter(|n| n.ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_writers_to_distinct_files_never_collide() {
+        let dir = std::env::temp_dir().join(format!("kimad-atomic-par-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let dir = dir.clone();
+                s.spawn(move || {
+                    for i in 0..16 {
+                        let p = dir.join(format!("f{t}-{i}.json"));
+                        write_atomic(&p, format!("{{\"t\":{t},\"i\":{i}}}").as_bytes()).unwrap();
+                    }
+                });
+            }
+        });
+        let n = std::fs::read_dir(&dir).unwrap().count();
+        assert_eq!(n, 64, "every file published, no temp leftovers");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

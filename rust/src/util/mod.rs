@@ -1,10 +1,13 @@
 //! In-repo substrates (the build is fully offline, so these replace the
 //! usual crates): deterministic RNG, JSON, CLI parsing, a micro-bench
-//! harness, and a property-testing loop.
+//! harness, a property-testing loop, SHA-256 content addressing, and
+//! atomic file publication.
 
+pub mod atomicfile;
 pub mod bench;
 pub mod chunk;
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod prop;
 pub mod rng;

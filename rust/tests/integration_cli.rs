@@ -90,6 +90,44 @@ fn scenarios_modes_flag_overrides_the_mode_axis() {
 }
 
 #[test]
+fn scenarios_resume_reuses_cached_cells() {
+    let dir = std::env::temp_dir().join(format!("kimad-cli-resume-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let run = |extra: &[&str]| {
+        let mut args = vec!["scenarios", "--rounds", "6", "--threads", "2"];
+        args.extend_from_slice(extra);
+        args.extend_from_slice(&["--out-dir", dir.to_str().unwrap()]);
+        kimad().args(&args).output().unwrap()
+    };
+    // Cold: 2 traces x 4 policies x 1 mode x 2 workers = 16 cells.
+    let cold = run(&["--modes", "sync"]);
+    assert!(cold.status.success(), "{}", String::from_utf8_lossy(&cold.stderr));
+    let text = String::from_utf8_lossy(&cold.stdout);
+    assert!(text.contains("cache: 0 hits, 16 misses"), "{text}");
+    let index = std::fs::read(dir.join("index.json")).unwrap();
+    // Resume over the unchanged grid: every cell hits, nothing runs,
+    // and the index comes out byte-identical.
+    let warm = run(&["--modes", "sync", "--resume"]);
+    assert!(warm.status.success(), "{}", String::from_utf8_lossy(&warm.stderr));
+    let text = String::from_utf8_lossy(&warm.stdout);
+    assert!(text.contains("cache: 16 hits, 0 misses"), "{text}");
+    assert!(text.contains(" hit |"), "table must flag reused cells:\n{text}");
+    assert_eq!(std::fs::read(dir.join("index.json")).unwrap(), index);
+    // Widening the mode axis re-runs only the new cells.
+    let wider = run(&["--modes", "sync,semisync:0.5", "--resume"]);
+    assert!(wider.status.success(), "{}", String::from_utf8_lossy(&wider.stderr));
+    let text = String::from_utf8_lossy(&wider.stdout);
+    assert!(text.contains("cache: 16 hits, 16 misses"), "{text}");
+    let _ = std::fs::remove_dir_all(&dir);
+    // The cache modes are mutually exclusive.
+    let bad = run(&["--resume", "--fresh"]);
+    assert!(!bad.status.success());
+    let err = String::from_utf8_lossy(&bad.stderr);
+    assert!(err.contains("mutually exclusive"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn scenarios_print_grid_roundtrips_through_file() {
     let dir = std::env::temp_dir().join(format!("kimad-cli-grid-{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();

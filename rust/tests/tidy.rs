@@ -82,6 +82,35 @@ fn wall_clock_fires_outside_allowlist() {
 }
 
 #[test]
+fn cache_key_code_is_held_to_the_btree_only_rule() {
+    // The content-addressed cell cache lives in src/scenarios/ — an
+    // engine dir — so its key/probe code cannot reach for unordered
+    // maps: canonical JSON (and therefore every cache key) depends on
+    // deterministic iteration order.
+    let src = "use std::collections::HashMap;\n";
+    assert!(fires("src/scenarios/cache.rs", src, "hash-collections"));
+    assert!(fires("src/scenarios/cache.rs", "let s = HashSet::new();\n", "hash-collections"));
+    let fixed = "use std::collections::BTreeMap;\n";
+    assert_eq!(diag_count("src/scenarios/cache.rs", fixed), 0);
+}
+
+#[test]
+fn scenario_cache_wall_clock_needs_a_reasoned_allow() {
+    // The matrix runner's cache banner reads Instant::now for its
+    // elapsed metric; src/scenarios/ is *not* on the wall-clock
+    // allowlist, so that read must carry a reasoned tidy:allow — the
+    // pattern run_matrix_cached uses.
+    let bare = "fn f() -> u64 {\n    let t0 = std::time::Instant::now();\n    0\n}\n";
+    assert!(fires("src/scenarios/mod.rs", bare, "wall-clock"));
+    let allowed = "fn f() -> u64 {\n    \
+                   // tidy:allow(wall-clock) -- cache banner elapsed metric only\n    \
+                   let t0 = std::time::Instant::now();\n    0\n}\n";
+    let scan = kimad::analysis::scan_file_source("src/scenarios/mod.rs", allowed);
+    assert!(scan.diagnostics.is_empty(), "allow failed: {:?}", scan.diagnostics[0].message);
+    assert_eq!(scan.allows_used, 1);
+}
+
+#[test]
 fn wall_clock_relaxed_under_cfg_test() {
     let src = "#[cfg(test)]\nmod tests {\n    fn f() {\n        \
                let t = std::time::Instant::now();\n    }\n}\n";
